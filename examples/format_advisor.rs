@@ -1,0 +1,77 @@
+//! Format advisor: inspect a matrix the way the paper's runtime does.
+//!
+//! Generates (or loads the shape of) a matrix, prints its Table-2 feature
+//! vector, the per-format measured profile (time + memory), the Eq-1
+//! optimum across `w` settings, and what the trained predictor would pick.
+//!
+//! ```bash
+//! cargo run --release --example format_advisor -- --n 1024 --density 0.02 --pattern powerlaw
+//! ```
+
+use gnn_spmm::features::{extract_features, FEATURE_NAMES};
+use gnn_spmm::graph::{gen_matrix, MatrixPattern};
+use gnn_spmm::predictor::labeler::{label_for, profile_formats};
+use gnn_spmm::predictor::training::{train_predictor, TrainingCorpus};
+use gnn_spmm::util::cli::Args;
+use gnn_spmm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get_usize("n", 1024);
+    let density = args.get_f64("density", 0.02);
+    let pattern = match args.get_or("pattern", "uniform") {
+        "powerlaw" => MatrixPattern::PowerLaw,
+        "banded" => MatrixPattern::Banded,
+        "block" => MatrixPattern::Block,
+        "diagonal" => MatrixPattern::Diagonal,
+        _ => MatrixPattern::Uniform,
+    };
+    let d = args.get_usize("d", 32);
+
+    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let m = gen_matrix(&mut rng, n, density, pattern);
+    println!(
+        "matrix: {n}×{n}, pattern {pattern:?}, nnz {} ({:.3}% dense)\n",
+        m.nnz(),
+        m.density() * 100.0
+    );
+
+    // Table-2 features.
+    println!("Table-2 features:");
+    let feats = extract_features(&m);
+    for (name, v) in FEATURE_NAMES.iter().zip(feats.iter()) {
+        println!("  {name:<11} {v:>14.4}");
+    }
+
+    // Per-format profile.
+    println!("\nper-format profile (SpMM ·{d} dense columns):");
+    let profiles = profile_formats(&m, d, 5);
+    for p in &profiles {
+        match (p.spmm_secs, p.nbytes) {
+            (Some(t), Some(b)) => println!(
+                "  {:<4} {:>10.3} ms   {:>10} bytes",
+                p.format.name(),
+                t * 1e3,
+                b
+            ),
+            _ => println!("  {:<4} infeasible (storage budget)", p.format.name()),
+        }
+    }
+
+    // Eq-1 optimum across w.
+    println!("\nEq-1 optimum by objective weight:");
+    for &w in &[0.0, 0.3, 0.5, 0.7, 1.0] {
+        println!("  w = {w:.1}  ->  {}", label_for(&profiles, w));
+    }
+
+    // What the trained predictor says (without profiling!).
+    println!("\ntraining predictor…");
+    let corpus = TrainingCorpus::build(60, 64, 256, 16, 2, 11);
+    let pred = train_predictor(&corpus, 1.0, 11);
+    println!(
+        "predictor (cv acc {:.0}%) picks: {}",
+        pred.cv_accuracy * 100.0,
+        pred.predict(&m)
+    );
+    Ok(())
+}

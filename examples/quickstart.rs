@@ -1,0 +1,61 @@
+//! Quickstart: the 30-second tour of the public API.
+//!
+//! 1. Build a sparse matrix.
+//! 2. Train the format predictor (or load a saved one).
+//! 3. `spmm_predict` — re-store the matrix in the predicted format.
+//! 4. Run SpMM with the automatically chosen kernel.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gnn_spmm::graph::{gen_matrix, MatrixPattern};
+use gnn_spmm::predictor::spmm_predict::spmm_predict;
+use gnn_spmm::predictor::training::{train_predictor, TrainingCorpus};
+use gnn_spmm::sparse::SparseMatrix;
+use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::rng::Rng;
+use gnn_spmm::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A sparse matrix (here: synthetic power-law, like a citation graph).
+    let mut rng = Rng::new(42);
+    let coo = gen_matrix(&mut rng, 2048, 0.01, MatrixPattern::PowerLaw);
+    let matrix = SparseMatrix::Coo(coo);
+    println!(
+        "input: {}×{} sparse matrix, {} non-zeros ({:.2}% dense), stored as {}",
+        matrix.rows(),
+        matrix.cols(),
+        matrix.nnz(),
+        matrix.density() * 100.0,
+        matrix.format()
+    );
+
+    // 2. Train the predictor offline (one-off; normally `make artifacts` /
+    //    `gnn-spmm train-predictor` and load the JSON).
+    println!("\ntraining format predictor on a synthetic corpus…");
+    let corpus = TrainingCorpus::build(60, 64, 256, 16, 2, 7);
+    let predictor = train_predictor(&corpus, /* w = speed */ 1.0, 7);
+    println!("cross-validated accuracy: {:.0}%", predictor.cv_accuracy * 100.0);
+
+    // 3. SpMMPredict (paper §4.6): one call re-stores the matrix.
+    let stored = spmm_predict(&predictor, &matrix);
+    println!("predicted storage format: {}", stored.format());
+
+    // 4. SpMM dispatches the kernel matching the storage format.
+    let x = Matrix::rand(matrix.cols(), 64, &mut rng);
+    let (y_baseline, t_coo) = time_it(|| matrix.spmm(&x));
+    let (y_predicted, t_pred) = time_it(|| stored.spmm(&x));
+    assert!(y_baseline.max_abs_diff(&y_predicted) < 1e-4);
+    println!(
+        "\nSpMM ({}×{} · {}×64):\n  COO (PyG default) : {:.3} ms\n  {} (predicted)  : {:.3} ms  ({:.2}x)",
+        matrix.rows(),
+        matrix.cols(),
+        matrix.cols(),
+        t_coo * 1e3,
+        stored.format(),
+        t_pred * 1e3,
+        t_coo / t_pred
+    );
+    Ok(())
+}

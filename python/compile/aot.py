@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas graphs → HLO text artifacts + manifest.json.
+
+HLO *text* is the interchange format (NOT `.serialize()`): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Shapes are fixed at lowering time (PJRT executables are static); the
+constants below match the laptop-scale Cora dataset the e2e example uses
+(`DatasetSpec::laptop()` in rust/src/graph/datasets.rs).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---- e2e example shapes (Cora laptop scale) --------------------------------
+N = 677          # nodes (2708 / 4)
+H = 16           # hidden width
+C = 7            # classes
+# ---- pallas BSR demo shapes -------------------------------------------------
+BS = 16          # block edge
+NRB = 43         # row blocks  -> padded n = 688
+NPAD = NRB * BS
+NNZB_CAP = 4096  # padded block capacity
+DSP = 32         # dense operand width for the demo kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_artifacts():
+    """Return [(name, hlo_text, input_shapes, output_shapes)]."""
+    arts = []
+
+    # L2 forward: (S0, b0, W1) -> (H1, Z1)
+    lowered = jax.jit(model.gcn_layer_fwd).lower(f32(N, H), f32(1, H), f32(H, C))
+    arts.append((
+        "gcn_layer_fwd",
+        to_hlo_text(lowered),
+        [(N, H), (1, H), (H, C)],
+        [(N, H), (N, C)],
+    ))
+
+    # L2 loss head: (logits, Y_onehot, mask) -> (loss, dlogits)
+    lowered = jax.jit(model.gcn_loss_grad).lower(f32(N, C), f32(N, C), f32(N, 1))
+    arts.append((
+        "gcn_loss_grad",
+        to_hlo_text(lowered),
+        [(N, C), (N, C), (N, 1)],
+        [(1, 1), (N, C)],
+    ))
+
+    # L2 backward: (S0, b0, W1, dZ1) -> (dW1, dS0)
+    lowered = jax.jit(model.gcn_layer_bwd).lower(
+        f32(N, H), f32(1, H), f32(H, C), f32(N, C)
+    )
+    arts.append((
+        "gcn_layer_bwd",
+        to_hlo_text(lowered),
+        [(N, H), (1, H), (H, C), (N, C)],
+        [(H, C), (N, H)],
+    ))
+
+    # L1 pallas BSR SpMM demo: (indptr, indices, blocks2d, X) -> (Y,)
+    demo = functools.partial(model.bsr_spmm_demo, bs=BS)
+    lowered = jax.jit(demo).lower(
+        f32(1, NRB + 1), f32(1, NNZB_CAP), f32(NNZB_CAP * BS, BS), f32(NPAD, DSP)
+    )
+    arts.append((
+        "bsr_spmm_demo",
+        to_hlo_text(lowered),
+        [(1, NRB + 1), (1, NNZB_CAP), (NNZB_CAP * BS, BS), (NPAD, DSP)],
+        [(NPAD, DSP)],
+    ))
+
+    return arts
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": [], "constants": {
+        "N": N, "H": H, "C": C, "BS": BS, "NRB": NRB, "NPAD": NPAD,
+        "NNZB_CAP": NNZB_CAP, "DSP": DSP,
+    }}
+    for name, hlo, inputs, outputs in lower_artifacts():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [list(s) for s in inputs],
+            "outputs": [list(s) for s in outputs],
+        })
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

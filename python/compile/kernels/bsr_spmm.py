@@ -1,0 +1,124 @@
+"""L1 — Pallas block-sparse (BSR) SpMM kernel.
+
+TPU adaptation of the paper's format-selection insight (DESIGN.md
+§Hardware-Adaptation): of the seven CPU storage formats, the one that maps
+onto the MXU systolic array is BSR — dense ``bs × bs`` sub-blocks feed
+``jnp.dot`` tiles, and the HBM→VMEM schedule is expressed with a grid over
+output row-blocks. Scalar formats (COO/DOK/LIL) have no MXU-efficient
+analogue; on TPU the decision collapses to *block-size selection*, ablated
+in ``rust/benches/ablation_block_size.rs``.
+
+The kernel MUST run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Numerics are
+validated against the pure-jnp oracle in ``ref.py``; TPU performance is
+estimated from the VMEM footprint / MXU utilization model in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(indptr_ref, indices_ref, blocks_ref, x_ref, o_ref, *, bs, d):
+    """One program per output row-block.
+
+    Loops over the row-block's span in ``indices``/``blocks``, gathering the
+    matching ``bs × d`` panel of ``x`` and accumulating ``A_blk @ X_blk`` —
+    the MXU-shaped inner product. Interpret-mode note: refs are read in full
+    and sliced as values; on real TPU the BlockSpec would stream ``blocks``
+    through VMEM double-buffered.
+    """
+    i = pl.program_id(0)
+    indptr = indptr_ref[...]
+    indices = indices_ref[...]
+    blocks = blocks_ref[...]
+    x = x_ref[...]
+    start = indptr[i]
+    end = indptr[i + 1]
+
+    def body(k, acc):
+        j = indices[k]
+        blk = jax.lax.dynamic_slice(blocks, (k, 0, 0), (1, bs, bs))[0]
+        xb = jax.lax.dynamic_slice(x, (j * bs, 0), (bs, d))
+        # MXU tile: bs×bs @ bs×d accumulated in f32.
+        return acc + jnp.dot(blk, xb, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(start, end, body, jnp.zeros((bs, d), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def bsr_spmm(indptr, indices, blocks, x, *, bs):
+    """Block-sparse SpMM: ``A · x`` where ``A`` is BSR.
+
+    Args:
+      indptr:  (nrb + 1,) int32 — row-block pointer.
+      indices: (nnzb,)   int32 — column-block id per stored block. Padding
+               blocks (beyond ``indptr[-1]``) are never visited.
+      blocks:  (nnzb, bs, bs) float — dense block storage.
+      x:       (ncols_padded, d) float — dense operand, rows padded to a
+               multiple of ``bs``.
+      bs:      block edge (static).
+
+    Returns:
+      (nrb * bs, d) float32 dense result.
+    """
+    nrb = indptr.shape[0] - 1
+    d = x.shape[1]
+    kernel = functools.partial(_kernel, bs=bs, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrb,),
+        in_specs=[
+            pl.BlockSpec(indptr.shape, lambda i: (0,)),
+            pl.BlockSpec(indices.shape, lambda i: (0,)),
+            pl.BlockSpec(blocks.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrb * bs, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(indptr, indices, blocks, x)
+
+
+def dense_to_bsr(a, bs, nnzb_cap=None):
+    """Compile-time helper: convert a dense matrix to padded BSR arrays.
+
+    Returns ``(indptr, indices, blocks, n_padded)`` with ``nnzb`` padded to
+    ``nnzb_cap`` (zero blocks appended past ``indptr[-1]``, never visited by
+    the kernel). Not used at runtime — rust owns the runtime formats.
+    """
+    import numpy as np
+
+    a = np.asarray(a, dtype=np.float32)
+    n, m = a.shape
+    nrb = -(-n // bs)
+    ncb = -(-m // bs)
+    padded = np.zeros((nrb * bs, ncb * bs), dtype=np.float32)
+    padded[:n, :m] = a
+    indptr = [0]
+    indices = []
+    blocks = []
+    for i in range(nrb):
+        for j in range(ncb):
+            blk = padded[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs]
+            if np.any(blk != 0):
+                indices.append(j)
+                blocks.append(blk)
+        indptr.append(len(indices))
+    nnzb = len(indices)
+    cap = nnzb_cap or max(nnzb, 1)
+    if nnzb > cap:
+        raise ValueError(f"nnzb {nnzb} exceeds capacity {cap}")
+    indices = np.asarray(indices + [0] * (cap - nnzb), dtype=np.int32)
+    blocks = np.asarray(
+        blocks + [np.zeros((bs, bs), np.float32)] * (cap - nnzb), dtype=np.float32
+    ).reshape(cap, bs, bs)
+    return (
+        np.asarray(indptr, dtype=np.int32),
+        indices,
+        blocks,
+        nrb * bs,
+    )

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 graphs.
+
+These are the ground truth the pytest suite (and `aot.py` self-checks)
+compare against — deliberately simple, no pallas, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def bsr_to_dense(indptr, indices, blocks, n_rows, n_cols):
+    """Reconstruct the dense matrix from (padded) BSR arrays."""
+    bs = blocks.shape[1]
+    out = jnp.zeros((n_rows, n_cols), jnp.float32)
+    nrb = indptr.shape[0] - 1
+    for i in range(nrb):
+        for k in range(int(indptr[i]), int(indptr[i + 1])):
+            j = int(indices[k])
+            out = out.at[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs].add(blocks[k])
+    return out
+
+
+def bsr_spmm_ref(indptr, indices, blocks, x):
+    """Oracle for `bsr_spmm`: densify then matmul."""
+    bs = blocks.shape[1]
+    nrb = indptr.shape[0] - 1
+    dense = bsr_to_dense(indptr, indices, blocks, nrb * bs, x.shape[0])
+    return dense @ x
+
+
+def _log_softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    shifted = x - m
+    return shifted - jnp.log(jnp.exp(shifted).sum(axis=-1, keepdims=True))
+
+
+def gcn_layer_fwd_ref(s0, b0, w1):
+    """Oracle for the L2 `gcn_layer_fwd` graph."""
+    h1 = jnp.maximum(s0 + b0, 0.0)
+    return h1, h1 @ w1
+
+
+def gcn_loss_grad_ref(logits, y_onehot, mask):
+    """Oracle for the L2 masked softmax-xent loss + gradient."""
+    logp = _log_softmax(logits)
+    n_masked = jnp.maximum(mask.sum(), 1.0)
+    loss = -(logp * y_onehot * mask).sum() / n_masked
+    probs = jnp.exp(logp)
+    dlogits = (probs - y_onehot) * mask / n_masked
+    return jnp.reshape(loss, (1, 1)), dlogits
+
+
+def gcn_layer_bwd_ref(s0, b0, w1, dz1):
+    """Oracle for the L2 backward graph: (dw1, ds0)."""
+    h1 = jnp.maximum(s0 + b0, 0.0)
+    dw1 = h1.T @ dz1
+    dh1 = dz1 @ w1.T
+    ds0 = jnp.where(s0 + b0 > 0.0, dh1, 0.0)
+    return dw1, ds0

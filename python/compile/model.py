@@ -1,0 +1,63 @@
+"""L2 — the GCN compute graphs AOT-lowered for the rust coordinator.
+
+Split so the *sparse* products (the paper's contribution — format-managed
+SpMM) stay in rust, while the dense layer math, the loss/gradient head, and
+the L1 Pallas BSR kernel run through XLA:
+
+  gcn_layer_fwd  : (S0, b0, W1)              -> (H1, Z1)
+  gcn_loss_grad  : (logits, Y_onehot, mask)  -> (loss, dlogits)
+  gcn_layer_bwd  : (S0, b0, W1, dZ1)         -> (dW1, dS0)
+  bsr_spmm_demo  : (indptr_f, indices_f, blocks2d, X) -> (Y,)
+
+All functions return tuples (lowered with ``return_tuple=True``) and take
+2-D f32 operands so the rust `PjrtEngine` can drive them uniformly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bsr_spmm import bsr_spmm
+
+
+def gcn_layer_fwd(s0, b0, w1):
+    """H1 = ReLU(S0 + b0); Z1 = H1 · W1.  b0 is (1, h) broadcast."""
+    h1 = jnp.maximum(s0 + b0, 0.0)
+    z1 = h1 @ w1
+    return h1, z1
+
+
+def gcn_loss_grad(logits, y_onehot, mask):
+    """Masked mean softmax cross-entropy and its gradient wrt logits.
+
+    mask is (n, 1) with 1.0 on training nodes.
+    """
+    m = logits.max(axis=-1, keepdims=True)
+    shifted = logits - m
+    logp = shifted - jnp.log(jnp.exp(shifted).sum(axis=-1, keepdims=True))
+    n_masked = jnp.maximum(mask.sum(), 1.0)
+    loss = -(logp * y_onehot * mask).sum() / n_masked
+    dlogits = (jnp.exp(logp) - y_onehot) * mask / n_masked
+    return jnp.reshape(loss, (1, 1)), dlogits
+
+
+def gcn_layer_bwd(s0, b0, w1, dz1):
+    """Backward of `gcn_layer_fwd`: dW1 = H1ᵀ·dZ1, dS0 = ReLU'(S0+b0) ⊙ (dZ1·W1ᵀ)."""
+    pre = s0 + b0
+    h1 = jnp.maximum(pre, 0.0)
+    dw1 = h1.T @ dz1
+    ds0 = jnp.where(pre > 0.0, dz1 @ w1.T, 0.0)
+    return dw1, ds0
+
+
+def bsr_spmm_demo(indptr_f, indices_f, blocks2d, x, *, bs):
+    """PJRT-friendly wrapper around the L1 Pallas kernel.
+
+    Index arrays arrive as (1, k) f32 matrices (the rust engine speaks f32
+    2-D), block storage as (nnzb·bs, bs); cast/reshape here.
+    """
+    indptr = indptr_f[0].astype(jnp.int32)
+    indices = indices_f[0].astype(jnp.int32)
+    nnzb = indices.shape[0]
+    blocks = blocks2d.reshape(nnzb, bs, bs)
+    y = bsr_spmm(indptr, indices, blocks, x, bs=bs)
+    return (y,)

@@ -1,0 +1,111 @@
+"""L1 correctness: the Pallas BSR SpMM kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, densities and dtypes — the core
+correctness signal for the kernel that ships in the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bsr_spmm import bsr_spmm, dense_to_bsr
+from compile.kernels import ref
+
+
+def random_bsr(rng, nrb, ncb, bs, block_density, nnzb_cap=None):
+    """Random padded BSR arrays with ~block_density of blocks present."""
+    indptr = [0]
+    indices = []
+    blocks = []
+    for _ in range(nrb):
+        for j in range(ncb):
+            if rng.random() < block_density:
+                indices.append(j)
+                blocks.append(rng.standard_normal((bs, bs)).astype(np.float32))
+        indptr.append(len(indices))
+    nnzb = len(indices)
+    cap = nnzb_cap or max(nnzb, 1)
+    indices = np.asarray(indices + [0] * (cap - nnzb), dtype=np.int32)
+    blocks = np.asarray(
+        blocks + [np.zeros((bs, bs), np.float32)] * (cap - nnzb), np.float32
+    ).reshape(cap, bs, bs)
+    return np.asarray(indptr, np.int32), indices, blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nrb=st.integers(1, 6),
+    ncb=st.integers(1, 6),
+    bs=st.sampled_from([4, 8, 16]),
+    d=st.integers(1, 24),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bsr_spmm_matches_ref(nrb, ncb, bs, d, density, seed):
+    rng = np.random.default_rng(seed)
+    indptr, indices, blocks = random_bsr(rng, nrb, ncb, bs, density)
+    x = rng.standard_normal((ncb * bs, d)).astype(np.float32)
+    got = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(blocks),
+                   jnp.asarray(x), bs=bs)
+    want = ref.bsr_spmm_ref(indptr, indices, blocks, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_empty_matrix_gives_zeros():
+    indptr = np.zeros(5, np.int32)  # 4 row-blocks, no stored blocks
+    indices = np.zeros(1, np.int32)
+    blocks = np.zeros((1, 8, 8), np.float32)
+    x = np.ones((16, 3), np.float32)
+    y = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(blocks),
+                 jnp.asarray(x), bs=8)
+    assert np.all(np.asarray(y) == 0.0)
+    assert y.shape == (32, 3)
+
+
+def test_identity_blocks_copy_x():
+    bs, nrb = 4, 3
+    # Block-diagonal identity.
+    indptr = np.arange(nrb + 1, dtype=np.int32)
+    indices = np.arange(nrb, dtype=np.int32)
+    blocks = np.stack([np.eye(bs, dtype=np.float32)] * nrb)
+    x = np.random.default_rng(0).standard_normal((nrb * bs, 5)).astype(np.float32)
+    y = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(blocks),
+                 jnp.asarray(x), bs=bs)
+    np.testing.assert_allclose(np.asarray(y), x, rtol=1e-6)
+
+
+def test_padding_blocks_are_ignored():
+    rng = np.random.default_rng(7)
+    indptr, indices, blocks = random_bsr(rng, 3, 3, 4, 0.5, nnzb_cap=64)
+    # Poison the padding region — results must not change.
+    real = int(indptr[-1])
+    poisoned = blocks.copy()
+    poisoned[real:] = 1e6
+    x = rng.standard_normal((12, 6)).astype(np.float32)
+    a = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(blocks),
+                 jnp.asarray(x), bs=4)
+    b = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(poisoned),
+                 jnp.asarray(x), bs=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_dense_to_bsr_roundtrip():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((20, 28)).astype(np.float32)
+    a[rng.random((20, 28)) < 0.6] = 0.0
+    indptr, indices, blocks, npad = dense_to_bsr(a, bs=8, nnzb_cap=32)
+    dense = np.asarray(ref.bsr_to_dense(indptr, indices, blocks, npad, 32))
+    np.testing.assert_allclose(dense[:20, :28], a)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_dtype_tolerance(dtype):
+    rng = np.random.default_rng(11)
+    indptr, indices, blocks = random_bsr(rng, 2, 2, 8, 0.8)
+    x = rng.standard_normal((16, 4)).astype(dtype)
+    y = bsr_spmm(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(blocks),
+                 jnp.asarray(x.astype(np.float32)), bs=8)
+    want = ref.bsr_spmm_ref(indptr, indices, blocks, x.astype(np.float32))
+    tol = 1e-4 if dtype == np.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=tol, atol=tol)

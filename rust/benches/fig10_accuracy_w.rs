@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 10: prediction accuracy as the optimization
+//! weight w varies.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::fig10(&wb, &[0.0, 0.3, 0.5, 0.7, 1.0]);
+    experiments::print_table("Fig 10 — prediction accuracy vs w", &t);
+    t.write_file("results/fig10.csv")?;
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 11: XGBoost vs MLP / KNN / SVM — accuracy and
+//! per-sample inference time.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::fig11(&wb);
+    experiments::print_table("Fig 11 — modeling-technique comparison", &t);
+    t.write_file("results/fig11.csv")?;
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Regenerates paper Fig. 1: best-performing static storage format per
+//! dataset (GCN, whole-run, normalized vs COO).
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let cfg = TrainConfig { epochs: 5, ..Default::default() };
+    let t = experiments::fig1(&wb, &cfg, 2);
+    experiments::print_table("Fig 1 — best static format per dataset (GCN)", &t);
+    t.write_file("results/fig1.csv")?;
+    // Paper-style summary: the winner per dataset.
+    println!("\nbest format per dataset:");
+    for row in t.rows.iter().filter(|r| r[4] == "true") {
+        println!("  {:<12} {}  ({}x vs COO)", row[0], row[1], row[3]);
+    }
+    Ok(())
+}

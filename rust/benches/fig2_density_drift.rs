@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 2: matrix density growth as the GNN iterates —
+//! k-hop effective adjacency density + GCN H1 activation density per epoch.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::fig2(&wb, "CoraFull", 10);
+    experiments::print_table("Fig 2 — density drift over GNN iteration (CoraFull)", &t);
+    t.write_file("results/fig2.csv")?;
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Fig. 3: speedup over COO when only the *layer-1
+//! output* (H1) uses a given format, on CoraFull (a) and PubmedFull (b).
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let cfg = TrainConfig { epochs: 5, ..Default::default() };
+    let t = experiments::fig3(&wb, &cfg, 2);
+    experiments::print_table("Fig 3 — layer-1 output format vs COO", &t);
+    t.write_file("results/fig3.csv")?;
+    Ok(())
+}

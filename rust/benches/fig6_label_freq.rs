@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 6: how often each storage format is Eq-1-optimal
+//! on the synthetic training corpus as the weight w varies.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::fig6(&wb, &[0.0, 0.3, 0.5, 0.7, 1.0]);
+    experiments::print_table("Fig 6 — optimal-format frequency vs w", &t);
+    t.write_file("results/fig6.csv")?;
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 7: leave-one-out feature importance (top features
+//! by accuracy drop) plus the GBDT's gain importance.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::fig7(&wb);
+    experiments::print_table("Fig 7 — feature importance (top-8 = first 8 rows)", &t);
+    t.write_file("results/fig7.csv")?;
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Regenerates paper Fig. 8: end-to-end speedup of the learned predictor
+//! over always-COO, per model (8a) and per dataset (8b).
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+use gnn_spmm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let cfg = TrainConfig { epochs: 5, ..Default::default() };
+    let t = experiments::fig8(&wb, &cfg, 2);
+    experiments::print_table("Fig 8 — predicted-policy speedup over COO", &t);
+    t.write_file("results/fig8.csv")?;
+
+    // 8(a): geomean per model; 8(b): geomean per dataset.
+    let speedups: Vec<(String, String, f64)> = t
+        .rows
+        .iter()
+        .map(|r| (r[0].clone(), r[1].clone(), r[4].parse().unwrap()))
+        .collect();
+    println!("\nFig 8(a) — geomean speedup per model:");
+    for model in ["GCN", "GAT", "RGCN", "FiLM", "EGC"] {
+        let xs: Vec<f64> = speedups.iter().filter(|(m, _, _)| m == model).map(|(_, _, s)| *s).collect();
+        println!("  {model:<6} {:.3}x", stats::geomean(&xs));
+    }
+    println!("Fig 8(b) — geomean speedup per dataset:");
+    for ds in ["CoraFull", "Cora", "DblpFull", "PubmedFull", "KarateClub"] {
+        let xs: Vec<f64> = speedups.iter().filter(|(_, d, _)| d == ds).map(|(_, _, s)| *s).collect();
+        println!("  {ds:<12} {:.3}x", stats::geomean(&xs));
+    }
+    let all: Vec<f64> = speedups.iter().map(|(_, _, s)| *s).collect();
+    println!("overall geomean: {:.3}x (paper: 1.17x, up to 3x)", stats::geomean(&all));
+    Ok(())
+}

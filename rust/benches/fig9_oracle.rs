@@ -1,0 +1,16 @@
+//! Regenerates paper Fig. 9: predicted-policy performance relative to the
+//! exhaustive-profiling oracle (paper: 89% of oracle on average).
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+use gnn_spmm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let cfg = TrainConfig { epochs: 5, ..Default::default() };
+    let t = experiments::fig9(&wb, &cfg, 2);
+    experiments::print_table("Fig 9 — % of oracle performance", &t);
+    t.write_file("results/fig9.csv")?;
+    let pcts: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+    println!("\naverage: {:.1}% of oracle (paper: 89%)", stats::mean(&pcts));
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! §Perf micro-benchmarks: the hot paths the whole system sits on —
+//! per-format SpMM kernels, format conversions, feature extraction and the
+//! dense GEMM. Used by the optimization pass in EXPERIMENTS.md §Perf.
+//!
+//! A throughput summary (GFLOP/s for SpMM ≈ 2·nnz·d / t) is printed so the
+//! numbers can be compared against the machine's practical roofline.
+
+use gnn_spmm::bench::{bench, section};
+use gnn_spmm::features::extract_features;
+use gnn_spmm::graph::{gen_matrix, MatrixPattern};
+use gnn_spmm::sparse::{Format, SparseMatrix, ALL_FORMATS};
+use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x9E7F);
+    let n = 4096;
+    let d = 64;
+    let density = 0.01;
+    let coo = gen_matrix(&mut rng, n, density, MatrixPattern::PowerLaw);
+    let nnz = coo.nnz();
+    let x = Matrix::rand(n, d, &mut rng);
+    println!(
+        "workload: {n}×{n} power-law matrix, nnz={nnz} ({:.2}%), dense width {d}",
+        coo.density() * 100.0
+    );
+
+    section("SpMM per format (the paper's kernel set)");
+    let base = SparseMatrix::Coo(coo.clone());
+    for &fmtc in &ALL_FORMATS {
+        let Ok(m) = base.convert(fmtc) else {
+            println!("{:<44} infeasible (storage budget)", format!("spmm/{}", fmtc.name()));
+            continue;
+        };
+        let r = bench(&format!("spmm/{}", fmtc.name()), 2, 7, || m.spmm(&x));
+        let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
+        println!("{:<44} {gflops:.2} GFLOP/s", format!("  throughput/{}", fmtc.name()));
+    }
+
+    section("format conversions (per-layer switch cost)");
+    for &fmtc in &[Format::Csr, Format::Csc, Format::Bsr, Format::Lil, Format::Dok] {
+        bench(&format!("convert/COO->{}", fmtc.name()), 1, 5, || {
+            base.convert(fmtc).unwrap()
+        });
+    }
+    let csr = base.convert(Format::Csr).unwrap();
+    bench("convert/CSR->CSC (direct path)", 1, 5, || csr.convert(Format::Csc).unwrap());
+    bench("convert/to_coo_view (engine decide path)", 1, 5, || csr.to_coo());
+
+    section("feature extraction (Table-2, parallel)");
+    bench("features/extract_19", 2, 7, || extract_features(&coo));
+
+    section("dense GEMM (tensor substrate)");
+    for &(gn, gk, gm) in &[(512usize, 512usize, 512usize), (2048, 64, 64)] {
+        let a = Matrix::rand(gn, gk, &mut rng);
+        let b = Matrix::rand(gk, gm, &mut rng);
+        let r = bench(&format!("gemm/{gn}x{gk}x{gm}"), 1, 5, || a.matmul(&b));
+        let gflops = 2.0 * (gn * gk * gm) as f64 / r.median_s / 1e9;
+        println!("{:<44} {gflops:.2} GFLOP/s", "  throughput");
+    }
+
+    section("sparsify dense activation (GCN H1 path)");
+    let h1 = {
+        let mut m = Matrix::rand(n, 16, &mut rng);
+        for v in m.data.iter_mut() {
+            if *v < 0.5 {
+                *v = 0.0;
+            }
+        }
+        m
+    };
+    bench("coo/from_dense (n x 16, ~50% dense)", 1, 5, || {
+        gnn_spmm::sparse::Coo::from_dense(&h1)
+    });
+}

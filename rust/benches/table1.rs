@@ -1,0 +1,10 @@
+//! Regenerates paper Table 1: dataset statistics.
+use gnn_spmm::coordinator::{experiments, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let t = experiments::table1(&wb);
+    experiments::print_table("Table 1 — dataset statistics (laptop scale)", &t);
+    t.write_file("results/table1.csv")?;
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Table 3: XGBoost (ours) vs CNN [45,24] vs decision
+//! tree [27] — inference time, prediction accuracy, realized speedup.
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::bench(0xE8);
+    let cfg = TrainConfig { epochs: 5, ..Default::default() };
+    let t = experiments::table3(&wb, &cfg, 2);
+    experiments::print_table("Table 3 — comparison with prior predictors", &t);
+    t.write_file("results/table3.csv")?;
+    Ok(())
+}

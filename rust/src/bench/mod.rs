@@ -1,0 +1,85 @@
+//! Criterion-like micro-bench harness (criterion is unavailable offline).
+//! Used by every binary under `rust/benches/` (built with `harness = false`).
+
+use crate::util::stats;
+use crate::util::timer::time_n;
+
+/// Statistics for one benchmarked configuration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} median {:>11} mean {:>11} min {:>11} max {:>11} (n={})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.min_s),
+            fmt_time(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run one benchmark: `warmup` unmeasured + `iters` measured invocations.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    let samples = time_n(warmup, iters, &mut f);
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        min_s: stats::min(&samples),
+        max_s: stats::max(&samples),
+        stddev_s: stats::stddev(&samples),
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Print a bench-section header.
+pub fn section(title: &str) {
+    println!("\n―― {title} ――");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let r = bench("noop", 1, 5, || std::hint::black_box(1 + 1));
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("µs"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,488 @@
+//! One driver function per table/figure of the paper's evaluation. Each
+//! returns a [`CsvTable`] (written to `results/` by the bench binaries) and
+//! is deterministic given the workbench seed.
+
+use super::Workbench;
+use crate::features::FEATURE_NAMES;
+use crate::gnn::engine::{FormatPolicy, SlotTargetedPolicy, StaticPolicy};
+use crate::gnn::{train, ModelKind, TrainConfig, ALL_MODELS};
+use crate::graph::GraphDataset;
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::knn::Knn;
+use crate::ml::metrics::{accuracy, kfold};
+use crate::ml::mlp::{Mlp, MlpParams};
+use crate::ml::svm::{Svm, SvmParams};
+use crate::ml::tree::{DecisionTree, TreeParams};
+use crate::ml::{Classifier, TabularData};
+use crate::predictor::policy::{CnnPolicy, OraclePolicy, PredictedPolicy, TabularModelPolicy};
+use crate::predictor::training::TrainedPredictor;
+use crate::sparse::{Format, ALL_FORMATS};
+use crate::util::csv::{fmt, CsvTable};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Measurement repetitions per configuration (paper: 5; default here: 3).
+pub const DEFAULT_RUNS: usize = 3;
+
+fn train_time(
+    kind: ModelKind,
+    ds: &GraphDataset,
+    make_policy: &mut dyn FnMut() -> Box<dyn FormatPolicy>,
+    cfg: &TrainConfig,
+    runs: usize,
+) -> (f64, f64, f64) {
+    let times: Vec<f64> = (0..runs)
+        .map(|_| {
+            let mut policy = make_policy();
+            train(kind, ds, policy.as_mut(), cfg).total_time
+        })
+        .collect();
+    (stats::geomean(&times), stats::min(&times), stats::max(&times))
+}
+
+/// Table 1: dataset statistics.
+pub fn table1(wb: &Workbench) -> CsvTable {
+    let mut t = CsvTable::new(["dataset", "nodes", "adj_density_pct", "feat_dim", "feat_nnz", "classes"]);
+    for ds in &wb.datasets {
+        t.push([
+            ds.name.clone(),
+            ds.adj.rows.to_string(),
+            fmt(ds.adj.density() * 100.0, 3),
+            ds.features.cols.to_string(),
+            ds.features.nnz().to_string(),
+            ds.n_classes.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 1: best static format per dataset (GCN end-to-end training time,
+/// normalized against COO).
+pub fn fig1(wb: &Workbench, cfg: &TrainConfig, runs: usize) -> CsvTable {
+    let mut t = CsvTable::new(["dataset", "format", "time_s", "speedup_vs_coo", "is_best"]);
+    for ds in &wb.datasets {
+        let mut rows: Vec<(Format, f64)> = Vec::new();
+        for &fmtc in &ALL_FORMATS {
+            let (time, _, _) = train_time(
+                ModelKind::Gcn,
+                ds,
+                &mut || Box::new(StaticPolicy(fmtc)),
+                cfg,
+                runs,
+            );
+            rows.push((fmtc, time));
+        }
+        let coo_time = rows.iter().find(|(f, _)| *f == Format::Coo).unwrap().1;
+        let best = rows
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        for (f, time) in &rows {
+            t.push([
+                ds.name.clone(),
+                f.name().to_string(),
+                fmt(*time, 4),
+                fmt(coo_time / time, 3),
+                (*f == best).to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 2: density drift — k-hop effective-propagation density plus the
+/// GCN layer-1 activation density per training epoch.
+pub fn fig2(wb: &Workbench, dataset: &str, epochs: usize) -> CsvTable {
+    let ds = wb.dataset(dataset).expect("dataset");
+    let mut t = CsvTable::new(["series", "step", "density"]);
+    for k in 1..=4usize {
+        let d = crate::graph::khop_density(&ds.adj, k);
+        t.push(["khop_adjacency".to_string(), k.to_string(), fmt(d, 5)]);
+    }
+    let mut policy = StaticPolicy(Format::Csr);
+    let report = train(
+        ModelKind::Gcn,
+        ds,
+        &mut policy,
+        &TrainConfig { epochs, ..Default::default() },
+    );
+    for (epoch, d) in report.h1_densities.iter().enumerate() {
+        t.push(["gcn_h1_activation".to_string(), (epoch + 1).to_string(), fmt(*d, 5)]);
+    }
+    t
+}
+
+/// Fig. 3: speedup over COO when only the layer-1 output (H1) is stored in
+/// a given format (the rest stays COO), on two contrast datasets.
+pub fn fig3(wb: &Workbench, cfg: &TrainConfig, runs: usize) -> CsvTable {
+    let mut t = CsvTable::new(["dataset", "h1_format", "time_s", "speedup_vs_coo"]);
+    for name in ["CoraFull", "PubmedFull"] {
+        let ds = wb.dataset(name).expect("dataset");
+        let (coo_time, _, _) = train_time(
+            ModelKind::Gcn,
+            ds,
+            &mut || Box::new(StaticPolicy(Format::Coo)),
+            cfg,
+            runs,
+        );
+        for &fmtc in &ALL_FORMATS {
+            let (time, _, _) = train_time(
+                ModelKind::Gcn,
+                ds,
+                &mut || {
+                    Box::new(SlotTargetedPolicy {
+                        needle: "H1",
+                        special: fmtc,
+                        default: Format::Coo,
+                    })
+                },
+                cfg,
+                runs,
+            );
+            t.push([
+                name.to_string(),
+                fmtc.name().to_string(),
+                fmt(time, 4),
+                fmt(coo_time / time, 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 6: how often each format is Eq-1-optimal on the training corpus as
+/// `w` varies.
+pub fn fig6(wb: &Workbench, ws: &[f64]) -> CsvTable {
+    let mut t = CsvTable::new(["w", "format", "optimal_count", "optimal_pct"]);
+    let total = wb.corpus.matrices.len() as f64;
+    for &w in ws {
+        for (f, count) in wb.corpus.label_frequency(w) {
+            t.push([
+                fmt(w, 2),
+                f.name().to_string(),
+                count.to_string(),
+                fmt(count as f64 / total * 100.0, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 7: leave-one-out feature importance — accuracy drop when each
+/// Table-2 feature is removed (plus the GBDT's own gain importance).
+pub fn fig7(wb: &Workbench) -> CsvTable {
+    let (data, _) = wb.corpus.dataset(1.0);
+    let base_acc = cv_acc(&data, wb.seed);
+    let gain = Gbdt::fit(&data, GbdtParams::default()).importance();
+    let mut rows: Vec<(usize, f64)> = (0..FEATURE_NAMES.len())
+        .map(|drop_idx| {
+            let reduced = TabularData::new(
+                data.x
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .enumerate()
+                            .filter(|(j, _)| *j != drop_idx)
+                            .map(|(_, &v)| v)
+                            .collect()
+                    })
+                    .collect(),
+                data.y.clone(),
+                data.n_classes,
+            );
+            (drop_idx, (base_acc - cv_acc(&reduced, wb.seed)).max(0.0))
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let drop_total: f64 = rows.iter().map(|(_, d)| d).sum::<f64>().max(1e-9);
+    let mut t = CsvTable::new(["feature", "loo_importance_pct", "gain_importance_pct", "rank"]);
+    for (rank, (idx, drop)) in rows.iter().enumerate() {
+        t.push([
+            FEATURE_NAMES[*idx].to_string(),
+            fmt(drop / drop_total * 100.0, 2),
+            fmt(gain[*idx] * 100.0, 2),
+            (rank + 1).to_string(),
+        ]);
+    }
+    t
+}
+
+fn cv_acc(data: &TabularData, seed: u64) -> f64 {
+    crate::predictor::training::cross_validate_gbdt(data, 5, seed)
+}
+
+/// Fig. 8: end-to-end speedup of the predicted policy over always-COO, per
+/// model × dataset (8a aggregates per model, 8b per dataset).
+pub fn fig8(wb: &Workbench, cfg: &TrainConfig, runs: usize) -> CsvTable {
+    let mut t = CsvTable::new(["model", "dataset", "coo_time_s", "pred_time_s", "speedup", "min_speedup", "max_speedup"]);
+    for &kind in &ALL_MODELS {
+        for ds in &wb.datasets {
+            let (coo_time, _, _) = train_time(
+                kind,
+                ds,
+                &mut || Box::new(StaticPolicy(Format::Coo)),
+                cfg,
+                runs,
+            );
+            let times: Vec<f64> = (0..runs)
+                .map(|_| {
+                    let predictor = clone_predictor(&wb.predictor);
+                    let mut policy = PredictedPolicy::new(predictor);
+                    train(kind, ds, &mut policy, cfg).total_time
+                })
+                .collect();
+            let pred_time = stats::geomean(&times);
+            t.push([
+                kind.name().to_string(),
+                ds.name.clone(),
+                fmt(coo_time, 4),
+                fmt(pred_time, 4),
+                fmt(coo_time / pred_time, 3),
+                fmt(coo_time / stats::max(&times), 3),
+                fmt(coo_time / stats::min(&times), 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 9: predicted-policy time as a fraction of oracle time per model.
+pub fn fig9(wb: &Workbench, cfg: &TrainConfig, runs: usize) -> CsvTable {
+    let mut t = CsvTable::new(["model", "dataset", "oracle_time_s", "pred_time_s", "pct_of_oracle"]);
+    for &kind in &ALL_MODELS {
+        for ds in &wb.datasets {
+            let (oracle_time, _, _) = train_time(
+                kind,
+                ds,
+                &mut || Box::new(OraclePolicy { reps: 2, w: 1.0 }),
+                cfg,
+                runs,
+            );
+            let (pred_time, _, _) = train_time(
+                kind,
+                ds,
+                &mut || Box::new(PredictedPolicy::new(clone_predictor(&wb.predictor))),
+                cfg,
+                runs,
+            );
+            // "% of oracle performance": oracle_time / pred_time (≤ 1 when
+            // the oracle is faster).
+            t.push([
+                kind.name().to_string(),
+                ds.name.clone(),
+                fmt(oracle_time, 4),
+                fmt(pred_time, 4),
+                fmt(oracle_time / pred_time * 100.0, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 10: prediction accuracy as the optimization weight `w` varies.
+pub fn fig10(wb: &Workbench, ws: &[f64]) -> CsvTable {
+    let mut t = CsvTable::new(["w", "cv_accuracy_pct"]);
+    for &w in ws {
+        let (data, _) = wb.corpus.dataset(w);
+        t.push([fmt(w, 2), fmt(cv_acc(&data, wb.seed) * 100.0, 1)]);
+    }
+    t
+}
+
+/// Fig. 11: XGBoost vs MLP / KNN / SVM — CV accuracy and per-sample
+/// inference time.
+pub fn fig11(wb: &Workbench) -> CsvTable {
+    let (data, _) = wb.corpus.dataset(1.0);
+    let mut rng = Rng::new(wb.seed ^ 0xF16);
+    let folds = kfold(data.len(), 5, &mut rng);
+
+    let mut t = CsvTable::new(["model", "cv_accuracy_pct", "inference_us_per_sample"]);
+    type FitFn = Box<dyn Fn(&TabularData) -> Box<dyn Classifier>>;
+    let fits: Vec<(&str, FitFn)> = vec![
+        ("XGBoost", Box::new(|d: &TabularData| Box::new(Gbdt::fit(d, GbdtParams::default())) as Box<dyn Classifier>)),
+        ("MLP", Box::new(|d: &TabularData| Box::new(Mlp::fit(d, MlpParams { epochs: 60, ..Default::default() })) as Box<dyn Classifier>)),
+        ("KNN", Box::new(|d: &TabularData| Box::new(Knn::fit(d, 1)) as Box<dyn Classifier>)),
+        ("SVM", Box::new(|d: &TabularData| Box::new(Svm::fit(d, SvmParams::default())) as Box<dyn Classifier>)),
+    ];
+    for (name, fit) in &fits {
+        let mut accs = Vec::new();
+        for (tr, te) in &folds {
+            let model = fit(&data.subset(tr));
+            let test = data.subset(te);
+            accs.push(accuracy(&model.predict_batch(&test.x), &test.y));
+        }
+        // Inference time on the full set.
+        let model = fit(&data);
+        let samples = crate::util::timer::time_n(1, 3, || model.predict_batch(&data.x));
+        let per_sample_us = stats::median(&samples) / data.len() as f64 * 1e6;
+        t.push([
+            name.to_string(),
+            fmt(stats::mean(&accs) * 100.0, 1),
+            fmt(per_sample_us, 3),
+        ]);
+    }
+    t
+}
+
+/// Table 3: XGBoost vs CNN [45,24] vs decision tree [27] — inference time,
+/// prediction accuracy, and realized GNN speedup.
+pub fn table3(wb: &Workbench, cfg: &TrainConfig, runs: usize) -> CsvTable {
+    let (data, norm) = wb.corpus.dataset(1.0);
+    let labels = wb.corpus.labels(1.0);
+    let mut rng = Rng::new(wb.seed ^ 0x7AB3);
+    let folds = kfold(data.len(), 5, &mut rng);
+
+    // --- accuracies ---
+    let mut gbdt_accs = Vec::new();
+    let mut tree_accs = Vec::new();
+    let mut cnn_accs = Vec::new();
+    for (tr, te) in &folds {
+        let train_d = data.subset(tr);
+        let test_d = data.subset(te);
+        let g = Gbdt::fit(&train_d, GbdtParams::default());
+        gbdt_accs.push(accuracy(&g.predict_batch(&test_d.x), &test_d.y));
+        let dt = DecisionTree::fit(&train_d, TreeParams::default());
+        tree_accs.push(accuracy(&dt.predict_batch(&test_d.x), &test_d.y));
+        // CNN trains on thumbnails.
+        let tr_imgs: Vec<Vec<f32>> = tr.iter().map(|&i| wb.corpus.thumbnails[i].clone()).collect();
+        let tr_labels: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
+        let cnn = crate::ml::cnn::Cnn::fit(
+            &tr_imgs,
+            &tr_labels,
+            ALL_FORMATS.len(),
+            crate::ml::cnn::CnnParams { epochs: 12, ..Default::default() },
+        );
+        let correct = te
+            .iter()
+            .filter(|&&i| cnn.predict_image(&wb.corpus.thumbnails[i]) == labels[i])
+            .count();
+        cnn_accs.push(correct as f64 / te.len() as f64);
+    }
+
+    // --- inference times ---
+    let gbdt = Gbdt::fit(&data, GbdtParams::default());
+    let dt = DecisionTree::fit(&data, TreeParams::default());
+    let cnn = crate::ml::cnn::Cnn::fit(
+        &wb.corpus.thumbnails,
+        &labels,
+        ALL_FORMATS.len(),
+        crate::ml::cnn::CnnParams { epochs: 12, ..Default::default() },
+    );
+    let t_gbdt = stats::median(&crate::util::timer::time_n(1, 3, || gbdt.predict_batch(&data.x)))
+        / data.len() as f64;
+    let t_dt = stats::median(&crate::util::timer::time_n(1, 3, || dt.predict_batch(&data.x)))
+        / data.len() as f64;
+    let t_cnn = stats::median(&crate::util::timer::time_n(1, 3, || {
+        wb.corpus.thumbnails.iter().map(|img| cnn.predict_image(img)).collect::<Vec<_>>()
+    })) / data.len() as f64;
+
+    // --- realized speedups (GCN across datasets, geomean) ---
+    let realized = |mk_policy: &mut dyn FnMut() -> Box<dyn FormatPolicy>| -> f64 {
+        let mut speedups = Vec::new();
+        for ds in &wb.datasets {
+            let (coo_time, _, _) = train_time(
+                ModelKind::Gcn,
+                ds,
+                &mut || Box::new(StaticPolicy(Format::Coo)),
+                cfg,
+                runs,
+            );
+            let (ptime, _, _) = train_time(ModelKind::Gcn, ds, mk_policy, cfg, runs);
+            speedups.push(coo_time / ptime);
+        }
+        stats::geomean(&speedups)
+    };
+    let sp_gbdt = realized(&mut || Box::new(PredictedPolicy::new(clone_predictor(&wb.predictor))));
+    let sp_dt = realized(&mut || {
+        Box::new(TabularModelPolicy {
+            model: DecisionTree::fit(&data, TreeParams::default()),
+            norm: norm.clone(),
+            label: "decision-tree",
+        })
+    });
+    let sp_cnn = realized(&mut || {
+        Box::new(CnnPolicy {
+            cnn: crate::ml::cnn::Cnn::fit(
+                &wb.corpus.thumbnails,
+                &labels,
+                ALL_FORMATS.len(),
+                crate::ml::cnn::CnnParams { epochs: 12, ..Default::default() },
+            ),
+        })
+    });
+
+    let mut t = CsvTable::new(["model", "inference_s", "accuracy_pct", "realized_speedup"]);
+    t.push([
+        "XGBoost (ours)".to_string(),
+        fmt(t_gbdt, 7),
+        fmt(stats::mean(&gbdt_accs) * 100.0, 1),
+        fmt(sp_gbdt, 3),
+    ]);
+    t.push([
+        "CNN [45,24]".to_string(),
+        fmt(t_cnn, 7),
+        fmt(stats::mean(&cnn_accs) * 100.0, 1),
+        fmt(sp_cnn, 3),
+    ]);
+    t.push([
+        "Decision-Tree [27]".to_string(),
+        fmt(t_dt, 7),
+        fmt(stats::mean(&tree_accs) * 100.0, 1),
+        fmt(sp_dt, 3),
+    ]);
+    t
+}
+
+/// Clone a trained predictor via JSON round-trip (Gbdt holds no Rc/refs).
+pub fn clone_predictor(p: &TrainedPredictor) -> TrainedPredictor {
+    TrainedPredictor::from_json(&p.to_json()).expect("predictor round-trip")
+}
+
+/// Pretty-print a CsvTable to stdout in aligned columns.
+pub fn print_table(title: &str, t: &CsvTable) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = t.header.iter().map(|h| h.len()).collect();
+    for row in &t.rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let print_row = |row: &[String]| {
+        let cells: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:<w$}", w = widths[i]))
+            .collect();
+        println!("  {}", cells.join("  "));
+    };
+    print_row(&t.header);
+    for row in &t.rows {
+        print_row(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_and_fig10_shapes() {
+        let wb = Workbench::small(3);
+        let f6 = fig6(&wb, &[0.0, 1.0]);
+        assert_eq!(f6.rows.len(), 2 * ALL_FORMATS.len());
+        let f10 = fig10(&wb, &[0.0, 1.0]);
+        assert_eq!(f10.rows.len(), 2);
+        for row in &f10.rows {
+            let acc: f64 = row[1].parse().unwrap();
+            assert!(acc > 100.0 / 7.0, "better than chance: {acc}");
+        }
+    }
+
+    #[test]
+    fn table1_lists_all_datasets() {
+        let wb = Workbench::small(4);
+        let t = table1(&wb);
+        assert_eq!(t.rows.len(), 5);
+    }
+}

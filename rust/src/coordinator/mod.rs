@@ -1,0 +1,85 @@
+//! Experiment coordinator: builds the standard workbench (datasets +
+//! profiled corpus + trained predictor) and runs every experiment of the
+//! paper's evaluation section. The bench binaries under `rust/benches/` are
+//! thin wrappers over [`experiments`].
+
+pub mod experiments;
+
+use crate::graph::{DatasetSpec, GraphDataset, PAPER_DATASETS};
+use crate::predictor::training::{train_predictor, TrainedPredictor, TrainingCorpus};
+use crate::util::rng::Rng;
+
+/// Default corpus parameters (laptop-scaled; see DESIGN.md §Substitutions).
+pub const CORPUS_COUNT: usize = 150;
+pub const CORPUS_MIN_N: usize = 64;
+pub const CORPUS_MAX_N: usize = 512;
+pub const CORPUS_D: usize = 16;
+pub const CORPUS_REPS: usize = 2;
+
+/// Everything the experiments need, built once.
+pub struct Workbench {
+    pub datasets: Vec<GraphDataset>,
+    pub corpus: TrainingCorpus,
+    pub predictor: TrainedPredictor,
+    pub seed: u64,
+}
+
+impl Workbench {
+    /// Standard workbench: the five Table-1 datasets at laptop scale, a
+    /// profiled training corpus, and a speed-optimized (w = 1) predictor.
+    pub fn standard(seed: u64) -> Workbench {
+        Self::with_sizes(seed, CORPUS_COUNT, 4, 256)
+    }
+
+    /// Smaller workbench for fast tests.
+    pub fn small(seed: u64) -> Workbench {
+        Self::with_sizes(seed, 40, 16, 64)
+    }
+
+    /// Bench-scale workbench: datasets shrunk 8× so the full figure grid
+    /// (5 models × 5 datasets × 7 formats × repeats) completes in minutes.
+    /// Set `GNN_SPMM_BENCH_FULL=1` to run at the standard 4× scale instead.
+    pub fn bench(seed: u64) -> Workbench {
+        if std::env::var("GNN_SPMM_BENCH_FULL").is_ok() {
+            Self::standard(seed)
+        } else {
+            Self::with_sizes(seed, 100, 8, 128)
+        }
+    }
+
+    fn with_sizes(seed: u64, corpus_count: usize, shrink: usize, max_feat: usize) -> Workbench {
+        let mut rng = Rng::new(seed);
+        let datasets = PAPER_DATASETS
+            .iter()
+            .map(|spec: &DatasetSpec| GraphDataset::generate(&spec.scaled(shrink, max_feat), &mut rng))
+            .collect();
+        let corpus = TrainingCorpus::build(
+            corpus_count,
+            CORPUS_MIN_N,
+            CORPUS_MAX_N.min(if corpus_count < 100 { 256 } else { CORPUS_MAX_N }),
+            CORPUS_D,
+            CORPUS_REPS,
+            seed ^ 0xC0FFEE,
+        );
+        let predictor = train_predictor(&corpus, 1.0, seed ^ 0x7EA);
+        Workbench { datasets, corpus, predictor, seed }
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&GraphDataset> {
+        self.datasets.iter().find(|d| d.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_workbench_builds() {
+        let wb = Workbench::small(1);
+        assert_eq!(wb.datasets.len(), 5);
+        assert!(wb.dataset("KarateClub").is_some());
+        assert!(wb.dataset("Cora").is_some());
+        assert!(wb.predictor.cv_accuracy > 0.2);
+    }
+}

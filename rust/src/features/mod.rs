@@ -1,0 +1,277 @@
+//! Matrix feature extraction — the paper's Table 2 (F1–F19).
+//!
+//! Features capture the non-zero distribution cheaply enough to run before
+//! every GNN layer; extraction is parallelized across rows/nnz exactly as
+//! the paper does ("our feature extraction process runs in parallel using
+//! all CPU cores"), and its cost is charged to end-to-end time.
+
+pub mod normalize;
+
+pub use normalize::Normalizer;
+
+use crate::sparse::Coo;
+use crate::util::parallel::{num_threads, split_ranges};
+
+/// Number of features (paper Table 2).
+pub const N_FEATURES: usize = 19;
+
+/// Feature names, index-aligned with the extracted vector.
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "numRow",     // F1
+    "numCol",     // F2
+    "NNZ",        // F3
+    "N_diags",    // F4
+    "aver_RD",    // F5
+    "max_RD",     // F6
+    "min_RD",     // F7
+    "dev_RD",     // F8
+    "aver_CD",    // F9
+    "max_CD",     // F10
+    "min_CD",     // F11
+    "dev_CD",     // F12
+    "ER_DIA",     // F13
+    "ER_CD",      // F14
+    "row_bounce", // F15
+    "col_bounce", // F16
+    "density",    // F17
+    "cv",         // F18
+    "max_mu",     // F19
+];
+
+/// Extract the 19 Table-2 features from a COO view.
+///
+/// Row/column count statistics and the occupied-diagonal bitmap are built
+/// with per-thread partials over nnz chunks, then reduced.
+pub fn extract_features(m: &Coo) -> [f64; N_FEATURES] {
+    let rows = m.rows.max(1);
+    let cols = m.cols.max(1);
+    let nnz = m.nnz();
+
+    // Parallel partial histograms over the triple list.
+    let nt = num_threads();
+    let chunks = split_ranges(nnz, nt);
+    struct Partial {
+        row_counts: Vec<u32>,
+        col_counts: Vec<u32>,
+        diag_bits: Vec<u64>,
+    }
+    let n_diag_slots = rows + cols - 1;
+    let partials: Vec<Partial> = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|range| {
+                s.spawn(move || {
+                    let mut p = Partial {
+                        row_counts: vec![0u32; rows],
+                        col_counts: vec![0u32; cols],
+                        diag_bits: vec![0u64; n_diag_slots.div_ceil(64)],
+                    };
+                    for i in range {
+                        let r = m.row[i] as usize;
+                        let c = m.col[i] as usize;
+                        p.row_counts[r] += 1;
+                        p.col_counts[c] += 1;
+                        // diagonal id: col - row + (rows-1) ∈ [0, rows+cols-2]
+                        let d = c + rows - 1 - r;
+                        p.diag_bits[d / 64] |= 1u64 << (d % 64);
+                    }
+                    p
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut row_counts = vec![0u32; rows];
+    let mut col_counts = vec![0u32; cols];
+    let mut diag_bits = vec![0u64; n_diag_slots.div_ceil(64)];
+    for p in &partials {
+        for (a, &b) in row_counts.iter_mut().zip(p.row_counts.iter()) {
+            *a += b;
+        }
+        for (a, &b) in col_counts.iter_mut().zip(p.col_counts.iter()) {
+            *a += b;
+        }
+        for (a, &b) in diag_bits.iter_mut().zip(p.diag_bits.iter()) {
+            *a |= b;
+        }
+    }
+
+    let n_diags = diag_bits.iter().map(|w| w.count_ones() as usize).sum::<usize>();
+
+    let rd_stats = count_stats(&row_counts);
+    let cd_stats = count_stats(&col_counts);
+
+    // F13 ER_DIA: efficiency if stored as DIA — fraction of the DIA
+    // storage (n_diags × rows) that holds real non-zeros.
+    let er_dia = if n_diags == 0 {
+        0.0
+    } else {
+        nnz as f64 / (n_diags as f64 * rows as f64)
+    };
+    // F14 ER_CD: efficiency if rows are packed to max_RD width (ELL-style
+    // column-packed structure).
+    let er_cd = if rd_stats.max == 0.0 {
+        0.0
+    } else {
+        nnz as f64 / (rd_stats.max * rows as f64)
+    };
+
+    let row_bounce = bounce(&row_counts);
+    let col_bounce = bounce(&col_counts);
+
+    let density = nnz as f64 / (rows as f64 * cols as f64);
+    let cv = if rd_stats.mean > 0.0 { rd_stats.dev / rd_stats.mean } else { 0.0 };
+    let max_mu = rd_stats.max - rd_stats.mean;
+
+    [
+        rows as f64,
+        cols as f64,
+        nnz as f64,
+        n_diags as f64,
+        rd_stats.mean,
+        rd_stats.max,
+        rd_stats.min,
+        rd_stats.dev,
+        cd_stats.mean,
+        cd_stats.max,
+        cd_stats.min,
+        cd_stats.dev,
+        er_dia,
+        er_cd,
+        row_bounce,
+        col_bounce,
+        density,
+        cv,
+        max_mu,
+    ]
+}
+
+struct CountStats {
+    mean: f64,
+    max: f64,
+    min: f64,
+    dev: f64,
+}
+
+fn count_stats(counts: &[u32]) -> CountStats {
+    if counts.is_empty() {
+        return CountStats { mean: 0.0, max: 0.0, min: 0.0, dev: 0.0 };
+    }
+    let n = counts.len() as f64;
+    let sum: u64 = counts.iter().map(|&c| c as u64).sum();
+    let mean = sum as f64 / n;
+    let max = counts.iter().max().copied().unwrap_or(0) as f64;
+    let min = counts.iter().min().copied().unwrap_or(0) as f64;
+    let var = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    CountStats { mean, max, min, dev: var.sqrt() }
+}
+
+/// Mean |count[i+1] - count[i]| between adjacent rows/columns (F15/F16).
+fn bounce(counts: &[u32]) -> f64 {
+    if counts.len() < 2 {
+        return 0.0;
+    }
+    counts
+        .windows(2)
+        .map(|w| (w[0] as f64 - w[1] as f64).abs())
+        .sum::<f64>()
+        / (counts.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, max_dim: usize) -> Coo {
+        let rows = 2 + rng.gen_range(max_dim);
+        let cols = 2 + rng.gen_range(max_dim);
+        let density = rng.uniform(0.02, 0.5);
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, 1.0f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn identity_matrix_features() {
+        let n = 16;
+        let triples: Vec<_> = (0..n).map(|i| (i as u32, i as u32, 1.0f32)).collect();
+        let coo = Coo::from_triples(n, n, triples);
+        let f = extract_features(&coo);
+        assert_eq!(f[0], n as f64); // numRow
+        assert_eq!(f[1], n as f64); // numCol
+        assert_eq!(f[2], n as f64); // NNZ
+        assert_eq!(f[3], 1.0); // single diagonal
+        assert_eq!(f[4], 1.0); // aver_RD
+        assert_eq!(f[5], 1.0); // max_RD
+        assert_eq!(f[6], 1.0); // min_RD
+        assert_eq!(f[7], 0.0); // dev_RD
+        assert!((f[12] - 1.0).abs() < 1e-12); // ER_DIA perfect
+        assert!((f[13] - 1.0).abs() < 1e-12); // ER_CD perfect
+        assert_eq!(f[14], 0.0); // row_bounce
+        assert!((f[16] - 1.0 / n as f64).abs() < 1e-12); // density
+        assert_eq!(f[17], 0.0); // cv
+        assert_eq!(f[18], 0.0); // max_mu
+    }
+
+    #[test]
+    fn prop_feature_invariants() {
+        check(
+            30,
+            |rng| random_coo(rng, 48),
+            |coo| {
+                let f = extract_features(coo);
+                prop_assert(f.iter().all(|v| v.is_finite()), "all finite")?;
+                prop_assert(f[2] as usize == coo.nnz(), "NNZ matches")?;
+                prop_assert(f[6] <= f[4] && f[4] <= f[5], "min_RD ≤ aver_RD ≤ max_RD")?;
+                prop_assert(f[10] <= f[8] && f[8] <= f[9], "min_CD ≤ aver_CD ≤ max_CD")?;
+                prop_assert((0.0..=1.0).contains(&f[12]), "ER_DIA in [0,1]")?;
+                prop_assert((0.0..=1.0).contains(&f[13]), "ER_CD in [0,1]")?;
+                prop_assert((0.0..=1.0).contains(&f[16]), "density in [0,1]")?;
+                prop_assert(f[18] >= 0.0, "max_mu ≥ 0")?;
+                let max_diags = coo.rows + coo.cols - 1;
+                prop_assert(f[3] as usize <= max_diags, "diags bounded")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn transpose_swaps_row_col_features() {
+        let mut rng = Rng::new(3);
+        let coo = random_coo(&mut rng, 32);
+        let f = extract_features(&coo);
+        let ft = extract_features(&coo.transpose());
+        assert_eq!(f[0], ft[1]);
+        assert_eq!(f[1], ft[0]);
+        assert_eq!(f[2], ft[2]);
+        // RD stats of A = CD stats of Aᵀ
+        assert!((f[4] - ft[8]).abs() < 1e-12);
+        assert!((f[5] - ft[9]).abs() < 1e-12);
+        assert!((f[7] - ft[11]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix_is_safe() {
+        let coo = Coo::from_triples(4, 4, vec![]);
+        let f = extract_features(&coo);
+        assert!(f.iter().all(|v| v.is_finite()));
+        assert_eq!(f[2], 0.0);
+        assert_eq!(f[3], 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Min–max feature normalization (paper §4.4): fit on the training set,
+//! scale each feature to [0,1], clip unseen values into range at deployment.
+
+use super::N_FEATURES;
+use crate::util::json::Json;
+use crate::util::stats::minmax_scale;
+
+/// Per-feature min/max recorded from the training matrices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Normalizer {
+    pub lo: [f64; N_FEATURES],
+    pub hi: [f64; N_FEATURES],
+}
+
+impl Normalizer {
+    /// Fit bounds on a training set of raw feature vectors.
+    pub fn fit(samples: &[[f64; N_FEATURES]]) -> Normalizer {
+        let mut lo = [f64::INFINITY; N_FEATURES];
+        let mut hi = [f64::NEG_INFINITY; N_FEATURES];
+        for s in samples {
+            for j in 0..N_FEATURES {
+                lo[j] = lo[j].min(s[j]);
+                hi[j] = hi[j].max(s[j]);
+            }
+        }
+        if samples.is_empty() {
+            lo = [0.0; N_FEATURES];
+            hi = [1.0; N_FEATURES];
+        }
+        Normalizer { lo, hi }
+    }
+
+    /// Scale (and clip) a raw feature vector into [0,1]^19.
+    pub fn transform(&self, raw: &[f64; N_FEATURES]) -> [f64; N_FEATURES] {
+        let mut out = [0.0; N_FEATURES];
+        for j in 0..N_FEATURES {
+            out[j] = minmax_scale(raw[j], self.lo[j], self.hi[j]);
+        }
+        out
+    }
+
+    pub fn transform_all(&self, raws: &[[f64; N_FEATURES]]) -> Vec<[f64; N_FEATURES]> {
+        raws.iter().map(|r| self.transform(r)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lo", Json::num_arr(self.lo.iter())),
+            ("hi", Json::num_arr(self.hi.iter())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Normalizer> {
+        let mut out = Normalizer { lo: [0.0; N_FEATURES], hi: [1.0; N_FEATURES] };
+        for (arr, dst) in [("lo", &mut out.lo), ("hi", &mut out.hi)] {
+            let vals = j.req_arr(arr)?;
+            anyhow::ensure!(vals.len() == N_FEATURES, "normalizer arity");
+            for (d, v) in dst.iter_mut().zip(vals) {
+                *d = v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric bound"))?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecn(v: f64) -> [f64; N_FEATURES] {
+        [v; N_FEATURES]
+    }
+
+    #[test]
+    fn fit_transform_in_unit_range() {
+        let samples = vec![vecn(0.0), vecn(10.0), vecn(5.0)];
+        let norm = Normalizer::fit(&samples);
+        let t = norm.transform(&vecn(5.0));
+        assert!(t.iter().all(|&v| (v - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let norm = Normalizer::fit(&[vecn(0.0), vecn(1.0)]);
+        assert!(norm.transform(&vecn(9.0)).iter().all(|&v| v == 1.0));
+        assert!(norm.transform(&vecn(-9.0)).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn degenerate_feature_maps_to_zero() {
+        let norm = Normalizer::fit(&[vecn(3.0), vecn(3.0)]);
+        assert!(norm.transform(&vecn(3.0)).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let norm = Normalizer::fit(&[vecn(-2.0), vecn(7.0)]);
+        let j = norm.to_json();
+        let back = Normalizer::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(norm, back);
+    }
+}

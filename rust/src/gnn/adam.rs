@@ -1,0 +1,102 @@
+//! Adam optimizer state for a named set of dense parameters.
+
+use crate::tensor::Matrix;
+
+/// Adam moments for one parameter tensor.
+#[derive(Clone, Debug)]
+pub struct AdamParam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Adam optimizer over a model's parameter list.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    states: Vec<AdamParam>,
+    t: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+}
+
+const B1: f32 = 0.9;
+const B2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+impl Adam {
+    /// `sizes[i]` is the flat length of parameter `i`.
+    pub fn new(sizes: &[usize], lr: f32) -> Adam {
+        Adam {
+            states: sizes
+                .iter()
+                .map(|&n| AdamParam { m: vec![0.0; n], v: vec![0.0; n] })
+                .collect(),
+            t: 0,
+            lr,
+            weight_decay: 0.0,
+        }
+    }
+
+    /// Begin an optimization step (advances the shared timestep).
+    pub fn tick(&mut self) {
+        self.t += 1;
+    }
+
+    /// Update parameter `idx` in place with gradient `grad`.
+    pub fn update(&mut self, idx: usize, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let st = &mut self.states[idx];
+        assert_eq!(st.m.len(), params.len());
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            st.m[i] = B1 * st.m[i] + (1.0 - B1) * g;
+            st.v[i] = B2 * st.v[i] + (1.0 - B2) * g * g;
+            params[i] -= self.lr * (st.m[i] / bc1) / ((st.v[i] / bc2).sqrt() + EPS);
+        }
+    }
+
+    /// Convenience for matrix parameters.
+    pub fn update_matrix(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix) {
+        assert_eq!(param.shape(), grad.shape());
+        // Split borrow: Matrix exposes data directly.
+        let data = std::mem::take(&mut param.data);
+        let mut data = data;
+        self.update(idx, &mut data, &grad.data);
+        param.data = data;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (w - 3)^2 → w → 3
+        let mut w = vec![0.0f32];
+        let mut opt = Adam::new(&[1], 0.1);
+        for _ in 0..500 {
+            opt.tick();
+            let grad = vec![2.0 * (w[0] - 3.0)];
+            opt.update(0, &mut w, &grad);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05, "w={}", w[0]);
+    }
+
+    #[test]
+    fn multiple_params_independent() {
+        let mut a = vec![0.0f32];
+        let mut b = vec![0.0f32];
+        let mut opt = Adam::new(&[1, 1], 0.05);
+        for _ in 0..800 {
+            opt.tick();
+            let ga = [2.0 * (a[0] - 1.0)];
+            opt.update(0, &mut a, &ga);
+            let gb = [2.0 * (b[0] + 2.0)];
+            opt.update(1, &mut b, &gb);
+        }
+        assert!((a[0] - 1.0).abs() < 0.05);
+        assert!((b[0] + 2.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,371 @@
+//! The per-layer sparse-format switching engine.
+//!
+//! Each sparse operand of a GNN (the normalized adjacency per layer, the
+//! sparse feature matrix, sparsified intermediate activations, attention
+//! matrices, relation adjacencies…) is registered as a **slot**. Before the
+//! first SpMM on a slot — and again whenever the slot's density drifts —
+//! the engine asks the [`FormatPolicy`] which storage format to use,
+//! converts, and executes the format-dispatched kernel. All overheads
+//! (feature extraction, model inference, conversion) are charged to the
+//! engine's [`Stopwatch`], reproducing the paper's end-to-end accounting.
+
+use crate::sparse::{Coo, Format, SparseMatrix};
+use crate::tensor::Matrix;
+use crate::util::timer::Stopwatch;
+
+/// Strategy for choosing a slot's storage format.
+pub trait FormatPolicy {
+    /// Choose a format for a matrix about to be multiplied with a dense
+    /// operand of width `d`. Implementations charge their own overhead
+    /// (feature extraction, inference, profiling) to `sw`.
+    fn decide(&mut self, coo: &Coo, d: usize, sw: &mut Stopwatch) -> Format;
+
+    /// Slot-aware decision (default: ignore the slot name). Lets
+    /// experiments target specific operands — e.g. Fig. 3 varies only the
+    /// layer-1 output's format.
+    fn decide_for_slot(
+        &mut self,
+        _slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> Format {
+        self.decide(coo, d, sw)
+    }
+
+    /// Human-readable name for reports.
+    fn policy_name(&self) -> String;
+}
+
+/// Uses `special` for slots whose name contains `needle`, `default`
+/// elsewhere (the Fig-3 experiment: vary only the H1 storage format).
+pub struct SlotTargetedPolicy {
+    pub needle: &'static str,
+    pub special: Format,
+    pub default: Format,
+}
+
+impl FormatPolicy for SlotTargetedPolicy {
+    fn decide(&mut self, _coo: &Coo, _d: usize, _sw: &mut Stopwatch) -> Format {
+        self.default
+    }
+
+    fn decide_for_slot(
+        &mut self,
+        slot: &str,
+        _coo: &Coo,
+        _d: usize,
+        _sw: &mut Stopwatch,
+    ) -> Format {
+        if slot.contains(self.needle) {
+            self.special
+        } else {
+            self.default
+        }
+    }
+
+    fn policy_name(&self) -> String {
+        format!("slot[{}]={} else {}", self.needle, self.special, self.default)
+    }
+}
+
+/// Always use one fixed format (the paper's baseline: COO, and the per-
+/// format bars of Figs. 1/3).
+pub struct StaticPolicy(pub Format);
+
+impl FormatPolicy for StaticPolicy {
+    fn decide(&mut self, _coo: &Coo, _d: usize, _sw: &mut Stopwatch) -> Format {
+        self.0
+    }
+
+    fn policy_name(&self) -> String {
+        format!("static-{}", self.0)
+    }
+}
+
+/// One sparse operand with its cached format decision.
+pub struct Slot {
+    pub name: String,
+    pub matrix: SparseMatrix,
+    pub decided: Option<Format>,
+    pub density_at_decision: f64,
+}
+
+/// A recorded decision event (slot, chosen format, density at decision).
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub slot: String,
+    pub format: Format,
+    pub density: f64,
+}
+
+/// The format-switching SpMM engine.
+pub struct AdjEngine<'p> {
+    pub slots: Vec<Slot>,
+    pub policy: &'p mut dyn FormatPolicy,
+    pub sw: Stopwatch,
+    /// Relative density drift that triggers a re-decision (paper §4:
+    /// "monitor the input matrix sparsity and dynamically adjust").
+    pub redecide_rel_drift: f64,
+    pub decisions: Vec<Decision>,
+}
+
+impl<'p> AdjEngine<'p> {
+    pub fn new(policy: &'p mut dyn FormatPolicy) -> AdjEngine<'p> {
+        AdjEngine {
+            slots: Vec::new(),
+            policy,
+            sw: Stopwatch::new(),
+            redecide_rel_drift: 0.5,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Register a sparse operand; returns its slot id.
+    pub fn add_slot(&mut self, name: &str, coo: Coo) -> usize {
+        self.slots.push(Slot {
+            name: name.to_string(),
+            matrix: SparseMatrix::Coo(coo),
+            decided: None,
+            density_at_decision: 0.0,
+        });
+        self.slots.len() - 1
+    }
+
+    /// Replace a slot's contents (same conceptual operand, new values /
+    /// pattern — e.g. a sparsified activation that changes every epoch).
+    /// The format decision is kept unless density drifts.
+    pub fn update_slot(&mut self, slot: usize, coo: Coo) {
+        let s = &mut self.slots[slot];
+        s.matrix = SparseMatrix::Coo(coo);
+    }
+
+    /// Refresh a slot whose **pattern is unchanged** with new values in
+    /// pattern (row-major COO) order — the GAT attention path, where the
+    /// softmax produces fresh coefficients on a fixed edge pattern every
+    /// forward. COO/CSR/LIL store values in exactly this order, so the
+    /// update is a value copy with no re-conversion (§Perf); other formats
+    /// fall back to a rebuild.
+    pub fn update_slot_values(&mut self, slot: usize, pattern: &Coo, vals: &[f32]) {
+        debug_assert_eq!(pattern.nnz(), vals.len());
+        let replaced = self.sw.phase("sparsify", || {
+            match &mut self.slots[slot].matrix {
+                SparseMatrix::Coo(c) if c.val.len() == vals.len() => {
+                    c.val.copy_from_slice(vals);
+                    true
+                }
+                SparseMatrix::Csr(c) if c.vals.len() == vals.len() => {
+                    c.vals.copy_from_slice(vals);
+                    true
+                }
+                SparseMatrix::Lil(l) if l.nnz() == vals.len() => {
+                    let mut i = 0;
+                    for row in &mut l.rows_data {
+                        for entry in row.iter_mut() {
+                            entry.1 = vals[i];
+                            i += 1;
+                        }
+                    }
+                    true
+                }
+                _ => false,
+            }
+        });
+        if !replaced {
+            let coo = Coo {
+                rows: pattern.rows,
+                cols: pattern.cols,
+                row: pattern.row.clone(),
+                col: pattern.col.clone(),
+                val: vals.to_vec(),
+            };
+            self.update_slot(slot, coo);
+        }
+    }
+
+    /// Refresh a slot from a dense activation, sparsifying **directly into
+    /// the decided format** (single pass, no COO hop + re-conversion).
+    ///
+    /// This is the §Perf optimization for per-epoch refreshed operands
+    /// (GCN/GAT/… layer-1 outputs): the static-COO baseline and the
+    /// predicted policy now pay the same one-pass construction cost, so the
+    /// measured difference is the SpMM kernels — matching the paper's
+    /// accounting, where a layer output materializes straight into its
+    /// chosen format. Cost is charged to the `sparsify` phase.
+    pub fn update_slot_dense(&mut self, slot: usize, dense: &crate::tensor::Matrix) {
+        let target = self.slots[slot].decided;
+        let built = self.sw.phase("sparsify", || match target {
+            Some(fmt) => SparseMatrix::from_dense(dense, fmt)
+                .unwrap_or_else(|_| SparseMatrix::Csr(crate::sparse::Csr::from_dense(dense))),
+            None => SparseMatrix::Coo(Coo::from_dense(dense)),
+        });
+        self.slots[slot].matrix = built;
+    }
+
+    /// Current density of a slot.
+    pub fn density(&self, slot: usize) -> f64 {
+        self.slots[slot].matrix.density()
+    }
+
+    /// Make sure the slot is stored in the policy-chosen format, deciding /
+    /// re-deciding and converting as needed.
+    fn ensure(&mut self, slot: usize, d: usize) {
+        let density = self.slots[slot].matrix.density();
+        let need_decision = match self.slots[slot].decided {
+            None => true,
+            Some(_) => {
+                let base = self.slots[slot].density_at_decision.max(1e-12);
+                (density - base).abs() / base > self.redecide_rel_drift
+            }
+        };
+        if need_decision {
+            // The policy inspects a COO view (cost charged by the policy).
+            let coo = self.sw.phase("to_coo_view", || self.slots[slot].matrix.to_coo());
+            let name = self.slots[slot].name.clone();
+            let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
+            self.slots[slot].decided = Some(fmt);
+            self.slots[slot].density_at_decision = density;
+            self.decisions.push(Decision {
+                slot: self.slots[slot].name.clone(),
+                format: fmt,
+                density,
+            });
+        }
+        let fmt = self.slots[slot].decided.unwrap();
+        if self.slots[slot].matrix.format() != fmt {
+            let converted = self
+                .sw
+                .phase("convert", || self.slots[slot].matrix.convert(fmt))
+                // A format that cannot hold this matrix (DIA budget): fall
+                // back to CSR, like a library would.
+                .unwrap_or_else(|_| {
+                    self.slots[slot].matrix.convert(Format::Csr).expect("CSR conversion cannot fail")
+                });
+            self.slots[slot].matrix = converted;
+        }
+    }
+
+    /// Format-dispatched SpMM on a slot: `slots[slot] · x`.
+    pub fn spmm(&mut self, slot: usize, x: &Matrix) -> Matrix {
+        self.ensure(slot, x.cols);
+        let m = &self.slots[slot].matrix;
+        self.sw.phase("spmm", || m.spmm(x))
+    }
+
+    /// The format a slot currently uses (after any decision).
+    pub fn slot_format(&self, slot: usize) -> Option<Format> {
+        self.slots[slot].decided
+    }
+
+    /// Total engine-attributed time (spmm + conversions + policy overhead).
+    pub fn total_time(&self) -> f64 {
+        self.sw.grand_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, n: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..n {
+            for c in 0..n {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(n, n, triples)
+    }
+
+    #[test]
+    fn static_policy_converts_once_and_reuses() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 32, 0.1);
+        let x = Matrix::rand(32, 4, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", coo);
+        let y1 = engine.spmm(slot, &x);
+        let y2 = engine.spmm(slot, &x);
+        assert!(y1.max_abs_diff(&want) < 1e-4);
+        assert!(y2.max_abs_diff(&want) < 1e-4);
+        assert_eq!(engine.slot_format(slot), Some(Format::Csr));
+        // Only one decision + one conversion happened.
+        assert_eq!(engine.decisions.len(), 1);
+    }
+
+    #[test]
+    fn density_drift_triggers_redecision() {
+        let mut rng = Rng::new(2);
+        let sparse = random_coo(&mut rng, 64, 0.02);
+        let dense = random_coo(&mut rng, 64, 0.4);
+        let x = Matrix::rand(64, 3, &mut rng);
+
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("H1", sparse);
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decisions.len(), 1);
+        // Update with 20× denser content → drift > 50% → re-decide.
+        engine.update_slot(slot, dense);
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decisions.len(), 2);
+    }
+
+    #[test]
+    fn small_update_keeps_decision() {
+        let mut rng = Rng::new(3);
+        let a = random_coo(&mut rng, 64, 0.1);
+        let b = random_coo(&mut rng, 64, 0.11); // ~10% drift < 50%
+        let x = Matrix::rand(64, 3, &mut rng);
+        let mut policy = StaticPolicy(Format::Lil);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("H1", a);
+        let _ = engine.spmm(slot, &x);
+        engine.update_slot(slot, b);
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decisions.len(), 1);
+    }
+
+    #[test]
+    fn dia_budget_falls_back_to_csr() {
+        // Anti-diagonal: every element on a distinct diagonal → n_diags = n,
+        // footprint n² > DIA_BUDGET → conversion fails, engine must fall back.
+        let n = 9000;
+        let mut rng = Rng::new(4);
+        let triples: Vec<_> = (0..n)
+            .map(|i| (i as u32, (n - 1 - i) as u32, 1.0f32))
+            .collect();
+        let coo = Coo::from_triples(n, n, triples);
+        let x = Matrix::rand(n, 2, &mut rng);
+        let want = {
+            let csr = crate::sparse::Csr::from_coo(&coo);
+            csr.spmm(&x)
+        };
+        let mut policy = StaticPolicy(Format::Dia);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", coo);
+        let y = engine.spmm(slot, &x);
+        assert!(y.max_abs_diff(&want) < 1e-4);
+        assert_eq!(engine.slots[slot].matrix.format(), Format::Csr);
+    }
+
+    #[test]
+    fn overhead_is_charged() {
+        let mut rng = Rng::new(5);
+        let coo = random_coo(&mut rng, 32, 0.1);
+        let x = Matrix::rand(32, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Bsr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", coo);
+        let _ = engine.spmm(slot, &x);
+        assert!(engine.sw.total("spmm") > 0.0);
+        assert!(engine.sw.total("convert") > 0.0);
+        assert!(engine.total_time() > 0.0);
+    }
+}

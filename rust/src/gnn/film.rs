@@ -1,0 +1,238 @@
+//! GNN-FiLM (Brockschmidt [3]) — feature-wise linear modulation of
+//! messages by the *target* node:
+//!
+//! ```text
+//! γ_j = (H G)_j      β_j = (H B)_j
+//! H'_j = ReLU( γ_j ⊙ (Â · H W)_j + ρ_j · β_j + b )
+//! ```
+//!
+//! Because the modulation depends only on the target, it factors out of the
+//! neighbour sum — the aggregation stays a single SpMM (`Â · HW`), keeping
+//! the layer exactly as SpMM-bound as the paper's other models (see
+//! DESIGN.md §Substitutions for this standard single-relation reduction;
+//! ρ_j = Σ_i Â_ji is the normalized degree).
+
+use super::adam::Adam;
+use super::engine::AdjEngine;
+use crate::graph::GraphDataset;
+use crate::sparse::Coo;
+use crate::tensor::{ops, Matrix};
+use crate::util::rng::Rng;
+
+struct FilmLayer {
+    w: Matrix,
+    g: Matrix,
+    bm: Matrix,
+    bias: Vec<f32>,
+}
+
+impl FilmLayer {
+    fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> FilmLayer {
+        FilmLayer {
+            w: Matrix::glorot(d_in, d_out, rng),
+            g: Matrix::glorot(d_in, d_out, rng),
+            bm: Matrix::glorot(d_in, d_out, rng),
+            bias: vec![0.0; d_out],
+        }
+    }
+}
+
+/// Two-layer GNN-FiLM.
+pub struct Film {
+    l1: FilmLayer,
+    l2: FilmLayer,
+    adam: Adam,
+    s_x: usize,
+    s_xt: usize,
+    s_a1: usize,
+    s_a2: usize,
+    s_h1: usize,
+    s_h1t: usize,
+    /// ρ: row sums of Â.
+    rho: Vec<f32>,
+    cache: Option<Cache>,
+}
+
+struct Cache {
+    // layer 1
+    gamma1: Matrix,
+    p1: Matrix,
+    pre1: Matrix,
+    // layer 2
+    gamma2: Matrix,
+    p2: Matrix,
+}
+
+fn scale_rows(m: &Matrix, rho: &[f32]) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let s = rho[r];
+        for v in out.row_mut(r) {
+            *v *= s;
+        }
+    }
+    out
+}
+
+impl Film {
+    pub fn new(
+        ds: &GraphDataset,
+        hidden: usize,
+        lr: f32,
+        rng: &mut Rng,
+        eng: &mut AdjEngine,
+    ) -> Film {
+        let l1 = FilmLayer::new(ds.features.cols, hidden, rng);
+        let l2 = FilmLayer::new(hidden, ds.n_classes, rng);
+        let adam = Adam::new(
+            &[
+                l1.w.data.len(), l1.g.data.len(), l1.bm.data.len(), l1.bias.len(),
+                l2.w.data.len(), l2.g.data.len(), l2.bm.data.len(), l2.bias.len(),
+            ],
+            lr,
+        );
+        let n = ds.adj.rows;
+        let mut rho = vec![0f32; n];
+        for i in 0..ds.adj_norm.nnz() {
+            rho[ds.adj_norm.row[i] as usize] += ds.adj_norm.val[i];
+        }
+        Film {
+            s_x: eng.add_slot("film.X", ds.features.clone()),
+            s_xt: eng.add_slot("film.Xt", ds.features.transpose()),
+            s_a1: eng.add_slot("film.A.l1", ds.adj_norm.clone()),
+            s_a2: eng.add_slot("film.A.l2", ds.adj_norm.clone()),
+            s_h1: eng.add_slot("film.H1", Coo::from_triples(n, hidden, vec![])),
+            s_h1t: eng.add_slot("film.H1t", Coo::from_triples(hidden, n, vec![])),
+            l1,
+            l2,
+            adam,
+            rho,
+            cache: None,
+        }
+    }
+
+    pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        // Layer 1 (input = sparse X).
+        let gamma1 = eng.spmm(self.s_x, &self.l1.g);
+        let beta1 = eng.spmm(self.s_x, &self.l1.bm);
+        let zw1 = eng.spmm(self.s_x, &self.l1.w);
+        let p1 = eng.spmm(self.s_a1, &zw1);
+        let pre1 = ops::add_row(
+            &ops::add(&ops::mul(&gamma1, &p1), &scale_rows(&beta1, &self.rho)),
+            &self.l1.bias,
+        );
+        let h1_dense = ops::relu(&pre1);
+        eng.update_slot_dense(self.s_h1, &h1_dense);
+        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
+
+        // Layer 2 (input = sparsified H1).
+        let gamma2 = eng.spmm(self.s_h1, &self.l2.g);
+        let beta2 = eng.spmm(self.s_h1, &self.l2.bm);
+        let zw2 = eng.spmm(self.s_h1, &self.l2.w);
+        let p2 = eng.spmm(self.s_a2, &zw2);
+        let logits = ops::add_row(
+            &ops::add(&ops::mul(&gamma2, &p2), &scale_rows(&beta2, &self.rho)),
+            &self.l2.bias,
+        );
+        self.cache = Some(Cache { gamma1, p1, pre1, gamma2, p2 });
+        logits
+    }
+
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let cache = self.cache.take().expect("forward before backward");
+        let db2 = ops::col_sums(dlogits);
+        // Layer 2.
+        let dgamma2 = ops::mul(&cache.p2, dlogits);
+        let dp2 = ops::mul(&cache.gamma2, dlogits);
+        let dbeta2 = scale_rows(dlogits, &self.rho);
+        let dzw2 = eng.spmm(self.s_a2, &dp2); // Âᵀ = Â
+        let dw2 = eng.spmm(self.s_h1t, &dzw2);
+        let dg2 = eng.spmm(self.s_h1t, &dgamma2);
+        let dbm2 = eng.spmm(self.s_h1t, &dbeta2);
+        let dh1 = {
+            let a = dzw2.matmul_t(&self.l2.w);
+            let b = dgamma2.matmul_t(&self.l2.g);
+            let c = dbeta2.matmul_t(&self.l2.bm);
+            ops::add(&ops::add(&a, &b), &c)
+        };
+
+        // Layer 1 through ReLU.
+        let dpre1 = ops::relu_grad(&cache.pre1, &dh1);
+        let db1 = ops::col_sums(&dpre1);
+        let dgamma1 = ops::mul(&cache.p1, &dpre1);
+        let dp1 = ops::mul(&cache.gamma1, &dpre1);
+        let dbeta1 = scale_rows(&dpre1, &self.rho);
+        let dzw1 = eng.spmm(self.s_a1, &dp1);
+        let dw1 = eng.spmm(self.s_xt, &dzw1);
+        let dg1 = eng.spmm(self.s_xt, &dgamma1);
+        let dbm1 = eng.spmm(self.s_xt, &dbeta1);
+
+        self.adam.tick();
+        self.adam.update_matrix(0, &mut self.l1.w, &dw1);
+        self.adam.update_matrix(1, &mut self.l1.g, &dg1);
+        self.adam.update_matrix(2, &mut self.l1.bm, &dbm1);
+        self.adam.update(3, &mut self.l1.bias, &db1);
+        self.adam.update_matrix(4, &mut self.l2.w, &dw2);
+        self.adam.update_matrix(5, &mut self.l2.g, &dg2);
+        self.adam.update_matrix(6, &mut self.l2.bm, &dbm2);
+        self.adam.update(7, &mut self.l2.bias, &db2);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::engine::StaticPolicy;
+    use crate::graph::DatasetSpec;
+    use crate::sparse::Format;
+
+    fn tiny_dataset(rng: &mut Rng) -> GraphDataset {
+        let spec = DatasetSpec {
+            name: "Tiny",
+            n: 100,
+            feat_dim: 20,
+            adj_density: 0.06,
+            feat_density: 0.2,
+            n_classes: 3,
+        };
+        GraphDataset::generate(&spec, rng)
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let mut rng = Rng::new(1);
+        let ds = tiny_dataset(&mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut eng = AdjEngine::new(&mut policy);
+        let mut model = Film::new(&ds, 12, 0.02, &mut rng, &mut eng);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let logits = model.forward(&mut eng);
+            let (loss, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+            model.backward(&mut eng, &dlogits);
+            losses.push(loss);
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "FiLM loss should drop: {:?} -> {:?}",
+            losses.first(),
+            losses.last()
+        );
+    }
+
+    #[test]
+    fn modulation_params_learn() {
+        let mut rng = Rng::new(2);
+        let ds = tiny_dataset(&mut rng);
+        let mut policy = StaticPolicy(Format::Coo);
+        let mut eng = AdjEngine::new(&mut policy);
+        let mut model = Film::new(&ds, 8, 0.05, &mut rng, &mut eng);
+        let g_before = model.l1.g.clone();
+        for _ in 0..3 {
+            let logits = model.forward(&mut eng);
+            let (_, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+            model.backward(&mut eng, &dlogits);
+        }
+        assert!(model.l1.g.max_abs_diff(&g_before) > 1e-7);
+    }
+}

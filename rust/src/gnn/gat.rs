@@ -1,0 +1,392 @@
+//! Graph Attention Network (Veličković et al. [30]) — two single-head
+//! layers with exact backward through the attention softmax.
+//!
+//! The attention matrix has the adjacency(+self-loop) pattern but fresh
+//! values every forward pass, so its engine slot is refreshed per epoch —
+//! exercising the runtime's re-conversion path exactly where PyG pays it.
+
+use super::adam::Adam;
+use super::engine::AdjEngine;
+use crate::graph::GraphDataset;
+use crate::sparse::Coo;
+use crate::tensor::{ops, Matrix};
+use crate::util::rng::Rng;
+
+const LEAKY: f32 = 0.2;
+
+/// Edge-pattern helpers -----------------------------------------------------
+
+/// Per-edge attention logits `u_e = al·z_i + ar·z_j` for edges `(i=row, j=col)`.
+fn edge_logits(pat: &Coo, z: &Matrix, al: &[f32], ar: &[f32]) -> Vec<f32> {
+    let score = |row: &[f32], a: &[f32]| -> f32 {
+        row.iter().zip(a.iter()).map(|(&x, &w)| x * w).sum()
+    };
+    // Precompute per-node al·z_i and ar·z_j (O(n·h) instead of O(E·h)).
+    let n = z.rows;
+    let mut sl = vec![0f32; n];
+    let mut sr = vec![0f32; n];
+    for i in 0..n {
+        sl[i] = score(z.row(i), al);
+        sr[i] = score(z.row(i), ar);
+    }
+    (0..pat.nnz())
+        .map(|e| sl[pat.row[e] as usize] + sr[pat.col[e] as usize])
+        .collect()
+}
+
+fn leaky(u: f32) -> f32 {
+    if u > 0.0 {
+        u
+    } else {
+        LEAKY * u
+    }
+}
+
+fn leaky_grad(u: f32) -> f32 {
+    if u > 0.0 {
+        1.0
+    } else {
+        LEAKY
+    }
+}
+
+/// Row segments of a row-sorted COO pattern: (start, end) per row with nnz.
+fn row_segments(pat: &Coo) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    let mut e = 0;
+    while e < pat.nnz() {
+        let r = pat.row[e];
+        let start = e;
+        while e < pat.nnz() && pat.row[e] == r {
+            e += 1;
+        }
+        segs.push((start, e));
+    }
+    segs
+}
+
+/// Per-row softmax over edge scores (after LeakyReLU).
+fn edge_softmax(pat: &Coo, u: &[f32]) -> Vec<f32> {
+    let mut alpha = vec![0f32; u.len()];
+    for &(s, t) in &row_segments(pat) {
+        let max = u[s..t].iter().map(|&x| leaky(x)).fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for e in s..t {
+            let v = (leaky(u[e]) - max).exp();
+            alpha[e] = v;
+            sum += v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for a in &mut alpha[s..t] {
+            *a *= inv;
+        }
+    }
+    alpha
+}
+
+/// One GAT layer's parameters + caches.
+struct GatLayer {
+    w: Matrix,
+    al: Vec<f32>,
+    ar: Vec<f32>,
+    bias: Vec<f32>,
+    // caches
+    z: Option<Matrix>,
+    u: Option<Vec<f32>>,
+    alpha: Option<Vec<f32>>,
+    pre: Option<Matrix>,
+}
+
+impl GatLayer {
+    fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> GatLayer {
+        GatLayer {
+            w: Matrix::glorot(d_in, d_out, rng),
+            al: (0..d_out).map(|_| (rng.normal() * 0.1) as f32).collect(),
+            ar: (0..d_out).map(|_| (rng.normal() * 0.1) as f32).collect(),
+            bias: vec![0.0; d_out],
+            z: None,
+            u: None,
+            alpha: None,
+            pre: None,
+        }
+    }
+}
+
+/// Two-layer single-head GAT.
+pub struct Gat {
+    l1: GatLayer,
+    l2: GatLayer,
+    adam: Adam,
+    pattern: Coo,
+    /// Transposed attention pattern + permutation mapping its entry order
+    /// back into `pattern`'s (so per-epoch refreshes are value copies).
+    pattern_t: Coo,
+    t_perm: Vec<usize>,
+    s_x: usize,
+    s_xt: usize,
+    s_att1: usize,
+    s_att1t: usize,
+    s_att2: usize,
+    s_att2t: usize,
+    s_h1: usize,
+    s_h1t: usize,
+    h1_cache: Option<Matrix>, // pre-activation of layer 1
+}
+
+impl Gat {
+    pub fn new(
+        ds: &GraphDataset,
+        hidden: usize,
+        lr: f32,
+        rng: &mut Rng,
+        eng: &mut AdjEngine,
+    ) -> Gat {
+        let n = ds.adj.rows;
+        // Attention pattern: adjacency + self loops (values irrelevant).
+        let mut triples: Vec<(u32, u32, f32)> =
+            (0..ds.adj.nnz()).map(|i| (ds.adj.row[i], ds.adj.col[i], 1.0)).collect();
+        for i in 0..n as u32 {
+            triples.push((i, i, 1.0));
+        }
+        let pattern = Coo::from_triples(n, n, triples);
+        // Transposed pattern and the entry-order permutation (sort edge ids
+        // by (col, row)) — computed once; every forward only copies values.
+        let mut t_perm: Vec<usize> = (0..pattern.nnz()).collect();
+        t_perm.sort_unstable_by_key(|&e| ((pattern.col[e] as u64) << 32) | pattern.row[e] as u64);
+        let pattern_t = Coo {
+            rows: n,
+            cols: n,
+            row: t_perm.iter().map(|&e| pattern.col[e]).collect(),
+            col: t_perm.iter().map(|&e| pattern.row[e]).collect(),
+            val: vec![1.0; pattern.nnz()],
+        };
+        let l1 = GatLayer::new(ds.features.cols, hidden, rng);
+        let l2 = GatLayer::new(hidden, ds.n_classes, rng);
+        let adam = Adam::new(
+            &[
+                l1.w.data.len(), l1.al.len(), l1.ar.len(), l1.bias.len(),
+                l2.w.data.len(), l2.al.len(), l2.ar.len(), l2.bias.len(),
+            ],
+            lr,
+        );
+        let empty_h1 = Coo::from_triples(n, hidden, vec![]);
+        let empty_h1t = Coo::from_triples(hidden, n, vec![]);
+        Gat {
+            s_x: eng.add_slot("gat.X", ds.features.clone()),
+            s_xt: eng.add_slot("gat.Xt", ds.features.transpose()),
+            s_att1: eng.add_slot("gat.Att.l1", pattern.clone()),
+            s_att1t: eng.add_slot("gat.Att.l1t", pattern.transpose()),
+            s_att2: eng.add_slot("gat.Att.l2", pattern.clone()),
+            s_att2t: eng.add_slot("gat.Att.l2t", pattern.transpose()),
+            s_h1: eng.add_slot("gat.H1", empty_h1),
+            s_h1t: eng.add_slot("gat.H1t", empty_h1t),
+            pattern,
+            pattern_t,
+            t_perm,
+            l1,
+            l2,
+            adam,
+            h1_cache: None,
+        }
+    }
+
+    /// Shared per-layer forward: projection slot → attention → aggregation.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_forward(
+        pattern: &Coo,
+        pattern_t: &Coo,
+        t_perm: &[usize],
+        layer: &mut GatLayer,
+        eng: &mut AdjEngine,
+        s_in: usize,
+        s_att: usize,
+        s_att_t: usize,
+    ) -> Matrix {
+        let z = eng.spmm(s_in, &layer.w);
+        let u = edge_logits(pattern, &z, &layer.al, &layer.ar);
+        let alpha = edge_softmax(pattern, &u);
+        // Attention matrix: fixed pattern, fresh α values — value-copy
+        // refresh, no per-epoch re-conversion (§Perf).
+        eng.update_slot_values(s_att, pattern, &alpha);
+        let alpha_t: Vec<f32> = t_perm.iter().map(|&e| alpha[e]).collect();
+        eng.update_slot_values(s_att_t, pattern_t, &alpha_t);
+        let agg = eng.spmm(s_att, &z);
+        let pre = ops::add_row(&agg, &layer.bias);
+        layer.z = Some(z);
+        layer.u = Some(u);
+        layer.alpha = Some(alpha);
+        layer.pre = Some(pre.clone());
+        pre
+    }
+
+    /// Shared per-layer backward. Returns `dz · Wᵀ` (gradient wrt the layer
+    /// input) and the parameter gradients (dw, dal, dar, dbias).
+    #[allow(clippy::type_complexity)]
+    fn layer_backward(
+        pattern: &Coo,
+        layer: &GatLayer,
+        eng: &mut AdjEngine,
+        s_in_t: usize,
+        s_att_t: usize,
+        dpre: &Matrix,
+    ) -> (Matrix, Matrix, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let z = layer.z.as_ref().unwrap();
+        let u = layer.u.as_ref().unwrap();
+        let alpha = layer.alpha.as_ref().unwrap();
+        let h = z.cols;
+
+        let dbias = ops::col_sums(dpre);
+        // Aggregation path: dz += A_αᵀ · dpre.
+        let mut dz = eng.spmm(s_att_t, dpre);
+        // Attention path.
+        // dα_e = dpre_i · z_j.
+        let dalpha: Vec<f32> = crate::util::parallel::parallel_map(pattern.nnz(), |e| {
+            let i = pattern.row[e] as usize;
+            let j = pattern.col[e] as usize;
+            dpre.row(i).iter().zip(z.row(j).iter()).map(|(&a, &b)| a * b).sum()
+        });
+        // Softmax backward per row + LeakyReLU gate.
+        let mut du = vec![0f32; pattern.nnz()];
+        for &(s, t) in &row_segments(pattern) {
+            let dot: f32 = (s..t).map(|e| alpha[e] * dalpha[e]).sum();
+            for e in s..t {
+                du[e] = alpha[e] * (dalpha[e] - dot) * leaky_grad(u[e]);
+            }
+        }
+        // Scatter du into dal/dar and dz.
+        let mut dal = vec![0f32; h];
+        let mut dar = vec![0f32; h];
+        for e in 0..pattern.nnz() {
+            let i = pattern.row[e] as usize;
+            let j = pattern.col[e] as usize;
+            let g = du[e];
+            if g == 0.0 {
+                continue;
+            }
+            for k in 0..h {
+                dal[k] += g * z.at(i, k);
+                dar[k] += g * z.at(j, k);
+                *dz.at_mut(i, k) += g * layer.al[k];
+                *dz.at_mut(j, k) += g * layer.ar[k];
+            }
+        }
+        // dW = inputᵀ · dz (format-managed).
+        let dw = eng.spmm(s_in_t, &dz);
+        let dinput = dz.matmul_t(&layer.w);
+        (dinput, dw, dal, dar, dbias)
+    }
+
+    pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        let pre1 = Self::layer_forward(
+            &self.pattern, &self.pattern_t, &self.t_perm,
+            &mut self.l1, eng, self.s_x, self.s_att1, self.s_att1t,
+        );
+        let h1_dense = ops::relu(&pre1);
+        eng.update_slot_dense(self.s_h1, &h1_dense);
+        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
+        self.h1_cache = Some(pre1);
+        Self::layer_forward(
+            &self.pattern, &self.pattern_t, &self.t_perm,
+            &mut self.l2, eng, self.s_h1, self.s_att2, self.s_att2t,
+        )
+    }
+
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let pre1 = self.h1_cache.take().expect("forward before backward");
+        let (dh1, dw2, dal2, dar2, db2) = Self::layer_backward(
+            &self.pattern, &self.l2, eng, self.s_h1t, self.s_att2t, dlogits,
+        );
+        let dpre1 = ops::relu_grad(&pre1, &dh1);
+        let (_dx, dw1, dal1, dar1, db1) = Self::layer_backward(
+            &self.pattern, &self.l1, eng, self.s_xt, self.s_att1t, &dpre1,
+        );
+        self.adam.tick();
+        self.adam.update_matrix(0, &mut self.l1.w, &dw1);
+        self.adam.update(1, &mut self.l1.al, &dal1);
+        self.adam.update(2, &mut self.l1.ar, &dar1);
+        self.adam.update(3, &mut self.l1.bias, &db1);
+        self.adam.update_matrix(4, &mut self.l2.w, &dw2);
+        self.adam.update(5, &mut self.l2.al, &dal2);
+        self.adam.update(6, &mut self.l2.ar, &dar2);
+        self.adam.update(7, &mut self.l2.bias, &db2);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::engine::StaticPolicy;
+    use crate::graph::DatasetSpec;
+    use crate::sparse::Format;
+
+    fn tiny_dataset(rng: &mut Rng) -> GraphDataset {
+        let spec = DatasetSpec {
+            name: "Tiny",
+            n: 90,
+            feat_dim: 20,
+            adj_density: 0.06,
+            feat_density: 0.2,
+            n_classes: 3,
+        };
+        GraphDataset::generate(&spec, rng)
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let ds = tiny_dataset(&mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut eng = AdjEngine::new(&mut policy);
+        let mut model = Gat::new(&ds, 8, 0.01, &mut rng, &mut eng);
+        let _ = model.forward(&mut eng);
+        let alpha = model.l1.alpha.as_ref().unwrap();
+        for &(s, t) in &row_segments(&model.pattern) {
+            let sum: f32 = alpha[s..t].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row softmax sum {sum}");
+        }
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let mut rng = Rng::new(2);
+        let ds = tiny_dataset(&mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut eng = AdjEngine::new(&mut policy);
+        let mut model = Gat::new(&ds, 8, 0.02, &mut rng, &mut eng);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let logits = model.forward(&mut eng);
+            let (loss, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+            model.backward(&mut eng, &dlogits);
+            losses.push(loss);
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.8),
+            "GAT loss should drop: {:?} -> {:?}",
+            losses.first(),
+            losses.last()
+        );
+    }
+
+    #[test]
+    fn attention_params_receive_gradient() {
+        let mut rng = Rng::new(3);
+        let ds = tiny_dataset(&mut rng);
+        let mut policy = StaticPolicy(Format::Coo);
+        let mut eng = AdjEngine::new(&mut policy);
+        let mut model = Gat::new(&ds, 8, 0.05, &mut rng, &mut eng);
+        let al_before = model.l1.al.clone();
+        for _ in 0..3 {
+            let logits = model.forward(&mut eng);
+            let (_, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+            model.backward(&mut eng, &dlogits);
+        }
+        let moved = model
+            .l1
+            .al
+            .iter()
+            .zip(al_before.iter())
+            .any(|(&a, &b)| (a - b).abs() > 1e-7);
+        assert!(moved, "attention vector al should be updated");
+    }
+}

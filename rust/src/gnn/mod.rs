@@ -1,0 +1,22 @@
+//! The five GNN architectures of the paper's evaluation (§5.1) — GCN [18],
+//! GAT [30], RGCN [26], GNN-FiLM [3] and EGC [28] — implemented with
+//! explicit forward/backward passes over the sparse substrate.
+//!
+//! Every sparse multiply goes through [`engine::AdjEngine`], the integration
+//! point where the paper's contribution happens: before a layer touches a
+//! sparse matrix, the engine consults a [`engine::FormatPolicy`] (static
+//! format / learned predictor / oracle), converts if needed, and charges
+//! feature-extraction + prediction + conversion overhead to the measured
+//! time — matching the paper's accounting.
+
+pub mod engine;
+pub mod adam;
+pub mod gcn;
+pub mod gat;
+pub mod rgcn;
+pub mod film;
+pub mod egc;
+pub mod train;
+
+pub use engine::{AdjEngine, FormatPolicy, StaticPolicy};
+pub use train::{train, ModelKind, TrainConfig, TrainReport, ALL_MODELS};

@@ -1,0 +1,236 @@
+//! Unified training loop over the five GNN architectures — the measurement
+//! harness behind every speedup figure in the paper (end-to-end epoch time,
+//! including format decisions, conversions and feature extraction).
+
+use super::egc::Egc;
+use super::engine::{AdjEngine, Decision, FormatPolicy};
+use super::film::Film;
+use super::gat::Gat;
+use super::gcn::Gcn;
+use super::rgcn::Rgcn;
+use crate::graph::GraphDataset;
+use crate::tensor::{ops, Matrix};
+use crate::util::rng::Rng;
+
+/// The paper's five evaluated architectures (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Gat,
+    Rgcn,
+    Film,
+    Egc,
+}
+
+pub const ALL_MODELS: [ModelKind; 5] =
+    [ModelKind::Gcn, ModelKind::Gat, ModelKind::Rgcn, ModelKind::Film, ModelKind::Egc];
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "GCN",
+            ModelKind::Gat => "GAT",
+            ModelKind::Rgcn => "RGCN",
+            ModelKind::Film => "FiLM",
+            ModelKind::Egc => "EGC",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ModelKind> {
+        ALL_MODELS.iter().copied().find(|m| m.name().eq_ignore_ascii_case(name))
+    }
+}
+
+enum AnyModel {
+    Gcn(Gcn),
+    Gat(Gat),
+    Rgcn(Rgcn),
+    Film(Film),
+    Egc(Egc),
+}
+
+impl AnyModel {
+    fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        match self {
+            AnyModel::Gcn(m) => m.forward(eng),
+            AnyModel::Gat(m) => m.forward(eng),
+            AnyModel::Rgcn(m) => m.forward(eng),
+            AnyModel::Film(m) => m.forward(eng),
+            AnyModel::Egc(m) => m.forward(eng),
+        }
+    }
+
+    fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        match self {
+            AnyModel::Gcn(m) => m.backward(eng, dlogits),
+            AnyModel::Gat(m) => m.backward(eng, dlogits),
+            AnyModel::Rgcn(m) => m.backward(eng, dlogits),
+            AnyModel::Film(m) => m.backward(eng, dlogits),
+            AnyModel::Egc(m) => m.backward(eng, dlogits),
+        }
+    }
+
+    fn h1_density(&self) -> Option<f64> {
+        match self {
+            AnyModel::Gcn(m) => m.h1_density(),
+            _ => None,
+        }
+    }
+}
+
+/// Training hyperparameters (paper §5.2: 10 epochs per measurement).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub hidden: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 10, hidden: 16, lr: 0.02, seed: 0x6E11 }
+    }
+}
+
+/// Everything a figure needs from one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub model: &'static str,
+    pub dataset: String,
+    pub policy: String,
+    pub losses: Vec<f32>,
+    pub final_train_acc: f64,
+    pub final_test_acc: f64,
+    /// End-to-end wall-clock time (includes all engine overheads).
+    pub total_time: f64,
+    /// Engine phase breakdown: (phase, seconds, invocations).
+    pub phases: Vec<(&'static str, f64, u64)>,
+    pub decisions: Vec<Decision>,
+    /// H1 density per epoch (GCN — the Fig-2 drift signal).
+    pub h1_densities: Vec<f64>,
+}
+
+/// Train `kind` on `ds` under `policy`, measuring end-to-end time.
+pub fn train(
+    kind: ModelKind,
+    ds: &GraphDataset,
+    policy: &mut dyn FormatPolicy,
+    cfg: &TrainConfig,
+) -> TrainReport {
+    let policy_name = policy.policy_name();
+    let start = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let mut eng = AdjEngine::new(policy);
+    let mut model = match kind {
+        ModelKind::Gcn => AnyModel::Gcn(Gcn::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
+        ModelKind::Gat => AnyModel::Gat(Gat::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
+        ModelKind::Rgcn => AnyModel::Rgcn(Rgcn::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
+        ModelKind::Film => AnyModel::Film(Film::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
+        ModelKind::Egc => AnyModel::Egc(Egc::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
+    };
+
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    let mut h1_densities = Vec::new();
+    for _epoch in 0..cfg.epochs {
+        let logits = model.forward(&mut eng);
+        let (loss, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+        if let Some(d) = model.h1_density() {
+            h1_densities.push(d);
+        }
+        model.backward(&mut eng, &dlogits);
+        losses.push(loss);
+    }
+    let logits = model.forward(&mut eng);
+    let final_train_acc = ops::masked_accuracy(&logits, &ds.labels, &ds.train_mask);
+    let final_test_acc = ops::masked_accuracy(&logits, &ds.labels, &ds.test_mask);
+    // The oracle's exhaustive profiling models a perfect zero-overhead
+    // predictor (paper §6.3): its search time is excluded from the
+    // reported end-to-end time. All real policies charge their overhead
+    // to other phases, which stay included.
+    let total_time = start.elapsed().as_secs_f64() - eng.sw.total("oracle_search");
+
+    TrainReport {
+        model: kind.name(),
+        dataset: ds.name.clone(),
+        policy: policy_name,
+        losses,
+        final_train_acc,
+        final_test_acc,
+        total_time,
+        phases: eng.sw.report(),
+        decisions: eng.decisions.clone(),
+        h1_densities,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::engine::StaticPolicy;
+    use crate::graph::DatasetSpec;
+    use crate::sparse::Format;
+
+    fn tiny() -> GraphDataset {
+        let mut rng = Rng::new(11);
+        GraphDataset::generate(
+            &DatasetSpec {
+                name: "Tiny",
+                n: 80,
+                feat_dim: 16,
+                adj_density: 0.08,
+                feat_density: 0.2,
+                n_classes: 3,
+            },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn all_five_models_train() {
+        let ds = tiny();
+        for kind in ALL_MODELS {
+            let mut policy = StaticPolicy(Format::Csr);
+            let report = train(
+                kind,
+                &ds,
+                &mut policy,
+                &TrainConfig { epochs: 8, hidden: 8, ..Default::default() },
+            );
+            assert_eq!(report.losses.len(), 8);
+            let first = report.losses[0];
+            let last = *report.losses.last().unwrap();
+            assert!(
+                last < first,
+                "{}: loss should decrease ({first} -> {last})",
+                kind.name()
+            );
+            assert!(report.total_time > 0.0);
+            assert!(!report.phases.is_empty());
+            assert!(!report.decisions.is_empty());
+        }
+    }
+
+    #[test]
+    fn model_kind_roundtrip() {
+        for m in ALL_MODELS {
+            assert_eq!(ModelKind::from_name(m.name()), Some(m));
+        }
+        assert_eq!(ModelKind::from_name("gcn"), Some(ModelKind::Gcn));
+        assert_eq!(ModelKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn gcn_reports_h1_density_per_epoch() {
+        let ds = tiny();
+        let mut policy = StaticPolicy(Format::Csr);
+        let report = train(
+            ModelKind::Gcn,
+            &ds,
+            &mut policy,
+            &TrainConfig { epochs: 5, hidden: 8, ..Default::default() },
+        );
+        assert_eq!(report.h1_densities.len(), 5);
+        assert!(report.h1_densities.iter().all(|&d| d > 0.0 && d <= 1.0));
+    }
+}

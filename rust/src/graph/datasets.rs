@@ -1,0 +1,382 @@
+//! The paper's evaluation datasets (Table 1), synthesized to matching
+//! shape, density, and degree skew. KarateClub uses the real Zachary graph
+//! (public domain). The Entities suite for RGCN is generated as multi-
+//! relational graphs.
+//!
+//! Substitution note (DESIGN.md): the format predictor consumes only matrix
+//! *structure*; matching N, density and degree distribution reproduces the
+//! format-performance trade-offs the paper measured.
+
+use super::generators;
+use super::normalize_adj;
+use crate::sparse::Coo;
+use crate::util::rng::Rng;
+
+/// Shape/density spec for a Table-1 dataset (paper scale).
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Number of graph nodes (adjacency is n × n).
+    pub n: usize,
+    /// Node feature dimension.
+    pub feat_dim: usize,
+    /// Adjacency density (Table 1).
+    pub adj_density: f64,
+    /// Node feature density (bag-of-words style sparsity).
+    pub feat_density: f64,
+    pub n_classes: usize,
+}
+
+/// Paper Table 1 (adjacency is n×n; the table's second dimension is the
+/// feature arity).
+pub const PAPER_DATASETS: [DatasetSpec; 5] = [
+    DatasetSpec { name: "CoraFull", n: 19_793, feat_dim: 8_710, adj_density: 0.006, feat_density: 0.007, n_classes: 70 },
+    DatasetSpec { name: "Cora", n: 2_708, feat_dim: 1_433, adj_density: 0.0127, feat_density: 0.0127, n_classes: 7 },
+    DatasetSpec { name: "DblpFull", n: 17_716, feat_dim: 1_639, adj_density: 0.0031, feat_density: 0.006, n_classes: 4 },
+    DatasetSpec { name: "PubmedFull", n: 19_717, feat_dim: 500, adj_density: 0.1002, feat_density: 0.02, n_classes: 3 },
+    DatasetSpec { name: "KarateClub", n: 34, feat_dim: 34, adj_density: 0.0294, feat_density: 0.0294, n_classes: 2 },
+];
+
+impl DatasetSpec {
+    /// Laptop-scale variant: nodes divided by `shrink`, feature dim capped —
+    /// same density band, same degree skew (see DESIGN.md §Substitutions).
+    pub fn scaled(&self, shrink: usize, max_feat: usize) -> DatasetSpec {
+        let mut s = *self;
+        if s.n > 64 {
+            s.n = (s.n / shrink).max(64);
+        }
+        s.feat_dim = s.feat_dim.min(max_feat);
+        s
+    }
+
+    /// Default evaluation scale used across benches (shrink 4, feat ≤ 256).
+    pub fn laptop(&self) -> DatasetSpec {
+        self.scaled(4, 256)
+    }
+}
+
+/// A node-classification graph dataset.
+#[derive(Clone, Debug)]
+pub struct GraphDataset {
+    pub name: String,
+    /// Raw symmetric adjacency (no self loops).
+    pub adj: Coo,
+    /// Â = D^{-1/2}(A+I)D^{-1/2}.
+    pub adj_norm: Coo,
+    /// Sparse node features (n × feat_dim) — bag-of-words style.
+    pub features: Coo,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl GraphDataset {
+    /// Generate a dataset matching `spec`: SBM-style homophilous graph with
+    /// power-law degree activity, plus class-signature sparse features.
+    pub fn generate(spec: &DatasetSpec, rng: &mut Rng) -> GraphDataset {
+        if spec.name == "KarateClub" {
+            return karate_club();
+        }
+        let n = spec.n;
+        let k = spec.n_classes;
+        let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(k)).collect();
+
+        // Node activity (power-law) controls degree skew like citation data.
+        let activity: Vec<f64> = (0..n)
+            .map(|_| 1.0 / (1.0 + rng.powerlaw(1000, 2.0) as f64))
+            .collect();
+        let act_sum: f64 = activity.iter().sum();
+
+        // Target undirected edge count from density (nnz = 2·edges).
+        let target_edges = ((n as f64 * n as f64 * spec.adj_density) / 2.0).round() as usize;
+        let homophily = 0.8;
+        let mut triples = Vec::with_capacity(target_edges * 2);
+        // Pre-bucket nodes per class for homophilous target sampling.
+        let mut per_class: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (i, &l) in labels.iter().enumerate() {
+            per_class[l].push(i as u32);
+        }
+        // Activity-weighted source sampling via cumulative table.
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for &a in &activity {
+            acc += a / act_sum;
+            cum.push(acc);
+        }
+        let sample_node = |rng: &mut Rng| -> usize {
+            let u = rng.next_f64();
+            cum.partition_point(|&c| c < u).min(n - 1)
+        };
+        let mut placed = 0usize;
+        let mut attempts = 0usize;
+        while placed < target_edges && attempts < target_edges * 20 {
+            attempts += 1;
+            let src = sample_node(rng);
+            let dst = if rng.bernoulli(homophily) {
+                let bucket = &per_class[labels[src]];
+                if bucket.is_empty() {
+                    continue;
+                }
+                *rng.choose(bucket) as usize
+            } else {
+                sample_node(rng)
+            };
+            if src == dst {
+                continue;
+            }
+            triples.push((src as u32, dst as u32, 1.0f32));
+            triples.push((dst as u32, src as u32, 1.0f32));
+            placed += 1;
+        }
+        let adj = Coo::from_triples(n, n, triples);
+
+        // Sparse class-signature features: each class owns a word bucket;
+        // each node samples most words from its class bucket + noise.
+        let d = spec.feat_dim;
+        let words_per_node = ((d as f64 * spec.feat_density).round() as usize).clamp(1, d);
+        let bucket = (d / k).max(1);
+        let mut ftriples = Vec::with_capacity(n * words_per_node);
+        for (i, &l) in labels.iter().enumerate() {
+            for _ in 0..words_per_node {
+                let w = if rng.bernoulli(0.8) {
+                    (l * bucket + rng.gen_range(bucket)).min(d - 1)
+                } else {
+                    rng.gen_range(d)
+                };
+                ftriples.push((i as u32, w as u32, 1.0f32));
+            }
+        }
+        let features = Coo::from_triples(n, d, ftriples);
+
+        let (train_mask, val_mask, test_mask) = split_masks(n, rng);
+        GraphDataset {
+            name: spec.name.to_string(),
+            adj_norm: normalize_adj(&adj),
+            adj,
+            features,
+            labels,
+            n_classes: k,
+            train_mask,
+            val_mask,
+            test_mask,
+        }
+    }
+}
+
+/// 60/20/20 node split.
+fn split_masks(n: usize, rng: &mut Rng) -> (Vec<bool>, Vec<bool>, Vec<bool>) {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut train = vec![false; n];
+    let mut val = vec![false; n];
+    let mut test = vec![false; n];
+    for (pos, &i) in idx.iter().enumerate() {
+        match pos * 10 / n {
+            0..=5 => train[i] = true,
+            6..=7 => val[i] = true,
+            _ => test[i] = true,
+        }
+    }
+    (train, val, test)
+}
+
+/// Zachary's karate club (real, public-domain): 34 nodes, 78 edges,
+/// 2 factions, identity features — Table 1's smallest dataset.
+pub fn karate_club() -> GraphDataset {
+    #[rustfmt::skip]
+    const EDGES: [(u32, u32); 78] = [
+        (1,2),(1,3),(2,3),(1,4),(2,4),(3,4),(1,5),(1,6),(1,7),(5,7),(6,7),
+        (1,8),(2,8),(3,8),(4,8),(1,9),(3,9),(3,10),(1,11),(5,11),(6,11),
+        (1,12),(1,13),(4,13),(1,14),(2,14),(3,14),(4,14),(6,17),(7,17),
+        (1,18),(2,18),(1,20),(2,20),(1,22),(2,22),(24,26),(25,26),(3,28),
+        (24,28),(25,28),(3,29),(24,30),(27,30),(2,31),(9,31),(1,32),(25,32),
+        (26,32),(29,32),(3,33),(9,33),(15,33),(16,33),(19,33),(21,33),
+        (23,33),(24,33),(30,33),(31,33),(32,33),(9,34),(10,34),(14,34),
+        (15,34),(16,34),(19,34),(20,34),(21,34),(23,34),(24,34),(27,34),
+        (28,34),(29,34),(30,34),(31,34),(32,34),(33,34),
+    ];
+    const FACTION_HI: [u32; 17] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 11, 12, 13, 14, 17, 18, 20, 22];
+    let n = 34;
+    let mut triples = Vec::with_capacity(EDGES.len() * 2);
+    for &(a, b) in &EDGES {
+        triples.push((a - 1, b - 1, 1.0f32));
+        triples.push((b - 1, a - 1, 1.0f32));
+    }
+    let adj = Coo::from_triples(n, n, triples);
+    let labels: Vec<usize> = (0..n as u32)
+        .map(|i| usize::from(!FACTION_HI.contains(&(i + 1))))
+        .collect();
+    // Identity features (the standard featureless-graph convention).
+    let features = Coo::from_triples(n, n, (0..n as u32).map(|i| (i, i, 1.0f32)).collect());
+    // Semi-supervised: label 4 seeds per faction, evaluate on the rest.
+    let mut train_mask = vec![false; n];
+    for &i in &[0usize, 1, 2, 3, 33, 32, 31, 30] {
+        train_mask[i] = true;
+    }
+    let test_mask: Vec<bool> = train_mask.iter().map(|&t| !t).collect();
+    GraphDataset {
+        name: "KarateClub".to_string(),
+        adj_norm: normalize_adj(&adj),
+        adj,
+        features,
+        labels,
+        n_classes: 2,
+        val_mask: vec![false; n],
+        train_mask,
+        test_mask,
+    }
+}
+
+/// Multi-relational dataset for RGCN (the paper's Entities suite [26]):
+/// one adjacency per relation type, identity features, entity-class labels.
+#[derive(Clone, Debug)]
+pub struct RelationalDataset {
+    pub name: String,
+    pub adjs: Vec<Coo>,
+    pub adjs_norm: Vec<Coo>,
+    pub n: usize,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+    pub train_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl RelationalDataset {
+    /// Generate an Entities-like relational graph. Relation densities are
+    /// skewed (one dominant relation + sparse auxiliaries) as in AIFB/MUTAG.
+    pub fn generate(name: &str, n: usize, n_rels: usize, n_classes: usize, rng: &mut Rng) -> RelationalDataset {
+        let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(n_classes)).collect();
+        let mut adjs = Vec::with_capacity(n_rels);
+        for r in 0..n_rels {
+            let density = 0.004 / (1.0 + r as f64 * 2.0);
+            let pattern = if r % 2 == 0 {
+                generators::MatrixPattern::PowerLaw
+            } else {
+                generators::MatrixPattern::Uniform
+            };
+            let m = generators::gen_matrix(rng, n, density, pattern);
+            // Symmetrize (RGCN uses inverse relations; we fold them in).
+            let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(m.nnz() * 2);
+            for i in 0..m.nnz() {
+                triples.push((m.row[i], m.col[i], 1.0));
+                triples.push((m.col[i], m.row[i], 1.0));
+            }
+            adjs.push(Coo::from_triples(n, n, triples));
+        }
+        let adjs_norm = adjs.iter().map(normalize_adj).collect();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut train_mask = vec![false; n];
+        for &i in idx.iter().take(n * 8 / 10) {
+            train_mask[i] = true;
+        }
+        let test_mask: Vec<bool> = train_mask.iter().map(|&t| !t).collect();
+        RelationalDataset {
+            name: name.to_string(),
+            adjs,
+            adjs_norm,
+            n,
+            labels,
+            n_classes,
+            train_mask,
+            test_mask,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn karate_club_is_the_real_graph() {
+        let kc = karate_club();
+        assert_eq!(kc.adj.rows, 34);
+        assert_eq!(kc.adj.nnz(), 156); // 78 undirected edges
+        assert_eq!(kc.labels.iter().filter(|&&l| l == 0).count(), 17);
+        // Symmetric.
+        assert_eq!(kc.adj.transpose(), kc.adj);
+        // Node 0 (Mr. Hi) and node 33 (Officer) are in different factions.
+        assert_ne!(kc.labels[0], kc.labels[33]);
+    }
+
+    #[test]
+    fn generated_dataset_matches_spec_roughly() {
+        let mut rng = Rng::new(1);
+        let spec = DatasetSpec {
+            name: "Test",
+            n: 400,
+            feat_dim: 64,
+            adj_density: 0.02,
+            feat_density: 0.05,
+            n_classes: 4,
+        };
+        let ds = GraphDataset::generate(&spec, &mut rng);
+        assert_eq!(ds.adj.rows, 400);
+        let density = ds.adj.density();
+        assert!(density > 0.008 && density < 0.04, "density {density}");
+        // Symmetric adjacency.
+        assert_eq!(ds.adj.transpose(), ds.adj);
+        // Features shaped and sparse.
+        assert_eq!(ds.features.rows, 400);
+        assert_eq!(ds.features.cols, 64);
+        assert!(ds.features.density() < 0.2);
+        // Masks partition.
+        for i in 0..400 {
+            let cnt = usize::from(ds.train_mask[i]) + usize::from(ds.val_mask[i]) + usize::from(ds.test_mask[i]);
+            assert_eq!(cnt, 1);
+        }
+    }
+
+    #[test]
+    fn homophily_present() {
+        let mut rng = Rng::new(2);
+        let spec = DatasetSpec {
+            name: "Homo",
+            n: 300,
+            feat_dim: 32,
+            adj_density: 0.03,
+            feat_density: 0.1,
+            n_classes: 3,
+        };
+        let ds = GraphDataset::generate(&spec, &mut rng);
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for i in 0..ds.adj.nnz() {
+            total += 1;
+            if ds.labels[ds.adj.row[i] as usize] == ds.labels[ds.adj.col[i] as usize] {
+                intra += 1;
+            }
+        }
+        let frac = intra as f64 / total as f64;
+        assert!(frac > 0.6, "homophily fraction {frac}");
+    }
+
+    #[test]
+    fn laptop_scaling() {
+        let full = PAPER_DATASETS[0];
+        let small = full.laptop();
+        assert_eq!(small.n, full.n / 4);
+        assert_eq!(small.feat_dim, 256);
+        assert_eq!(small.adj_density, full.adj_density);
+        // Karate club (n=34 ≤ 64) never shrinks.
+        let kc = PAPER_DATASETS[4].laptop();
+        assert_eq!(kc.n, 34);
+    }
+
+    #[test]
+    fn relational_dataset_shapes() {
+        let mut rng = Rng::new(3);
+        let ds = RelationalDataset::generate("EntitiesTest", 200, 3, 4, &mut rng);
+        assert_eq!(ds.adjs.len(), 3);
+        assert_eq!(ds.adjs_norm.len(), 3);
+        for a in &ds.adjs {
+            assert_eq!(a.rows, 200);
+            assert_eq!(a.transpose(), *a);
+        }
+        // Dominant relation is denser than auxiliaries.
+        assert!(ds.adjs[0].nnz() >= ds.adjs[2].nnz());
+    }
+}

@@ -1,0 +1,206 @@
+//! Synthetic sparse-matrix generators for predictor training (paper §4.3)
+//! and for the Fig-6 label-frequency study.
+//!
+//! The paper trains on 300 random square matrices spanning sparsity
+//! 0.1%–70%. We additionally mix structural patterns (uniform, power-law,
+//! banded, block, diagonal) so each storage format has inputs it can win —
+//! the same variety real graphs + GNN intermediates exhibit.
+
+use crate::sparse::Coo;
+use crate::util::rng::Rng;
+
+/// Non-zero placement pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixPattern {
+    /// i.i.d. uniform placement.
+    Uniform,
+    /// Skewed row/column degrees (citation-graph-like).
+    PowerLaw,
+    /// Non-zeros concentrated within a diagonal band.
+    Banded,
+    /// Non-zeros clustered in aligned square blocks.
+    Block,
+    /// A few dense diagonals.
+    Diagonal,
+}
+
+pub const ALL_PATTERNS: [MatrixPattern; 5] = [
+    MatrixPattern::Uniform,
+    MatrixPattern::PowerLaw,
+    MatrixPattern::Banded,
+    MatrixPattern::Block,
+    MatrixPattern::Diagonal,
+];
+
+/// Generate an `n × n` matrix with ~`density` non-zeros in the given pattern.
+pub fn gen_matrix(rng: &mut Rng, n: usize, density: f64, pattern: MatrixPattern) -> Coo {
+    let target = ((n as f64 * n as f64 * density).round() as usize).max(1);
+    let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(target + target / 4);
+    match pattern {
+        MatrixPattern::Uniform => {
+            for _ in 0..target {
+                triples.push((
+                    rng.gen_range(n) as u32,
+                    rng.gen_range(n) as u32,
+                    rng.uniform(0.1, 1.0) as f32,
+                ));
+            }
+        }
+        MatrixPattern::PowerLaw => {
+            // Skewed draws collide often at high density; sample distinct
+            // coordinates until the target count is reached (bounded).
+            let mut seen = std::collections::HashSet::with_capacity(target * 2);
+            let mut attempts = 0usize;
+            while seen.len() < target && attempts < target * 30 {
+                attempts += 1;
+                let r = rng.powerlaw(n, 2.1);
+                let c = if rng.bernoulli(0.5) { rng.powerlaw(n, 2.1) } else { rng.gen_range(n) };
+                if seen.insert((r as u32, c as u32)) {
+                    triples.push((r as u32, c as u32, rng.uniform(0.1, 1.0) as f32));
+                }
+            }
+        }
+        MatrixPattern::Banded => {
+            // Bandwidth chosen so the band can hold the target nnz.
+            let band = ((target as f64 / (2.0 * n as f64)).ceil() as i64 + 1)
+                .min(n as i64 / 2)
+                .max(1);
+            let mut placed = 0;
+            while placed < target {
+                let r = rng.gen_range(n) as i64;
+                let off = rng.gen_range((2 * band + 1) as usize) as i64 - band;
+                let c = r + off;
+                if c >= 0 && c < n as i64 {
+                    triples.push((r as u32, c as u32, rng.uniform(0.1, 1.0) as f32));
+                    placed += 1;
+                }
+            }
+        }
+        MatrixPattern::Block => {
+            let bs = *rng.choose(&[8usize, 16, 32]).min(&n.max(1));
+            let nb = n.div_ceil(bs);
+            // Pick enough random blocks, fill each ~70%.
+            let per_block = (bs * bs) * 7 / 10;
+            let n_blocks = (target / per_block.max(1)).max(1);
+            for _ in 0..n_blocks {
+                let br = rng.gen_range(nb);
+                let bc = rng.gen_range(nb);
+                for _ in 0..per_block {
+                    let r = br * bs + rng.gen_range(bs);
+                    let c = bc * bs + rng.gen_range(bs);
+                    if r < n && c < n {
+                        triples.push((r as u32, c as u32, rng.uniform(0.1, 1.0) as f32));
+                    }
+                }
+            }
+        }
+        MatrixPattern::Diagonal => {
+            // Fill k full diagonals to reach the target.
+            let k = (target / n).max(1).min(2 * n - 1);
+            let mut offsets: Vec<i64> = vec![0];
+            while offsets.len() < k {
+                let o = rng.gen_range(2 * n - 1) as i64 - (n as i64 - 1);
+                if !offsets.contains(&o) {
+                    offsets.push(o);
+                }
+            }
+            for &off in &offsets {
+                for r in 0..n as i64 {
+                    let c = r + off;
+                    if c >= 0 && c < n as i64 {
+                        triples.push((r as u32, c as u32, rng.uniform(0.1, 1.0) as f32));
+                    }
+                }
+            }
+        }
+    }
+    Coo::from_triples(n, n, triples)
+}
+
+/// The paper's §4.3 training corpus: `count` square matrices with sizes in
+/// `[min_n, max_n]` and sparsity 0.1%–70%, cycling through patterns.
+/// Returns `(matrix, pattern)` pairs.
+pub fn training_corpus(
+    rng: &mut Rng,
+    count: usize,
+    min_n: usize,
+    max_n: usize,
+) -> Vec<(Coo, MatrixPattern)> {
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let n = min_n + rng.gen_range(max_n - min_n + 1);
+        // Log-uniform density in [0.001, 0.7] (the paper's 0.1%..70%).
+        let log_lo = (0.001f64).ln();
+        let log_hi = (0.7f64).ln();
+        let density = (log_lo + (log_hi - log_lo) * rng.next_f64()).exp();
+        let pattern = ALL_PATTERNS[i % ALL_PATTERNS.len()];
+        out.push((gen_matrix(rng, n, density, pattern), pattern));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert};
+
+    #[test]
+    fn prop_generator_hits_shape_and_rough_density() {
+        check(
+            20,
+            |rng| {
+                let n = 64 + rng.gen_range(128);
+                let density = rng.uniform(0.01, 0.3);
+                let pattern = *rng.choose(&ALL_PATTERNS);
+                (gen_matrix(rng, n, density, pattern), n, density, pattern)
+            },
+            |(m, n, density, pattern)| {
+                prop_assert(m.rows == *n && m.cols == *n, "square shape")?;
+                prop_assert(m.nnz() > 0, "non-empty")?;
+                let got = m.density();
+                // Duplicates / block rounding make density approximate.
+                prop_assert(
+                    got > density * 0.2 && got < (density * 3.0 + 0.05).min(1.0),
+                    &format!("density {got} vs target {density} ({pattern:?})"),
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let m = gen_matrix(&mut rng, 100, 0.02, MatrixPattern::Banded);
+        let max_off = (0..m.nnz())
+            .map(|i| (m.col[i] as i64 - m.row[i] as i64).abs())
+            .max()
+            .unwrap();
+        assert!(max_off <= 50, "band too wide: {max_off}");
+    }
+
+    #[test]
+    fn diagonal_pattern_has_few_diags() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let m = gen_matrix(&mut rng, 128, 0.05, MatrixPattern::Diagonal);
+        let mut offs: Vec<i64> = (0..m.nnz())
+            .map(|i| m.col[i] as i64 - m.row[i] as i64)
+            .collect();
+        offs.sort_unstable();
+        offs.dedup();
+        assert!(offs.len() <= 10, "expected few diagonals, got {}", offs.len());
+    }
+
+    #[test]
+    fn corpus_covers_patterns_and_sizes() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let corpus = training_corpus(&mut rng, 20, 64, 128);
+        assert_eq!(corpus.len(), 20);
+        let patterns: std::collections::HashSet<_> =
+            corpus.iter().map(|(_, p)| format!("{p:?}")).collect();
+        assert_eq!(patterns.len(), 5);
+        for (m, _) in &corpus {
+            assert!(m.rows >= 64 && m.rows <= 128);
+        }
+    }
+}

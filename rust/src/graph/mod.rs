@@ -1,0 +1,126 @@
+//! Graph workloads: the paper's Table-1 datasets (synthesized to matching
+//! shape/density/degree-skew — see DESIGN.md §Substitutions), the Entities
+//! relational suite for RGCN, and the synthetic matrix generators used to
+//! train the format predictor (§4.3).
+
+pub mod generators;
+pub mod datasets;
+
+pub use datasets::{DatasetSpec, GraphDataset, RelationalDataset, PAPER_DATASETS};
+pub use generators::{gen_matrix, MatrixPattern};
+
+use crate::sparse::Coo;
+
+/// Symmetrically normalized adjacency with self-loops:
+/// `Â = D^{-1/2} (A + I) D^{-1/2}` — the GCN propagation operator.
+pub fn normalize_adj(adj: &Coo) -> Coo {
+    assert_eq!(adj.rows, adj.cols, "adjacency must be square");
+    let n = adj.rows;
+    // A + I
+    let mut triples: Vec<(u32, u32, f32)> = (0..adj.nnz())
+        .map(|i| (adj.row[i], adj.col[i], adj.val[i].abs()))
+        .collect();
+    for i in 0..n {
+        triples.push((i as u32, i as u32, 1.0));
+    }
+    let a_hat = Coo::from_triples(n, n, triples);
+    // degree = row sums
+    let mut deg = vec![0f64; n];
+    for i in 0..a_hat.nnz() {
+        deg[a_hat.row[i] as usize] += a_hat.val[i] as f64;
+    }
+    let d_inv_sqrt: Vec<f64> = deg.iter().map(|&d| if d > 0.0 { d.powf(-0.5) } else { 0.0 }).collect();
+    let triples = (0..a_hat.nnz())
+        .map(|i| {
+            let r = a_hat.row[i] as usize;
+            let c = a_hat.col[i] as usize;
+            (
+                a_hat.row[i],
+                a_hat.col[i],
+                (a_hat.val[i] as f64 * d_inv_sqrt[r] * d_inv_sqrt[c]) as f32,
+            )
+        })
+        .collect();
+    Coo::from_triples(n, n, triples)
+}
+
+/// Density of the k-hop reachability pattern of `adj` (with self loops) —
+/// the effective propagation field after `k` GNN iterations. Used by the
+/// Fig-2 density-drift experiment.
+pub fn khop_density(adj: &Coo, k: usize) -> f64 {
+    let n = adj.rows;
+    // Boolean sparse power via repeated pattern expansion on row adjacency
+    // lists (values irrelevant).
+    let mut neigh: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..adj.nnz() {
+        neigh[adj.row[i] as usize].push(adj.col[i]);
+    }
+    for (i, list) in neigh.iter_mut().enumerate() {
+        list.push(i as u32); // self loop
+        list.sort_unstable();
+        list.dedup();
+    }
+    let mut reach: Vec<Vec<u32>> = neigh.clone();
+    for _ in 1..k {
+        reach = crate::util::parallel::parallel_map(n, |i| {
+            let mut acc: Vec<u32> = Vec::new();
+            for &j in &reach[i] {
+                acc.extend_from_slice(&neigh[j as usize]);
+            }
+            acc.sort_unstable();
+            acc.dedup();
+            acc
+        });
+    }
+    let nnz: usize = reach.iter().map(|l| l.len()).sum();
+    nnz as f64 / (n as f64 * n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn normalize_adds_self_loops_and_scales() {
+        // Path graph 0-1-2.
+        let adj = Coo::from_triples(
+            3,
+            3,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        let norm = normalize_adj(&adj);
+        assert_eq!(norm.nnz(), 7); // 4 edges + 3 self loops
+        // Entries are positive and ≤ 1 (D^{-1/2}(A+I)D^{-1/2} with unit weights).
+        let dense = norm.to_dense();
+        assert!(norm.val.iter().all(|&v| v > 0.0 && v <= 1.0));
+        // Middle node (degree 3 incl. self-loop) has Â_11 = 1/3.
+        assert!((dense.at(1, 1) - 1.0 / 3.0).abs() < 1e-6);
+        // Symmetry preserved.
+        for r in 0..3 {
+            for c in 0..3 {
+                assert!((dense.at(r, c) - dense.at(c, r)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn khop_density_monotone() {
+        let mut rng = Rng::new(1);
+        let mut triples = Vec::new();
+        for r in 0..60u32 {
+            for c in 0..60u32 {
+                if r != c && rng.bernoulli(0.03) {
+                    triples.push((r, c, 1.0f32));
+                    triples.push((c, r, 1.0f32));
+                }
+            }
+        }
+        let adj = Coo::from_triples(60, 60, triples);
+        let d1 = khop_density(&adj, 1);
+        let d2 = khop_density(&adj, 2);
+        let d3 = khop_density(&adj, 3);
+        assert!(d1 <= d2 && d2 <= d3, "{d1} {d2} {d3}");
+        assert!(d3 <= 1.0);
+    }
+}

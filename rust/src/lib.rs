@@ -1,0 +1,41 @@
+//! # gnn-spmm
+//!
+//! Reproduction of *"Optimizing Sparse Matrix Multiplications for Graph
+//! Neural Networks"* (Qiu, You, Wang — 2021) as a three-layer
+//! rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — choosing the sparse-matrix **storage format**
+//! (and therefore the SpMM kernel) per GNN layer at runtime with a learned
+//! predictor — lives in [`predictor`], built on top of:
+//!
+//! * [`sparse`] — seven storage formats (COO/CSR/CSC/DIA/BSR/DOK/LIL) with
+//!   conversions and per-format parallel SpMM kernels,
+//! * [`features`] — the paper's Table-2 matrix features (F1–F19),
+//! * [`ml`] — a from-scratch ML stack: gradient-boosted trees (the paper's
+//!   XGBoost), plus the CART / KNN / SVM / MLP / CNN baselines it compares to,
+//! * [`gnn`] + [`tensor`] — five GNN architectures (GCN/GAT/RGCN/FiLM/EGC)
+//!   with a full training loop,
+//! * [`graph`] — dataset generators matching the paper's Table-1 workloads,
+//! * [`runtime`] — the PJRT bridge that loads JAX/Pallas-AOT-compiled HLO
+//!   artifacts so the dense compute runs through XLA,
+//! * [`coordinator`] — the experiment/training orchestrator that performs
+//!   per-layer format switching and collects the paper's metrics.
+//!
+//! Support plumbing (offline build: no external crates beyond `xla`/`anyhow`)
+//! is under [`util`], [`testing`] and [`bench`].
+
+pub mod util;
+pub mod testing;
+pub mod sparse;
+pub mod features;
+pub mod ml;
+pub mod tensor;
+pub mod graph;
+pub mod gnn;
+pub mod predictor;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,163 @@
+//! `gnn-spmm` — leader binary: train the format predictor, run GNN training
+//! under a chosen format policy, or regenerate any paper experiment.
+//!
+//! ```text
+//! gnn-spmm train-predictor [--count 150] [--w 1.0] [--out artifacts/predictor.json]
+//! gnn-spmm run --model GCN --dataset CoraFull --policy predicted|oracle|COO|CSR|...
+//!              [--epochs 10] [--seed 7]
+//! gnn-spmm experiment --name table1|fig1|fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|table3
+//!              [--out results/]
+//! gnn-spmm info
+//! ```
+
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{train, ModelKind, TrainConfig};
+use gnn_spmm::predictor::policy::{OraclePolicy, PredictedPolicy};
+use gnn_spmm::predictor::training::{train_predictor, TrainedPredictor, TrainingCorpus};
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("train-predictor") => cmd_train_predictor(&args),
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: gnn-spmm <train-predictor|run|experiment|info> [--options]\n\
+                 see `rust/src/main.rs` docs for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train_predictor(args: &Args) -> anyhow::Result<()> {
+    let count = args.get_usize("count", 150);
+    let w = args.get_f64("w", 1.0);
+    let seed = args.get_u64("seed", 0xC0FFEE);
+    let out = args.get_or("out", "artifacts/predictor.json");
+    println!("building training corpus ({count} matrices)…");
+    let corpus = TrainingCorpus::build(count, 64, 512, 32, 2, seed);
+    println!("training XGBoost-style GBDT (w = {w})…");
+    let pred = train_predictor(&corpus, w, seed ^ 1);
+    println!("cross-validated accuracy: {:.1}%", pred.cv_accuracy * 100.0);
+    pred.save(std::path::Path::new(out))?;
+    println!("saved predictor to {out}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let model = ModelKind::from_name(args.get_or("model", "GCN"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (GCN|GAT|RGCN|FiLM|EGC)"))?;
+    let seed = args.get_u64("seed", 7);
+    let cfg = TrainConfig {
+        epochs: args.get_usize("epochs", 10),
+        hidden: args.get_usize("hidden", 16),
+        lr: args.get_f64("lr", 0.02) as f32,
+        seed,
+    };
+    println!("building workbench (datasets + predictor)…");
+    let wb = Workbench::standard(seed);
+    let ds = wb
+        .dataset(args.get_or("dataset", "Cora"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+
+    let policy_name = args.get_or("policy", "predicted").to_string();
+    let report = match policy_name.as_str() {
+        "predicted" => {
+            let predictor = if let Some(path) = args.get("predictor") {
+                TrainedPredictor::load(std::path::Path::new(path))?
+            } else {
+                experiments::clone_predictor(&wb.predictor)
+            };
+            let mut p = PredictedPolicy::new(predictor);
+            train(model, ds, &mut p, &cfg)
+        }
+        "oracle" => {
+            let mut p = OraclePolicy::default();
+            train(model, ds, &mut p, &cfg)
+        }
+        other => {
+            let f = Format::from_name(other)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy/format '{other}'"))?;
+            let mut p = StaticPolicy(f);
+            train(model, ds, &mut p, &cfg)
+        }
+    };
+
+    println!(
+        "\n{} on {} with policy {} — {:.4}s total",
+        report.model, report.dataset, report.policy, report.total_time
+    );
+    println!("loss curve: {:?}", report.losses);
+    println!(
+        "final accuracy: train {:.1}%  test {:.1}%",
+        report.final_train_acc * 100.0,
+        report.final_test_acc * 100.0
+    );
+    println!("phase breakdown:");
+    for (phase, secs, count) in &report.phases {
+        println!("  {phase:<18} {secs:>9.4}s  ({count} calls)");
+    }
+    println!("format decisions:");
+    for d in &report.decisions {
+        println!("  {:<14} -> {:<4} (density {:.4})", d.slot, d.format, d.density);
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("name", "table1").to_string();
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let seed = args.get_u64("seed", 0xE8);
+    let runs = args.get_usize("runs", experiments::DEFAULT_RUNS);
+    let cfg = TrainConfig {
+        epochs: args.get_usize("epochs", 10),
+        ..Default::default()
+    };
+    println!("building workbench…");
+    let wb = Workbench::standard(seed);
+    let ws = [0.0, 0.3, 0.5, 0.7, 1.0];
+    let table = match name.as_str() {
+        "table1" => experiments::table1(&wb),
+        "fig1" => experiments::fig1(&wb, &cfg, runs),
+        "fig2" => experiments::fig2(&wb, "CoraFull", 10),
+        "fig3" => experiments::fig3(&wb, &cfg, runs),
+        "fig6" => experiments::fig6(&wb, &ws),
+        "fig7" => experiments::fig7(&wb),
+        "fig8" => experiments::fig8(&wb, &cfg, runs),
+        "fig9" => experiments::fig9(&wb, &cfg, runs),
+        "fig10" => experiments::fig10(&wb, &ws),
+        "fig11" => experiments::fig11(&wb),
+        "table3" => experiments::table3(&wb, &cfg, runs),
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    };
+    experiments::print_table(&name, &table);
+    let path = out_dir.join(format!("{name}.csv"));
+    table.write_file(&path)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    println!("gnn-spmm — sparse-format selection for GNN SpMM (paper reproduction)");
+    println!("formats: COO CSR CSC DIA BSR DOK LIL");
+    println!("models:  GCN GAT RGCN FiLM EGC");
+    println!("datasets (laptop scale):");
+    for spec in gnn_spmm::graph::PAPER_DATASETS {
+        let s = spec.laptop();
+        println!(
+            "  {:<11} n={:<6} feat={:<5} adj_density={:.2}%  classes={}",
+            s.name,
+            s.n,
+            s.feat_dim,
+            s.adj_density * 100.0,
+            s.n_classes
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! K-nearest-neighbour classifier (paper Fig. 11 uses k = 1 [42]).
+
+use super::{Classifier, TabularData};
+
+/// Fitted (memorized) KNN model.
+#[derive(Clone, Debug)]
+pub struct Knn {
+    data: TabularData,
+    pub k: usize,
+}
+
+impl Knn {
+    pub fn fit(data: &TabularData, k: usize) -> Knn {
+        assert!(k >= 1);
+        Knn { data: data.clone(), k }
+    }
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(&x, &y)| (x - y) * (x - y)).sum()
+}
+
+impl Classifier for Knn {
+    fn predict(&self, x: &[f64]) -> usize {
+        if self.data.is_empty() {
+            return 0;
+        }
+        // Partial selection of the k nearest.
+        let mut dists: Vec<(f64, usize)> = self
+            .data
+            .x
+            .iter()
+            .zip(self.data.y.iter())
+            .map(|(xi, &yi)| (sq_dist(x, xi), yi))
+            .collect();
+        let k = self.k.min(dists.len());
+        dists.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0usize; self.data.n_classes];
+        for &(_, y) in &dists[..k] {
+            votes[y] += 1;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "KNN"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testdata;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn memorizes_training_set_with_k1() {
+        let mut rng = Rng::new(1);
+        let data = testdata::blobs(&mut rng, 25, 3, 4);
+        let knn = Knn::fit(&data, 1);
+        let pred = knn.predict_batch(&data.x);
+        assert_eq!(accuracy(&pred, &data.y), 1.0);
+    }
+
+    #[test]
+    fn generalizes_on_blobs() {
+        let mut rng = Rng::new(2);
+        let train = testdata::blobs(&mut rng, 30, 3, 4);
+        let test = testdata::blobs(&mut rng, 10, 3, 4);
+        let knn = Knn::fit(&train, 3);
+        let pred = knn.predict_batch(&test.x);
+        assert!(accuracy(&pred, &test.y) > 0.95);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_is_safe() {
+        let data = TabularData::new(vec![vec![0.0], vec![1.0]], vec![0, 1], 2);
+        let knn = Knn::fit(&data, 10);
+        let _ = knn.predict(&[0.4]);
+    }
+}

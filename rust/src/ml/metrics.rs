@@ -1,0 +1,72 @@
+//! Evaluation metrics and cross-validation splits.
+
+use crate::util::rng::Rng;
+
+/// Fraction of matching labels.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred.iter().zip(truth.iter()).filter(|(p, t)| p == t).count();
+    correct as f64 / pred.len() as f64
+}
+
+/// `n_classes × n_classes` confusion matrix; rows = truth, cols = predicted.
+pub fn confusion(pred: &[usize], truth: &[usize], n_classes: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; n_classes]; n_classes];
+    for (&p, &t) in pred.iter().zip(truth.iter()) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+/// Shuffled k-fold split: returns `(train_idx, test_idx)` per fold.
+pub fn kfold(n: usize, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let folds = crate::util::parallel::split_ranges(n, k);
+    folds
+        .into_iter()
+        .map(|r| {
+            let test: Vec<usize> = idx[r.clone()].to_vec();
+            let train: Vec<usize> = idx[..r.start].iter().chain(idx[r.end..].iter()).copied().collect();
+            (train, test)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let m = confusion(&[0, 1, 1], &[0, 0, 1], 2);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[1][0], 0);
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let mut rng = Rng::new(1);
+        let folds = kfold(100, 5, &mut rng);
+        assert_eq!(folds.len(), 5);
+        let mut all_test: Vec<usize> = folds.iter().flat_map(|(_, t)| t.clone()).collect();
+        all_test.sort_unstable();
+        assert_eq!(all_test, (0..100).collect::<Vec<_>>());
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 100);
+            assert!(train.iter().all(|i| !test.contains(i)));
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Multilayer perceptron [12] — one hidden ReLU layer trained with
+//! mini-batch Adam on softmax cross-entropy. One of the Fig-11 baselines.
+
+use super::{Classifier, TabularData};
+use crate::tensor::{ops, Matrix};
+use crate::util::rng::Rng;
+
+/// MLP hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpParams {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub learning_rate: f32,
+    pub seed: u64,
+}
+
+impl Default for MlpParams {
+    fn default() -> Self {
+        MlpParams { hidden: 64, epochs: 120, batch: 32, learning_rate: 0.01, seed: 0x31A9 }
+    }
+}
+
+/// Fitted MLP.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    w1: Matrix,
+    b1: Vec<f32>,
+    w2: Matrix,
+    b2: Vec<f32>,
+    pub n_classes: usize,
+}
+
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(len: usize) -> Adam {
+        Adam { m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grads[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grads[i] * grads[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= lr * mh / (vh.sqrt() + EPS);
+        }
+    }
+}
+
+impl Mlp {
+    pub fn fit(data: &TabularData, params: MlpParams) -> Mlp {
+        let nf = data.n_features();
+        let k = data.n_classes;
+        let mut rng = Rng::new(params.seed);
+        let mut model = Mlp {
+            w1: Matrix::glorot(nf, params.hidden, &mut rng),
+            b1: vec![0.0; params.hidden],
+            w2: Matrix::glorot(params.hidden, k, &mut rng),
+            b2: vec![0.0; k],
+            n_classes: k,
+        };
+        if data.is_empty() {
+            return model;
+        }
+        let mut opt_w1 = Adam::new(model.w1.data.len());
+        let mut opt_b1 = Adam::new(model.b1.len());
+        let mut opt_w2 = Adam::new(model.w2.data.len());
+        let mut opt_b2 = Adam::new(model.b2.len());
+
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(params.batch) {
+                let bsz = chunk.len();
+                let mut x = Matrix::zeros(bsz, nf);
+                let mut labels = Vec::with_capacity(bsz);
+                for (r, &i) in chunk.iter().enumerate() {
+                    for (c, &v) in data.x[i].iter().enumerate() {
+                        *x.at_mut(r, c) = v as f32;
+                    }
+                    labels.push(data.y[i]);
+                }
+                // Forward.
+                let z1 = ops::add_row(&x.matmul(&model.w1), &model.b1);
+                let h = ops::relu(&z1);
+                let logits = ops::add_row(&h.matmul(&model.w2), &model.b2);
+                let mask = vec![true; bsz];
+                let (_loss, dlogits) = ops::masked_xent_with_grad(&logits, &labels, &mask);
+                // Backward.
+                let dw2 = h.t_matmul(&dlogits);
+                let db2: Vec<f32> = (0..k)
+                    .map(|c| (0..bsz).map(|r| dlogits.at(r, c)).sum())
+                    .collect();
+                let dh = dlogits.matmul_t(&model.w2);
+                let dz1 = ops::relu_grad(&z1, &dh);
+                let dw1 = x.t_matmul(&dz1);
+                let db1: Vec<f32> = (0..params.hidden)
+                    .map(|c| (0..bsz).map(|r| dz1.at(r, c)).sum())
+                    .collect();
+                // Update.
+                opt_w1.step(&mut model.w1.data, &dw1.data, params.learning_rate);
+                opt_b1.step(&mut model.b1, &db1, params.learning_rate);
+                opt_w2.step(&mut model.w2.data, &dw2.data, params.learning_rate);
+                opt_b2.step(&mut model.b2, &db2, params.learning_rate);
+            }
+        }
+        model
+    }
+
+    fn forward_one(&self, x: &[f64]) -> Vec<f32> {
+        let nf = self.w1.rows;
+        let mut input = Matrix::zeros(1, nf);
+        for (c, &v) in x.iter().enumerate() {
+            input.data[c] = v as f32;
+        }
+        let h = ops::relu(&ops::add_row(&input.matmul(&self.w1), &self.b1));
+        let logits = ops::add_row(&h.matmul(&self.w2), &self.b2);
+        logits.data
+    }
+}
+
+impl Classifier for Mlp {
+    fn predict(&self, x: &[f64]) -> usize {
+        let scores = self.forward_one(x);
+        scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "MLP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testdata;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fits_blobs() {
+        let mut rng = Rng::new(1);
+        let data = testdata::blobs(&mut rng, 30, 3, 4);
+        let mlp = Mlp::fit(&data, MlpParams { epochs: 60, ..Default::default() });
+        let pred = mlp.predict_batch(&data.x);
+        assert!(accuracy(&pred, &data.y) > 0.95);
+    }
+
+    #[test]
+    fn solves_xor_unlike_linear_svm() {
+        let mut rng = Rng::new(2);
+        let data = testdata::xor(&mut rng, 400);
+        let mlp = Mlp::fit(&data, MlpParams { epochs: 150, hidden: 32, ..Default::default() });
+        let pred = mlp.predict_batch(&data.x);
+        assert!(accuracy(&pred, &data.y) > 0.9);
+    }
+}

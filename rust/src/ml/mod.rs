@@ -1,0 +1,108 @@
+//! From-scratch machine-learning stack (offline build — no external ML
+//! crates):
+//!
+//! * [`gbdt`] — gradient-boosted decision trees with a softmax objective and
+//!   second-order (XGBoost-style) split gain: the paper's chosen model.
+//! * [`tree`] — CART classification tree: the decision-tree prior work the
+//!   paper compares against (Sedaghati et al. [27]).
+//! * [`knn`], [`svm`], [`mlp`] — the alternative classifiers of Fig. 11.
+//! * [`cnn`] — a small convolutional network over a density thumbnail of the
+//!   matrix: the matrix-as-image prior work of Table 3 ([45, 24]).
+//! * [`metrics`] — accuracy, confusion matrices, k-fold cross-validation.
+
+pub mod metrics;
+pub mod tree;
+pub mod gbdt;
+pub mod knn;
+pub mod svm;
+pub mod mlp;
+pub mod cnn;
+
+/// A labeled tabular dataset (feature vectors + class labels).
+#[derive(Clone, Debug, Default)]
+pub struct TabularData {
+    /// Row-major feature vectors, all the same arity.
+    pub x: Vec<Vec<f64>>,
+    /// Class label per row, in `[0, n_classes)`.
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl TabularData {
+    pub fn new(x: Vec<Vec<f64>>, y: Vec<usize>, n_classes: usize) -> TabularData {
+        assert_eq!(x.len(), y.len());
+        assert!(y.iter().all(|&l| l < n_classes));
+        TabularData { x, y, n_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Select a row subset.
+    pub fn subset(&self, idx: &[usize]) -> TabularData {
+        TabularData {
+            x: idx.iter().map(|&i| self.x[i].clone()).collect(),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+/// Common interface for the Fig-11 / Table-3 model comparison.
+pub trait Classifier {
+    /// Predict the class label of one feature vector.
+    fn predict(&self, x: &[f64]) -> usize;
+
+    /// Model name for reports.
+    fn name(&self) -> &'static str;
+
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<usize> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testdata {
+    use super::TabularData;
+    use crate::util::rng::Rng;
+
+    /// Gaussian blobs: `n_classes` well-separated clusters in `dim`-D.
+    pub fn blobs(rng: &mut Rng, n_per_class: usize, n_classes: usize, dim: usize) -> TabularData {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for k in 0..n_classes {
+            let center: Vec<f64> = (0..dim).map(|j| ((k * dim + j) % 7) as f64 * 2.0).collect();
+            for _ in 0..n_per_class {
+                x.push(center.iter().map(|&c| c + rng.normal() * 0.3).collect());
+                y.push(k);
+            }
+        }
+        TabularData::new(x, y, n_classes)
+    }
+
+    /// XOR: not linearly separable — trees/MLP should solve it, linear SVM
+    /// should not.
+    pub fn xor(rng: &mut Rng, n: usize) -> TabularData {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.bernoulli(0.5);
+            let b = rng.bernoulli(0.5);
+            x.push(vec![
+                f64::from(a) + rng.normal() * 0.1,
+                f64::from(b) + rng.normal() * 0.1,
+            ]);
+            y.push(usize::from(a ^ b));
+        }
+        TabularData::new(x, y, 2)
+    }
+}

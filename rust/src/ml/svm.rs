@@ -1,0 +1,117 @@
+//! Linear SVM, one-vs-rest, trained with hinge-loss SGD [22] — one of the
+//! paper's Fig-11 comparison models.
+
+use super::{Classifier, TabularData};
+use crate::util::rng::Rng;
+
+/// SVM hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    pub epochs: usize,
+    pub learning_rate: f64,
+    /// L2 regularization strength.
+    pub reg: f64,
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams { epochs: 60, learning_rate: 0.05, reg: 1e-4, seed: 0x5EED }
+    }
+}
+
+/// One-vs-rest linear SVM.
+#[derive(Clone, Debug)]
+pub struct Svm {
+    /// `weights[class]` has `n_features + 1` entries (last = bias).
+    weights: Vec<Vec<f64>>,
+    pub n_classes: usize,
+}
+
+impl Svm {
+    pub fn fit(data: &TabularData, params: SvmParams) -> Svm {
+        let nf = data.n_features();
+        let mut weights = vec![vec![0.0; nf + 1]; data.n_classes];
+        let mut rng = Rng::new(params.seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        for epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            let lr = params.learning_rate / (1.0 + epoch as f64 * 0.1);
+            for &i in &order {
+                let x = &data.x[i];
+                for (class, w) in weights.iter_mut().enumerate() {
+                    let y = if data.y[i] == class { 1.0 } else { -1.0 };
+                    let margin = y * (dot(w, x) + w[nf]);
+                    // L2 shrink.
+                    for wj in w.iter_mut().take(nf) {
+                        *wj *= 1.0 - lr * params.reg;
+                    }
+                    if margin < 1.0 {
+                        for j in 0..nf {
+                            w[j] += lr * y * x[j];
+                        }
+                        w[nf] += lr * y;
+                    }
+                }
+            }
+        }
+        Svm { weights, n_classes: data.n_classes }
+    }
+
+    fn score(&self, class: usize, x: &[f64]) -> f64 {
+        let w = &self.weights[class];
+        dot(w, x) + w[w.len() - 1]
+    }
+}
+
+fn dot(w: &[f64], x: &[f64]) -> f64 {
+    w.iter().zip(x.iter()).map(|(&a, &b)| a * b).sum()
+}
+
+impl Classifier for Svm {
+    fn predict(&self, x: &[f64]) -> usize {
+        (0..self.n_classes)
+            .max_by(|&a, &b| self.score(a, x).partial_cmp(&self.score(b, x)).unwrap())
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "SVM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testdata;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn separates_blobs() {
+        let mut rng = Rng::new(1);
+        let data = testdata::blobs(&mut rng, 40, 3, 4);
+        let svm = Svm::fit(&data, SvmParams::default());
+        let pred = svm.predict_batch(&data.x);
+        assert!(accuracy(&pred, &data.y) > 0.95);
+    }
+
+    #[test]
+    fn linear_model_fails_xor() {
+        let mut rng = Rng::new(2);
+        let data = testdata::xor(&mut rng, 400);
+        let svm = Svm::fit(&data, SvmParams::default());
+        let pred = svm.predict_batch(&data.x);
+        let acc = accuracy(&pred, &data.y);
+        assert!(acc < 0.8, "linear SVM should NOT solve XOR (acc={acc})");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(3);
+        let data = testdata::blobs(&mut rng, 20, 2, 3);
+        let a = Svm::fit(&data, SvmParams::default());
+        let b = Svm::fit(&data, SvmParams::default());
+        assert_eq!(a.predict_batch(&data.x), b.predict_batch(&data.x));
+    }
+}

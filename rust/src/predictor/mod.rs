@@ -1,0 +1,21 @@
+//! The paper's contribution: a learned, runtime sparse-format selector.
+//!
+//! * [`labeler`] — exhaustive per-format profiling of a matrix and the Eq-1
+//!   objective `O = w·R + (1−w)·M` that turns profiles into class labels
+//!   (§4.3, Fig. 6).
+//! * [`training`] — offline pipeline: synthetic corpus → profiles → labeled
+//!   feature vectors → fitted GBDT + normalizer (§4.3–4.5).
+//! * [`policy`] — the runtime [`crate::gnn::FormatPolicy`] implementations:
+//!   the learned predictor, the oracle, and prior-work baselines (CNN,
+//!   decision tree) used by Table 3.
+//! * [`spmm_predict`] — the user-facing `SpMMPredict` call of §4.6.
+
+pub mod labeler;
+pub mod training;
+pub mod policy;
+pub mod spmm_predict;
+
+pub use labeler::{label_for, profile_formats, FormatProfile};
+pub use policy::{OraclePolicy, PredictedPolicy};
+pub use spmm_predict::spmm_predict;
+pub use training::{train_predictor, TrainedPredictor, TrainingCorpus};

@@ -1,0 +1,48 @@
+//! The paper's §4.6 user-facing API: `SpMMPredict(matrix) → matrix` in the
+//! predicted storage format. "The function takes as input a matrix object
+//! and outputs a matrix object stored using the predicted storage format.
+//! Depending on the matrix object type, the corresponding SpMM kernel will
+//! be automatically chosen."
+
+use super::training::TrainedPredictor;
+use crate::sparse::SparseMatrix;
+
+/// Re-store `matrix` in the format the predictor chooses for it. The
+/// returned object dispatches the matching SpMM kernel via
+/// [`SparseMatrix::spmm`]. Falls back to CSR if the predicted format cannot
+/// represent the matrix (DIA budget).
+pub fn spmm_predict(
+    predictor: &TrainedPredictor,
+    matrix: &SparseMatrix,
+) -> SparseMatrix {
+    let coo = matrix.to_coo();
+    let fmt = predictor.predict(&coo);
+    matrix
+        .convert(fmt)
+        .or_else(|_| matrix.convert(crate::sparse::Format::Csr))
+        .expect("CSR conversion cannot fail")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_matrix, MatrixPattern};
+    use crate::predictor::training::{train_predictor, TrainingCorpus};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn returns_equivalent_matrix_in_predicted_format() {
+        let corpus = TrainingCorpus::build(15, 48, 96, 8, 1, 0xCD);
+        let pred = train_predictor(&corpus, 1.0, 7);
+        let mut rng = Rng::new(3);
+        let coo = gen_matrix(&mut rng, 80, 0.08, MatrixPattern::Uniform);
+        let m = SparseMatrix::Coo(coo.clone());
+        let out = spmm_predict(&pred, &m);
+        // Same matrix, possibly different storage.
+        assert_eq!(out.to_coo(), coo);
+        // SpMM result is identical.
+        let x = Matrix::rand(80, 4, &mut rng);
+        assert!(out.spmm(&x).max_abs_diff(&m.spmm(&x)) < 1e-4);
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime — loads the JAX/Pallas-AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them from the rust hot
+//! path (python is never on the request path; see DESIGN.md).
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits 64-bit instruction ids that the image's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded artifact: compiled executable + declared shapes.
+pub struct Artifact {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    /// Input shapes (rows, cols) as declared in the manifest.
+    pub in_shapes: Vec<(usize, usize)>,
+    /// Output shapes (rows, cols).
+    pub out_shapes: Vec<(usize, usize)>,
+}
+
+/// PJRT CPU engine holding all compiled artifacts.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine { client, artifacts: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling each
+    /// HLO text module once (startup cost; the request path only executes).
+    pub fn load_manifest(&mut self, dir: &Path) -> anyhow::Result<Vec<String>> {
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::parse(&std::fs::read_to_string(&manifest_path)?)?;
+        let mut loaded = Vec::new();
+        for entry in manifest.req_arr("artifacts")? {
+            let name = entry.req_str("name")?.to_string();
+            let file: PathBuf = dir.join(entry.req_str("file")?);
+            let parse_shapes = |key: &str| -> anyhow::Result<Vec<(usize, usize)>> {
+                entry
+                    .req_arr(key)?
+                    .iter()
+                    .map(|s| {
+                        let dims = s.as_arr().ok_or_else(|| anyhow::anyhow!("bad shape"))?;
+                        anyhow::ensure!(dims.len() == 2, "expect 2-D shapes");
+                        Ok((
+                            dims[0].as_usize().unwrap_or(0),
+                            dims[1].as_usize().unwrap_or(0),
+                        ))
+                    })
+                    .collect()
+            };
+            let in_shapes = parse_shapes("inputs")?;
+            let out_shapes = parse_shapes("outputs")?;
+            self.load_hlo(&name, &file, in_shapes, out_shapes)?;
+            loaded.push(name);
+        }
+        Ok(loaded)
+    }
+
+    /// Compile one HLO-text module.
+    pub fn load_hlo(
+        &mut self,
+        name: &str,
+        path: &Path,
+        in_shapes: Vec<(usize, usize)>,
+        out_shapes: Vec<(usize, usize)>,
+    ) -> anyhow::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.artifacts.insert(
+            name.to_string(),
+            Artifact { name: name.to_string(), exe, in_shapes, out_shapes },
+        );
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact on f32 matrices. Inputs must match the declared
+    /// shapes; outputs are reshaped per the manifest.
+    pub fn run(&self, name: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            inputs.len() == art.in_shapes.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            art.in_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, &(r, c)) in inputs.iter().zip(art.in_shapes.iter()) {
+            anyhow::ensure!(
+                m.rows == r && m.cols == c,
+                "artifact '{name}': input shape ({}, {}) != declared ({r}, {c})",
+                m.rows,
+                m.cols
+            );
+            let lit = xla::Literal::vec1(&m.data).reshape(&[r as i64, c as i64])?;
+            literals.push(lit);
+        }
+        let mut result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.decompose_tuple()?;
+        anyhow::ensure!(
+            tuple.len() == art.out_shapes.len(),
+            "artifact '{name}': {} outputs declared, {} returned",
+            art.out_shapes.len(),
+            tuple.len()
+        );
+        tuple
+            .into_iter()
+            .zip(art.out_shapes.iter())
+            .map(|(lit, &(r, c))| {
+                let data = lit.to_vec::<f32>()?;
+                anyhow::ensure!(data.len() == r * c, "output size mismatch");
+                Ok(Matrix::from_vec(r, c, data))
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("GNN_SPMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

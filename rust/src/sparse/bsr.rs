@@ -1,0 +1,238 @@
+//! Block sparse row (BSR): CSR over fixed-shape dense sub-blocks.
+//!
+//! This is also the format our Pallas/TPU kernel (L1) implements — dense
+//! blocks feed the MXU systolic array; see DESIGN.md §Hardware-Adaptation.
+//! The rust kernel mirrors that schedule on CPU: per row-block, accumulate
+//! `A_blk · X_blk` panels.
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// Default block edge; benches ablate 8..128 (see `ablation_block_size`).
+pub const DEFAULT_BLOCK: usize = 16;
+
+/// BSR sparse matrix with square `block × block` blocks. Virtual matrix
+/// dimensions are padded up to block multiples; out-of-range padding is
+/// zero-filled inside blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// Row-block pointer (length `rows.div_ceil(block) + 1`).
+    pub indptr: Vec<usize>,
+    /// Column-block index per stored block.
+    pub indices: Vec<u32>,
+    /// Dense block storage, `indices.len() * block * block`, row-major
+    /// within each block.
+    pub blocks: Vec<f32>,
+}
+
+impl Bsr {
+    pub fn from_coo(coo: &Coo, block: usize) -> Bsr {
+        assert!(block > 0);
+        let rb = coo.rows.div_ceil(block);
+        // Map (row-block, col-block) -> slot, in sorted order.
+        let mut keys: Vec<(u32, u32)> = (0..coo.nnz())
+            .map(|i| (coo.row[i] / block as u32, coo.col[i] / block as u32))
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let slot_of: HashMap<(u32, u32), usize> =
+            keys.iter().enumerate().map(|(s, &k)| (k, s)).collect();
+
+        let mut indptr = vec![0usize; rb + 1];
+        for &(br, _) in &keys {
+            indptr[br as usize + 1] += 1;
+        }
+        for i in 0..rb {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices: Vec<u32> = keys.iter().map(|&(_, bc)| bc).collect();
+        let mut blocks = vec![0f32; keys.len() * block * block];
+        for i in 0..coo.nnz() {
+            let (r, c) = (coo.row[i] as usize, coo.col[i] as usize);
+            let key = ((r / block) as u32, (c / block) as u32);
+            let slot = slot_of[&key];
+            let br_off = r % block;
+            let bc_off = c % block;
+            blocks[slot * block * block + br_off * block + bc_off] = coo.val[i];
+        }
+        Bsr { rows: coo.rows, cols: coo.cols, block, indptr, indices, blocks }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let b = self.block;
+        let mut triples = Vec::new();
+        let rb = self.rows.div_ceil(b);
+        for brow in 0..rb {
+            for s in self.indptr[brow]..self.indptr[brow + 1] {
+                let bcol = self.indices[s] as usize;
+                for i in 0..b {
+                    let r = brow * b + i;
+                    if r >= self.rows {
+                        break;
+                    }
+                    for j in 0..b {
+                        let c = bcol * b + j;
+                        if c >= self.cols {
+                            break;
+                        }
+                        let v = self.blocks[s * b * b + i * b + j];
+                        if v != 0.0 {
+                            triples.push((r as u32, c as u32, v));
+                        }
+                    }
+                }
+            }
+        }
+        Coo::from_triples(self.rows, self.cols, triples)
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Fraction of stored block slots that hold actual non-zeros (MXU
+    /// utilization proxy for the TPU variant).
+    pub fn block_fill(&self) -> f64 {
+        if self.blocks.is_empty() {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.blocks.len() as f64
+    }
+
+    /// Footprint model: dense block storage + 4B block col idx + 8B indptr.
+    pub fn nbytes(&self) -> usize {
+        self.blocks.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 8
+    }
+
+    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row-blocks.
+    ///
+    /// For each stored block, accumulates a dense `block × d` panel:
+    /// `Y[brow·b .. brow·b+b] += A_blk · X[bcol·b .. bcol·b+b]`.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let b = self.block;
+        let d = x.cols;
+        let n = self.rows;
+        let rb = n.div_ceil(b);
+        let mut out = Matrix::zeros(n, d);
+        // Partition output rows by block so each row-block is owned by one
+        // worker chunk: we parallelize over row-block ranges. The output is
+        // shared as a raw base address (usize is Sync); disjointness of
+        // row-blocks across ranges makes the writes race-free.
+        let out_addr = out.data.as_mut_ptr() as usize;
+        let blocks = &self.blocks;
+        let indptr = &self.indptr;
+        let indices = &self.indices;
+        crate::util::parallel::parallel_ranges(rb, |brange| {
+            for brow in brange {
+                let row0 = brow * b;
+                let row1 = (row0 + b).min(n);
+                for s in indptr[brow]..indptr[brow + 1] {
+                    let bcol = indices[s] as usize;
+                    let col0 = bcol * b;
+                    let col1 = (col0 + b).min(self.cols);
+                    let blk = &blocks[s * b * b..(s + 1) * b * b];
+                    for (i, r) in (row0..row1).enumerate() {
+                        // SAFETY: each row-block range is disjoint across the
+                        // parallel iteration, so rows [row0,row1) are touched
+                        // by exactly one thread.
+                        let out_row = unsafe {
+                            let ptr = (out_addr as *mut f32).add(r * d);
+                            std::slice::from_raw_parts_mut(ptr, d)
+                        };
+                        for (j, c) in (col0..col1).enumerate() {
+                            let v = blk[i * b + j];
+                            if v == 0.0 {
+                                continue;
+                            }
+                            let x_row = x.row(c);
+                            for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                                *o += v * xv;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn roundtrip_various_blocks() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 37, 29, 0.1); // non-multiple dims
+        for &b in &[1usize, 2, 4, 8, 16] {
+            let bsr = Bsr::from_coo(&coo, b);
+            assert_eq!(bsr.to_coo(), coo, "block={b}");
+            assert_eq!(bsr.nnz(), coo.nnz());
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        for &(n, m, b) in &[(20usize, 30usize, 4usize), (37, 29, 8), (64, 64, 16), (10, 10, 16)] {
+            let coo = random_coo(&mut rng, n, m, 0.15);
+            let bsr = Bsr::from_coo(&coo, b);
+            let x = Matrix::rand(m, 7, &mut rng);
+            let want = coo.to_dense().matmul(&x);
+            assert!(bsr.spmm(&x).max_abs_diff(&want) < 1e-4, "({n},{m},b={b})");
+        }
+    }
+
+    #[test]
+    fn block_fill_bounds() {
+        let mut rng = Rng::new(3);
+        let coo = random_coo(&mut rng, 64, 64, 0.05);
+        let bsr = Bsr::from_coo(&coo, 8);
+        let fill = bsr.block_fill();
+        assert!(fill > 0.0 && fill <= 1.0);
+        // Block-diagonal dense pattern has fill 1.0:
+        let mut triples = Vec::new();
+        for blk in 0..4u32 {
+            for i in 0..8u32 {
+                for j in 0..8u32 {
+                    triples.push((blk * 8 + i, blk * 8 + j, 1.0));
+                }
+            }
+        }
+        let bd = Bsr::from_coo(&Coo::from_triples(32, 32, triples), 8);
+        assert_eq!(bd.n_blocks(), 4);
+        assert!((bd.block_fill() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::from_triples(16, 16, vec![]);
+        let bsr = Bsr::from_coo(&coo, 4);
+        assert_eq!(bsr.n_blocks(), 0);
+        let x = Matrix::full(16, 2, 1.0);
+        assert_eq!(bsr.spmm(&x).data, vec![0.0; 32]);
+    }
+}

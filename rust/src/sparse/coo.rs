@@ -1,0 +1,231 @@
+//! Coordinate-list (COO) format — the PyTorch/PyG default the paper
+//! baselines against, and our canonical interchange representation.
+
+use crate::tensor::Matrix;
+use crate::util::parallel::parallel_fill_rows;
+
+/// COO sparse matrix. Invariants: triples sorted by (row, col), unique
+/// coordinates, no explicit zeros.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row: Vec<u32>,
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Coo {
+    /// Build from arbitrary triples: sorts, merges duplicates (summing),
+    /// drops explicit zeros.
+    pub fn from_triples(
+        rows: usize,
+        cols: usize,
+        triples: Vec<(u32, u32, f32)>,
+    ) -> Coo {
+        let mut triples = triples;
+        triples.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut row = Vec::with_capacity(triples.len());
+        let mut col = Vec::with_capacity(triples.len());
+        let mut val: Vec<f32> = Vec::with_capacity(triples.len());
+        for (r, c, v) in triples {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            if let (Some(&lr), Some(&lc)) = (row.last(), col.last()) {
+                if lr == r && lc == c {
+                    *val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            row.push(r);
+            col.push(c);
+            val.push(v);
+        }
+        // Drop entries that became (or were) zero.
+        let mut out = Coo { rows, cols, row: vec![], col: vec![], val: vec![] };
+        out.row.reserve(val.len());
+        out.col.reserve(val.len());
+        out.val.reserve(val.len());
+        for i in 0..val.len() {
+            if val[i] != 0.0 {
+                out.row.push(row[i]);
+                out.col.push(col[i]);
+                out.val.push(val[i]);
+            }
+        }
+        out
+    }
+
+    /// Extract the non-zeros of a dense matrix.
+    pub fn from_dense(m: &Matrix) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let v = m.at(r, c);
+                if v != 0.0 {
+                    triples.push((r as u32, c as u32, v));
+                }
+            }
+        }
+        Coo::from_triples(m.rows, m.cols, triples)
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.nnz() {
+            *out.at_mut(self.row[i] as usize, self.col[i] as usize) = self.val[i];
+        }
+        out
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Transpose (swap row/col, re-sort).
+    pub fn transpose(&self) -> Coo {
+        let triples = (0..self.nnz())
+            .map(|i| (self.col[i], self.row[i], self.val[i]))
+            .collect();
+        Coo::from_triples(self.cols, self.rows, triples)
+    }
+
+    /// Storage footprint model: 4B row idx + 4B col idx + 4B value per nnz.
+    pub fn nbytes(&self) -> usize {
+        self.nnz() * 12
+    }
+
+    /// SpMM: `self (n×m) · x (m×d) → (n×d)`.
+    ///
+    /// Because triples are row-sorted, the output can be partitioned by row
+    /// ranges: each thread binary-searches its triple span and streams it.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let d = x.cols;
+        let mut out = Matrix::zeros(self.rows, d);
+        let (row, col, val) = (&self.row, &self.col, &self.val);
+        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            // Triple span covering rows in `range`.
+            let lo = row.partition_point(|&r| (r as usize) < range.start);
+            let hi = row.partition_point(|&r| (r as usize) < range.end);
+            for i in lo..hi {
+                let r = row[i] as usize - range.start;
+                let c = col[i] as usize;
+                let v = val[i];
+                let x_row = x.row(c);
+                let out_row = &mut chunk[r * d..(r + 1) * d];
+                for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                    *o += v * xv;
+                }
+            }
+        });
+        out
+    }
+
+    /// Per-row non-zero counts (used by conversions and feature extraction).
+    pub fn row_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.rows];
+        for &r in &self.row {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Per-column non-zero counts.
+    pub fn col_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.cols];
+        for &c in &self.col {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn random_coo(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn from_triples_sorts_and_dedups() {
+        let coo = Coo::from_triples(
+            3,
+            3,
+            vec![(2, 1, 1.0), (0, 0, 2.0), (2, 1, 3.0), (1, 2, 0.0)],
+        );
+        assert_eq!(coo.nnz(), 2);
+        assert_eq!(coo.row, vec![0, 2]);
+        assert_eq!(coo.col, vec![0, 1]);
+        assert_eq!(coo.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicate_cancellation_drops_entry() {
+        let coo = Coo::from_triples(2, 2, vec![(0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(coo.nnz(), 0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 13, 9, 0.2);
+        let dense = coo.to_dense();
+        let back = Coo::from_dense(&dense);
+        assert_eq!(coo, back);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        for &(n, m, d) in &[(1usize, 1usize, 1usize), (7, 5, 3), (33, 50, 8), (64, 64, 16)] {
+            let a = random_coo(&mut rng, n, m, 0.15);
+            let x = Matrix::rand(m, d, &mut rng);
+            let got = a.spmm(&x);
+            let want = a.to_dense().matmul(&x);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({n},{m},{d})");
+        }
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let mut rng = Rng::new(3);
+        let a = random_coo(&mut rng, 11, 17, 0.2);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn counts_sum_to_nnz() {
+        let mut rng = Rng::new(4);
+        let a = random_coo(&mut rng, 20, 30, 0.1);
+        assert_eq!(a.row_counts().iter().sum::<u32>() as usize, a.nnz());
+        assert_eq!(a.col_counts().iter().sum::<u32>() as usize, a.nnz());
+    }
+
+    #[test]
+    fn empty_matrix_spmm() {
+        let a = Coo::from_triples(4, 5, vec![]);
+        let x = Matrix::full(5, 2, 1.0);
+        let y = a.spmm(&x);
+        assert_eq!(y.data, vec![0.0; 8]);
+    }
+}

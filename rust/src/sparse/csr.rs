@@ -1,0 +1,219 @@
+//! Compressed sparse row (CSR) — the workhorse format; typically the
+//! paper's Fig-1 winner for GNN inputs.
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use crate::util::parallel::parallel_fill_rows;
+
+/// CSR sparse matrix: `indptr[r]..indptr[r+1]` spans row `r`'s entries in
+/// `indices` (column ids, ascending within a row) and `vals`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut indptr = vec![0usize; coo.rows + 1];
+        for &r in &coo.row {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        // COO is row-major sorted, so indices/vals copy straight through.
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            indptr,
+            indices: coo.col.clone(),
+            vals: coo.val.clone(),
+        }
+    }
+
+    /// Direct dense→CSR sparsification (single pass; used by the engine's
+    /// per-epoch activation refresh to skip the COO intermediate).
+    pub fn from_dense(m: &crate::tensor::Matrix) -> Csr {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: m.rows, cols: m.cols, indptr, indices, vals }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut row = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for _ in self.indptr[r]..self.indptr[r + 1] {
+                row.push(r as u32);
+            }
+        }
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            row,
+            col: self.indices.clone(),
+            val: self.vals.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row `r`'s (column, value) entries.
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        self.indices[span.clone()]
+            .iter()
+            .zip(self.vals[span].iter())
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Footprint model: 4B col idx + 4B value per nnz, 8B per indptr slot.
+    pub fn nbytes(&self) -> usize {
+        self.nnz() * 8 + (self.rows + 1) * 8
+    }
+
+    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row ranges.
+    ///
+    /// The inner loop accumulates into the output row, streaming `x` rows —
+    /// the canonical row-major-friendly kernel (and why CSR usually wins).
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let d = x.cols;
+        let mut out = Matrix::zeros(self.rows, d);
+        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            for (rr, r) in range.clone().enumerate() {
+                let out_row = &mut chunk[rr * d..(rr + 1) * d];
+                let span = self.indptr[r]..self.indptr[r + 1];
+                for (idx, &c) in self.indices[span.clone()].iter().enumerate() {
+                    let v = self.vals[span.start + idx];
+                    let x_row = x.row(c as usize);
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Direct CSR→CSC conversion by counting sort over columns (faster than
+    /// the COO hub; used on the per-layer format-switch hot path).
+    pub fn to_csc(&self) -> super::csc::Csc {
+        let mut colptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            colptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            colptr[i + 1] += colptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = colptr.clone();
+        for r in 0..self.rows {
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[i] as usize;
+                let slot = next[c];
+                indices[slot] = r as u32;
+                vals[slot] = self.vals[i];
+                next[c] += 1;
+            }
+        }
+        super::csc::Csc {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: colptr,
+            indices,
+            vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 17, 11, 0.2);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.to_coo(), coo);
+        assert_eq!(csr.nnz(), coo.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        for &(n, m, d) in &[(5usize, 7usize, 3usize), (40, 33, 9), (64, 64, 16)] {
+            let coo = random_coo(&mut rng, n, m, 0.15);
+            let csr = Csr::from_coo(&coo);
+            let x = Matrix::rand(m, d, &mut rng);
+            let want = coo.to_dense().matmul(&x);
+            assert!(csr.spmm(&x).max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_entries_sorted() {
+        let mut rng = Rng::new(3);
+        let csr = Csr::from_coo(&random_coo(&mut rng, 30, 30, 0.2));
+        for r in 0..30 {
+            let cols: Vec<usize> = csr.row_entries(r).map(|(c, _)| c).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            assert_eq!(cols, sorted);
+        }
+    }
+
+    #[test]
+    fn direct_csc_matches_hub() {
+        let mut rng = Rng::new(4);
+        let coo = random_coo(&mut rng, 23, 31, 0.12);
+        let csr = Csr::from_coo(&coo);
+        let direct = csr.to_csc();
+        let via_hub = super::super::csc::Csc::from_coo(&coo);
+        assert_eq!(direct, via_hub);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let coo = Coo::from_triples(5, 5, vec![(0, 0, 1.0), (4, 4, 2.0)]);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.indptr, vec![0, 1, 1, 1, 1, 2]);
+        let x = Matrix::eye(5);
+        let y = csr.spmm(&x);
+        assert_eq!(y.at(0, 0), 1.0);
+        assert_eq!(y.at(4, 4), 2.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Diagonal (DIA) format. Excellent for banded matrices; catastrophic for
+//! scattered patterns (storage is `n_diags × rows`), so construction is
+//! fallible with a budget guard — the labeler scores over-budget DIA as
+//! worst-case, exactly how exhaustive profiling would.
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use crate::util::parallel::parallel_fill_rows;
+
+/// Max stored elements (n_diags × rows) before we refuse to build DIA.
+/// 1<<26 f32 = 256 MiB — far beyond any point where DIA could win.
+pub const DIA_BUDGET: usize = 1 << 26;
+
+/// DIA sparse matrix. Diagonal `k` holds offset `offsets[k]`; element
+/// `(r, r + offsets[k])` lives at `data[k * rows + r]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dia {
+    pub rows: usize,
+    pub cols: usize,
+    pub offsets: Vec<i64>,
+    /// `offsets.len() * rows` values, row-indexed within each diagonal.
+    pub data: Vec<f32>,
+}
+
+impl Dia {
+    /// Build from COO; fails if the diagonal footprint exceeds [`DIA_BUDGET`].
+    pub fn from_coo(coo: &Coo) -> anyhow::Result<Dia> {
+        let mut offsets: Vec<i64> = (0..coo.nnz())
+            .map(|i| coo.col[i] as i64 - coo.row[i] as i64)
+            .collect();
+        offsets.sort_unstable();
+        offsets.dedup();
+        let footprint = offsets.len().saturating_mul(coo.rows);
+        if footprint > DIA_BUDGET {
+            anyhow::bail!(
+                "DIA footprint {} (diags={} × rows={}) exceeds budget {}",
+                footprint,
+                offsets.len(),
+                coo.rows,
+                DIA_BUDGET
+            );
+        }
+        let mut data = vec![0f32; footprint];
+        for i in 0..coo.nnz() {
+            let off = coo.col[i] as i64 - coo.row[i] as i64;
+            let k = offsets.binary_search(&off).unwrap();
+            data[k * coo.rows + coo.row[i] as usize] = coo.val[i];
+        }
+        Ok(Dia { rows: coo.rows, cols: coo.cols, offsets, data })
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut triples = Vec::new();
+        for (k, &off) in self.offsets.iter().enumerate() {
+            for r in 0..self.rows {
+                let c = r as i64 + off;
+                if c < 0 || c >= self.cols as i64 {
+                    continue;
+                }
+                let v = self.data[k * self.rows + r];
+                if v != 0.0 {
+                    triples.push((r as u32, c as u32, v));
+                }
+            }
+        }
+        Coo::from_triples(self.rows, self.cols, triples)
+    }
+
+    pub fn nnz(&self) -> usize {
+        // Count stored non-zeros (DIA may store explicit zeros as padding).
+        let mut n = 0;
+        for (k, &off) in self.offsets.iter().enumerate() {
+            for r in 0..self.rows {
+                let c = r as i64 + off;
+                if c >= 0 && c < self.cols as i64 && self.data[k * self.rows + r] != 0.0 {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    pub fn n_diags(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Footprint model: full diagonal storage + 8B per offset.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4 + self.offsets.len() * 8
+    }
+
+    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row ranges.
+    ///
+    /// Per output row `r`, walks the diagonals: `y[r] += data[k][r] * x[r+off]`.
+    /// Contiguous in `data` along rows and in `x` along features.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let d = x.cols;
+        let mut out = Matrix::zeros(self.rows, d);
+        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            for (k, &off) in self.offsets.iter().enumerate() {
+                let base = k * self.rows;
+                for (rr, r) in range.clone().enumerate() {
+                    let c = r as i64 + off;
+                    if c < 0 || c >= self.cols as i64 {
+                        continue;
+                    }
+                    let v = self.data[base + r];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let x_row = x.row(c as usize);
+                    let out_row = &mut chunk[rr * d..(rr + 1) * d];
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_banded(rng: &mut Rng, n: usize, band: i64, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..n {
+            for off in -band..=band {
+                let c = r as i64 + off;
+                if c >= 0 && c < n as i64 && rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(n, n, triples)
+    }
+
+    #[test]
+    fn roundtrip_banded() {
+        let mut rng = Rng::new(1);
+        let coo = random_banded(&mut rng, 30, 3, 0.7);
+        let dia = Dia::from_coo(&coo).unwrap();
+        assert_eq!(dia.to_coo(), coo);
+        assert_eq!(dia.nnz(), coo.nnz());
+        assert!(dia.n_diags() <= 7);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        let coo = random_banded(&mut rng, 40, 5, 0.5);
+        let dia = Dia::from_coo(&coo).unwrap();
+        let x = Matrix::rand(40, 8, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+        assert!(dia.spmm(&x).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn rectangular_matrices() {
+        let coo = Coo::from_triples(
+            4,
+            6,
+            vec![(0, 0, 1.0), (1, 2, 2.0), (3, 5, 3.0), (2, 0, 4.0)],
+        );
+        let dia = Dia::from_coo(&coo).unwrap();
+        assert_eq!(dia.to_coo(), coo);
+        let mut rng = Rng::new(3);
+        let x = Matrix::rand(6, 3, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+        assert!(dia.spmm(&x).max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn budget_guard_trips() {
+        // A maximally scattered pattern on a big-enough matrix: anti-diagonal
+        // touches a distinct diagonal per element → n_diags = n.
+        let n = 10_000;
+        let triples: Vec<_> = (0..n)
+            .map(|i| (i as u32, (n - 1 - i) as u32, 1.0f32))
+            .collect();
+        let coo = Coo::from_triples(n, n, triples);
+        assert!(Dia::from_coo(&coo).is_err());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::from_triples(5, 5, vec![]);
+        let dia = Dia::from_coo(&coo).unwrap();
+        assert_eq!(dia.n_diags(), 0);
+        assert_eq!(dia.to_coo().nnz(), 0);
+    }
+}

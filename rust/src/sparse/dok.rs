@@ -1,0 +1,128 @@
+//! Dictionary-of-keys (DOK): a hash map from `(row, col)` to value. Cheap
+//! incremental updates, poor SpMM locality — its honest weakness in the
+//! paper's profiling, reproduced here by iterating the hash table directly.
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// DOK sparse matrix.
+#[derive(Clone, Debug)]
+pub struct Dok {
+    pub rows: usize,
+    pub cols: usize,
+    pub map: HashMap<(u32, u32), f32>,
+}
+
+impl Dok {
+    pub fn from_coo(coo: &Coo) -> Dok {
+        let mut map = HashMap::with_capacity(coo.nnz());
+        for i in 0..coo.nnz() {
+            map.insert((coo.row[i], coo.col[i]), coo.val[i]);
+        }
+        Dok { rows: coo.rows, cols: coo.cols, map }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let triples = self.map.iter().map(|(&(r, c), &v)| (r, c, v)).collect();
+        Coo::from_triples(self.rows, self.cols, triples)
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Point read (the operation DOK is actually good at).
+    pub fn get(&self, r: u32, c: u32) -> f32 {
+        self.map.get(&(r, c)).copied().unwrap_or(0.0)
+    }
+
+    /// Point write.
+    pub fn set(&mut self, r: u32, c: u32, v: f32) {
+        if v == 0.0 {
+            self.map.remove(&(r, c));
+        } else {
+            self.map.insert((r, c), v);
+        }
+    }
+
+    /// Footprint model: 8B key + 4B value + ~36B hash-table overhead per
+    /// entry (mirrors the dictionary overhead that makes scipy DOK the most
+    /// memory-hungry format in the paper's Eq-1 memory term).
+    pub fn nbytes(&self) -> usize {
+        self.map.len() * 48
+    }
+
+    /// SpMM `self (n×m) · x (m×d) → (n×d)`.
+    ///
+    /// Iterates the hash table in storage order — scattered output access is
+    /// DOK's intrinsic SpMM penalty, kept deliberately (matching scipy,
+    /// which converts or iterates the dict).
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let d = x.cols;
+        let mut out = Matrix::zeros(self.rows, d);
+        for (&(r, c), &v) in &self.map {
+            let x_row = x.row(c as usize);
+            let out_row = out.row_mut(r as usize);
+            for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                *o += v * xv;
+            }
+        }
+        out
+    }
+}
+
+impl PartialEq for Dok {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.map == other.map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 15, 21, 0.15);
+        let dok = Dok::from_coo(&coo);
+        assert_eq!(dok.to_coo(), coo);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        let coo = random_coo(&mut rng, 31, 27, 0.12);
+        let dok = Dok::from_coo(&coo);
+        let x = Matrix::rand(27, 6, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+        assert!(dok.spmm(&x).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn point_ops() {
+        let mut dok = Dok::from_coo(&Coo::from_triples(4, 4, vec![(1, 2, 5.0)]));
+        assert_eq!(dok.get(1, 2), 5.0);
+        assert_eq!(dok.get(0, 0), 0.0);
+        dok.set(0, 0, 7.0);
+        assert_eq!(dok.get(0, 0), 7.0);
+        dok.set(1, 2, 0.0); // zero removes
+        assert_eq!(dok.nnz(), 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! List-of-lists (LIL): per-row lists of `(col, value)` pairs, the
+//! row-mutable format. SpMM walks each row list; the per-node indirection
+//! cost is modeled in the memory footprint.
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use crate::util::parallel::parallel_fill_rows;
+
+/// LIL sparse matrix: `rows_data[r]` is row `r`'s sorted `(col, val)` list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lil {
+    pub rows: usize,
+    pub cols: usize,
+    pub rows_data: Vec<Vec<(u32, f32)>>,
+}
+
+impl Lil {
+    pub fn from_coo(coo: &Coo) -> Lil {
+        let mut rows_data = vec![Vec::new(); coo.rows];
+        for i in 0..coo.nnz() {
+            rows_data[coo.row[i] as usize].push((coo.col[i], coo.val[i]));
+        }
+        Lil { rows: coo.rows, cols: coo.cols, rows_data }
+    }
+
+    /// Direct dense→LIL sparsification (single pass).
+    pub fn from_dense(m: &crate::tensor::Matrix) -> Lil {
+        let rows_data = (0..m.rows)
+            .map(|r| {
+                m.row(r)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(c, &v)| (c as u32, v))
+                    .collect()
+            })
+            .collect();
+        Lil { rows: m.rows, cols: m.cols, rows_data }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut triples = Vec::new();
+        for (r, list) in self.rows_data.iter().enumerate() {
+            for &(c, v) in list {
+                triples.push((r as u32, c, v));
+            }
+        }
+        Coo::from_triples(self.rows, self.cols, triples)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows_data.iter().map(|l| l.len()).sum()
+    }
+
+    /// Insert (or overwrite) a single entry, keeping the row sorted — the
+    /// incremental-build operation LIL exists for.
+    pub fn insert(&mut self, r: usize, c: u32, v: f32) {
+        let list = &mut self.rows_data[r];
+        match list.binary_search_by_key(&c, |&(col, _)| col) {
+            Ok(pos) => {
+                if v == 0.0 {
+                    list.remove(pos);
+                } else {
+                    list[pos].1 = v;
+                }
+            }
+            Err(pos) => {
+                if v != 0.0 {
+                    list.insert(pos, (c, v));
+                }
+            }
+        }
+    }
+
+    /// Footprint model: 8B per (col,val) node + 8B link overhead per node
+    /// (linked-list pointer) + 24B list header per row.
+    pub fn nbytes(&self) -> usize {
+        self.nnz() * 16 + self.rows * 24
+    }
+
+    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over rows.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let d = x.cols;
+        let mut out = Matrix::zeros(self.rows, d);
+        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            for (rr, r) in range.clone().enumerate() {
+                let out_row = &mut chunk[rr * d..(rr + 1) * d];
+                for &(c, v) in &self.rows_data[r] {
+                    let x_row = x.row(c as usize);
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Coo {
+        let mut triples = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+                }
+            }
+        }
+        Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 18, 14, 0.2);
+        let lil = Lil::from_coo(&coo);
+        assert_eq!(lil.to_coo(), coo);
+        assert_eq!(lil.nnz(), coo.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(2);
+        let coo = random_coo(&mut rng, 29, 35, 0.1);
+        let lil = Lil::from_coo(&coo);
+        let x = Matrix::rand(35, 5, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+        assert!(lil.spmm(&x).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn insert_keeps_sorted_and_handles_zero() {
+        let mut lil = Lil::from_coo(&Coo::from_triples(3, 10, vec![(0, 5, 1.0)]));
+        lil.insert(0, 2, 2.0);
+        lil.insert(0, 8, 3.0);
+        lil.insert(0, 5, 9.0); // overwrite
+        assert_eq!(lil.rows_data[0], vec![(2, 2.0), (5, 9.0), (8, 3.0)]);
+        lil.insert(0, 5, 0.0); // delete
+        assert_eq!(lil.rows_data[0], vec![(2, 2.0), (8, 3.0)]);
+    }
+}

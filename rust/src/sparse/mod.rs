@@ -1,0 +1,32 @@
+//! Sparse-matrix substrate: the seven storage formats the paper studies
+//! (§2.2 — COO, CSR, CSC, DIA, BSR, DOK, LIL), conversions between them, and
+//! a parallel SpMM kernel (`sparse · dense → dense`) per format.
+//!
+//! Design notes:
+//! * [`coo::Coo`] is the canonical interchange carrier: sorted row-major
+//!   triples, no duplicates, no explicit zeros. Every format converts
+//!   to/from COO; hot direct paths (CSR↔CSC) bypass the hub.
+//! * Each format reports a memory-footprint model ([`format::SparseMatrix::nbytes`])
+//!   mirroring scipy's relative ordering — the `M` term of the paper's Eq. 1.
+//! * Formats whose storage blows up on a given matrix (DIA on scattered
+//!   patterns) return an error from conversion instead of OOMing; the
+//!   labeler treats that as "worst case", which matches how the paper's
+//!   exhaustive profiling would score them.
+
+pub mod coo;
+pub mod csr;
+pub mod csc;
+pub mod dia;
+pub mod bsr;
+pub mod dok;
+pub mod lil;
+pub mod format;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use csc::Csc;
+pub use dia::Dia;
+pub use bsr::Bsr;
+pub use dok::Dok;
+pub use lil::Lil;
+pub use format::{Format, SparseMatrix, ALL_FORMATS};

@@ -1,0 +1,267 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::parallel::{parallel_fill_rows};
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Glorot/Xavier-uniform initialization (used for GNN weights).
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let limit = (6.0 / (rows + cols) as f64).sqrt();
+        let data = (0..rows * cols)
+            .map(|_| rng.uniform(-limit, limit) as f32)
+            .collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform random in [0,1).
+    pub fn rand(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.next_f32()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Transpose (parallel over output rows).
+    pub fn transpose(&self) -> Matrix {
+        let (r, c) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(c, r);
+        let src = &self.data;
+        parallel_fill_rows(&mut out.data, c, r, |range, chunk| {
+            for (jj, j) in range.clone().enumerate() {
+                let dst = &mut chunk[jj * r..(jj + 1) * r];
+                for i in 0..r {
+                    dst[i] = src[i * c + j];
+                }
+            }
+        });
+        out
+    }
+
+    /// Threaded blocked GEMM: `self (n×k) · other (k×m) → (n×m)`.
+    ///
+    /// Inner kernel iterates `i, l, j` so the innermost loop streams both the
+    /// B row and the C row — auto-vectorizes well and is cache-friendly for
+    /// row-major storage.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        let a = &self.data;
+        let b = &other.data;
+        parallel_fill_rows(&mut out.data, n, m, |range, chunk| {
+            for (ii, i) in range.clone().enumerate() {
+                let c_row = &mut chunk[ii * m..(ii + 1) * m];
+                let a_row = &a[i * k..(i + 1) * k];
+                for (l, &a_il) in a_row.iter().enumerate() {
+                    if a_il == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[l * m..(l + 1) * m];
+                    for (c_v, &b_v) in c_row.iter_mut().zip(b_row.iter()) {
+                        *c_v += a_il * b_v;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(n, m);
+        let a = &self.data;
+        let b = &other.data;
+        parallel_fill_rows(&mut out.data, n, m, |range, chunk| {
+            for (ii, i) in range.clone().enumerate() {
+                let a_row = &a[i * k..(i + 1) * k];
+                let c_row = &mut chunk[ii * m..(ii + 1) * m];
+                for j in 0..m {
+                    let b_row = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (&x, &y) in a_row.iter().zip(b_row.iter()) {
+                        acc += x * y;
+                    }
+                    c_row[j] = acc;
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, n, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        let a = &self.data;
+        let b = &other.data;
+        parallel_fill_rows(&mut out.data, n, m, |range, chunk| {
+            for (ii, i) in range.clone().enumerate() {
+                let c_row = &mut chunk[ii * m..(ii + 1) * m];
+                for l in 0..k {
+                    let a_li = a[l * n + i];
+                    if a_li == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[l * m..(l + 1) * m];
+                    for (c_v, &b_v) in c_row.iter_mut().zip(b_row.iter()) {
+                        *c_v += a_li * b_v;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for l in 0..a.cols {
+                    acc += a.at(i, l) * b.at(l, j);
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(n, k, m) in &[(1usize, 1usize, 1usize), (3, 4, 5), (17, 9, 23), (64, 64, 64)] {
+            let a = Matrix::rand(n, k, &mut rng);
+            let b = Matrix::rand(k, m, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({n},{k},{m})");
+        }
+    }
+
+    #[test]
+    fn matmul_t_and_t_matmul_match() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::rand(13, 7, &mut rng);
+        let b = Matrix::rand(11, 7, &mut rng);
+        let want = naive_matmul(&a, &b.transpose());
+        assert!(a.matmul_t(&b).max_abs_diff(&want) < 1e-4);
+
+        let c = Matrix::rand(7, 13, &mut rng);
+        let d = Matrix::rand(7, 5, &mut rng);
+        let want2 = naive_matmul(&c.transpose(), &d);
+        assert!(c.t_matmul(&d).max_abs_diff(&want2) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::rand(9, 17, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(5, 3), a.at(3, 5));
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::rand(8, 8, &mut rng);
+        let i = Matrix::eye(8);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn glorot_within_limit() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::glorot(50, 70, &mut rng);
+        let limit = (6.0f64 / 120.0).sqrt() as f32 + 1e-6;
+        assert!(m.data.iter().all(|&v| v.abs() <= limit));
+        // Not all zero:
+        assert!(m.norm() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

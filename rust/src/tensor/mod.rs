@@ -1,0 +1,11 @@
+//! Dense f32 matrix substrate.
+//!
+//! Row-major `Matrix` with the operations the GNN layers and the ML stack
+//! need: threaded blocked GEMM, transpose, row softmax / log-softmax,
+//! activations and elementwise arithmetic. This is the "dense side" of every
+//! SpMM (`sparse × dense → dense`) in the system.
+
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;

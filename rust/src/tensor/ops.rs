@@ -1,0 +1,291 @@
+//! Elementwise / rowwise operations on [`Matrix`] used by the GNN layers and
+//! the from-scratch ML models.
+
+use super::Matrix;
+
+/// ReLU forward.
+pub fn relu(x: &Matrix) -> Matrix {
+    Matrix {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| v.max(0.0)).collect(),
+    }
+}
+
+/// ReLU backward: grad * (x > 0).
+pub fn relu_grad(x: &Matrix, grad: &Matrix) -> Matrix {
+    assert_eq!(x.shape(), grad.shape());
+    Matrix {
+        rows: x.rows,
+        cols: x.cols,
+        data: x
+            .data
+            .iter()
+            .zip(grad.data.iter())
+            .map(|(&v, &g)| if v > 0.0 { g } else { 0.0 })
+            .collect(),
+    }
+}
+
+/// LeakyReLU forward (GAT uses slope 0.2 on attention logits).
+pub fn leaky_relu(x: &Matrix, slope: f32) -> Matrix {
+    Matrix {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| if v > 0.0 { v } else { slope * v }).collect(),
+    }
+}
+
+/// Elementwise sigmoid.
+pub fn sigmoid(x: &Matrix) -> Matrix {
+    Matrix {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect(),
+    }
+}
+
+/// Elementwise tanh.
+pub fn tanh(x: &Matrix) -> Matrix {
+    Matrix { rows: x.rows, cols: x.cols, data: x.data.iter().map(|&v| v.tanh()).collect() }
+}
+
+/// a + b.
+pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(b.data.iter()).map(|(&x, &y)| x + y).collect(),
+    }
+}
+
+/// a - b.
+pub fn sub(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(b.data.iter()).map(|(&x, &y)| x - y).collect(),
+    }
+}
+
+/// Hadamard product.
+pub fn mul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(b.data.iter()).map(|(&x, &y)| x * y).collect(),
+    }
+}
+
+/// Scalar multiply.
+pub fn scale(a: &Matrix, s: f32) -> Matrix {
+    Matrix { rows: a.rows, cols: a.cols, data: a.data.iter().map(|&x| x * s).collect() }
+}
+
+/// In-place `a += s * b` (used by optimizers to avoid allocation).
+pub fn axpy(a: &mut Matrix, s: f32, b: &Matrix) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, &y) in a.data.iter_mut().zip(b.data.iter()) {
+        *x += s * y;
+    }
+}
+
+/// Broadcast-add a row vector (bias) to every row.
+pub fn add_row(a: &Matrix, bias: &[f32]) -> Matrix {
+    assert_eq!(a.cols, bias.len());
+    let mut out = a.clone();
+    for r in 0..out.rows {
+        for (v, &b) in out.row_mut(r).iter_mut().zip(bias.iter()) {
+            *v += b;
+        }
+    }
+    out
+}
+
+/// Column sums (bias gradients).
+pub fn col_sums(m: &Matrix) -> Vec<f32> {
+    let mut out = vec![0f32; m.cols];
+    for r in 0..m.rows {
+        for (o, &v) in out.iter_mut().zip(m.row(r).iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Row-wise softmax.
+pub fn softmax_rows(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Row-wise log-softmax (numerically stable).
+pub fn log_softmax_rows(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        for v in row.iter_mut() {
+            *v -= logsum;
+        }
+    }
+    out
+}
+
+/// Mean negative log-likelihood of `labels` under row log-probabilities,
+/// restricted to `mask` rows (graph datasets train on a node subset).
+/// Returns (loss, gradient wrt logits) where gradient already includes the
+/// softmax backward: `(softmax - onehot) / n_masked`.
+pub fn masked_xent_with_grad(
+    logits: &Matrix,
+    labels: &[usize],
+    mask: &[bool],
+) -> (f32, Matrix) {
+    assert_eq!(logits.rows, labels.len());
+    assert_eq!(logits.rows, mask.len());
+    let logp = log_softmax_rows(logits);
+    let n_masked = mask.iter().filter(|&&m| m).count().max(1);
+    let scale = 1.0 / n_masked as f32;
+    let mut loss = 0.0f32;
+    let mut grad = Matrix::zeros(logits.rows, logits.cols);
+    for r in 0..logits.rows {
+        if !mask[r] {
+            continue;
+        }
+        let lp = logp.row(r);
+        loss -= lp[labels[r]];
+        let g = grad.row_mut(r);
+        for c in 0..lp.len() {
+            g[c] = (lp[c].exp() - f32::from(c == labels[r])) * scale;
+        }
+    }
+    (loss * scale, grad)
+}
+
+/// Classification accuracy of argmax rows vs labels over `mask`.
+pub fn masked_accuracy(logits: &Matrix, labels: &[usize], mask: &[bool]) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for r in 0..logits.rows {
+        if !mask[r] {
+            continue;
+        }
+        total += 1;
+        let row = logits.row(r);
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred == labels[r] {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relu_and_grad() {
+        let x = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(relu(&x).data, vec![0.0, 0.0, 2.0, 0.0]);
+        let g = Matrix::full(1, 4, 1.0);
+        assert_eq!(relu_grad(&x, &g).data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::rand(5, 7, &mut rng);
+        let s = softmax_rows(&x);
+        for r in 0..5 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::rand(4, 6, &mut rng);
+        let s = softmax_rows(&x);
+        let ls = log_softmax_rows(&x);
+        for i in 0..x.data.len() {
+            assert!((ls.data[i].exp() - s.data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]);
+        let s = softmax_rows(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert!((s.data.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_grad_is_softmax_minus_onehot() {
+        let logits = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 0.5, 0.5, 0.5]);
+        let labels = vec![2usize, 0usize];
+        let mask = vec![true, true];
+        let (loss, grad) = masked_xent_with_grad(&logits, &labels, &mask);
+        assert!(loss > 0.0);
+        let s = softmax_rows(&logits);
+        // row 0, class 2: (p - 1) / 2
+        assert!((grad.at(0, 2) - (s.at(0, 2) - 1.0) / 2.0).abs() < 1e-5);
+        assert!((grad.at(0, 0) - s.at(0, 0) / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_respects_mask() {
+        let logits = Matrix::from_vec(2, 2, vec![5.0, -5.0, -5.0, 5.0]);
+        let labels = vec![0usize, 0usize]; // row 1 is wrong but masked out
+        let mask = vec![true, false];
+        let (loss, grad) = masked_xent_with_grad(&logits, &labels, &mask);
+        assert!(loss < 0.01, "masked loss should be tiny: {loss}");
+        assert_eq!(grad.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        let labels = vec![0, 1, 1];
+        assert!((masked_accuracy(&logits, &labels, &[true, true, true]) - 2.0 / 3.0).abs() < 1e-9);
+        assert!((masked_accuracy(&logits, &labels, &[true, true, false]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = Matrix::full(2, 2, 1.0);
+        let b = Matrix::full(2, 2, 2.0);
+        axpy(&mut a, 0.5, &b);
+        assert_eq!(a.data, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Miniature property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Usage inside `#[cfg(test)]`:
+//! ```ignore
+//! check(200, |rng| gen_matrix(rng), |m| {
+//!     prop_assert(roundtrip(m) == *m, "conversion round-trip")
+//! });
+//! ```
+//! Each case is generated from a deterministic per-case seed; on failure the
+//! framework reports the seed so the case can be replayed with
+//! [`replay`]. No shrinking — generators are kept small instead.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn prop_close(a: &[f32], b: &[f32], tol: f32, what: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("{what}: index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Base seed; override with GNN_SPMM_PROP_SEED to reproduce CI failures.
+fn base_seed() -> u64 {
+    std::env::var("GNN_SPMM_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `cases` random property checks. Panics on first failure, printing the
+/// per-case seed for replay.
+pub fn check<T, G, P>(cases: usize, mut generate: G, property: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed on case {case} (replay: GNN_SPMM_PROP_SEED={base}, case seed {seed})\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<T, G, P>(seed: u64, mut generate: G, property: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    let input = generate(&mut rng);
+    property(&input).expect("replayed property failed");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0usize;
+        check(
+            50,
+            |rng| rng.gen_range(100),
+            |&x| {
+                let _ = x;
+                Ok(())
+            },
+        );
+        n += 50;
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            50,
+            |rng| rng.gen_range(100),
+            |&x| prop_assert(x < 90, "x should be < 90 (expected to fail sometimes)"),
+        );
+    }
+
+    #[test]
+    fn prop_close_detects_mismatch() {
+        assert!(prop_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "same").is_ok());
+        assert!(prop_close(&[1.0], &[1.1], 1e-3, "diff").is_err());
+        assert!(prop_close(&[1.0], &[1.0, 2.0], 1e-3, "len").is_err());
+    }
+
+    #[test]
+    fn relative_tolerance_scales() {
+        // 1e6 vs 1e6+1 is within 1e-5 relative.
+        assert!(prop_close(&[1e6], &[1e6 + 1.0], 1e-5, "rel").is_ok());
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags may use `--key=value` or `--key value`. Unknown keys are kept and
+//! can be validated by the caller.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Convention: positionals precede flags (a bare `--flag value` pair
+        // is indistinguishable from `--option value`).
+        let a = parse(&["train", "data.csv", "--epochs", "10", "--lr=0.01", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("epochs", 0), 10);
+        assert_eq!(a.get_f64("lr", 0.0), 0.01);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_usize("x", 0), 1);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get_or("mode", "auto"), "auto");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal CSV writer for experiment outputs (one file per figure/table so
+//! plots can be regenerated outside this repo).
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV table with a header row.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        CsvTable {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row; panics if the width differs from the header.
+    pub fn push<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, row: I) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "CSV row width mismatch");
+        self.rows.push(row);
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let fmt_row = |row: &[String]| {
+            row.iter().map(|f| Self::escape(f)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Format a float with fixed precision for tables.
+pub fn fmt(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_escapes() {
+        let mut t = CsvTable::new(["name", "value"]);
+        t.push(["plain", "1"]);
+        t.push(["has,comma", "quote\"inside"]);
+        let s = t.to_string();
+        assert!(s.starts_with("name,value\n"));
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"quote\"\"inside\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push(["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut t = CsvTable::new(["x"]);
+        t.push(["1"]);
+        let path = std::env::temp_dir().join("gnn_spmm_csv_test/out.csv");
+        t.write_file(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(read, "x\n1\n");
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,13 @@
+//! Support substrates built in-tree because the build environment is offline
+//! (no rayon / rand / serde / clap / criterion available).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod parallel;
+pub mod stats;
+pub mod csv;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,195 @@
+//! Data-parallel helpers over `std::thread::scope` (rayon is unavailable).
+//!
+//! The SpMM kernels, feature extraction and training-data labeler all
+//! parallelize across row ranges or independent work items through these
+//! primitives.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cached).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("GNN_SPMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+        .max(1);
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Split `[0, n)` into at most `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return vec![];
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range)` over a partition of `[0, n)` on the worker pool.
+///
+/// `f` must be safe to run concurrently on disjoint ranges; use it to fill
+/// disjoint slices of a shared output obtained via `split_at_mut` or raw
+/// pointer arithmetic encapsulated by the caller.
+pub fn parallel_ranges<F>(n: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let ranges = split_ranges(n, num_threads());
+    if ranges.len() <= 1 {
+        for r in ranges {
+            f(r);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for r in ranges {
+            s.spawn(|| f(r));
+        }
+    });
+}
+
+/// Parallel map: apply `f` to every index in `[0, n)` collecting results in
+/// order. Work is chunked contiguously per thread.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = &mut out[..];
+        let ranges = split_ranges(n, num_threads());
+        if ranges.len() <= 1 {
+            for r in ranges {
+                for i in r {
+                    slots[i] = Some(f(i));
+                }
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut rest = slots;
+                let mut offset = 0;
+                for r in ranges {
+                    let (head, tail) = rest.split_at_mut(r.len());
+                    rest = tail;
+                    let base = offset;
+                    offset += r.len();
+                    let f = &f;
+                    s.spawn(move || {
+                        for (j, slot) in head.iter_mut().enumerate() {
+                            *slot = Some(f(base + j));
+                        }
+                    });
+                }
+            });
+        }
+    }
+    out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+}
+
+/// Parallel fill of a mutable f32 slice by disjoint row blocks:
+/// `fill(row_range, out_chunk)` where `out_chunk` is rows `row_range` of a
+/// row-major `[n_rows, row_len]` buffer.
+pub fn parallel_fill_rows<F>(out: &mut [f32], n_rows: usize, row_len: usize, fill: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), n_rows * row_len);
+    let ranges = split_ranges(n_rows, num_threads());
+    if ranges.len() <= 1 {
+        for r in ranges {
+            let s = r.start * row_len;
+            let e = r.end * row_len;
+            fill(r, &mut out[s..e]);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for r in ranges {
+            let take = (r.end - r.start) * row_len;
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let fill = &fill;
+            s.spawn(move || fill(r, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 3, 8, 200] {
+                let rs = split_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_visits_all() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let sum = AtomicU64::new(0);
+        parallel_ranges(10_000, |r| {
+            let mut local = 0u64;
+            for i in r {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn parallel_fill_rows_disjoint() {
+        let n_rows = 97;
+        let row_len = 13;
+        let mut out = vec![0f32; n_rows * row_len];
+        parallel_fill_rows(&mut out, n_rows, row_len, |rows, chunk| {
+            for (j, row) in rows.clone().enumerate() {
+                for c in 0..row_len {
+                    chunk[j * row_len + c] = (row * row_len + c) as f32;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+}

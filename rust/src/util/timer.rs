@@ -1,0 +1,129 @@
+//! Wall-clock timing utilities for kernels, phases and benches.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations then `iters` measured,
+/// returning per-iteration seconds.
+pub fn time_n<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        out.push(start.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Accumulates named phase durations across a run — used by the coordinator
+/// to attribute time to SpMM vs. dense compute vs. feature extraction vs.
+/// format conversion (the paper includes all overheads in reported time).
+#[derive(Default, Debug, Clone)]
+pub struct Stopwatch {
+    totals: BTreeMap<&'static str, f64>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and charge it to `phase`.
+    pub fn phase<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        *self.totals.entry(phase).or_insert(0.0) += start.elapsed().as_secs_f64();
+        *self.counts.entry(phase).or_insert(0) += 1;
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, phase: &'static str, secs: f64) {
+        *self.totals.entry(phase).or_insert(0.0) += secs;
+        *self.counts.entry(phase).or_insert(0) += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &Stopwatch) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_insert(0.0) += v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += c;
+        }
+    }
+
+    /// Phases sorted by descending total time.
+    pub fn report(&self) -> Vec<(&'static str, f64, u64)> {
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(&k, &v)| (k, v, self.counts.get(k).copied().unwrap_or(0)))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_n_lengths() {
+        let samples = time_n(2, 5, || std::hint::black_box(1 + 1));
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.phase("a", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        sw.phase("a", || {});
+        sw.add("b", 0.5);
+        assert!(sw.total("a") > 0.0);
+        assert_eq!(sw.total("b"), 0.5);
+        let report = sw.report();
+        assert_eq!(report[0].0, "b");
+        assert_eq!(report.iter().find(|r| r.0 == "a").unwrap().2, 2);
+        assert!(sw.grand_total() > 0.5);
+    }
+
+    #[test]
+    fn stopwatch_merge() {
+        let mut a = Stopwatch::new();
+        a.add("x", 1.0);
+        let mut b = Stopwatch::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.total("x"), 3.0);
+        assert_eq!(a.total("y"), 3.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration: the experiment coordinator regenerates the paper's
+//! tables/figures end-to-end on a reduced workbench — the same code paths
+//! the bench binaries use, validated for shape and internal consistency.
+
+use gnn_spmm::coordinator::{experiments, Workbench};
+use gnn_spmm::gnn::TrainConfig;
+use gnn_spmm::sparse::ALL_FORMATS;
+
+fn wb() -> Workbench {
+    Workbench::small(0xBEE)
+}
+
+fn fast_cfg() -> TrainConfig {
+    TrainConfig { epochs: 3, hidden: 8, ..Default::default() }
+}
+
+#[test]
+fn table1_and_fig6_and_fig10() {
+    let wb = wb();
+    let t1 = experiments::table1(&wb);
+    assert_eq!(t1.rows.len(), 5);
+
+    let f6 = experiments::fig6(&wb, &[0.0, 0.5, 1.0]);
+    assert_eq!(f6.rows.len(), 3 * ALL_FORMATS.len());
+    // Counts per w sum to the corpus size.
+    let per_w: usize = f6.rows[..ALL_FORMATS.len()]
+        .iter()
+        .map(|r| r[2].parse::<usize>().unwrap())
+        .sum();
+    assert_eq!(per_w, wb.corpus.matrices.len());
+
+    let f10 = experiments::fig10(&wb, &[0.0, 1.0]);
+    for row in &f10.rows {
+        let acc: f64 = row[1].parse().unwrap();
+        assert!(acc > 14.3, "accuracy must beat 7-class chance: {acc}");
+    }
+}
+
+#[test]
+fn fig2_density_series_monotone_khop() {
+    let wb = wb();
+    let f2 = experiments::fig2(&wb, "Cora", 4);
+    let khop: Vec<f64> = f2
+        .rows
+        .iter()
+        .filter(|r| r[0] == "khop_adjacency")
+        .map(|r| r[2].parse().unwrap())
+        .collect();
+    assert!(khop.len() >= 3);
+    for w in khop.windows(2) {
+        assert!(w[1] >= w[0] - 1e-12, "k-hop density must grow: {khop:?}");
+    }
+    let h1: Vec<f64> = f2
+        .rows
+        .iter()
+        .filter(|r| r[0] == "gcn_h1_activation")
+        .map(|r| r[2].parse().unwrap())
+        .collect();
+    assert_eq!(h1.len(), 4);
+}
+
+#[test]
+fn fig1_reports_all_formats_and_flags_best() {
+    let wb = wb();
+    // Restrict to the two smallest datasets for test speed by building a
+    // tiny view of the workbench.
+    let mut small = wb;
+    small.datasets.retain(|d| d.name == "KarateClub" || d.name == "Cora");
+    let f1 = experiments::fig1(&small, &fast_cfg(), 1);
+    assert_eq!(f1.rows.len(), 2 * ALL_FORMATS.len());
+    for name in ["KarateClub", "Cora"] {
+        let best_rows = f1
+            .rows
+            .iter()
+            .filter(|r| r[0] == name && r[4] == "true")
+            .count();
+        assert_eq!(best_rows, 1, "{name} needs exactly one best format");
+    }
+}
+
+#[test]
+fn fig8_and_fig9_consistency() {
+    let mut wb = wb();
+    wb.datasets.retain(|d| d.name == "Cora");
+    let f8 = experiments::fig8(&wb, &fast_cfg(), 1);
+    assert_eq!(f8.rows.len(), 5); // 5 models × 1 dataset
+    for row in &f8.rows {
+        let speedup: f64 = row[4].parse().unwrap();
+        assert!(speedup > 0.1 && speedup < 50.0, "sane speedup: {speedup}");
+    }
+    let f9 = experiments::fig9(&wb, &fast_cfg(), 1);
+    assert_eq!(f9.rows.len(), 5);
+    for row in &f9.rows {
+        let pct: f64 = row[4].parse().unwrap();
+        assert!(pct > 5.0, "oracle ratio in sane range: {pct}");
+    }
+}
+
+#[test]
+fn fig11_compares_four_models() {
+    let wb = wb();
+    let f11 = experiments::fig11(&wb);
+    let names: Vec<&str> = f11.rows.iter().map(|r| r[0].as_str()).collect();
+    assert_eq!(names, vec!["XGBoost", "MLP", "KNN", "SVM"]);
+    for row in &f11.rows {
+        let acc: f64 = row[1].parse().unwrap();
+        assert!(acc >= 0.0 && acc <= 100.0);
+        let us: f64 = row[2].parse().unwrap();
+        assert!(us > 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime loads the JAX/Pallas AOT artifacts and the
+//! numerics match the native rust implementations. Skipped (with a message)
+//! when `artifacts/` hasn't been built — run `make artifacts` first.
+
+use gnn_spmm::runtime::{default_artifacts_dir, PjrtEngine};
+use gnn_spmm::sparse::{Bsr, Coo};
+use gnn_spmm::tensor::{ops, Matrix};
+use gnn_spmm::util::rng::Rng;
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    let mut eng = PjrtEngine::cpu().expect("PJRT CPU client");
+    eng.load_manifest(&dir).expect("load artifacts");
+    Some(eng)
+}
+
+// Shapes must match python/compile/aot.py constants.
+const N: usize = 677;
+const H: usize = 16;
+const C: usize = 7;
+const BS: usize = 16;
+const NRB: usize = 43;
+const NPAD: usize = NRB * BS;
+const NNZB_CAP: usize = 4096;
+const DSP: usize = 32;
+
+#[test]
+fn loads_all_manifest_artifacts() {
+    let Some(eng) = engine_or_skip() else { return };
+    for name in ["gcn_layer_fwd", "gcn_loss_grad", "gcn_layer_bwd", "bsr_spmm_demo"] {
+        assert!(eng.has(name), "missing artifact {name}");
+    }
+    assert!(!eng.platform().is_empty());
+}
+
+#[test]
+fn gcn_layer_fwd_matches_native() {
+    let Some(eng) = engine_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let s0 = Matrix::rand(N, H, &mut rng);
+    let b0 = Matrix::rand(1, H, &mut rng);
+    let w1 = Matrix::rand(H, C, &mut rng);
+    let out = eng.run("gcn_layer_fwd", &[&s0, &b0, &w1]).expect("run");
+    assert_eq!(out.len(), 2);
+    // Native: h1 = relu(s0 + b0); z1 = h1 @ w1.
+    let h1 = ops::relu(&ops::add_row(&s0, &b0.data));
+    let z1 = h1.matmul(&w1);
+    assert!(out[0].max_abs_diff(&h1) < 1e-4, "H1 mismatch");
+    assert!(out[1].max_abs_diff(&z1) < 1e-3, "Z1 mismatch");
+}
+
+#[test]
+fn gcn_loss_grad_matches_native() {
+    let Some(eng) = engine_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    let logits = Matrix::rand(N, C, &mut rng);
+    let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+    let mask_vec: Vec<bool> = (0..N).map(|_| rng.bernoulli(0.6)).collect();
+    let mut y = Matrix::zeros(N, C);
+    let mut mask = Matrix::zeros(N, 1);
+    for i in 0..N {
+        *y.at_mut(i, labels[i]) = 1.0;
+        mask.data[i] = f32::from(mask_vec[i]);
+    }
+    let out = eng.run("gcn_loss_grad", &[&logits, &y, &mask]).expect("run");
+    let (loss_native, grad_native) = ops::masked_xent_with_grad(&logits, &labels, &mask_vec);
+    assert!(
+        (out[0].data[0] - loss_native).abs() < 1e-4,
+        "loss {} vs native {}",
+        out[0].data[0],
+        loss_native
+    );
+    assert!(out[1].max_abs_diff(&grad_native) < 1e-5, "dlogits mismatch");
+}
+
+#[test]
+fn gcn_layer_bwd_matches_native() {
+    let Some(eng) = engine_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let s0 = Matrix::rand(N, H, &mut rng);
+    let b0 = Matrix::rand(1, H, &mut rng);
+    let w1 = Matrix::rand(H, C, &mut rng);
+    let dz1 = Matrix::rand(N, C, &mut rng);
+    let out = eng.run("gcn_layer_bwd", &[&s0, &b0, &w1, &dz1]).expect("run");
+    // Native backward.
+    let pre = ops::add_row(&s0, &b0.data);
+    let h1 = ops::relu(&pre);
+    let dw1 = h1.t_matmul(&dz1);
+    let dh1 = dz1.matmul_t(&w1);
+    let ds0 = ops::relu_grad(&pre, &dh1);
+    assert!(out[0].max_abs_diff(&dw1) < 2e-3, "dW1 mismatch");
+    assert!(out[1].max_abs_diff(&ds0) < 1e-3, "dS0 mismatch");
+}
+
+/// The L1 Pallas artifact (interpret-mode BSR SpMM) agrees with the rust
+/// BSR kernel — the full L1 → L2 → L3 composition check.
+#[test]
+fn pallas_bsr_spmm_matches_rust_bsr() {
+    let Some(eng) = engine_or_skip() else { return };
+    let mut rng = Rng::new(4);
+    // Random sparse matrix within the padded capacity.
+    let mut triples = Vec::new();
+    for r in 0..N {
+        for _ in 0..3 {
+            triples.push((r as u32, rng.gen_range(N) as u32, rng.uniform(-1.0, 1.0) as f32));
+        }
+    }
+    let coo = Coo::from_triples(N, N, triples);
+    let bsr = Bsr::from_coo(&coo, BS);
+    assert!(bsr.n_blocks() <= NNZB_CAP, "demo capacity exceeded");
+    // bsr.indptr covers ceil(N/BS) = NRB row blocks exactly (677 → 43).
+    assert_eq!(bsr.indptr.len(), NRB + 1);
+
+    // Pack padded BSR arrays as f32 matrices for the artifact.
+    let mut indptr = Matrix::zeros(1, NRB + 1);
+    for (i, &p) in bsr.indptr.iter().enumerate() {
+        indptr.data[i] = p as f32;
+    }
+    let mut indices = Matrix::zeros(1, NNZB_CAP);
+    for (i, &c) in bsr.indices.iter().enumerate() {
+        indices.data[i] = c as f32;
+    }
+    let mut blocks = Matrix::zeros(NNZB_CAP * BS, BS);
+    blocks.data[..bsr.blocks.len()].copy_from_slice(&bsr.blocks);
+    let mut x = Matrix::zeros(NPAD, DSP);
+    for r in 0..N {
+        for c in 0..DSP {
+            *x.at_mut(r, c) = rng.next_f32();
+        }
+    }
+
+    let out = eng
+        .run("bsr_spmm_demo", &[&indptr, &indices, &blocks, &x])
+        .expect("run pallas artifact");
+    assert_eq!(out[0].shape(), (NPAD, DSP));
+
+    // Rust-side reference: BSR spmm on the unpadded operand.
+    let x_unpadded = Matrix::from_vec(
+        N,
+        DSP,
+        (0..N).flat_map(|r| x.row(r).to_vec()).collect(),
+    );
+    let want = bsr.spmm(&x_unpadded);
+    for r in 0..N {
+        for c in 0..DSP {
+            let a = out[0].at(r, c);
+            let b = want.at(r, c);
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "mismatch at ({r},{c}): {a} vs {b}"
+            );
+        }
+    }
+}

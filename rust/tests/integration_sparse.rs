@@ -1,0 +1,91 @@
+//! Cross-module integration: formats × conversions × SpMM at dataset scale,
+//! plus memory-model and transpose interplay used by the GNN engine.
+
+use gnn_spmm::graph::{gen_matrix, normalize_adj, DatasetSpec, GraphDataset, MatrixPattern};
+use gnn_spmm::sparse::{Format, SparseMatrix, ALL_FORMATS};
+use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::rng::Rng;
+
+#[test]
+fn every_format_agrees_on_a_real_dataset_adjacency() {
+    let mut rng = Rng::new(1);
+    let spec = DatasetSpec {
+        name: "IntTest",
+        n: 600,
+        feat_dim: 64,
+        adj_density: 0.02,
+        feat_density: 0.1,
+        n_classes: 4,
+    };
+    let ds = GraphDataset::generate(&spec, &mut rng);
+    let x = Matrix::rand(600, 16, &mut rng);
+    let base = SparseMatrix::Coo(ds.adj_norm.clone());
+    let want = base.spmm(&x);
+    for &fmt in &ALL_FORMATS {
+        let Ok(m) = base.convert(fmt) else { continue };
+        let got = m.spmm(&x);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "{fmt}: diff {diff}");
+    }
+}
+
+#[test]
+fn chained_conversions_preserve_content() {
+    // COO -> CSR -> BSR -> LIL -> DOK -> CSC -> COO must be lossless.
+    let mut rng = Rng::new(2);
+    let coo = gen_matrix(&mut rng, 200, 0.05, MatrixPattern::PowerLaw);
+    let mut m = SparseMatrix::Coo(coo.clone());
+    for fmt in [Format::Csr, Format::Bsr, Format::Lil, Format::Dok, Format::Csc, Format::Coo] {
+        m = m.convert(fmt).unwrap();
+    }
+    assert_eq!(m.to_coo(), coo);
+}
+
+#[test]
+fn normalized_adjacency_keeps_spmm_bounded() {
+    // Â has spectral radius ≤ 1, so repeated propagation must not blow up.
+    let mut rng = Rng::new(3);
+    let adj = gen_matrix(&mut rng, 300, 0.03, MatrixPattern::Uniform);
+    // Symmetrize.
+    let mut triples = Vec::new();
+    for i in 0..adj.nnz() {
+        triples.push((adj.row[i], adj.col[i], 1.0f32));
+        triples.push((adj.col[i], adj.row[i], 1.0f32));
+    }
+    let sym = gnn_spmm::sparse::Coo::from_triples(300, 300, triples);
+    let norm = normalize_adj(&sym);
+    let m = SparseMatrix::Csr(gnn_spmm::sparse::Csr::from_coo(&norm));
+    let mut x = Matrix::full(300, 8, 1.0);
+    for _ in 0..20 {
+        x = m.spmm(&x);
+    }
+    assert!(x.data.iter().all(|v| v.is_finite()));
+    assert!(x.norm() <= 300.0 * 8.0, "propagation should stay bounded");
+}
+
+#[test]
+fn transpose_roundtrip_spmm_consistency() {
+    // (Aᵀ)ᵀ x == A x across formats — the gradient-path invariant.
+    let mut rng = Rng::new(4);
+    let coo = gen_matrix(&mut rng, 150, 0.08, MatrixPattern::Block);
+    let x = Matrix::rand(150, 8, &mut rng);
+    let base = SparseMatrix::Coo(coo);
+    let want = base.spmm(&x);
+    for &fmt in &[Format::Csr, Format::Csc, Format::Bsr] {
+        let m = base.convert(fmt).unwrap();
+        let tt = m.transpose().unwrap().transpose().unwrap();
+        assert!(tt.spmm(&x).max_abs_diff(&want) < 1e-4, "{fmt}");
+    }
+}
+
+#[test]
+fn memory_model_tracks_nnz() {
+    let mut rng = Rng::new(5);
+    let sparse = gen_matrix(&mut rng, 256, 0.01, MatrixPattern::Uniform);
+    let dense = gen_matrix(&mut rng, 256, 0.3, MatrixPattern::Uniform);
+    for &fmt in &[Format::Coo, Format::Csr, Format::Dok, Format::Lil] {
+        let a = SparseMatrix::Coo(sparse.clone()).convert(fmt).unwrap().nbytes();
+        let b = SparseMatrix::Coo(dense.clone()).convert(fmt).unwrap().nbytes();
+        assert!(b > a, "{fmt}: denser matrix must cost more bytes");
+    }
+}
