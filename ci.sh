@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, build and the tier-1 test suite.
+# Usage: ./ci.sh  (from the repo root; cargo required)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (-D warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "CI OK"

@@ -11,8 +11,11 @@
 //!
 //! Python never runs: only the pre-compiled `artifacts/*.hlo.txt`.
 //!
+//! Requires the `pjrt` feature (and a vendored `xla` crate — see DESIGN.md
+//! §Hardware-Adaptation); the example is skipped in default builds.
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example train_gcn_e2e -- --epochs 30
+//! make artifacts && cargo run --release --features pjrt --example train_gcn_e2e -- --epochs 30
 //! ```
 
 use gnn_spmm::gnn::adam::Adam;
@@ -80,7 +83,6 @@ fn main() -> anyhow::Result<()> {
 
     // Engine slots for the sparse operands.
     let s_x = eng.add_slot("e2e.X", ds.features.clone());
-    let s_xt = eng.add_slot("e2e.Xt", ds.features.transpose());
     let s_a1 = eng.add_slot("e2e.A.l1", ds.adj_norm.clone());
     let s_a2 = eng.add_slot("e2e.A.l2", ds.adj_norm.clone());
 
@@ -120,7 +122,7 @@ fn main() -> anyhow::Result<()> {
         let (dw1, ds0) = (&bwd[0], &bwd[1]);
         let db0 = ops::col_sums(ds0);
         let dz0 = eng.spmm(s_a1, ds0); // L3 sparse
-        let dw0 = eng.spmm(s_xt, &dz0); // L3 sparse: Xᵀ·dZ0
+        let dw0 = eng.spmm_t(s_x, &dz0); // L3 sparse: Xᵀ·dZ0, transpose-free
         // ---------- update ----------
         adam.tick();
         adam.update_matrix(0, &mut w0, &dw0);

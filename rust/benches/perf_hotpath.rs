@@ -1,41 +1,128 @@
 //! §Perf micro-benchmarks: the hot paths the whole system sits on —
-//! per-format SpMM kernels, format conversions, feature extraction and the
-//! dense GEMM. Used by the optimization pass in EXPERIMENTS.md §Perf.
+//! per-format SpMM kernels (allocating and `_into` workspace variants, both
+//! directions), format conversions, feature extraction and the dense GEMM.
+//! Used by the optimization pass in EXPERIMENTS.md §Perf.
 //!
-//! A throughput summary (GFLOP/s for SpMM ≈ 2·nnz·d / t) is printed so the
-//! numbers can be compared against the machine's practical roofline.
+//! Besides the human-readable table, emits a machine-readable
+//! `BENCH_spmm.json` (ns/op and allocation counts per format × size) so
+//! subsequent PRs have a perf trajectory to compare against. Output path
+//! overridable via `GNN_SPMM_BENCH_OUT`.
+//!
+//! Allocation counts come from a counting global allocator; note that the
+//! multi-threaded kernels pay a few allocations per call for thread spawns
+//! and (scatter kernels) private buffers — run with `GNN_SPMM_THREADS=1` to
+//! see the pure kernel numbers, where `spmm_into` on CSR/DIA/LIL is
+//! allocation-free.
 
 use gnn_spmm::bench::{bench, section};
 use gnn_spmm::features::extract_features;
 use gnn_spmm::graph::{gen_matrix, MatrixPattern};
 use gnn_spmm::sparse::{Format, SparseMatrix, ALL_FORMATS};
 use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator: tracks calls and bytes so the JSON can report the
+/// per-op allocation cost of each kernel variant.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocation calls + bytes across one invocation of `f`.
+fn count_allocs<T>(mut f: impl FnMut() -> T) -> (u64, u64) {
+    let c0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    std::hint::black_box(f());
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed) - c0,
+        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
+    )
+}
 
 fn main() {
     let mut rng = Rng::new(0x9E7F);
-    let n = 4096;
-    let d = 64;
-    let density = 0.01;
-    let coo = gen_matrix(&mut rng, n, density, MatrixPattern::PowerLaw);
-    let nnz = coo.nnz();
-    let x = Matrix::rand(n, d, &mut rng);
-    println!(
-        "workload: {n}×{n} power-law matrix, nnz={nnz} ({:.2}%), dense width {d}",
-        coo.density() * 100.0
-    );
+    let mut records: Vec<Json> = Vec::new();
 
-    section("SpMM per format (the paper's kernel set)");
-    let base = SparseMatrix::Coo(coo.clone());
-    for &fmtc in &ALL_FORMATS {
-        let Ok(m) = base.convert(fmtc) else {
-            println!("{:<44} infeasible (storage budget)", format!("spmm/{}", fmtc.name()));
-            continue;
-        };
-        let r = bench(&format!("spmm/{}", fmtc.name()), 2, 7, || m.spmm(&x));
-        let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
-        println!("{:<44} {gflops:.2} GFLOP/s", format!("  throughput/{}", fmtc.name()));
+    for &(n, d, density) in &[(1024usize, 16usize, 0.02f64), (4096, 64, 0.01)] {
+        let coo = gen_matrix(&mut rng, n, density, MatrixPattern::PowerLaw);
+        let nnz = coo.nnz();
+        let x = Matrix::rand(n, d, &mut rng);
+        println!(
+            "\nworkload: {n}×{n} power-law matrix, nnz={nnz} ({:.2}%), dense width {d}",
+            coo.density() * 100.0
+        );
+
+        section("SpMM per format: alloc vs workspace (`_into`) vs transpose");
+        let base = SparseMatrix::Coo(coo.clone());
+        for &fmtc in &ALL_FORMATS {
+            let Ok(m) = base.convert(fmtc) else {
+                println!(
+                    "{:<44} infeasible (storage budget)",
+                    format!("spmm/{}/{n}x{d}", fmtc.name())
+                );
+                continue;
+            };
+            let name = fmtc.name();
+            let r = bench(&format!("spmm/{name}/{n}x{d}"), 2, 7, || m.spmm(&x));
+            let mut out = Matrix::zeros(n, d);
+            let r_into =
+                bench(&format!("spmm_into/{name}/{n}x{d}"), 2, 7, || m.spmm_into(&x, &mut out));
+            let mut out_t = Matrix::zeros(n, d);
+            let r_t = bench(&format!("spmm_t_into/{name}/{n}x{d}"), 2, 7, || {
+                m.spmm_t_into(&x, &mut out_t)
+            });
+            let (ac, ab) = count_allocs(|| m.spmm(&x));
+            let (ac_into, ab_into) = count_allocs(|| m.spmm_into(&x, &mut out));
+            let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
+            println!(
+                "{:<44} {gflops:.2} GFLOP/s | allocs/op {ac} ({ab} B) -> into {ac_into} ({ab_into} B)",
+                format!("  throughput/{name}")
+            );
+            records.push(Json::obj(vec![
+                ("format", Json::Str(name.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(d as f64)),
+                ("nnz", Json::Num(nnz as f64)),
+                ("spmm_ns", Json::Num(r.median_s * 1e9)),
+                ("spmm_into_ns", Json::Num(r_into.median_s * 1e9)),
+                ("spmm_t_into_ns", Json::Num(r_t.median_s * 1e9)),
+                ("gflops", Json::Num(gflops)),
+                ("allocs_per_op", Json::Num(ac as f64)),
+                ("alloc_bytes_per_op", Json::Num(ab as f64)),
+                ("allocs_per_op_into", Json::Num(ac_into as f64)),
+                ("alloc_bytes_per_op_into", Json::Num(ab_into as f64)),
+            ]));
+        }
     }
+
+    // Secondary hot paths (printed only; stable enough not to track in JSON).
+    let n = 4096;
+    let coo = gen_matrix(&mut rng, n, 0.01, MatrixPattern::PowerLaw);
+    let base = SparseMatrix::Coo(coo.clone());
 
     section("format conversions (per-layer switch cost)");
     for &fmtc in &[Format::Csr, Format::Csc, Format::Bsr, Format::Lil, Format::Dok] {
@@ -45,6 +132,7 @@ fn main() {
     }
     let csr = base.convert(Format::Csr).unwrap();
     bench("convert/CSR->CSC (direct path)", 1, 5, || csr.convert(Format::Csc).unwrap());
+    bench("transpose/CSR (direct structural path)", 1, 5, || csr.transpose().unwrap());
     bench("convert/to_coo_view (engine decide path)", 1, 5, || csr.to_coo());
 
     section("feature extraction (Table-2, parallel)");
@@ -72,4 +160,19 @@ fn main() {
     bench("coo/from_dense (n x 16, ~50% dense)", 1, 5, || {
         gnn_spmm::sparse::Coo::from_dense(&h1)
     });
+
+    // Machine-readable dump for the perf trajectory.
+    let out_path = std::env::var("GNN_SPMM_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_spmm.json".to_string());
+    let threads = gnn_spmm::util::parallel::num_threads();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_hotpath".to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("unit", Json::Str("ns per op (median); allocation calls/bytes per op".to_string())),
+        ("spmm", Json::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
 }

@@ -42,11 +42,9 @@ pub struct Egc {
     l2: EgcLayer,
     adam: Adam,
     s_x: usize,
-    s_xt: usize,
     s_a1: usize,
     s_a2: usize,
     s_h1: usize,
-    s_h1t: usize,
     cache: Option<Cache>,
 }
 
@@ -99,11 +97,9 @@ impl Egc {
         let n = ds.adj.rows;
         Egc {
             s_x: eng.add_slot("egc.X", ds.features.clone()),
-            s_xt: eng.add_slot("egc.Xt", ds.features.transpose()),
             s_a1: eng.add_slot("egc.A.l1", ds.adj_norm.clone()),
             s_a2: eng.add_slot("egc.A.l2", ds.adj_norm.clone()),
             s_h1: eng.add_slot("egc.H1", Coo::from_triples(n, hidden, vec![])),
-            s_h1t: eng.add_slot("egc.H1t", Coo::from_triples(hidden, n, vec![])),
             l1,
             l2,
             adam,
@@ -136,11 +132,12 @@ impl Egc {
         (s, ps, pre)
     }
 
-    /// Returns (dinput, dws, dw[b], dbias).
+    /// Returns (dinput, dws, dw[b], dbias). All `inputᵀ·…` products run
+    /// transpose-free through `spmm_t` on the forward input slot.
     fn layer_backward(
         layer: &EgcLayer,
         eng: &mut AdjEngine,
-        s_in_t: usize,
+        s_in: usize,
         s_a: usize,
         s: &Matrix,
         ps: &[Matrix],
@@ -161,15 +158,16 @@ impl Egc {
                 *dslogits.at_mut(r, b) = s.at(r, b) * (ds.at(r, b) - dot);
             }
         }
-        let dws = eng.spmm(s_in_t, &dslogits);
+        let dws = eng.spmm_t(s_in, &dslogits);
         let mut dinput = dslogits.matmul_t(&layer.ws);
         let mut dw = Vec::with_capacity(N_BASES);
         for b in 0..N_BASES {
             let sb: Vec<f32> = (0..s.rows).map(|r| s.at(r, b)).collect();
             let dp = scale_rows_by(dpre, &sb);
             let dzw = eng.spmm(s_a, &dp); // Âᵀ = Â
-            dw.push(eng.spmm(s_in_t, &dzw));
+            dw.push(eng.spmm_t(s_in, &dzw));
             dinput = ops::add(&dinput, &dzw.matmul_t(&layer.w[b]));
+            eng.recycle(s_a, dzw);
         }
         (dinput, dws, dw, dbias)
     }
@@ -178,7 +176,6 @@ impl Egc {
         let (s1, p1, pre1) = Self::layer_forward(&self.l1, eng, self.s_x, self.s_a1);
         let h1_dense = ops::relu(&pre1);
         eng.update_slot_dense(self.s_h1, &h1_dense);
-        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
         let (s2, p2, logits) = Self::layer_forward(&self.l2, eng, self.s_h1, self.s_a2);
         self.cache = Some(Cache { s1, p1, pre1, s2, p2 });
         logits
@@ -187,11 +184,11 @@ impl Egc {
     pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
         let cache = self.cache.take().expect("forward before backward");
         let (dh1, dws2, dw2, db2) = Self::layer_backward(
-            &self.l2, eng, self.s_h1t, self.s_a2, &cache.s2, &cache.p2, dlogits,
+            &self.l2, eng, self.s_h1, self.s_a2, &cache.s2, &cache.p2, dlogits,
         );
         let dpre1 = ops::relu_grad(&cache.pre1, &dh1);
         let (_dx, dws1, dw1, db1) = Self::layer_backward(
-            &self.l1, eng, self.s_xt, self.s_a1, &cache.s1, &cache.p1, &dpre1,
+            &self.l1, eng, self.s_x, self.s_a1, &cache.s1, &cache.p1, &dpre1,
         );
         self.adam.tick();
         let mut idx = 0;

@@ -8,6 +8,19 @@
 //! converts, and executes the format-dispatched kernel. All overheads
 //! (feature extraction, model inference, conversion) are charged to the
 //! engine's [`Stopwatch`], reproducing the paper's end-to-end accounting.
+//!
+//! §Perf (see DESIGN.md §SparseOps): steady-state **output** buffers are
+//! allocation-free. Each slot owns a small pool of recycled output buffers —
+//! [`AdjEngine::spmm`]/[`AdjEngine::spmm_t`] pop one, run the
+//! `spmm_into`/`spmm_t_into` kernel, and hand the matrix to the caller, who
+//! returns it with [`AdjEngine::recycle`] once consumed. Backward passes go
+//! through [`AdjEngine::spmm_t`], which executes `Aᵀ·X` on the slot's
+//! existing arrays (CSR↔CSC duality): no duplicate transposed slots, no
+//! per-epoch dense transposes. (Scatter-style kernels — CSC forward,
+//! CSR/COO/BSR/LIL transpose — still allocate thread-private partial buffers
+//! inside `scatter_reduce_into`; pooling those is a ROADMAP item.) The
+//! decision path reads a cached COO view that is invalidated only when the
+//! slot's *content* changes — format conversions keep it.
 
 use crate::sparse::{Coo, Format, SparseMatrix};
 use crate::tensor::Matrix;
@@ -83,12 +96,24 @@ impl FormatPolicy for StaticPolicy {
     }
 }
 
-/// One sparse operand with its cached format decision.
+/// Max recycled output buffers retained per slot. Forward + backward of a
+/// two-layer model keep at most a handful of distinct output shapes alive
+/// per slot; beyond that we let buffers drop rather than hoard memory.
+const SLOT_POOL_CAP: usize = 4;
+
+/// One sparse operand with its cached format decision, recycled output
+/// workspaces and cached decision-path COO view.
 pub struct Slot {
     pub name: String,
     pub matrix: SparseMatrix,
     pub decided: Option<Format>,
     pub density_at_decision: f64,
+    /// Recycled output buffers (raw storage; resized on reuse). Populated
+    /// by [`AdjEngine::recycle`], drained by `spmm`/`spmm_t`.
+    pool: Vec<Vec<f32>>,
+    /// COO view for the policy's decision path, built lazily and kept until
+    /// the slot's *content* changes (conversions don't invalidate it).
+    coo_view: Option<Coo>,
 }
 
 /// A recorded decision event (slot, chosen format, density at decision).
@@ -128,6 +153,8 @@ impl<'p> AdjEngine<'p> {
             matrix: SparseMatrix::Coo(coo),
             decided: None,
             density_at_decision: 0.0,
+            pool: Vec::new(),
+            coo_view: None,
         });
         self.slots.len() - 1
     }
@@ -138,6 +165,7 @@ impl<'p> AdjEngine<'p> {
     pub fn update_slot(&mut self, slot: usize, coo: Coo) {
         let s = &mut self.slots[slot];
         s.matrix = SparseMatrix::Coo(coo);
+        s.coo_view = None;
     }
 
     /// Refresh a slot whose **pattern is unchanged** with new values in
@@ -148,6 +176,7 @@ impl<'p> AdjEngine<'p> {
     /// fall back to a rebuild.
     pub fn update_slot_values(&mut self, slot: usize, pattern: &Coo, vals: &[f32]) {
         debug_assert_eq!(pattern.nnz(), vals.len());
+        self.slots[slot].coo_view = None;
         let replaced = self.sw.phase("sparsify", || {
             match &mut self.slots[slot].matrix {
                 SparseMatrix::Coo(c) if c.val.len() == vals.len() => {
@@ -192,7 +221,7 @@ impl<'p> AdjEngine<'p> {
     /// measured difference is the SpMM kernels — matching the paper's
     /// accounting, where a layer output materializes straight into its
     /// chosen format. Cost is charged to the `sparsify` phase.
-    pub fn update_slot_dense(&mut self, slot: usize, dense: &crate::tensor::Matrix) {
+    pub fn update_slot_dense(&mut self, slot: usize, dense: &Matrix) {
         let target = self.slots[slot].decided;
         let built = self.sw.phase("sparsify", || match target {
             Some(fmt) => SparseMatrix::from_dense(dense, fmt)
@@ -200,6 +229,7 @@ impl<'p> AdjEngine<'p> {
             None => SparseMatrix::Coo(Coo::from_dense(dense)),
         });
         self.slots[slot].matrix = built;
+        self.slots[slot].coo_view = None;
     }
 
     /// Current density of a slot.
@@ -219,14 +249,21 @@ impl<'p> AdjEngine<'p> {
             }
         };
         if need_decision {
-            // The policy inspects a COO view (cost charged by the policy).
-            let coo = self.sw.phase("to_coo_view", || self.slots[slot].matrix.to_coo());
+            // The policy inspects a COO view (cost charged by the policy);
+            // the view is cached across re-decisions until content changes.
+            if self.slots[slot].coo_view.is_none() {
+                let coo =
+                    self.sw.phase("to_coo_view", || self.slots[slot].matrix.to_coo());
+                self.slots[slot].coo_view = Some(coo);
+            }
             let name = self.slots[slot].name.clone();
+            let coo = self.slots[slot].coo_view.take().unwrap();
             let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
+            self.slots[slot].coo_view = Some(coo);
             self.slots[slot].decided = Some(fmt);
             self.slots[slot].density_at_decision = density;
             self.decisions.push(Decision {
-                slot: self.slots[slot].name.clone(),
+                slot: name,
                 format: fmt,
                 density,
             });
@@ -239,17 +276,54 @@ impl<'p> AdjEngine<'p> {
                 // A format that cannot hold this matrix (DIA budget): fall
                 // back to CSR, like a library would.
                 .unwrap_or_else(|_| {
-                    self.slots[slot].matrix.convert(Format::Csr).expect("CSR conversion cannot fail")
+                    self.slots[slot]
+                        .matrix
+                        .convert(Format::Csr)
+                        .expect("CSR conversion cannot fail")
                 });
+            // Conversion preserves content: the cached COO view stays valid.
             self.slots[slot].matrix = converted;
         }
     }
 
-    /// Format-dispatched SpMM on a slot: `slots[slot] · x`.
+    /// Pop a recycled buffer (or allocate) sized for `len` elements.
+    fn take_buf(&mut self, slot: usize, len: usize) -> Vec<f32> {
+        let mut buf = self.slots[slot].pool.pop().unwrap_or_default();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return an output matrix obtained from [`AdjEngine::spmm`] /
+    /// [`AdjEngine::spmm_t`] on `slot` so its buffer backs a later call.
+    /// Purely an optimization — unreturned matrices are simply freed.
+    pub fn recycle(&mut self, slot: usize, m: Matrix) {
+        let pool = &mut self.slots[slot].pool;
+        if pool.len() < SLOT_POOL_CAP {
+            pool.push(m.into_buffer());
+        }
+    }
+
+    /// Format-dispatched SpMM on a slot: `slots[slot] · x`. The output is
+    /// backed by the slot's workspace pool when a recycled buffer exists.
     pub fn spmm(&mut self, slot: usize, x: &Matrix) -> Matrix {
         self.ensure(slot, x.cols);
+        let rows = self.slots[slot].matrix.rows();
+        let mut out = Matrix::from_buffer(rows, x.cols, self.take_buf(slot, rows * x.cols));
         let m = &self.slots[slot].matrix;
-        self.sw.phase("spmm", || m.spmm(x))
+        self.sw.phase("spmm", || m.spmm_into(x, &mut out));
+        out
+    }
+
+    /// Transpose-SpMM on a slot: `slots[slot]ᵀ · x`, executed transpose-free
+    /// on the slot's existing arrays (no transposed copy is ever stored).
+    /// This is the backward-pass entry point for every GNN model.
+    pub fn spmm_t(&mut self, slot: usize, x: &Matrix) -> Matrix {
+        self.ensure(slot, x.cols);
+        let cols = self.slots[slot].matrix.cols();
+        let mut out = Matrix::from_buffer(cols, x.cols, self.take_buf(slot, cols * x.cols));
+        let m = &self.slots[slot].matrix;
+        self.sw.phase("spmm_t", || m.spmm_t_into(x, &mut out));
+        out
     }
 
     /// The format a slot currently uses (after any decision).
@@ -297,6 +371,88 @@ mod tests {
         assert_eq!(engine.slot_format(slot), Some(Format::Csr));
         // Only one decision + one conversion happened.
         assert_eq!(engine.decisions.len(), 1);
+    }
+
+    #[test]
+    fn spmm_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(6);
+        let coo = random_coo(&mut rng, 48, 0.1);
+        let x = Matrix::rand(48, 5, &mut rng);
+        let want = coo.to_dense().transpose().matmul(&x);
+        for fmt in [Format::Coo, Format::Csr, Format::Csc, Format::Bsr, Format::Dok, Format::Lil]
+        {
+            let mut policy = StaticPolicy(fmt);
+            let mut engine = AdjEngine::new(&mut policy);
+            let slot = engine.add_slot("A", coo.clone());
+            let got = engine.spmm_t(slot, &x);
+            assert!(got.max_abs_diff(&want) < 1e-4, "{fmt}");
+            assert!(engine.sw.total("spmm_t") > 0.0);
+        }
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused() {
+        let mut rng = Rng::new(7);
+        let coo = random_coo(&mut rng, 40, 0.1);
+        let x = Matrix::rand(40, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", coo);
+        let y1 = engine.spmm(slot, &x);
+        let want = y1.clone();
+        let ptr = y1.data.as_ptr() as usize;
+        engine.recycle(slot, y1);
+        // Same shape → the recycled allocation backs the next output.
+        let y2 = engine.spmm(slot, &x);
+        assert_eq!(y2.data.as_ptr() as usize, ptr);
+        assert!(y2.max_abs_diff(&want) < 1e-6);
+        // A different width reuses the storage too (resized).
+        let x2 = Matrix::rand(40, 2, &mut rng);
+        engine.recycle(slot, y2);
+        let y3 = engine.spmm(slot, &x2);
+        assert_eq!(y3.shape(), (40, 2));
+    }
+
+    #[test]
+    fn coo_view_cached_across_redecisions() {
+        let mut rng = Rng::new(8);
+        let a = random_coo(&mut rng, 64, 0.1);
+        let x = Matrix::rand(64, 3, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", a.clone());
+        let _ = engine.spmm(slot, &x);
+        let views_after_first = engine.sw.report();
+        let first = views_after_first
+            .iter()
+            .find(|r| r.0 == "to_coo_view")
+            .map(|r| r.2)
+            .unwrap_or(0);
+        assert_eq!(first, 1);
+        // Force a re-decision without changing content: the cached view is
+        // reused, so no second to_coo materialization happens.
+        engine.slots[slot].decided = None;
+        let _ = engine.spmm(slot, &x);
+        let second = engine
+            .sw
+            .report()
+            .iter()
+            .find(|r| r.0 == "to_coo_view")
+            .map(|r| r.2)
+            .unwrap_or(0);
+        assert_eq!(second, 1, "cached COO view should be reused");
+        // Content update invalidates the cache.
+        engine.update_slot(slot, a);
+        engine.slots[slot].decided = None;
+        let _ = engine.spmm(slot, &x);
+        let third = engine
+            .sw
+            .report()
+            .iter()
+            .find(|r| r.0 == "to_coo_view")
+            .map(|r| r.2)
+            .unwrap_or(0);
+        assert_eq!(third, 2, "content update must rebuild the COO view");
     }
 
     #[test]

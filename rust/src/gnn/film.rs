@@ -43,11 +43,9 @@ pub struct Film {
     l2: FilmLayer,
     adam: Adam,
     s_x: usize,
-    s_xt: usize,
     s_a1: usize,
     s_a2: usize,
     s_h1: usize,
-    s_h1t: usize,
     /// ρ: row sums of Â.
     rho: Vec<f32>,
     cache: Option<Cache>,
@@ -98,11 +96,9 @@ impl Film {
         }
         Film {
             s_x: eng.add_slot("film.X", ds.features.clone()),
-            s_xt: eng.add_slot("film.Xt", ds.features.transpose()),
             s_a1: eng.add_slot("film.A.l1", ds.adj_norm.clone()),
             s_a2: eng.add_slot("film.A.l2", ds.adj_norm.clone()),
             s_h1: eng.add_slot("film.H1", Coo::from_triples(n, hidden, vec![])),
-            s_h1t: eng.add_slot("film.H1t", Coo::from_triples(hidden, n, vec![])),
             l1,
             l2,
             adam,
@@ -123,7 +119,6 @@ impl Film {
         );
         let h1_dense = ops::relu(&pre1);
         eng.update_slot_dense(self.s_h1, &h1_dense);
-        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
 
         // Layer 2 (input = sparsified H1).
         let gamma2 = eng.spmm(self.s_h1, &self.l2.g);
@@ -146,9 +141,10 @@ impl Film {
         let dp2 = ops::mul(&cache.gamma2, dlogits);
         let dbeta2 = scale_rows(dlogits, &self.rho);
         let dzw2 = eng.spmm(self.s_a2, &dp2); // Âᵀ = Â
-        let dw2 = eng.spmm(self.s_h1t, &dzw2);
-        let dg2 = eng.spmm(self.s_h1t, &dgamma2);
-        let dbm2 = eng.spmm(self.s_h1t, &dbeta2);
+        // H1ᵀ·… — transpose-free on the H1 slot.
+        let dw2 = eng.spmm_t(self.s_h1, &dzw2);
+        let dg2 = eng.spmm_t(self.s_h1, &dgamma2);
+        let dbm2 = eng.spmm_t(self.s_h1, &dbeta2);
         let dh1 = {
             let a = dzw2.matmul_t(&self.l2.w);
             let b = dgamma2.matmul_t(&self.l2.g);
@@ -163,9 +159,10 @@ impl Film {
         let dp1 = ops::mul(&cache.gamma1, &dpre1);
         let dbeta1 = scale_rows(&dpre1, &self.rho);
         let dzw1 = eng.spmm(self.s_a1, &dp1);
-        let dw1 = eng.spmm(self.s_xt, &dzw1);
-        let dg1 = eng.spmm(self.s_xt, &dgamma1);
-        let dbm1 = eng.spmm(self.s_xt, &dbeta1);
+        // Xᵀ·… — transpose-free on the X slot.
+        let dw1 = eng.spmm_t(self.s_x, &dzw1);
+        let dg1 = eng.spmm_t(self.s_x, &dgamma1);
+        let dbm1 = eng.spmm_t(self.s_x, &dbeta1);
 
         self.adam.tick();
         self.adam.update_matrix(0, &mut self.l1.w, &dw1);

@@ -4,6 +4,10 @@
 //! The attention matrix has the adjacency(+self-loop) pattern but fresh
 //! values every forward pass, so its engine slot is refreshed per epoch —
 //! exercising the runtime's re-conversion path exactly where PyG pays it.
+//! The backward pass reads `A_αᵀ` and `Xᵀ`/`H1ᵀ` through
+//! [`AdjEngine::spmm_t`] on the forward slots — the transposed attention
+//! pattern, its per-epoch value permutation and all duplicate transposed
+//! slots are gone (§Perf).
 
 use super::adam::Adam;
 use super::engine::AdjEngine;
@@ -118,18 +122,10 @@ pub struct Gat {
     l2: GatLayer,
     adam: Adam,
     pattern: Coo,
-    /// Transposed attention pattern + permutation mapping its entry order
-    /// back into `pattern`'s (so per-epoch refreshes are value copies).
-    pattern_t: Coo,
-    t_perm: Vec<usize>,
     s_x: usize,
-    s_xt: usize,
     s_att1: usize,
-    s_att1t: usize,
     s_att2: usize,
-    s_att2t: usize,
     s_h1: usize,
-    s_h1t: usize,
     h1_cache: Option<Matrix>, // pre-activation of layer 1
 }
 
@@ -149,17 +145,6 @@ impl Gat {
             triples.push((i, i, 1.0));
         }
         let pattern = Coo::from_triples(n, n, triples);
-        // Transposed pattern and the entry-order permutation (sort edge ids
-        // by (col, row)) — computed once; every forward only copies values.
-        let mut t_perm: Vec<usize> = (0..pattern.nnz()).collect();
-        t_perm.sort_unstable_by_key(|&e| ((pattern.col[e] as u64) << 32) | pattern.row[e] as u64);
-        let pattern_t = Coo {
-            rows: n,
-            cols: n,
-            row: t_perm.iter().map(|&e| pattern.col[e]).collect(),
-            col: t_perm.iter().map(|&e| pattern.row[e]).collect(),
-            val: vec![1.0; pattern.nnz()],
-        };
         let l1 = GatLayer::new(ds.features.cols, hidden, rng);
         let l2 = GatLayer::new(hidden, ds.n_classes, rng);
         let adam = Adam::new(
@@ -170,19 +155,12 @@ impl Gat {
             lr,
         );
         let empty_h1 = Coo::from_triples(n, hidden, vec![]);
-        let empty_h1t = Coo::from_triples(hidden, n, vec![]);
         Gat {
             s_x: eng.add_slot("gat.X", ds.features.clone()),
-            s_xt: eng.add_slot("gat.Xt", ds.features.transpose()),
             s_att1: eng.add_slot("gat.Att.l1", pattern.clone()),
-            s_att1t: eng.add_slot("gat.Att.l1t", pattern.transpose()),
             s_att2: eng.add_slot("gat.Att.l2", pattern.clone()),
-            s_att2t: eng.add_slot("gat.Att.l2t", pattern.transpose()),
             s_h1: eng.add_slot("gat.H1", empty_h1),
-            s_h1t: eng.add_slot("gat.H1t", empty_h1t),
             pattern,
-            pattern_t,
-            t_perm,
             l1,
             l2,
             adam,
@@ -191,27 +169,23 @@ impl Gat {
     }
 
     /// Shared per-layer forward: projection slot → attention → aggregation.
-    #[allow(clippy::too_many_arguments)]
     fn layer_forward(
         pattern: &Coo,
-        pattern_t: &Coo,
-        t_perm: &[usize],
         layer: &mut GatLayer,
         eng: &mut AdjEngine,
         s_in: usize,
         s_att: usize,
-        s_att_t: usize,
     ) -> Matrix {
         let z = eng.spmm(s_in, &layer.w);
         let u = edge_logits(pattern, &z, &layer.al, &layer.ar);
         let alpha = edge_softmax(pattern, &u);
         // Attention matrix: fixed pattern, fresh α values — value-copy
-        // refresh, no per-epoch re-conversion (§Perf).
+        // refresh, no per-epoch re-conversion (§Perf). The backward pass
+        // reads A_αᵀ from this same slot via `spmm_t`.
         eng.update_slot_values(s_att, pattern, &alpha);
-        let alpha_t: Vec<f32> = t_perm.iter().map(|&e| alpha[e]).collect();
-        eng.update_slot_values(s_att_t, pattern_t, &alpha_t);
         let agg = eng.spmm(s_att, &z);
         let pre = ops::add_row(&agg, &layer.bias);
+        eng.recycle(s_att, agg);
         layer.z = Some(z);
         layer.u = Some(u);
         layer.alpha = Some(alpha);
@@ -226,8 +200,8 @@ impl Gat {
         pattern: &Coo,
         layer: &GatLayer,
         eng: &mut AdjEngine,
-        s_in_t: usize,
-        s_att_t: usize,
+        s_in: usize,
+        s_att: usize,
         dpre: &Matrix,
     ) -> (Matrix, Matrix, Vec<f32>, Vec<f32>, Vec<f32>) {
         let z = layer.z.as_ref().unwrap();
@@ -236,8 +210,9 @@ impl Gat {
         let h = z.cols;
 
         let dbias = ops::col_sums(dpre);
-        // Aggregation path: dz += A_αᵀ · dpre.
-        let mut dz = eng.spmm(s_att_t, dpre);
+        // Aggregation path: dz += A_αᵀ · dpre — transpose-free on the
+        // attention slot.
+        let mut dz = eng.spmm_t(s_att, dpre);
         // Attention path.
         // dα_e = dpre_i · z_j.
         let dalpha: Vec<f32> = crate::util::parallel::parallel_map(pattern.nnz(), |e| {
@@ -270,35 +245,32 @@ impl Gat {
                 *dz.at_mut(j, k) += g * layer.ar[k];
             }
         }
-        // dW = inputᵀ · dz (format-managed).
-        let dw = eng.spmm(s_in_t, &dz);
+        // dW = inputᵀ · dz — transpose-free on the input slot.
+        let dw = eng.spmm_t(s_in, &dz);
         let dinput = dz.matmul_t(&layer.w);
         (dinput, dw, dal, dar, dbias)
     }
 
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
         let pre1 = Self::layer_forward(
-            &self.pattern, &self.pattern_t, &self.t_perm,
-            &mut self.l1, eng, self.s_x, self.s_att1, self.s_att1t,
+            &self.pattern, &mut self.l1, eng, self.s_x, self.s_att1,
         );
         let h1_dense = ops::relu(&pre1);
         eng.update_slot_dense(self.s_h1, &h1_dense);
-        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
         self.h1_cache = Some(pre1);
         Self::layer_forward(
-            &self.pattern, &self.pattern_t, &self.t_perm,
-            &mut self.l2, eng, self.s_h1, self.s_att2, self.s_att2t,
+            &self.pattern, &mut self.l2, eng, self.s_h1, self.s_att2,
         )
     }
 
     pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
         let pre1 = self.h1_cache.take().expect("forward before backward");
         let (dh1, dw2, dal2, dar2, db2) = Self::layer_backward(
-            &self.pattern, &self.l2, eng, self.s_h1t, self.s_att2t, dlogits,
+            &self.pattern, &self.l2, eng, self.s_h1, self.s_att2, dlogits,
         );
         let dpre1 = ops::relu_grad(&pre1, &dh1);
         let (_dx, dw1, dal1, dar1, db1) = Self::layer_backward(
-            &self.pattern, &self.l1, eng, self.s_xt, self.s_att1t, &dpre1,
+            &self.pattern, &self.l1, eng, self.s_x, self.s_att1, &dpre1,
         );
         self.adam.tick();
         self.adam.update_matrix(0, &mut self.l1.w, &dw1);

@@ -5,10 +5,12 @@
 //! logits = Â · (H1 · W1) + b1                H1 sparsified per epoch
 //! ```
 //!
-//! Every sparse product is a format-managed engine slot:
-//! `X`, `Xᵀ` (weight gradients), `Â` per layer (the paper decides per GNN
-//! layer), and the sparsified intermediate `H1`/`H1ᵀ` whose density drifts
-//! over training — the effect driving the paper's Fig. 2/3.
+//! Every sparse product is a format-managed engine slot: `X`, `Â` per layer
+//! (the paper decides per GNN layer), and the sparsified intermediate `H1`
+//! whose density drifts over training — the effect driving the paper's
+//! Fig. 2/3. Weight gradients (`Xᵀ·dZ`, `H1ᵀ·dZ`) run through
+//! [`AdjEngine::spmm_t`] on the *same* slots — no duplicate transposed
+//! slots, no per-epoch dense transposes (§Perf).
 
 use super::adam::Adam;
 use super::engine::AdjEngine;
@@ -25,11 +27,9 @@ pub struct Gcn {
     pub b1: Vec<f32>,
     adam: Adam,
     s_x: usize,
-    s_xt: usize,
     s_a1: usize,
     s_a2: usize,
     s_h1: usize,
-    s_h1t: usize,
     cache: Option<Cache>,
 }
 
@@ -53,14 +53,11 @@ impl Gcn {
         let w1 = Matrix::glorot(hidden, c, rng);
         let adam = Adam::new(&[w0.data.len(), hidden, w1.data.len(), c], lr);
         let empty_h1 = Coo::from_triples(ds.adj.rows, hidden, vec![]);
-        let empty_h1t = Coo::from_triples(hidden, ds.adj.rows, vec![]);
         Gcn {
             s_x: eng.add_slot("gcn.X", ds.features.clone()),
-            s_xt: eng.add_slot("gcn.Xt", ds.features.transpose()),
             s_a1: eng.add_slot("gcn.A.l1", ds.adj_norm.clone()),
             s_a2: eng.add_slot("gcn.A.l2", ds.adj_norm.clone()),
             s_h1: eng.add_slot("gcn.H1", empty_h1),
-            s_h1t: eng.add_slot("gcn.H1t", empty_h1t),
             w0,
             b0: vec![0.0; hidden],
             w1,
@@ -73,15 +70,21 @@ impl Gcn {
     /// Forward pass; returns logits (n × classes).
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
         let z0 = eng.spmm(self.s_x, &self.w0);
-        let s0_pre = ops::add_row(&eng.spmm(self.s_a1, &z0), &self.b0);
+        let a1z0 = eng.spmm(self.s_a1, &z0);
+        eng.recycle(self.s_x, z0);
+        let s0_pre = ops::add_row(&a1z0, &self.b0);
+        eng.recycle(self.s_a1, a1z0);
         let h1_dense = ops::relu(&s0_pre);
         // Store layer-1 output sparse — the paper's Fig-3 decision point.
-        // Sparsified directly into each slot's decided format (§Perf).
+        // Sparsified directly into the slot's decided format (§Perf); the
+        // backward pass reads the same slot transpose-free via `spmm_t`.
         eng.update_slot_dense(self.s_h1, &h1_dense);
-        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
         let h1_density = eng.density(self.s_h1);
         let z1 = eng.spmm(self.s_h1, &self.w1);
-        let logits = ops::add_row(&eng.spmm(self.s_a2, &z1), &self.b1);
+        let a2z1 = eng.spmm(self.s_a2, &z1);
+        eng.recycle(self.s_h1, z1);
+        let logits = ops::add_row(&a2z1, &self.b1);
+        eng.recycle(self.s_a2, a2z1);
         self.cache = Some(Cache { s0_pre, h1_density });
         logits
     }
@@ -92,14 +95,17 @@ impl Gcn {
         let db1 = ops::col_sums(dlogits);
         // dZ1 = Âᵀ·dlogits (Â symmetric).
         let dz1 = eng.spmm(self.s_a2, dlogits);
-        // dW1 = H1ᵀ·dZ1.
-        let dw1 = eng.spmm(self.s_h1t, &dz1);
+        // dW1 = H1ᵀ·dZ1 — transpose-free on the H1 slot.
+        let dw1 = eng.spmm_t(self.s_h1, &dz1);
         // dH1 = dZ1·W1ᵀ, gated by ReLU.
         let dh1 = dz1.matmul_t(&self.w1);
+        eng.recycle(self.s_a2, dz1);
         let ds0 = ops::relu_grad(&cache.s0_pre, &dh1);
         let db0 = ops::col_sums(&ds0);
         let dz0 = eng.spmm(self.s_a1, &ds0);
-        let dw0 = eng.spmm(self.s_xt, &dz0);
+        // dW0 = Xᵀ·dZ0 — transpose-free on the X slot.
+        let dw0 = eng.spmm_t(self.s_x, &dz0);
+        eng.recycle(self.s_a1, dz0);
 
         self.adam.tick();
         self.adam.update_matrix(0, &mut self.w0, &dw0);

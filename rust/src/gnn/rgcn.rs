@@ -7,7 +7,9 @@
 //!
 //! Each relation's adjacency is an independent engine slot per layer (the
 //! paper's per-layer decisions apply per relation matrix). Edge types are
-//! derived by partitioning the dataset's edges into `R` relations.
+//! derived by partitioning the dataset's edges into `R` relations. Weight
+//! gradients (`Xᵀ·…`, `H1ᵀ·…`) run transpose-free through
+//! [`AdjEngine::spmm_t`] on the forward slots (§Perf).
 
 use super::adam::Adam;
 use super::engine::AdjEngine;
@@ -41,18 +43,14 @@ pub struct Rgcn {
     l2: RgcnLayer,
     adam: Adam,
     s_x: usize,
-    s_xt: usize,
     /// `s_rel[layer][relation]`.
     s_rel: [[usize; N_RELATIONS]; 2],
     s_h1: usize,
-    s_h1t: usize,
-    x_dense_cache: Matrix,
     cache: Option<Cache>,
 }
 
 struct Cache {
     pre1: Matrix,
-    h1_dense: Matrix,
 }
 
 /// Partition edges into relation buckets by a deterministic hash.
@@ -107,10 +105,7 @@ impl Rgcn {
         let n = ds.adj.rows;
         Rgcn {
             s_x: eng.add_slot("rgcn.X", ds.features.clone()),
-            s_xt: eng.add_slot("rgcn.Xt", ds.features.transpose()),
             s_h1: eng.add_slot("rgcn.H1", Coo::from_triples(n, hidden, vec![])),
-            s_h1t: eng.add_slot("rgcn.H1t", Coo::from_triples(hidden, n, vec![])),
-            x_dense_cache: ds.features.to_dense(),
             l1,
             l2,
             adam,
@@ -132,9 +127,9 @@ impl Rgcn {
         }
         let self1 = eng.spmm(self.s_x, &self.l1.w_self);
         let pre1 = ops::add_row(&ops::add(&pre1.unwrap(), &self1), &self.l1.bias);
+        eng.recycle(self.s_x, self1);
         let h1_dense = ops::relu(&pre1);
         eng.update_slot_dense(self.s_h1, &h1_dense);
-        eng.update_slot_dense(self.s_h1t, &h1_dense.transpose());
 
         // Layer 2: input H1 (sparse slot).
         let mut pre2: Option<Matrix> = None;
@@ -148,7 +143,8 @@ impl Rgcn {
         }
         let self2 = eng.spmm(self.s_h1, &self.l2.w_self);
         let logits = ops::add_row(&ops::add(&pre2.unwrap(), &self2), &self.l2.bias);
-        self.cache = Some(Cache { pre1, h1_dense });
+        eng.recycle(self.s_h1, self2);
+        self.cache = Some(Cache { pre1 });
         logits
     }
 
@@ -160,11 +156,12 @@ impl Rgcn {
         let mut dw2_rel = Vec::with_capacity(N_RELATIONS);
         for r in 0..N_RELATIONS {
             let da = eng.spmm(self.s_rel[1][r], dlogits); // Â_rᵀ·dlogits (sym)
-            let dw = eng.spmm(self.s_h1t, &da); // H1ᵀ·(Â_r dlogits)
+            let dw = eng.spmm_t(self.s_h1, &da); // H1ᵀ·(Â_r dlogits)
             dh1 = ops::add(&dh1, &da.matmul_t(&self.l2.w_rel[r]));
+            eng.recycle(self.s_rel[1][r], da);
             dw2_rel.push(dw);
         }
-        let dw2_self = eng.spmm(self.s_h1t, dlogits);
+        let dw2_self = eng.spmm_t(self.s_h1, dlogits);
 
         // Through ReLU.
         let dpre1 = ops::relu_grad(&cache.pre1, &dh1);
@@ -172,9 +169,10 @@ impl Rgcn {
         let mut dw1_rel = Vec::with_capacity(N_RELATIONS);
         for r in 0..N_RELATIONS {
             let da = eng.spmm(self.s_rel[0][r], &dpre1);
-            dw1_rel.push(eng.spmm(self.s_xt, &da));
+            dw1_rel.push(eng.spmm_t(self.s_x, &da));
+            eng.recycle(self.s_rel[0][r], da);
         }
-        let dw1_self = eng.spmm(self.s_xt, &dpre1);
+        let dw1_self = eng.spmm_t(self.s_x, &dpre1);
 
         // Adam updates (parameter order matches `new`).
         self.adam.tick();
@@ -194,8 +192,6 @@ impl Rgcn {
         self.adam.update_matrix(idx, &mut self.l2.w_self, &dw2_self);
         idx += 1;
         self.adam.update(idx, &mut self.l2.bias, &db2);
-        let _ = cache.h1_dense;
-        let _ = &self.x_dense_cache;
     }
 }
 

@@ -1,6 +1,11 @@
 //! Unified training loop over the five GNN architectures — the measurement
 //! harness behind every speedup figure in the paper (end-to-end epoch time,
 //! including format decisions, conversions and feature extraction).
+//!
+//! Since the zero-allocation SpMM rework (DESIGN.md §SparseOps), every
+//! model's backward pass runs through [`AdjEngine::spmm_t`]: no model
+//! registers duplicate transposed slots, so the engine phase report shows
+//! `spmm`/`spmm_t` against a workspace-reusing, transpose-free baseline.
 
 use super::egc::Egc;
 use super::engine::{AdjEngine, Decision, FormatPolicy};
@@ -208,6 +213,34 @@ mod tests {
             assert!(report.total_time > 0.0);
             assert!(!report.phases.is_empty());
             assert!(!report.decisions.is_empty());
+        }
+    }
+
+    #[test]
+    fn no_model_registers_transposed_slots() {
+        // The transpose-free backward invariant: every decision the engine
+        // records is for a forward operand — the legacy `…t` slots
+        // (`gcn.Xt`, `gat.Att.l1t`, `rgcn.H1t`, …) must never reappear.
+        let ds = tiny();
+        for kind in ALL_MODELS {
+            let mut policy = StaticPolicy(Format::Csr);
+            let report = train(
+                kind,
+                &ds,
+                &mut policy,
+                &TrainConfig { epochs: 2, hidden: 8, ..Default::default() },
+            );
+            for d in &report.decisions {
+                assert!(
+                    !d.slot.ends_with('t'),
+                    "{}: transposed slot '{}' registered",
+                    kind.name(),
+                    d.slot
+                );
+            }
+            // Backward passes ran through the transpose-free kernel.
+            let spmm_t = report.phases.iter().find(|p| p.0 == "spmm_t");
+            assert!(spmm_t.is_some(), "{}: no spmm_t phase recorded", kind.name());
         }
     }
 

@@ -34,6 +34,9 @@ pub mod graph;
 pub mod gnn;
 pub mod predictor;
 pub mod coordinator;
+/// PJRT bridge — compiled only with `--features pjrt` (needs the image's
+/// `xla` crate; the default offline build stays dependency-free).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod bench;
 

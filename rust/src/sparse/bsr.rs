@@ -6,6 +6,7 @@
 //! `A_blk · X_blk` panels.
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -112,17 +113,18 @@ impl Bsr {
         self.blocks.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row-blocks.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row-blocks,
+    /// into a caller-provided buffer.
     ///
     /// For each stored block, accumulates a dense `block × d` panel:
     /// `Y[brow·b .. brow·b+b] += A_blk · X[bcol·b .. bcol·b+b]`.
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let b = self.block;
         let d = x.cols;
         let n = self.rows;
         let rb = n.div_ceil(b);
-        let mut out = Matrix::zeros(n, d);
+        out.data.fill(0.0);
         // Partition output rows by block so each row-block is owned by one
         // worker chunk: we parallelize over row-block ranges. The output is
         // shared as a raw base address (usize is Sync); disjointness of
@@ -162,7 +164,70 @@ impl Bsr {
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
+    /// workers own row-block spans and scatter each stored block's
+    /// transposed panel (`Y[c] += A[r][c] · X[r]`) into thread-private
+    /// buffers, reduced at the end. No transposed block index is built.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let b = self.block;
+        let d = x.cols;
+        let rb = self.rows.div_ceil(b);
+        scatter_reduce_into(out, rb, |brange, buf| {
+            for brow in brange {
+                let row0 = brow * b;
+                let row1 = (row0 + b).min(self.rows);
+                for s in self.indptr[brow]..self.indptr[brow + 1] {
+                    let bcol = self.indices[s] as usize;
+                    let col0 = bcol * b;
+                    let col1 = (col0 + b).min(self.cols);
+                    let blk = &self.blocks[s * b * b..(s + 1) * b * b];
+                    for (i, r) in (row0..row1).enumerate() {
+                        let x_row = x.row(r);
+                        for (j, c) in (col0..col1).enumerate() {
+                            let v = blk[i * b + j];
+                            if v == 0.0 {
+                                continue;
+                            }
+                            let out_row = &mut buf[c * d..(c + 1) * d];
+                            for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                                *o += v * xv;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+impl SparseOps for Bsr {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Bsr::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Bsr::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Bsr::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Bsr::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Bsr::spmm_t_into(self, x, out)
     }
 }
 

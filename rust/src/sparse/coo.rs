@@ -1,6 +1,7 @@
 //! Coordinate-list (COO) format — the PyTorch/PyG default the paper
 //! baselines against, and our canonical interchange representation.
 
+use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
 use crate::util::parallel::parallel_fill_rows;
 
@@ -103,16 +104,17 @@ impl Coo {
         self.nnz() * 12
     }
 
-    /// SpMM: `self (n×m) · x (m×d) → (n×d)`.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)` into a caller-provided
+    /// buffer.
     ///
     /// Because triples are row-sorted, the output can be partitioned by row
     /// ranges: each thread binary-searches its triple span and streams it.
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let mut out = Matrix::zeros(self.rows, d);
         let (row, col, val) = (&self.row, &self.col, &self.val);
         parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            chunk.fill(0.0);
             // Triple span covering rows in `range`.
             let lo = row.partition_point(|&r| (r as usize) < range.start);
             let hi = row.partition_point(|&r| (r as usize) < range.end);
@@ -127,7 +129,33 @@ impl Coo {
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
+    /// workers own contiguous triple spans and scatter `val·x[row]` into
+    /// output row `col` of thread-private buffers, which are then reduced.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let d = x.cols;
+        let (row, col, val) = (&self.row, &self.col, &self.val);
+        scatter_reduce_into(out, self.nnz(), |span, buf| {
+            for i in span {
+                let c = col[i] as usize;
+                let x_row = x.row(row[i] as usize);
+                let v = val[i];
+                let out_row = &mut buf[c * d..(c + 1) * d];
+                for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                    *o += v * xv;
+                }
+            }
+        });
     }
 
     /// Per-row non-zero counts (used by conversions and feature extraction).
@@ -146,6 +174,27 @@ impl Coo {
             counts[c as usize] += 1;
         }
         counts
+    }
+}
+
+impl SparseOps for Coo {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Coo::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Coo::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        self.clone()
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Coo::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Coo::spmm_t_into(self, x, out)
     }
 }
 

@@ -5,8 +5,9 @@
 //! dominates (paper Fig. 3a).
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::{num_threads, split_ranges};
+use crate::util::parallel::parallel_fill_rows;
 
 /// CSC sparse matrix: `indptr[c]..indptr[c+1]` spans column `c`'s entries in
 /// `indices` (row ids, ascending within a column) and `vals`.
@@ -63,55 +64,126 @@ impl Csc {
         self.nnz() * 8 + (self.cols + 1) * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)` into a caller-provided
+    /// buffer.
     ///
     /// Threads own disjoint **column** spans; each accumulates a private
     /// `n×d` buffer (`y[i] += v * x[c]` for entries `(i, v)` of column `c`),
     /// then the buffers are summed. The extra reduction is CSC's intrinsic
     /// cost for row-major output.
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let n = self.rows;
-        let nt = num_threads().min(self.cols.max(1));
-        let ranges = split_ranges(self.cols, nt);
-        let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .into_iter()
-                .map(|range| {
-                    s.spawn(move || {
-                        let mut buf = vec![0f32; n * d];
-                        for c in range {
-                            let x_row = x.row(c);
-                            for i in self.indptr[c]..self.indptr[c + 1] {
-                                let r = self.indices[i] as usize;
-                                let v = self.vals[i];
-                                let out_row = &mut buf[r * d..(r + 1) * d];
-                                for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
-                                    *o += v * xv;
-                                }
-                            }
-                        }
-                        buf
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let mut out = Matrix::zeros(n, d);
-        // Parallel reduction over output rows.
-        let parts = &partials;
-        let out_data = &mut out.data;
-        crate::util::parallel::parallel_fill_rows(out_data, n, d, |range, chunk| {
-            let lo = range.start * d;
-            let len = chunk.len();
-            for buf in parts {
-                for (o, &v) in chunk.iter_mut().zip(buf[lo..lo + len].iter()) {
-                    *o += v;
+        scatter_reduce_into(out, self.cols, |cols, buf| {
+            for c in cols {
+                let x_row = x.row(c);
+                for i in self.indptr[c]..self.indptr[c + 1] {
+                    let r = self.indices[i] as usize;
+                    let v = self.vals[i];
+                    let out_row = &mut buf[r * d..(r + 1) * d];
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free.
+    ///
+    /// CSR↔CSC duality in the other direction: the CSC arrays of `A` are the
+    /// CSR arrays of `Aᵀ`, so `Aᵀ·X` runs as a CSR-style **gather** — each
+    /// output row `c` sums `vals[i] · x[indices[i]]` over column `c`'s span.
+    /// This is the cheap direction: row-parallel, no reduction needed.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let d = x.cols;
+        parallel_fill_rows(&mut out.data, self.cols, d, |range, chunk| {
+            chunk.fill(0.0);
+            for (cc, c) in range.clone().enumerate() {
+                let out_row = &mut chunk[cc * d..(cc + 1) * d];
+                for i in self.indptr[c]..self.indptr[c + 1] {
+                    let r = self.indices[i] as usize;
+                    let v = self.vals[i];
+                    let x_row = x.row(r);
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Direct CSC→CSR conversion by counting sort over rows (mirror of
+    /// [`super::Csr::to_csc`]; skips the COO hub).
+    pub fn to_csr(&self) -> super::csr::Csr {
+        let mut rowptr = vec![0usize; self.rows + 1];
+        for &r in &self.indices {
+            rowptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = rowptr.clone();
+        for c in 0..self.cols {
+            for i in self.indptr[c]..self.indptr[c + 1] {
+                let r = self.indices[i] as usize;
+                let slot = next[r];
+                indices[slot] = c as u32;
+                vals[slot] = self.vals[i];
+                next[r] += 1;
+            }
+        }
+        super::csr::Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: rowptr,
+            indices,
+            vals,
+        }
+    }
+
+    /// Direct structural transpose: the CSR arrays of `self` (via
+    /// [`Csc::to_csr`]) reinterpreted as the CSC arrays of `selfᵀ`.
+    pub fn transpose(&self) -> Csc {
+        let csr = self.to_csr();
+        Csc {
+            rows: csr.cols,
+            cols: csr.rows,
+            indptr: csr.indptr,
+            indices: csr.indices,
+            vals: csr.vals,
+        }
+    }
+}
+
+impl SparseOps for Csc {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Csc::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Csc::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Csc::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Csc::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Csc::spmm_t_into(self, x, out)
     }
 }
 
@@ -162,6 +234,29 @@ mod tests {
             let want = coo.to_dense().matmul(&x);
             assert!(csc.spmm(&x).max_abs_diff(&want) < 1e-4, "({n},{m},{d})");
         }
+    }
+
+    #[test]
+    fn spmm_t_matches_transposed_dense() {
+        let mut rng = Rng::new(5);
+        for &(n, m, d) in &[(5usize, 7usize, 3usize), (33, 47, 8), (64, 64, 16)] {
+            let coo = random_coo(&mut rng, n, m, 0.15);
+            let csc = Csc::from_coo(&coo);
+            let x = Matrix::rand(n, d, &mut rng);
+            let want = coo.to_dense().transpose().matmul(&x);
+            let mut out = Matrix::full(m, d, 123.0); // stale garbage
+            csc.spmm_t_into(&x, &mut out);
+            assert!(out.max_abs_diff(&want) < 1e-4, "({n},{m},{d})");
+        }
+    }
+
+    #[test]
+    fn to_csr_and_transpose_match_hub() {
+        let mut rng = Rng::new(6);
+        let coo = random_coo(&mut rng, 23, 31, 0.12);
+        let csc = Csc::from_coo(&coo);
+        assert_eq!(csc.to_csr(), super::super::csr::Csr::from_coo(&coo));
+        assert_eq!(csc.transpose().to_coo(), coo.transpose());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! paper's Fig-1 winner for GNN inputs.
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
 use crate::util::parallel::parallel_fill_rows;
 
@@ -90,15 +91,16 @@ impl Csr {
         self.nnz() * 8 + (self.rows + 1) * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row ranges.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row ranges,
+    /// into a caller-provided buffer (the zero-allocation hot path).
     ///
     /// The inner loop accumulates into the output row, streaming `x` rows —
     /// the canonical row-major-friendly kernel (and why CSR usually wins).
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let mut out = Matrix::zeros(self.rows, d);
         parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            chunk.fill(0.0);
             for (rr, r) in range.clone().enumerate() {
                 let out_row = &mut chunk[rr * d..(rr + 1) * d];
                 let span = self.indptr[r]..self.indptr[r + 1];
@@ -111,7 +113,50 @@ impl Csr {
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free.
+    ///
+    /// CSR↔CSC duality: the CSR arrays of `A` *are* the CSC arrays of `Aᵀ`
+    /// (`indptr` spans become column spans), so `Aᵀ·X` executes as a
+    /// CSC-style scatter over the same three arrays with zero conversion.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let d = x.cols;
+        scatter_reduce_into(out, self.rows, |rows, buf| {
+            for r in rows {
+                let x_row = x.row(r);
+                let span = self.indptr[r]..self.indptr[r + 1];
+                for (idx, &c) in self.indices[span.clone()].iter().enumerate() {
+                    let v = self.vals[span.start + idx];
+                    let out_row = &mut buf[c as usize * d..(c as usize + 1) * d];
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Direct structural transpose: counting-sort the entries by column
+    /// (exactly [`Csr::to_csc`]) and reinterpret the CSC arrays of `self` as
+    /// the CSR arrays of `selfᵀ` — no COO hop.
+    pub fn transpose(&self) -> Csr {
+        let csc = self.to_csc();
+        Csr {
+            rows: csc.cols,
+            cols: csc.rows,
+            indptr: csc.indptr,
+            indices: csc.indices,
+            vals: csc.vals,
+        }
     }
 
     /// Direct CSR→CSC conversion by counting sort over columns (faster than
@@ -143,6 +188,27 @@ impl Csr {
             indices,
             vals,
         }
+    }
+}
+
+impl SparseOps for Csr {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Csr::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Csr::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Csr::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Csr::spmm_t_into(self, x, out)
     }
 }
 
@@ -204,6 +270,30 @@ mod tests {
         let direct = csr.to_csc();
         let via_hub = super::super::csc::Csc::from_coo(&coo);
         assert_eq!(direct, via_hub);
+    }
+
+    #[test]
+    fn spmm_t_matches_transposed_dense() {
+        let mut rng = Rng::new(5);
+        for &(n, m, d) in &[(5usize, 7usize, 3usize), (40, 33, 9), (64, 64, 16)] {
+            let coo = random_coo(&mut rng, n, m, 0.15);
+            let csr = Csr::from_coo(&coo);
+            let x = Matrix::rand(n, d, &mut rng);
+            let want = coo.to_dense().transpose().matmul(&x);
+            let mut out = Matrix::full(m, d, 123.0); // stale garbage: must be overwritten
+            csr.spmm_t_into(&x, &mut out);
+            assert!(out.max_abs_diff(&want) < 1e-4, "({n},{m},{d})");
+        }
+    }
+
+    #[test]
+    fn direct_transpose_matches_coo_hub() {
+        let mut rng = Rng::new(6);
+        let coo = random_coo(&mut rng, 21, 34, 0.18);
+        let direct = Csr::from_coo(&coo).transpose();
+        assert_eq!(direct.to_coo(), coo.transpose());
+        assert_eq!(direct.rows, 34);
+        assert_eq!(direct.cols, 21);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! worst-case, exactly how exhaustive profiling would.
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, SparseOps};
 use crate::tensor::Matrix;
 use crate::util::parallel::parallel_fill_rows;
 
@@ -89,15 +90,16 @@ impl Dia {
         self.data.len() * 4 + self.offsets.len() * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over row ranges.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row ranges,
+    /// into a caller-provided buffer.
     ///
     /// Per output row `r`, walks the diagonals: `y[r] += data[k][r] * x[r+off]`.
     /// Contiguous in `data` along rows and in `x` along features.
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let mut out = Matrix::zeros(self.rows, d);
         parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            chunk.fill(0.0);
             for (k, &off) in self.offsets.iter().enumerate() {
                 let base = k * self.rows;
                 for (rr, r) in range.clone().enumerate() {
@@ -117,7 +119,97 @@ impl Dia {
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free
+    /// gather: output row `c` (a column of `self`) reads element `(r, c)`
+    /// from diagonal `off = c - r`, i.e. `r = c - off`, so each diagonal
+    /// contributes `data[k][c - off] · x[c - off]` to row `c`. Row-parallel
+    /// like the forward kernel; no transposed storage is built.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let d = x.cols;
+        parallel_fill_rows(&mut out.data, self.cols, d, |range, chunk| {
+            chunk.fill(0.0);
+            for (k, &off) in self.offsets.iter().enumerate() {
+                let base = k * self.rows;
+                for (cc, c) in range.clone().enumerate() {
+                    let r = c as i64 - off;
+                    if r < 0 || r >= self.rows as i64 {
+                        continue;
+                    }
+                    let v = self.data[base + r as usize];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let x_row = x.row(r as usize);
+                    let out_row = &mut chunk[cc * d..(cc + 1) * d];
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Direct structural transpose: diagonal `off` of `self` is diagonal
+    /// `-off` of `selfᵀ`, so the offsets negate (and reverse, staying
+    /// sorted) and each stored value re-indexes from row `r` to row `c`.
+    /// Fails only if the (cols-indexed) transposed footprint exceeds
+    /// [`DIA_BUDGET`] — possible for very wide matrices.
+    pub fn transpose(&self) -> anyhow::Result<Dia> {
+        let footprint = self.offsets.len().saturating_mul(self.cols);
+        if footprint > DIA_BUDGET {
+            anyhow::bail!(
+                "transposed DIA footprint {} (diags={} × rows={}) exceeds budget {}",
+                footprint,
+                self.offsets.len(),
+                self.cols,
+                DIA_BUDGET
+            );
+        }
+        let n_diags = self.offsets.len();
+        let offsets: Vec<i64> = self.offsets.iter().rev().map(|&o| -o).collect();
+        let mut data = vec![0f32; footprint];
+        for (k, &off) in self.offsets.iter().enumerate() {
+            let k_t = n_diags - 1 - k; // position of `-off` in `offsets`
+            for r in 0..self.rows {
+                let c = r as i64 + off;
+                if c < 0 || c >= self.cols as i64 {
+                    continue;
+                }
+                data[k_t * self.cols + c as usize] = self.data[k * self.rows + r];
+            }
+        }
+        Ok(Dia { rows: self.cols, cols: self.rows, offsets, data })
+    }
+}
+
+impl SparseOps for Dia {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Dia::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Dia::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Dia::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Dia::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Dia::spmm_t_into(self, x, out)
     }
 }
 
@@ -172,6 +264,25 @@ mod tests {
         let x = Matrix::rand(6, 3, &mut rng);
         let want = coo.to_dense().matmul(&x);
         assert!(dia.spmm(&x).max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn spmm_t_and_transpose_match_dense() {
+        let mut rng = Rng::new(7);
+        let coo = random_banded(&mut rng, 40, 5, 0.5);
+        let dia = Dia::from_coo(&coo).unwrap();
+        let x = Matrix::rand(40, 8, &mut rng);
+        let want = coo.to_dense().transpose().matmul(&x);
+        let mut out = Matrix::full(40, 8, 123.0); // stale garbage
+        dia.spmm_t_into(&x, &mut out);
+        assert!(out.max_abs_diff(&want) < 1e-4);
+        // Direct transpose agrees with the COO hub.
+        let t = dia.transpose().unwrap();
+        assert_eq!(t.to_coo(), coo.transpose());
+        // Rectangular case.
+        let rect = Coo::from_triples(3, 6, vec![(0, 4, 1.5), (2, 0, -2.0), (1, 1, 3.0)]);
+        let rd = Dia::from_coo(&rect).unwrap();
+        assert_eq!(rd.transpose().unwrap().to_coo(), rect.transpose());
     }
 
     #[test]

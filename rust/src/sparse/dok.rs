@@ -3,6 +3,7 @@
 //! paper's profiling, reproduced here by iterating the hash table directly.
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, SparseOps};
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -54,15 +55,15 @@ impl Dok {
         self.map.len() * 48
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)` into a caller-provided
+    /// buffer.
     ///
     /// Iterates the hash table in storage order — scattered output access is
     /// DOK's intrinsic SpMM penalty, kept deliberately (matching scipy,
     /// which converts or iterates the dict).
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
-        let d = x.cols;
-        let mut out = Matrix::zeros(self.rows, d);
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
+        out.data.fill(0.0);
         for (&(r, c), &v) in &self.map {
             let x_row = x.row(c as usize);
             let out_row = out.row_mut(r as usize);
@@ -70,7 +71,49 @@ impl Dok {
                 *o += v * xv;
             }
         }
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)`: the same
+    /// storage-order iteration with the roles of key row/col swapped — DOK
+    /// pays the identical scatter penalty in both directions.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        out.data.fill(0.0);
+        for (&(r, c), &v) in &self.map {
+            let x_row = x.row(r as usize);
+            let out_row = out.row_mut(c as usize);
+            for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                *o += v * xv;
+            }
+        }
+    }
+}
+
+impl SparseOps for Dok {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Dok::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Dok::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Dok::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Dok::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Dok::spmm_t_into(self, x, out)
     }
 }
 

@@ -7,60 +7,83 @@
 //! experiment, exactly as the paper does (§4, "Note that we include the
 //! overhead of format conversion and feature extraction in all our
 //! experimental results").
+//!
+//! All per-format method dispatch is **macro-generated** through the
+//! [`SparseOps`] trait object ([`SparseMatrix::ops`]): adding a format means
+//! adding one line to the `sparse_formats!` invocation, not editing eight
+//! hand-written seven-arm `match` blocks.
 
-use super::{Bsr, Coo, Csc, Csr, Dia, Dok, Lil};
+use super::{Bsr, Coo, Csc, Csr, Dia, Dok, Lil, SparseOps};
 use crate::tensor::Matrix;
 
-/// The seven storage formats of paper §2.2.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Format {
-    Coo,
-    Csr,
-    Csc,
-    Dia,
-    Bsr,
-    Dok,
-    Lil,
+/// Generates the [`Format`] enum, the [`SparseMatrix`] wrapper and the
+/// variant↔label↔name plumbing from a single format list.
+macro_rules! sparse_formats {
+    ($($variant:ident($ty:ty) = $name:literal),+ $(,)?) => {
+        /// The seven storage formats of paper §2.2.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub enum Format {
+            $($variant,)+
+        }
+
+        /// Number of candidate formats (derived from the macro list).
+        pub const N_FORMATS: usize = [$(Format::$variant,)+].len();
+
+        /// All candidate formats in a stable order (class-label order for
+        /// the ML models: the label of `ALL_FORMATS[i]` is `i`).
+        pub const ALL_FORMATS: [Format; N_FORMATS] = [$(Format::$variant,)+];
+
+        impl Format {
+            pub fn name(self) -> &'static str {
+                match self {
+                    $(Format::$variant => $name,)+
+                }
+            }
+
+            pub fn from_name(name: &str) -> Option<Format> {
+                match name.to_ascii_uppercase().as_str() {
+                    $($name => Some(Format::$variant),)+
+                    _ => None,
+                }
+            }
+        }
+
+        /// A sparse matrix in one of the seven formats.
+        #[derive(Clone, Debug, PartialEq)]
+        pub enum SparseMatrix {
+            $($variant($ty),)+
+        }
+
+        impl SparseMatrix {
+            /// The storage format of the current variant.
+            pub fn format(&self) -> Format {
+                match self {
+                    $(SparseMatrix::$variant(_) => Format::$variant,)+
+                }
+            }
+
+            /// Uniform kernel surface: every per-format operation reaches
+            /// its implementation through this trait object.
+            pub fn ops(&self) -> &dyn SparseOps {
+                match self {
+                    $(SparseMatrix::$variant(m) => m,)+
+                }
+            }
+        }
+    };
 }
 
-/// All candidate formats in a stable order (class-label order for the ML
-/// models: the label of `ALL_FORMATS[i]` is `i`).
-pub const ALL_FORMATS: [Format; 7] = [
-    Format::Coo,
-    Format::Csr,
-    Format::Csc,
-    Format::Dia,
-    Format::Bsr,
-    Format::Dok,
-    Format::Lil,
-];
+sparse_formats! {
+    Coo(Coo) = "COO",
+    Csr(Csr) = "CSR",
+    Csc(Csc) = "CSC",
+    Dia(Dia) = "DIA",
+    Bsr(Bsr) = "BSR",
+    Dok(Dok) = "DOK",
+    Lil(Lil) = "LIL",
+}
 
 impl Format {
-    pub fn name(self) -> &'static str {
-        match self {
-            Format::Coo => "COO",
-            Format::Csr => "CSR",
-            Format::Csc => "CSC",
-            Format::Dia => "DIA",
-            Format::Bsr => "BSR",
-            Format::Dok => "DOK",
-            Format::Lil => "LIL",
-        }
-    }
-
-    pub fn from_name(name: &str) -> Option<Format> {
-        match name.to_ascii_uppercase().as_str() {
-            "COO" => Some(Format::Coo),
-            "CSR" => Some(Format::Csr),
-            "CSC" => Some(Format::Csc),
-            "DIA" => Some(Format::Dia),
-            "BSR" => Some(Format::Bsr),
-            "DOK" => Some(Format::Dok),
-            "LIL" => Some(Format::Lil),
-            _ => None,
-        }
-    }
-
     /// Class label used by the predictive models.
     pub fn label(self) -> usize {
         ALL_FORMATS.iter().position(|&f| f == self).unwrap()
@@ -75,18 +98,6 @@ impl std::fmt::Display for Format {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
     }
-}
-
-/// A sparse matrix in one of the seven formats.
-#[derive(Clone, Debug, PartialEq)]
-pub enum SparseMatrix {
-    Coo(Coo),
-    Csr(Csr),
-    Csc(Csc),
-    Dia(Dia),
-    Bsr(Bsr),
-    Dok(Dok),
-    Lil(Lil),
 }
 
 impl SparseMatrix {
@@ -108,52 +119,16 @@ impl SparseMatrix {
         }
     }
 
-    pub fn format(&self) -> Format {
-        match self {
-            SparseMatrix::Coo(_) => Format::Coo,
-            SparseMatrix::Csr(_) => Format::Csr,
-            SparseMatrix::Csc(_) => Format::Csc,
-            SparseMatrix::Dia(_) => Format::Dia,
-            SparseMatrix::Bsr(_) => Format::Bsr,
-            SparseMatrix::Dok(_) => Format::Dok,
-            SparseMatrix::Lil(_) => Format::Lil,
-        }
-    }
-
     pub fn rows(&self) -> usize {
-        match self {
-            SparseMatrix::Coo(m) => m.rows,
-            SparseMatrix::Csr(m) => m.rows,
-            SparseMatrix::Csc(m) => m.rows,
-            SparseMatrix::Dia(m) => m.rows,
-            SparseMatrix::Bsr(m) => m.rows,
-            SparseMatrix::Dok(m) => m.rows,
-            SparseMatrix::Lil(m) => m.rows,
-        }
+        self.ops().shape().0
     }
 
     pub fn cols(&self) -> usize {
-        match self {
-            SparseMatrix::Coo(m) => m.cols,
-            SparseMatrix::Csr(m) => m.cols,
-            SparseMatrix::Csc(m) => m.cols,
-            SparseMatrix::Dia(m) => m.cols,
-            SparseMatrix::Bsr(m) => m.cols,
-            SparseMatrix::Dok(m) => m.cols,
-            SparseMatrix::Lil(m) => m.cols,
-        }
+        self.ops().shape().1
     }
 
     pub fn nnz(&self) -> usize {
-        match self {
-            SparseMatrix::Coo(m) => m.nnz(),
-            SparseMatrix::Csr(m) => m.nnz(),
-            SparseMatrix::Csc(m) => m.nnz(),
-            SparseMatrix::Dia(m) => m.nnz(),
-            SparseMatrix::Bsr(m) => m.nnz(),
-            SparseMatrix::Dok(m) => m.nnz(),
-            SparseMatrix::Lil(m) => m.nnz(),
-        }
+        self.ops().nnz()
     }
 
     pub fn density(&self) -> f64 {
@@ -168,40 +143,28 @@ impl SparseMatrix {
     /// Storage footprint under each format's memory model — the `M` term of
     /// the paper's Eq. 1.
     pub fn nbytes(&self) -> usize {
-        match self {
-            SparseMatrix::Coo(m) => m.nbytes(),
-            SparseMatrix::Csr(m) => m.nbytes(),
-            SparseMatrix::Csc(m) => m.nbytes(),
-            SparseMatrix::Dia(m) => m.nbytes(),
-            SparseMatrix::Bsr(m) => m.nbytes(),
-            SparseMatrix::Dok(m) => m.nbytes(),
-            SparseMatrix::Lil(m) => m.nbytes(),
-        }
+        self.ops().nbytes()
     }
 
     /// Convert to COO (identity-clone when already COO).
     pub fn to_coo(&self) -> Coo {
-        match self {
-            SparseMatrix::Coo(m) => m.clone(),
-            SparseMatrix::Csr(m) => m.to_coo(),
-            SparseMatrix::Csc(m) => m.to_coo(),
-            SparseMatrix::Dia(m) => m.to_coo(),
-            SparseMatrix::Bsr(m) => m.to_coo(),
-            SparseMatrix::Dok(m) => m.to_coo(),
-            SparseMatrix::Lil(m) => m.to_coo(),
-        }
+        self.ops().to_coo()
     }
 
     /// Convert to `fmt`. Errors if the target cannot represent the matrix
     /// within budget (DIA on scattered patterns).
     ///
-    /// Fast paths: no-op when already in `fmt`; direct CSR→CSC counting sort.
+    /// Fast paths: no-op when already in `fmt`; direct CSR↔CSC counting
+    /// sorts in both directions.
     pub fn convert(&self, fmt: Format) -> anyhow::Result<SparseMatrix> {
         if self.format() == fmt {
             return Ok(self.clone());
         }
         if let (SparseMatrix::Csr(csr), Format::Csc) = (self, fmt) {
             return Ok(SparseMatrix::Csc(csr.to_csc()));
+        }
+        if let (SparseMatrix::Csc(csc), Format::Csr) = (self, fmt) {
+            return Ok(SparseMatrix::Csr(csc.to_csr()));
         }
         let coo = self.to_coo();
         Ok(match fmt {
@@ -218,20 +181,40 @@ impl SparseMatrix {
     /// The format-dispatched SpMM kernel — the operation whose cost the
     /// whole paper is about.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
-        match self {
-            SparseMatrix::Coo(m) => m.spmm(x),
-            SparseMatrix::Csr(m) => m.spmm(x),
-            SparseMatrix::Csc(m) => m.spmm(x),
-            SparseMatrix::Dia(m) => m.spmm(x),
-            SparseMatrix::Bsr(m) => m.spmm(x),
-            SparseMatrix::Dok(m) => m.spmm(x),
-            SparseMatrix::Lil(m) => m.spmm(x),
-        }
+        self.ops().spmm(x)
     }
 
-    /// Transpose (via COO), preserving the current format.
+    /// SpMM into a caller-provided output buffer (`rows × x.cols`,
+    /// overwritten completely) — the zero-allocation hot path.
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.ops().spmm_into(x, out)
+    }
+
+    /// Transpose-SpMM `selfᵀ · x` — executed transpose-free on the current
+    /// format's own arrays (CSR↔CSC duality and friends; see `sparse::ops`).
+    pub fn spmm_t(&self, x: &Matrix) -> Matrix {
+        self.ops().spmm_t(x)
+    }
+
+    /// Transpose-SpMM into a caller-provided buffer (`cols × x.cols`).
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.ops().spmm_t_into(x, out)
+    }
+
+    /// Transpose, preserving the current format.
+    ///
+    /// Direct structural paths for COO/CSR/CSC/DIA (no interchange hop);
+    /// the remaining formats fall back to the COO hub + `convert`.
     pub fn transpose(&self) -> anyhow::Result<SparseMatrix> {
-        SparseMatrix::Coo(self.to_coo().transpose()).convert(self.format())
+        Ok(match self {
+            SparseMatrix::Coo(m) => SparseMatrix::Coo(m.transpose()),
+            SparseMatrix::Csr(m) => SparseMatrix::Csr(m.transpose()),
+            SparseMatrix::Csc(m) => SparseMatrix::Csc(m.transpose()),
+            SparseMatrix::Dia(m) => SparseMatrix::Dia(m.transpose()?),
+            other => {
+                SparseMatrix::Coo(other.to_coo().transpose()).convert(other.format())?
+            }
+        })
     }
 
     pub fn to_dense(&self) -> Matrix {
@@ -318,6 +301,79 @@ mod tests {
         );
     }
 
+    /// `spmm` / `spmm_into` / `spmm_t` / `spmm_t_into` all agree with the
+    /// dense reference for every format, and the `_into` kernels fully
+    /// overwrite stale output buffers (the workspace-reuse contract).
+    #[test]
+    fn prop_spmm_into_and_spmm_t_into_agree_with_dense() {
+        check(
+            25,
+            |rng| {
+                let coo = random_coo(rng, 28);
+                let d = 1 + rng.gen_range(10);
+                let x = Matrix::rand(coo.cols, d, rng);
+                let xt = Matrix::rand(coo.rows, d, rng);
+                (coo, x, xt)
+            },
+            |(coo, x, xt)| -> PropResult {
+                let dense = coo.to_dense();
+                let want = dense.matmul(x);
+                let want_t = dense.transpose().matmul(xt);
+                let base = SparseMatrix::Coo(coo.clone());
+                for &fmt in &ALL_FORMATS {
+                    let m = match base.convert(fmt) {
+                        Ok(m) => m,
+                        Err(_) => continue,
+                    };
+                    // Stale garbage in the buffers: kernels must overwrite.
+                    let mut out = Matrix::full(coo.rows, x.cols, 123.0);
+                    m.spmm_into(x, &mut out);
+                    prop_close(&out.data, &want.data, 1e-4, fmt.name())?;
+                    prop_close(&m.spmm(x).data, &want.data, 1e-4, fmt.name())?;
+                    let mut out_t = Matrix::full(coo.cols, xt.cols, -321.0);
+                    m.spmm_t_into(xt, &mut out_t);
+                    prop_close(&out_t.data, &want_t.data, 1e-4, fmt.name())?;
+                    prop_close(&m.spmm_t(xt).data, &want_t.data, 1e-4, fmt.name())?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Degenerate shapes (0-row, 0-col, 0×0, empty-nnz) flow through every
+    /// conversion, both SpMM kernel directions and transpose without panics.
+    #[test]
+    fn degenerate_shapes_through_every_kernel_and_conversion() {
+        for &(rows, cols) in &[(0usize, 5usize), (5, 0), (0, 0), (4, 7)] {
+            let coo = Coo::from_triples(rows, cols, vec![]);
+            let base = SparseMatrix::Coo(coo);
+            let d = 3;
+            for &fmt in &ALL_FORMATS {
+                let m = base.convert(fmt).unwrap_or_else(|e| {
+                    panic!("{fmt} conversion failed on {rows}x{cols}: {e}")
+                });
+                assert_eq!(m.nnz(), 0, "{fmt}");
+                assert_eq!((m.rows(), m.cols()), (rows, cols), "{fmt}");
+                assert_eq!(m.to_coo().nnz(), 0, "{fmt}");
+
+                let x = Matrix::full(cols, d, 1.0);
+                let mut out = Matrix::full(rows, d, 9.0);
+                m.spmm_into(&x, &mut out);
+                assert_eq!(out.data, vec![0.0; rows * d], "{fmt} spmm_into");
+                assert_eq!(m.spmm(&x).data, vec![0.0; rows * d], "{fmt} spmm");
+
+                let xt = Matrix::full(rows, d, 1.0);
+                let mut out_t = Matrix::full(cols, d, 9.0);
+                m.spmm_t_into(&xt, &mut out_t);
+                assert_eq!(out_t.data, vec![0.0; cols * d], "{fmt} spmm_t_into");
+
+                let t = m.transpose().unwrap();
+                assert_eq!((t.rows(), t.cols()), (cols, rows), "{fmt} transpose");
+                assert_eq!(t.format(), fmt, "{fmt} transpose preserves format");
+            }
+        }
+    }
+
     #[test]
     fn prop_transpose_involution() {
         check(
@@ -327,6 +383,40 @@ mod tests {
                 let m = SparseMatrix::Coo(coo.clone());
                 let tt = m.transpose().unwrap().transpose().unwrap();
                 prop_assert(tt.to_coo() == *coo, "transpose twice = identity")
+            },
+        );
+    }
+
+    /// The direct structural transpose paths (CSR/CSC/DIA) match the COO
+    /// hub, preserve the format, and `Aᵀ·x == spmm_t(A, x)`.
+    #[test]
+    fn prop_direct_transpose_paths_match_hub() {
+        check(
+            25,
+            |rng| {
+                let coo = random_coo(rng, 30);
+                let x = Matrix::rand(coo.rows, 4, rng);
+                (coo, x)
+            },
+            |(coo, x)| -> PropResult {
+                let base = SparseMatrix::Coo(coo.clone());
+                let want_t = coo.transpose();
+                for &fmt in &ALL_FORMATS {
+                    let m = match base.convert(fmt) {
+                        Ok(m) => m,
+                        Err(_) => continue,
+                    };
+                    let t = m.transpose().map_err(|e| e.to_string())?;
+                    prop_assert(t.format() == fmt, "transpose keeps format")?;
+                    prop_assert(t.to_coo() == want_t, "transpose content")?;
+                    prop_close(
+                        &t.spmm(x).data,
+                        &m.spmm_t(x).data,
+                        1e-4,
+                        "Aᵀ·x == spmm_t(A, x)",
+                    )?;
+                }
+                Ok(())
             },
         );
     }
@@ -362,5 +452,16 @@ mod tests {
         let m = SparseMatrix::Coo(coo);
         let same = m.convert(Format::Coo).unwrap();
         assert_eq!(m, same);
+    }
+
+    #[test]
+    fn direct_csc_csr_conversions_match_hub() {
+        let mut rng = Rng::new(8);
+        let coo = random_coo(&mut rng, 35);
+        let csr = SparseMatrix::Coo(coo.clone()).convert(Format::Csr).unwrap();
+        let csc = csr.convert(Format::Csc).unwrap(); // direct path
+        assert_eq!(csc.to_coo(), coo);
+        let back = csc.convert(Format::Csr).unwrap(); // direct path
+        assert_eq!(back, csr);
     }
 }

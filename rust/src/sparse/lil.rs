@@ -3,6 +3,7 @@
 //! cost is modeled in the memory footprint.
 
 use super::coo::Coo;
+use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
 use crate::util::parallel::parallel_fill_rows;
 
@@ -78,12 +79,13 @@ impl Lil {
         self.nnz() * 16 + self.rows * 24
     }
 
-    /// SpMM `self (n×m) · x (m×d) → (n×d)`, parallel over rows.
-    pub fn spmm(&self, x: &Matrix) -> Matrix {
-        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over rows, into a
+    /// caller-provided buffer.
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let mut out = Matrix::zeros(self.rows, d);
         parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+            chunk.fill(0.0);
             for (rr, r) in range.clone().enumerate() {
                 let out_row = &mut chunk[rr * d..(rr + 1) * d];
                 for &(c, v) in &self.rows_data[r] {
@@ -94,7 +96,53 @@ impl Lil {
                 }
             }
         });
+    }
+
+    /// Allocating SpMM wrapper.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut out);
         out
+    }
+
+    /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
+    /// workers own row spans and scatter each row list's `v·x[r]` into
+    /// output row `c` of thread-private buffers, reduced at the end.
+    pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        check_into_shapes(self.cols, self.rows, x, out);
+        let d = x.cols;
+        scatter_reduce_into(out, self.rows, |rows, buf| {
+            for r in rows {
+                let x_row = x.row(r);
+                for &(c, v) in &self.rows_data[r] {
+                    let out_row = &mut buf[c as usize * d..(c as usize + 1) * d];
+                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+    }
+}
+
+impl SparseOps for Lil {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        Lil::nnz(self)
+    }
+    fn nbytes(&self) -> usize {
+        Lil::nbytes(self)
+    }
+    fn to_coo(&self) -> Coo {
+        Lil::to_coo(self)
+    }
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        Lil::spmm_into(self, x, out)
+    }
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        Lil::spmm_t_into(self, x, out)
     }
 }
 

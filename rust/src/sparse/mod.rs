@@ -1,6 +1,8 @@
 //! Sparse-matrix substrate: the seven storage formats the paper studies
 //! (§2.2 — COO, CSR, CSC, DIA, BSR, DOK, LIL), conversions between them, and
-//! a parallel SpMM kernel (`sparse · dense → dense`) per format.
+//! parallel SpMM kernels (`sparse · dense → dense`, both `A·X` and the
+//! transpose-free `Aᵀ·X`) per format, unified behind the [`ops::SparseOps`]
+//! trait with output-buffer-taking `*_into` variants (DESIGN.md §SparseOps).
 //!
 //! Design notes:
 //! * [`coo::Coo`] is the canonical interchange carrier: sorted row-major
@@ -13,6 +15,7 @@
 //!   labeler treats that as "worst case", which matches how the paper's
 //!   exhaustive profiling would score them.
 
+pub mod ops;
 pub mod coo;
 pub mod csr;
 pub mod csc;
@@ -30,3 +33,4 @@ pub use bsr::Bsr;
 pub use dok::Dok;
 pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
+pub use ops::SparseOps;

@@ -1,0 +1,152 @@
+//! The [`SparseOps`] trait: the uniform kernel surface every storage format
+//! implements, built around **output-buffer-taking** SpMM kernels so the
+//! steady-state training path allocates nothing per multiply.
+//!
+//! Two kernels per format:
+//!
+//! * [`SparseOps::spmm_into`] — `out = A · X`, overwriting `out` completely.
+//! * [`SparseOps::spmm_t_into`] — `out = Aᵀ · X`, **transpose-free**: no
+//!   transposed copy of `A` is ever materialized. CSR↔CSC duality makes this
+//!   cheap — CSRᵀ·X runs as a CSC-style scatter over the same three arrays,
+//!   and CSCᵀ·X runs as a CSR-style gather. The remaining formats scatter
+//!   through thread-private buffers ([`scatter_reduce_into`]) or gather
+//!   directly (DIA).
+//!
+//! The allocating [`SparseOps::spmm`]/[`SparseOps::spmm_t`] wrappers are
+//! provided for callers that don't hold a workspace (benches, one-shot
+//! predictions); the GNN engine routes everything through the `_into`
+//! entry points with per-slot recycled buffers (see `gnn::engine`).
+
+use super::coo::Coo;
+use crate::tensor::Matrix;
+use crate::util::parallel::{num_threads, parallel_fill_rows, split_ranges};
+
+/// Format-agnostic sparse-matrix operations (object-safe; `SparseMatrix`
+/// dispatches through `&dyn SparseOps`).
+pub trait SparseOps {
+    /// `(rows, cols)` of the logical matrix.
+    fn shape(&self) -> (usize, usize);
+
+    /// Number of stored non-zeros.
+    fn nnz(&self) -> usize;
+
+    /// Storage footprint under the format's memory model (paper Eq. 1).
+    fn nbytes(&self) -> usize;
+
+    /// Convert to the canonical COO interchange form.
+    fn to_coo(&self) -> Coo;
+
+    /// `out = self · x`; `out` must be `rows × x.cols` and is overwritten
+    /// completely (no zeroing required from the caller).
+    fn spmm_into(&self, x: &Matrix, out: &mut Matrix);
+
+    /// `out = selfᵀ · x`; `out` must be `cols × x.cols` and is overwritten
+    /// completely. Executed transpose-free on the format's own arrays.
+    fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix);
+
+    /// Allocating convenience wrapper over [`SparseOps::spmm_into`].
+    fn spmm(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.shape().0, x.cols);
+        self.spmm_into(x, &mut out);
+        out
+    }
+
+    /// Allocating convenience wrapper over [`SparseOps::spmm_t_into`].
+    fn spmm_t(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.shape().1, x.cols);
+        self.spmm_t_into(x, &mut out);
+        out
+    }
+}
+
+/// Shape guard shared by every `_into` kernel.
+#[inline]
+pub(crate) fn check_into_shapes(
+    a_rows: usize,
+    a_cols: usize,
+    x: &Matrix,
+    out: &Matrix,
+) {
+    assert_eq!(a_cols, x.rows, "spmm shape mismatch");
+    assert_eq!(
+        (out.rows, out.cols),
+        (a_rows, x.cols),
+        "spmm output buffer shape mismatch"
+    );
+}
+
+/// Shared scatter-style kernel: overwrites `out` with the sum of per-worker
+/// contributions. Each worker owns a contiguous span of `n_src` source units
+/// (columns, rows, row-blocks or raw triples — whatever the format scatters
+/// from), accumulates into a thread-private `out.rows × out.cols` buffer via
+/// `scatter(span, buf)`, and the buffers are reduced in parallel over output
+/// rows. Single-threaded (or single-unit) cases scatter straight into `out`.
+pub(crate) fn scatter_reduce_into<F>(out: &mut Matrix, n_src: usize, scatter: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let n = out.rows;
+    let d = out.cols;
+    let nt = num_threads().min(n_src.max(1));
+    if nt <= 1 {
+        out.data.fill(0.0);
+        if n_src > 0 {
+            scatter(0..n_src, &mut out.data);
+        }
+        return;
+    }
+    let ranges = split_ranges(n_src, nt);
+    let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|range| {
+                let scatter = &scatter;
+                s.spawn(move || {
+                    let mut buf = vec![0f32; n * d];
+                    scatter(range, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let parts = &partials;
+    parallel_fill_rows(&mut out.data, n, d, |range, chunk| {
+        chunk.fill(0.0);
+        let lo = range.start * d;
+        let len = chunk.len();
+        for buf in parts {
+            for (o, &v) in chunk.iter_mut().zip(buf[lo..lo + len].iter()) {
+                *o += v;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_reduce_overwrites_stale_output() {
+        // Pre-fill with garbage; the reduction must fully overwrite it.
+        let mut out = Matrix::full(8, 3, 99.0);
+        scatter_reduce_into(&mut out, 16, |span, buf| {
+            for i in span {
+                buf[(i % 8) * 3] += 1.0;
+            }
+        });
+        for r in 0..8 {
+            assert_eq!(out.at(r, 0), 2.0);
+            assert_eq!(out.at(r, 1), 0.0);
+            assert_eq!(out.at(r, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn scatter_reduce_handles_empty_source() {
+        let mut out = Matrix::full(4, 2, 7.0);
+        scatter_reduce_into(&mut out, 0, |_span, _buf| unreachable!());
+        assert_eq!(out.data, vec![0.0; 8]);
+    }
+}

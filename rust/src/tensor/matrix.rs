@@ -28,6 +28,21 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Re-wrap a recycled buffer as a `rows × cols` matrix **without
+    /// zeroing**: the buffer is resized to fit and may still hold stale
+    /// values, so this is only for callers that overwrite the contents
+    /// completely (the `spmm_into` kernels do). This is the allocation-free
+    /// path behind the GNN engine's workspace pool.
+    pub fn from_buffer(rows: usize, cols: usize, mut data: Vec<f32>) -> Matrix {
+        data.resize(rows * cols, 0.0);
+        Matrix { rows, cols, data }
+    }
+
+    /// Consume the matrix, returning its backing buffer (for recycling).
+    pub fn into_buffer(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Identity matrix.
     pub fn eye(n: usize) -> Matrix {
         let mut m = Matrix::zeros(n, n);
@@ -245,6 +260,21 @@ mod tests {
         let i = Matrix::eye(8);
         assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
         assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn from_buffer_reuses_allocation() {
+        let m = Matrix::full(4, 3, 7.0);
+        let buf = m.into_buffer();
+        let ptr = buf.as_ptr();
+        // Shrinking reuse keeps the allocation (and may keep stale values).
+        let m2 = Matrix::from_buffer(2, 3, buf);
+        assert_eq!(m2.shape(), (2, 3));
+        assert_eq!(m2.data.as_ptr(), ptr);
+        // Growing reuse zero-fills the new tail.
+        let m3 = Matrix::from_buffer(5, 3, m2.into_buffer());
+        assert_eq!(m3.data.len(), 15);
+        assert!(m3.data[6..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Integration: the PJRT runtime loads the JAX/Pallas AOT artifacts and the
 //! numerics match the native rust implementations. Skipped (with a message)
 //! when `artifacts/` hasn't been built — run `make artifacts` first.
+//! Compiled only with `--features pjrt` (the `runtime` module is gated).
+#![cfg(feature = "pjrt")]
 
 use gnn_spmm::runtime::{default_artifacts_dir, PjrtEngine};
 use gnn_spmm::sparse::{Bsr, Coo};

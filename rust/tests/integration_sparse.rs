@@ -79,6 +79,53 @@ fn transpose_roundtrip_spmm_consistency() {
 }
 
 #[test]
+fn spmm_t_agrees_across_formats_at_dataset_scale() {
+    // The gradient-path kernel: Aᵀ·X via spmm_t on each format's own arrays
+    // must match the materialized transpose across the whole format set.
+    let mut rng = Rng::new(6);
+    let coo = gen_matrix(&mut rng, 500, 0.03, MatrixPattern::PowerLaw);
+    let x = Matrix::rand(500, 16, &mut rng);
+    let base = SparseMatrix::Coo(coo.clone());
+    let want = SparseMatrix::Coo(coo.transpose()).spmm(&x);
+    for &fmt in &ALL_FORMATS {
+        let Ok(m) = base.convert(fmt) else { continue };
+        let got = m.spmm_t(&x);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "{fmt}: spmm_t diff {diff}");
+    }
+}
+
+#[test]
+fn spmm_into_reuses_buffer_without_residue() {
+    // Run two different matrices through the same output buffer; the second
+    // result must show no residue from the first (the workspace contract).
+    let mut rng = Rng::new(7);
+    let a = gen_matrix(&mut rng, 300, 0.05, MatrixPattern::Uniform);
+    let b = gen_matrix(&mut rng, 300, 0.01, MatrixPattern::PowerLaw);
+    let x = Matrix::rand(300, 8, &mut rng);
+    let ma = SparseMatrix::Coo(a).convert(Format::Csr).unwrap();
+    let mb = SparseMatrix::Coo(b).convert(Format::Csr).unwrap();
+    let mut out = Matrix::zeros(300, 8);
+    ma.spmm_into(&x, &mut out);
+    mb.spmm_into(&x, &mut out);
+    assert!(out.max_abs_diff(&mb.spmm(&x)) < 1e-5, "stale residue in reused buffer");
+}
+
+#[test]
+fn direct_transpose_paths_match_coo_hub() {
+    let mut rng = Rng::new(8);
+    let coo = gen_matrix(&mut rng, 200, 0.04, MatrixPattern::Block);
+    let want = coo.transpose();
+    let base = SparseMatrix::Coo(coo);
+    for &fmt in &[Format::Csr, Format::Csc, Format::Dia, Format::Coo] {
+        let Ok(m) = base.convert(fmt) else { continue };
+        let t = m.transpose().unwrap();
+        assert_eq!(t.format(), fmt, "{fmt}: transpose must preserve format");
+        assert_eq!(t.to_coo(), want, "{fmt}: transpose content");
+    }
+}
+
+#[test]
 fn memory_model_tracks_nnz() {
     let mut rng = Rng::new(5);
     let sparse = gen_matrix(&mut rng, 256, 0.01, MatrixPattern::Uniform);
