@@ -14,4 +14,11 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+# Run the suite again with the pool pinned to one thread so the serial
+# fallback paths (no lease, direct scatter into the output) stay covered.
+# (The pool resolves GNN_SPMM_THREADS once per process, so this needs a
+# separate run, not a separate test.)
+echo "== tier-1 again with GNN_SPMM_THREADS=1 (serial fallback paths) =="
+GNN_SPMM_THREADS=1 cargo test -q
+
 echo "CI OK"

@@ -3,16 +3,25 @@
 //! directions), format conversions, feature extraction and the dense GEMM.
 //! Used by the optimization pass in EXPERIMENTS.md §Perf.
 //!
+//! Workloads cover **uniform and skewed (power-law)** non-zero placements:
+//! the power-law inputs are where nnz-balanced scheduling (see
+//! `util::parallel::indptr_span`) earns its keep — a count-based row split
+//! hands one worker all the hub rows.
+//!
 //! Besides the human-readable table, emits a machine-readable
-//! `BENCH_spmm.json` (ns/op and allocation counts per format × size) so
-//! subsequent PRs have a perf trajectory to compare against. Output path
+//! `BENCH_spmm.json` (ns/op and allocation counts per format × pattern ×
+//! size) so subsequent PRs have a perf trajectory to compare against. If a
+//! previous `BENCH_spmm.json` exists at the output path it is loaded first
+//! and every record gains `prev_*_ns` + `speedup_*` fields (old/new) — the
+//! before/after comparison is recorded in the file itself. Output path
 //! overridable via `GNN_SPMM_BENCH_OUT`.
 //!
-//! Allocation counts come from a counting global allocator; note that the
-//! multi-threaded kernels pay a few allocations per call for thread spawns
-//! and (scatter kernels) private buffers — run with `GNN_SPMM_THREADS=1` to
-//! see the pure kernel numbers, where `spmm_into` on CSR/DIA/LIL is
-//! allocation-free.
+//! Allocation counts come from a counting global allocator. With the
+//! persistent worker pool, the `_into` kernels are allocation-free in
+//! steady state for the compressed formats (CSR/CSC/COO/BSR/DIA) — the pool
+//! dispatches on parked workers and scatter kernels reuse grow-only scratch
+//! — so `allocs_per_op_into` should read 0 after warmup; LIL pays one small
+//! range-list allocation per call (no `indptr` to binary-search).
 
 use gnn_spmm::bench::{bench, section};
 use gnn_spmm::features::extract_features;
@@ -22,6 +31,7 @@ use gnn_spmm::tensor::Matrix;
 use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Counting allocator: tracks calls and bytes so the JSON can report the
@@ -63,59 +73,127 @@ fn count_allocs<T>(mut f: impl FnMut() -> T) -> (u64, u64) {
     )
 }
 
+/// (format, pattern, n, d) → (spmm_into_ns, spmm_t_into_ns) from a previous
+/// run's JSON, if one exists at `path`. Records predating the `pattern`
+/// field (PR-1 baseline) are treated as power-law — that is what the old
+/// bench generated.
+fn load_baseline(path: &str) -> HashMap<(String, String, u64, u64), (f64, f64)> {
+    let mut map = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return map;
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        return map;
+    };
+    let Some(arr) = doc.get("spmm").and_then(|v| v.as_arr()) else {
+        return map;
+    };
+    for rec in arr {
+        let fmt = rec.get("format").and_then(|v| v.as_str()).unwrap_or("");
+        let pattern = rec.get("pattern").and_then(|v| v.as_str()).unwrap_or("powerlaw");
+        let n = rec.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let d = rec.get("d").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let into_ns = rec.get("spmm_into_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let t_ns = rec.get("spmm_t_into_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        map.insert((fmt.to_string(), pattern.to_string(), n, d), (into_ns, t_ns));
+    }
+    map
+}
+
 fn main() {
     let mut rng = Rng::new(0x9E7F);
     let mut records: Vec<Json> = Vec::new();
 
-    for &(n, d, density) in &[(1024usize, 16usize, 0.02f64), (4096, 64, 0.01)] {
-        let coo = gen_matrix(&mut rng, n, density, MatrixPattern::PowerLaw);
-        let nnz = coo.nnz();
-        let x = Matrix::rand(n, d, &mut rng);
-        println!(
-            "\nworkload: {n}×{n} power-law matrix, nnz={nnz} ({:.2}%), dense width {d}",
-            coo.density() * 100.0
-        );
+    let out_path = std::env::var("GNN_SPMM_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_spmm.json".to_string());
+    let baseline = load_baseline(&out_path);
+    if !baseline.is_empty() {
+        println!("loaded {} baseline records from {out_path}", baseline.len());
+    }
 
-        section("SpMM per format: alloc vs workspace (`_into`) vs transpose");
-        let base = SparseMatrix::Coo(coo.clone());
-        for &fmtc in &ALL_FORMATS {
-            let Ok(m) = base.convert(fmtc) else {
-                println!(
-                    "{:<44} infeasible (storage budget)",
-                    format!("spmm/{}/{n}x{d}", fmtc.name())
-                );
-                continue;
-            };
-            let name = fmtc.name();
-            let r = bench(&format!("spmm/{name}/{n}x{d}"), 2, 7, || m.spmm(&x));
-            let mut out = Matrix::zeros(n, d);
-            let r_into =
-                bench(&format!("spmm_into/{name}/{n}x{d}"), 2, 7, || m.spmm_into(&x, &mut out));
-            let mut out_t = Matrix::zeros(n, d);
-            let r_t = bench(&format!("spmm_t_into/{name}/{n}x{d}"), 2, 7, || {
-                m.spmm_t_into(&x, &mut out_t)
-            });
-            let (ac, ab) = count_allocs(|| m.spmm(&x));
-            let (ac_into, ab_into) = count_allocs(|| m.spmm_into(&x, &mut out));
-            let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
+    let patterns = [
+        (MatrixPattern::Uniform, "uniform"),
+        (MatrixPattern::PowerLaw, "powerlaw"),
+    ];
+    for &(n, d, density) in &[(1024usize, 16usize, 0.02f64), (2048, 32, 0.01), (4096, 64, 0.01)] {
+        for (pi, &(pattern, pat_name)) in patterns.iter().enumerate() {
+            // Fresh per-workload RNG so each (n, d, pattern) matrix is
+            // reproducible regardless of which workloads a bench version
+            // runs or in what order — prev_*/speedup_* comparisons across
+            // runs are then apples-to-apples.
+            let mut wrng = Rng::new(0x9E7F ^ ((n as u64) << 24) ^ ((d as u64) << 8) ^ pi as u64);
+            let coo = gen_matrix(&mut wrng, n, density, pattern);
+            let nnz = coo.nnz();
+            let x = Matrix::rand(n, d, &mut wrng);
             println!(
-                "{:<44} {gflops:.2} GFLOP/s | allocs/op {ac} ({ab} B) -> into {ac_into} ({ab_into} B)",
-                format!("  throughput/{name}")
+                "\nworkload: {n}×{n} {pat_name} matrix, nnz={nnz} ({:.2}%), dense width {d}",
+                coo.density() * 100.0
             );
-            records.push(Json::obj(vec![
-                ("format", Json::Str(name.to_string())),
-                ("n", Json::Num(n as f64)),
-                ("d", Json::Num(d as f64)),
-                ("nnz", Json::Num(nnz as f64)),
-                ("spmm_ns", Json::Num(r.median_s * 1e9)),
-                ("spmm_into_ns", Json::Num(r_into.median_s * 1e9)),
-                ("spmm_t_into_ns", Json::Num(r_t.median_s * 1e9)),
-                ("gflops", Json::Num(gflops)),
-                ("allocs_per_op", Json::Num(ac as f64)),
-                ("alloc_bytes_per_op", Json::Num(ab as f64)),
-                ("allocs_per_op_into", Json::Num(ac_into as f64)),
-                ("alloc_bytes_per_op_into", Json::Num(ab_into as f64)),
-            ]));
+
+            section("SpMM per format: alloc vs workspace (`_into`) vs transpose");
+            let base = SparseMatrix::Coo(coo.clone());
+            for &fmtc in &ALL_FORMATS {
+                let Ok(m) = base.convert(fmtc) else {
+                    println!(
+                        "{:<44} infeasible (storage budget)",
+                        format!("spmm/{}/{pat_name}/{n}x{d}", fmtc.name())
+                    );
+                    continue;
+                };
+                let name = fmtc.name();
+                let r = bench(&format!("spmm/{name}/{pat_name}/{n}x{d}"), 2, 7, || m.spmm(&x));
+                let mut out = Matrix::zeros(n, d);
+                let r_into = bench(&format!("spmm_into/{name}/{pat_name}/{n}x{d}"), 2, 7, || {
+                    m.spmm_into(&x, &mut out)
+                });
+                let mut out_t = Matrix::zeros(n, d);
+                let r_t = bench(&format!("spmm_t_into/{name}/{pat_name}/{n}x{d}"), 2, 7, || {
+                    m.spmm_t_into(&x, &mut out_t)
+                });
+                let (ac, ab) = count_allocs(|| m.spmm(&x));
+                let (ac_into, ab_into) = count_allocs(|| m.spmm_into(&x, &mut out));
+                let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
+                println!(
+                    "{:<44} {gflops:.2} GFLOP/s | allocs/op {ac} ({ab} B) -> into {ac_into} ({ab_into} B)",
+                    format!("  throughput/{name}")
+                );
+                let mut fields = vec![
+                    ("format", Json::Str(name.to_string())),
+                    ("pattern", Json::Str(pat_name.to_string())),
+                    ("n", Json::Num(n as f64)),
+                    ("d", Json::Num(d as f64)),
+                    ("nnz", Json::Num(nnz as f64)),
+                    ("spmm_ns", Json::Num(r.median_s * 1e9)),
+                    ("spmm_into_ns", Json::Num(r_into.median_s * 1e9)),
+                    ("spmm_t_into_ns", Json::Num(r_t.median_s * 1e9)),
+                    ("gflops", Json::Num(gflops)),
+                    ("allocs_per_op", Json::Num(ac as f64)),
+                    ("alloc_bytes_per_op", Json::Num(ab as f64)),
+                    ("allocs_per_op_into", Json::Num(ac_into as f64)),
+                    ("alloc_bytes_per_op_into", Json::Num(ab_into as f64)),
+                ];
+                // Record before/after against the previous run of this
+                // bench, keyed by (format, pattern, n, d).
+                let key = (name.to_string(), pat_name.to_string(), n as u64, d as u64);
+                if let Some(&(prev_into, prev_t)) = baseline.get(&key) {
+                    if prev_into > 0.0 {
+                        let speedup = prev_into / (r_into.median_s * 1e9);
+                        println!(
+                            "{:<44} {prev_into:.0} ns -> {:.0} ns ({speedup:.2}x)",
+                            format!("  vs-baseline/{name}/into"),
+                            r_into.median_s * 1e9
+                        );
+                        fields.push(("prev_spmm_into_ns", Json::Num(prev_into)));
+                        fields.push(("speedup_into", Json::Num(speedup)));
+                    }
+                    if prev_t > 0.0 {
+                        let speedup_t = prev_t / (r_t.median_s * 1e9);
+                        fields.push(("prev_spmm_t_into_ns", Json::Num(prev_t)));
+                        fields.push(("speedup_t_into", Json::Num(speedup_t)));
+                    }
+                }
+                records.push(Json::obj(fields));
+            }
         }
     }
 
@@ -162,8 +240,6 @@ fn main() {
     });
 
     // Machine-readable dump for the perf trajectory.
-    let out_path = std::env::var("GNN_SPMM_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_spmm.json".to_string());
     let threads = gnn_spmm::util::parallel::num_threads();
     let doc = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".to_string())),

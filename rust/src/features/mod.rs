@@ -47,7 +47,9 @@ pub fn extract_features(m: &Coo) -> [f64; N_FEATURES] {
     let cols = m.cols.max(1);
     let nnz = m.nnz();
 
-    // Parallel partial histograms over the triple list.
+    // Parallel partial histograms over the triple list, one chunk per pool
+    // executor (no thread is spawned — the pool's parked workers run the
+    // chunks; see `util::pool`).
     let nt = num_threads();
     let chunks = split_ranges(nnz, nt);
     struct Partial {
@@ -56,31 +58,24 @@ pub fn extract_features(m: &Coo) -> [f64; N_FEATURES] {
         diag_bits: Vec<u64>,
     }
     let n_diag_slots = rows + cols - 1;
-    let partials: Vec<Partial> = std::thread::scope(|s| {
-        let handles: Vec<_> = chunks
-            .into_iter()
-            .map(|range| {
-                s.spawn(move || {
-                    let mut p = Partial {
-                        row_counts: vec![0u32; rows],
-                        col_counts: vec![0u32; cols],
-                        diag_bits: vec![0u64; n_diag_slots.div_ceil(64)],
-                    };
-                    for i in range {
-                        let r = m.row[i] as usize;
-                        let c = m.col[i] as usize;
-                        p.row_counts[r] += 1;
-                        p.col_counts[c] += 1;
-                        // diagonal id: col - row + (rows-1) ∈ [0, rows+cols-2]
-                        let d = c + rows - 1 - r;
-                        p.diag_bits[d / 64] |= 1u64 << (d % 64);
-                    }
-                    p
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+    let partials: Vec<Partial> =
+        crate::util::parallel::parallel_map(chunks.len(), |ci| {
+            let mut p = Partial {
+                row_counts: vec![0u32; rows],
+                col_counts: vec![0u32; cols],
+                diag_bits: vec![0u64; n_diag_slots.div_ceil(64)],
+            };
+            for i in chunks[ci].clone() {
+                let r = m.row[i] as usize;
+                let c = m.col[i] as usize;
+                p.row_counts[r] += 1;
+                p.col_counts[c] += 1;
+                // diagonal id: col - row + (rows-1) ∈ [0, rows+cols-2]
+                let d = c + rows - 1 - r;
+                p.diag_bits[d / 64] |= 1u64 << (d % 64);
+            }
+            p
+        });
 
     let mut row_counts = vec![0u32; rows];
     let mut col_counts = vec![0u32; cols];

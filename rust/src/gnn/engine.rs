@@ -16,11 +16,13 @@
 //! returns it with [`AdjEngine::recycle`] once consumed. Backward passes go
 //! through [`AdjEngine::spmm_t`], which executes `Aᵀ·X` on the slot's
 //! existing arrays (CSR↔CSC duality): no duplicate transposed slots, no
-//! per-epoch dense transposes. (Scatter-style kernels — CSC forward,
-//! CSR/COO/BSR/LIL transpose — still allocate thread-private partial buffers
-//! inside `scatter_reduce_into`; pooling those is a ROADMAP item.) The
-//! decision path reads a cached COO view that is invalidated only when the
-//! slot's *content* changes — format conversions keep it.
+//! per-epoch dense transposes. Scatter-style kernels (CSC forward,
+//! CSR/COO/BSR/LIL transpose) accumulate into the persistent worker pool's
+//! grow-only scratch buffers (`util::pool`), and every kernel dispatches on
+//! that pool's parked workers — so the steady-state multiply path performs
+//! no thread spawns and no heap allocation at all. The decision path reads
+//! a cached COO view that is invalidated only when the slot's *content*
+//! changes — format conversions keep it.
 
 use crate::sparse::{Coo, Format, SparseMatrix};
 use crate::tensor::Matrix;

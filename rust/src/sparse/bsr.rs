@@ -8,6 +8,7 @@
 use super::coo::Coo;
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
+use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
 use std::collections::HashMap;
 
 /// Default block edge; benches ablate 8..128 (see `ablation_block_size`).
@@ -124,46 +125,47 @@ impl Bsr {
         let d = x.cols;
         let n = self.rows;
         let rb = n.div_ceil(b);
-        out.data.fill(0.0);
-        // Partition output rows by block so each row-block is owned by one
-        // worker chunk: we parallelize over row-block ranges. The output is
-        // shared as a raw base address (usize is Sync); disjointness of
-        // row-blocks across ranges makes the writes race-free.
-        let out_addr = out.data.as_mut_ptr() as usize;
-        let blocks = &self.blocks;
-        let indptr = &self.indptr;
-        let indices = &self.indices;
-        crate::util::parallel::parallel_ranges(rb, |brange| {
-            for brow in brange {
-                let row0 = brow * b;
-                let row1 = (row0 + b).min(n);
-                for s in indptr[brow]..indptr[brow + 1] {
-                    let bcol = indices[s] as usize;
-                    let col0 = bcol * b;
-                    let col1 = (col0 + b).min(self.cols);
-                    let blk = &blocks[s * b * b..(s + 1) * b * b];
-                    for (i, r) in (row0..row1).enumerate() {
-                        // SAFETY: each row-block range is disjoint across the
-                        // parallel iteration, so rows [row0,row1) are touched
-                        // by exactly one thread.
-                        let out_row = unsafe {
-                            let ptr = (out_addr as *mut f32).add(r * d);
-                            std::slice::from_raw_parts_mut(ptr, d)
-                        };
-                        for (j, c) in (col0..col1).enumerate() {
-                            let v = blk[i * b + j];
-                            if v == 0.0 {
-                                continue;
-                            }
-                            let x_row = x.row(c);
-                            for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
-                                *o += v * xv;
+        // Tasks own contiguous row-block spans, balanced by stored-block
+        // count (`indptr` weight ≈ nnz); spans are converted to row spans so
+        // each task zeroes and fills a disjoint output chunk.
+        let k = num_threads().min(rb.max(1));
+        parallel_fill_rows_spans(
+            &mut out.data,
+            n,
+            d,
+            k,
+            |i| {
+                let bs = indptr_span(&self.indptr, k, i);
+                (bs.start * b).min(n)..(bs.end * b).min(n)
+            },
+            |range, chunk| {
+                chunk.fill(0.0);
+                for brow in range.start / b..range.end.div_ceil(b) {
+                    let row0 = brow * b;
+                    let row1 = (row0 + b).min(n);
+                    for s in self.indptr[brow]..self.indptr[brow + 1] {
+                        let bcol = self.indices[s] as usize;
+                        let col0 = bcol * b;
+                        let col1 = (col0 + b).min(self.cols);
+                        let blk = &self.blocks[s * b * b..(s + 1) * b * b];
+                        for (i, r) in (row0..row1).enumerate() {
+                            let off = (r - range.start) * d;
+                            let out_row = &mut chunk[off..off + d];
+                            for (j, c) in (col0..col1).enumerate() {
+                                let v = blk[i * b + j];
+                                if v == 0.0 {
+                                    continue;
+                                }
+                                let x_row = x.row(c);
+                                for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
+                                    *o += v * xv;
+                                }
                             }
                         }
                     }
                 }
-            }
-        });
+            },
+        );
     }
 
     /// Allocating SpMM wrapper.
@@ -174,15 +176,17 @@ impl Bsr {
     }
 
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
-    /// workers own row-block spans and scatter each stored block's
-    /// transposed panel (`Y[c] += A[r][c] · X[r]`) into thread-private
-    /// buffers, reduced at the end. No transposed block index is built.
+    /// workers own nnz-balanced row-block spans and scatter each stored
+    /// block's transposed panel (`Y[c] += A[r][c] · X[r]`) into pool-owned
+    /// scratch buffers, reduced at the end. No transposed block index is
+    /// built.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let b = self.block;
         let d = x.cols;
         let rb = self.rows.div_ceil(b);
-        scatter_reduce_into(out, rb, |brange, buf| {
+        let k = num_threads().min(rb.max(1));
+        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |brange, buf| {
             for brow in brange {
                 let row0 = brow * b;
                 let row1 = (row0 + b).min(self.rows);

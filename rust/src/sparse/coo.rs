@@ -3,7 +3,7 @@
 
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::parallel_fill_rows;
+use crate::util::parallel::{even_range, num_threads, parallel_fill_rows_spans};
 
 /// COO sparse matrix. Invariants: triples sorted by (row, col), unique
 /// coordinates, no explicit zeros.
@@ -84,6 +84,14 @@ impl Coo {
         self.val.len()
     }
 
+    /// True when triples are strictly row-major sorted with unique
+    /// coordinates — the struct invariant `from_triples` establishes, and
+    /// the precondition of the direct `Csr::from_coo` copy.
+    pub fn is_sorted_row_major(&self) -> bool {
+        (1..self.nnz())
+            .all(|i| (self.row[i - 1], self.col[i - 1]) < (self.row[i], self.col[i]))
+    }
+
     pub fn density(&self) -> f64 {
         if self.rows == 0 || self.cols == 0 {
             return 0.0;
@@ -108,12 +116,29 @@ impl Coo {
     /// buffer.
     ///
     /// Because triples are row-sorted, the output can be partitioned by row
-    /// ranges: each thread binary-searches its triple span and streams it.
+    /// ranges: each task binary-searches its triple span and streams it.
+    /// Row spans are **nnz-balanced**: span boundaries are the rows holding
+    /// the triple-count quantiles (`row[nnz·i/k]`), so a hub row never
+    /// shares its worker with half the matrix.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
         let (row, col, val) = (&self.row, &self.col, &self.val);
-        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+        let n = self.rows;
+        let nnz = self.nnz();
+        let k = num_threads().min(n.max(1));
+        let span_of = |i: usize| -> std::ops::Range<usize> {
+            if n == 0 {
+                return 0..0;
+            }
+            if nnz == 0 {
+                return even_range(n, k, i);
+            }
+            let start = if i == 0 { 0 } else { row[nnz * i / k] as usize };
+            let end = if i + 1 == k { n } else { row[nnz * (i + 1) / k] as usize };
+            start..end.max(start)
+        };
+        parallel_fill_rows_spans(&mut out.data, self.rows, d, k, span_of, |range, chunk| {
             chunk.fill(0.0);
             // Triple span covering rows in `range`.
             let lo = row.partition_point(|&r| (r as usize) < range.start);
@@ -139,13 +164,17 @@ impl Coo {
     }
 
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
-    /// workers own contiguous triple spans and scatter `val·x[row]` into
-    /// output row `col` of thread-private buffers, which are then reduced.
+    /// workers own contiguous triple spans (each triple is one work unit, so
+    /// an even split is already nnz-balanced) and scatter `val·x[row]` into
+    /// output row `col` of pool-owned scratch buffers, which are then
+    /// reduced.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
         let (row, col, val) = (&self.row, &self.col, &self.val);
-        scatter_reduce_into(out, self.nnz(), |span, buf| {
+        let nnz = self.nnz();
+        let k = num_threads().min(nnz.max(1));
+        scatter_reduce_into(out, k, |i| even_range(nnz, k, i), |span, buf| {
             for i in span {
                 let c = col[i] as usize;
                 let x_row = x.row(row[i] as usize);

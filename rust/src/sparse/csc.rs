@@ -5,9 +5,9 @@
 //! dominates (paper Fig. 3a).
 
 use super::coo::Coo;
-use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
+use super::ops::{check_into_shapes, gather_row_tiled, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::parallel_fill_rows;
+use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
 
 /// CSC sparse matrix: `indptr[c]..indptr[c+1]` spans column `c`'s entries in
 /// `indices` (row ids, ascending within a column) and `vals`.
@@ -67,14 +67,15 @@ impl Csc {
     /// SpMM `self (n×m) · x (m×d) → out (n×d)` into a caller-provided
     /// buffer.
     ///
-    /// Threads own disjoint **column** spans; each accumulates a private
-    /// `n×d` buffer (`y[i] += v * x[c]` for entries `(i, v)` of column `c`),
-    /// then the buffers are summed. The extra reduction is CSC's intrinsic
-    /// cost for row-major output.
+    /// Tasks own disjoint **column** spans, nnz-balanced via `indptr`; each
+    /// accumulates a pool-owned `n×d` scratch buffer (`y[i] += v * x[c]` for
+    /// entries `(i, v)` of column `c`), then the buffers are summed. The
+    /// extra reduction is CSC's intrinsic cost for row-major output.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        scatter_reduce_into(out, self.cols, |cols, buf| {
+        let k = num_threads().min(self.cols.max(1));
+        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |cols, buf| {
             for c in cols {
                 let x_row = x.row(c);
                 for i in self.indptr[c]..self.indptr[c + 1] {
@@ -101,24 +102,26 @@ impl Csc {
     /// CSR↔CSC duality in the other direction: the CSC arrays of `A` are the
     /// CSR arrays of `Aᵀ`, so `Aᵀ·X` runs as a CSR-style **gather** — each
     /// output row `c` sums `vals[i] · x[indices[i]]` over column `c`'s span.
-    /// This is the cheap direction: row-parallel, no reduction needed.
+    /// This is the cheap direction: parallel over nnz-balanced column spans,
+    /// no reduction needed, and feature-tiled like the CSR forward kernel.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        parallel_fill_rows(&mut out.data, self.cols, d, |range, chunk| {
-            chunk.fill(0.0);
-            for (cc, c) in range.clone().enumerate() {
-                let out_row = &mut chunk[cc * d..(cc + 1) * d];
-                for i in self.indptr[c]..self.indptr[c + 1] {
-                    let r = self.indices[i] as usize;
-                    let v = self.vals[i];
-                    let x_row = x.row(r);
-                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
-                        *o += v * xv;
-                    }
+        let k = num_threads().min(self.cols.max(1));
+        parallel_fill_rows_spans(
+            &mut out.data,
+            self.cols,
+            d,
+            k,
+            |i| indptr_span(&self.indptr, k, i),
+            |range, chunk| {
+                for (cc, c) in range.clone().enumerate() {
+                    let out_row = &mut chunk[cc * d..(cc + 1) * d];
+                    let span = self.indptr[c]..self.indptr[c + 1];
+                    gather_row_tiled(out_row, x, &self.indices[span.clone()], &self.vals[span]);
                 }
-            }
-        });
+            },
+        );
     }
 
     /// Direct CSC→CSR conversion by counting sort over rows (mirror of

@@ -2,9 +2,9 @@
 //! paper's Fig-1 winner for GNN inputs.
 
 use super::coo::Coo;
-use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
+use super::ops::{check_into_shapes, gather_row_tiled, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::parallel_fill_rows;
+use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
 
 /// CSR sparse matrix: `indptr[r]..indptr[r+1]` spans row `r`'s entries in
 /// `indices` (column ids, ascending within a row) and `vals`.
@@ -19,6 +19,13 @@ pub struct Csr {
 
 impl Csr {
     pub fn from_coo(coo: &Coo) -> Csr {
+        // Precondition: the direct indices/vals copy below is only correct
+        // for row-major-sorted COO (the `Coo` struct invariant). An unsorted
+        // input would silently scramble entries across rows.
+        debug_assert!(
+            coo.is_sorted_row_major(),
+            "Csr::from_coo requires strictly row-major-sorted COO triples"
+        );
         let mut indptr = vec![0usize; coo.rows + 1];
         for &r in &coo.row {
             indptr[r as usize + 1] += 1;
@@ -91,28 +98,33 @@ impl Csr {
         self.nnz() * 8 + (self.rows + 1) * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row ranges,
-    /// into a caller-provided buffer (the zero-allocation hot path).
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over
+    /// **nnz-balanced** row spans, into a caller-provided buffer (the
+    /// zero-allocation hot path: pool dispatch + per-task `indptr_span`
+    /// boundaries allocate nothing).
     ///
-    /// The inner loop accumulates into the output row, streaming `x` rows —
-    /// the canonical row-major-friendly kernel (and why CSR usually wins).
+    /// The inner loop is feature-tiled ([`gather_row_tiled`]): a
+    /// register-resident accumulator block per column tile, streaming `x`
+    /// rows — the canonical row-major-friendly kernel (and why CSR usually
+    /// wins).
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
-            chunk.fill(0.0);
-            for (rr, r) in range.clone().enumerate() {
-                let out_row = &mut chunk[rr * d..(rr + 1) * d];
-                let span = self.indptr[r]..self.indptr[r + 1];
-                for (idx, &c) in self.indices[span.clone()].iter().enumerate() {
-                    let v = self.vals[span.start + idx];
-                    let x_row = x.row(c as usize);
-                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
-                        *o += v * xv;
-                    }
+        let k = num_threads().min(self.rows.max(1));
+        parallel_fill_rows_spans(
+            &mut out.data,
+            self.rows,
+            d,
+            k,
+            |i| indptr_span(&self.indptr, k, i),
+            |range, chunk| {
+                for (rr, r) in range.clone().enumerate() {
+                    let out_row = &mut chunk[rr * d..(rr + 1) * d];
+                    let span = self.indptr[r]..self.indptr[r + 1];
+                    gather_row_tiled(out_row, x, &self.indices[span.clone()], &self.vals[span]);
                 }
-            }
-        });
+            },
+        );
     }
 
     /// Allocating SpMM wrapper.
@@ -130,7 +142,8 @@ impl Csr {
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        scatter_reduce_into(out, self.rows, |rows, buf| {
+        let k = num_threads().min(self.rows.max(1));
+        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |rows, buf| {
             for r in rows {
                 let x_row = x.row(r);
                 let span = self.indptr[r]..self.indptr[r + 1];
@@ -294,6 +307,22 @@ mod tests {
         assert_eq!(direct.to_coo(), coo.transpose());
         assert_eq!(direct.rows, 34);
         assert_eq!(direct.cols, 21);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "row-major-sorted")]
+    fn from_coo_rejects_unsorted_triples() {
+        // Bypass Coo::from_triples (which sorts) to violate the invariant
+        // the direct indices/vals copy depends on.
+        let bad = Coo {
+            rows: 2,
+            cols: 2,
+            row: vec![1, 0],
+            col: vec![0, 1],
+            val: vec![1.0, 2.0],
+        };
+        let _ = Csr::from_coo(&bad);
     }
 
     #[test]

@@ -95,6 +95,10 @@ impl Dia {
     ///
     /// Per output row `r`, walks the diagonals: `y[r] += data[k][r] * x[r+off]`.
     /// Contiguous in `data` along rows and in `x` along features.
+    ///
+    /// Scheduling note: every row touches every diagonal (±boundary
+    /// clipping), so per-row work is uniform and the pool's even row split
+    /// *is* the nnz-balanced split — DIA needs no weighted spans.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;

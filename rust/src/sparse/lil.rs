@@ -5,7 +5,7 @@
 use super::coo::Coo;
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::parallel_fill_rows;
+use crate::util::parallel::{num_threads, parallel_fill_rows_spans, split_ranges_by_weight};
 
 /// LIL sparse matrix: `rows_data[r]` is row `r`'s sorted `(col, val)` list.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,12 +79,16 @@ impl Lil {
         self.nnz() * 16 + self.rows * 24
     }
 
-    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over rows, into a
-    /// caller-provided buffer.
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over nnz-balanced
+    /// row spans (weighted by per-row list length — LIL has no `indptr` to
+    /// binary-search, so the spans are materialized by a weight sweep), into
+    /// a caller-provided buffer.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        parallel_fill_rows(&mut out.data, self.rows, d, |range, chunk| {
+        let k = num_threads().min(self.rows.max(1));
+        let spans = split_ranges_by_weight(self.rows, k, |r| self.rows_data[r].len());
+        parallel_fill_rows_spans(&mut out.data, self.rows, d, k, |i| spans[i].clone(), |range, chunk| {
             chunk.fill(0.0);
             for (rr, r) in range.clone().enumerate() {
                 let out_row = &mut chunk[rr * d..(rr + 1) * d];
@@ -106,12 +110,15 @@ impl Lil {
     }
 
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
-    /// workers own row spans and scatter each row list's `v·x[r]` into
-    /// output row `c` of thread-private buffers, reduced at the end.
+    /// workers own nnz-balanced row spans and scatter each row list's
+    /// `v·x[r]` into output row `c` of pool-owned scratch buffers, reduced
+    /// at the end.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        scatter_reduce_into(out, self.rows, |rows, buf| {
+        let k = num_threads().min(self.rows.max(1));
+        let spans = split_ranges_by_weight(self.rows, k, |r| self.rows_data[r].len());
+        scatter_reduce_into(out, k, |i| spans[i].clone(), |rows, buf| {
             for r in rows {
                 let x_row = x.row(r);
                 for &(c, v) in &self.rows_data[r] {

@@ -5,6 +5,7 @@ pub mod rng;
 pub mod json;
 pub mod cli;
 pub mod parallel;
+pub mod pool;
 pub mod stats;
 pub mod csv;
 pub mod timer;

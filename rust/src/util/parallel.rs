@@ -1,135 +1,186 @@
-//! Data-parallel helpers over `std::thread::scope` (rayon is unavailable).
+//! Data-parallel helpers over the persistent worker pool (`util::pool`).
 //!
-//! The SpMM kernels, feature extraction and training-data labeler all
+//! The SpMM kernels, feature extraction and the training-data labeler all
 //! parallelize across row ranges or independent work items through these
-//! primitives.
+//! primitives. None of them spawns threads: everything dispatches onto the
+//! pool's long-lived workers (nested/contended calls run inline).
+//!
+//! Scheduling is **work-weighted** where it matters: [`indptr_span`] and
+//! [`split_ranges_by_weight`] partition units by cumulative non-zero count
+//! rather than unit count, so on power-law graphs (a few hub rows carrying
+//! most of the nnz) every worker still gets an equal share of multiply-adds.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::pool;
+use std::ops::Range;
 
-/// Number of worker threads to use (cached).
+/// Number of worker threads to use. Owned by the pool, which resolves
+/// `GNN_SPMM_THREADS` / `available_parallelism` exactly once (`OnceLock`).
 pub fn num_threads() -> usize {
-    static N: AtomicUsize = AtomicUsize::new(0);
-    let cached = N.load(Ordering::Relaxed);
-    if cached != 0 {
-        return cached;
-    }
-    let n = std::env::var("GNN_SPMM_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        })
-        .max(1);
-    N.store(n, Ordering::Relaxed);
-    n
+    pool::global().n_threads()
 }
 
-/// Split `[0, n)` into at most `parts` contiguous ranges of near-equal size.
-pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+/// The `i`-th of `parts` near-equal contiguous ranges of `[0, n)`
+/// (closed-form; empty when `parts > n` leaves nothing for slot `i`).
+#[inline]
+pub fn even_range(n: usize, parts: usize, i: usize) -> Range<usize> {
+    let parts = parts.max(1);
+    debug_assert!(i < parts);
+    let base = n / parts;
+    let extra = n % parts;
+    let start = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    start..start + len
+}
+
+/// Split `[0, n)` into at most `parts` contiguous non-empty ranges of
+/// near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
     if n == 0 {
         return vec![];
     }
     let parts = parts.clamp(1, n);
-    let base = n / parts;
-    let extra = n % parts;
+    (0..parts).map(|i| even_range(n, parts, i)).collect()
+}
+
+/// Split `[0, n)` into exactly `max(parts, 1)` contiguous ranges (possibly
+/// empty) with near-equal **total weight**: range boundaries chase the
+/// cumulative-weight quantiles `total·(i+1)/parts`. Degenerate inputs
+/// (all-zero weights) fall back to an even count split; a single huge unit
+/// ("hub") simply occupies one range on its own while the remaining weight
+/// spreads over the others. The concatenation always covers `[0, n)`
+/// exactly.
+pub fn split_ranges_by_weight<W>(n: usize, parts: usize, weight: W) -> Vec<Range<usize>>
+where
+    W: Fn(usize) -> usize,
+{
+    let parts = parts.max(1);
+    let total: usize = (0..n).map(&weight).sum();
+    if total == 0 {
+        return (0..parts).map(|i| even_range(n, parts, i)).collect();
+    }
     let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
+    let mut start = 0usize;
+    let mut acc = 0usize;
     for i in 0..parts {
-        let len = base + usize::from(i < extra);
-        out.push(start..start + len);
-        start += len;
+        if i + 1 == parts {
+            out.push(start..n);
+            start = n;
+        } else {
+            let target = total * (i + 1) / parts;
+            let mut end = start;
+            while end < n && acc < target {
+                acc += weight(end);
+                end += 1;
+            }
+            out.push(start..end);
+            start = end;
+        }
     }
     out
 }
 
-/// Run `f(range)` over a partition of `[0, n)` on the worker pool.
+/// The `i`-th of `parts` spans of `[0, indptr.len() - 1)` with near-equal
+/// cumulative `indptr` weight — the nnz-balanced scheduling rule for
+/// compressed formats, where `indptr[u+1] - indptr[u]` is unit `u`'s
+/// non-zero count. Boundaries are found by binary search on the (already
+/// prefix-summed) `indptr`, so computing a span is `O(log n)` and allocates
+/// nothing: kernels call this per task instead of materializing a range
+/// list. Consecutive `i` produce abutting spans that exactly cover the unit
+/// range.
+pub fn indptr_span(indptr: &[usize], parts: usize, i: usize) -> Range<usize> {
+    let n = indptr.len().saturating_sub(1);
+    if n == 0 {
+        return 0..0;
+    }
+    let parts = parts.max(1);
+    debug_assert!(i < parts);
+    let base = indptr[0];
+    let total = indptr[n] - base;
+    if total == 0 {
+        return even_range(n, parts, i);
+    }
+    // Boundary for cumulative-weight quantile `t`: the first unit whose
+    // prefix weight reaches `t`. A hub unit straddling the quantile lands
+    // wholly in the left span, which matches the greedy sweep of
+    // [`split_ranges_by_weight`].
+    let boundary = |t: usize| -> usize { indptr.partition_point(|&p| p - base < t) };
+    let start = if i == 0 { 0 } else { boundary(total * i / parts) };
+    let end = if i + 1 == parts { n } else { boundary(total * (i + 1) / parts) };
+    start..end.max(start)
+}
+
+/// Run `f(range)` over an even partition of `[0, n)` on the worker pool.
 ///
 /// `f` must be safe to run concurrently on disjoint ranges; use it to fill
 /// disjoint slices of a shared output obtained via `split_at_mut` or raw
 /// pointer arithmetic encapsulated by the caller.
 pub fn parallel_ranges<F>(n: usize, f: F)
 where
-    F: Fn(std::ops::Range<usize>) + Sync,
+    F: Fn(Range<usize>) + Sync,
 {
-    let ranges = split_ranges(n, num_threads());
-    if ranges.len() <= 1 {
-        for r in ranges {
-            f(r);
-        }
-        return;
-    }
-    std::thread::scope(|s| {
-        for r in ranges {
-            s.spawn(|| f(r));
-        }
-    });
+    pool::global().run_ranges(n, f);
 }
 
 /// Parallel map: apply `f` to every index in `[0, n)` collecting results in
-/// order. Work is chunked contiguously per thread.
+/// order. Work is chunked contiguously per executor.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    {
-        let slots = &mut out[..];
-        let ranges = split_ranges(n, num_threads());
-        if ranges.len() <= 1 {
-            for r in ranges {
-                for i in r {
-                    slots[i] = Some(f(i));
-                }
-            }
-        } else {
-            std::thread::scope(|s| {
-                let mut rest = slots;
-                let mut offset = 0;
-                for r in ranges {
-                    let (head, tail) = rest.split_at_mut(r.len());
-                    rest = tail;
-                    let base = offset;
-                    offset += r.len();
-                    let f = &f;
-                    s.spawn(move || {
-                        for (j, slot) in head.iter_mut().enumerate() {
-                            *slot = Some(f(base + j));
-                        }
-                    });
-                }
-            });
+    let addr = out.as_mut_ptr() as usize;
+    let k = num_threads().min(n.max(1));
+    pool::global().run_weighted_ranges(k, |i| even_range(n, k, i), |r| {
+        for i in r {
+            // SAFETY: ranges are disjoint, so each slot is written by
+            // exactly one task.
+            let slot = unsafe { &mut *(addr as *mut Option<T>).add(i) };
+            *slot = Some(f(i));
         }
-    }
+    });
     out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
 }
 
 /// Parallel fill of a mutable f32 slice by disjoint row blocks:
 /// `fill(row_range, out_chunk)` where `out_chunk` is rows `row_range` of a
-/// row-major `[n_rows, row_len]` buffer.
+/// row-major `[n_rows, row_len]` buffer. Rows are split evenly; use
+/// [`parallel_fill_rows_spans`] when per-row work is skewed.
 pub fn parallel_fill_rows<F>(out: &mut [f32], n_rows: usize, row_len: usize, fill: F)
 where
-    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let k = num_threads().min(n_rows.max(1));
+    parallel_fill_rows_spans(out, n_rows, row_len, k, |i| even_range(n_rows, k, i), fill);
+}
+
+/// Weighted variant of [`parallel_fill_rows`]: task `i` fills the rows of
+/// `span_of(i)`. Spans must be disjoint and together cover `[0, n_rows)`
+/// exactly (empty spans allowed) — e.g. produced by [`indptr_span`] so each
+/// task owns an equal share of non-zeros instead of an equal share of rows.
+pub fn parallel_fill_rows_spans<S, F>(
+    out: &mut [f32],
+    n_rows: usize,
+    row_len: usize,
+    n_tasks: usize,
+    span_of: S,
+    fill: F,
+) where
+    S: Fn(usize) -> Range<usize> + Sync,
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), n_rows * row_len);
-    let ranges = split_ranges(n_rows, num_threads());
-    if ranges.len() <= 1 {
-        for r in ranges {
-            let s = r.start * row_len;
-            let e = r.end * row_len;
-            fill(r, &mut out[s..e]);
-        }
-        return;
-    }
-    std::thread::scope(|s| {
-        let mut rest = out;
-        for r in ranges {
-            let take = (r.end - r.start) * row_len;
-            let (head, tail) = rest.split_at_mut(take);
-            rest = tail;
-            let fill = &fill;
-            s.spawn(move || fill(r, head));
-        }
+    let addr = out.as_mut_ptr() as usize;
+    pool::global().run_weighted_ranges(n_tasks, span_of, |r| {
+        // SAFETY: spans are disjoint (caller contract), so the row chunks
+        // never alias across tasks.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(
+                (addr as *mut f32).add(r.start * row_len),
+                r.len() * row_len,
+            )
+        };
+        fill(r, chunk);
     });
 }
 
@@ -152,6 +203,62 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn even_range_matches_split_ranges() {
+        for n in [1usize, 7, 100, 101] {
+            for p in [1usize, 3, 8] {
+                let p = p.min(n);
+                let rs = split_ranges(n, p);
+                for (i, r) in rs.iter().enumerate() {
+                    assert_eq!(*r, even_range(n, p, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_split_covers_under_skew() {
+        // Hub-dominated: unit 3 carries ~all weight.
+        let w = |i: usize| if i == 3 { 10_000 } else { 1 };
+        for parts in [1usize, 2, 4, 9] {
+            let spans = split_ranges_by_weight(20, parts, w);
+            assert_eq!(spans.len(), parts);
+            let mut next = 0;
+            for s in &spans {
+                assert_eq!(s.start, next);
+                next = s.end;
+            }
+            assert_eq!(next, 20);
+        }
+        // All-zero weights degrade to an even split.
+        let spans = split_ranges_by_weight(10, 4, |_| 0);
+        assert_eq!(spans.iter().map(|r| r.len()).sum::<usize>(), 10);
+        assert_eq!(spans.len(), 4);
+    }
+
+    #[test]
+    fn indptr_span_covers_and_balances() {
+        // indptr with empty rows and a hub row.
+        let indptr = [0usize, 0, 5, 5, 105, 110, 110, 120];
+        let n = indptr.len() - 1;
+        for parts in [1usize, 2, 3, 7, 12] {
+            let mut next = 0;
+            for i in 0..parts {
+                let s = indptr_span(&indptr, parts, i);
+                assert_eq!(s.start, next, "parts={parts} i={i}");
+                assert!(s.end >= s.start);
+                next = s.end;
+            }
+            assert_eq!(next, n, "parts={parts}");
+        }
+        // With 2 parts the hub row (100 nnz) must sit alone-ish: the split
+        // lands at the row holding the 60th nnz, which is the hub row.
+        let a = indptr_span(&indptr, 2, 0);
+        let b = indptr_span(&indptr, 2, 1);
+        assert_eq!(a.end, b.start);
+        assert!(a.contains(&3) || b.contains(&3));
     }
 
     #[test]
@@ -190,6 +297,30 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn parallel_fill_rows_spans_weighted() {
+        // Weighted spans from an indptr: every row still written once.
+        let indptr = [0usize, 50, 50, 51, 52, 100];
+        let n_rows = indptr.len() - 1;
+        let row_len = 4;
+        let k = 3;
+        let mut out = vec![-1.0f32; n_rows * row_len];
+        parallel_fill_rows_spans(&mut out, n_rows, row_len, k, |i| {
+            indptr_span(&indptr, k, i)
+        }, |rows, chunk| {
+            for (j, row) in rows.clone().enumerate() {
+                for c in 0..row_len {
+                    chunk[j * row_len + c] = row as f32;
+                }
+            }
+        });
+        for r in 0..n_rows {
+            for c in 0..row_len {
+                assert_eq!(out[r * row_len + c], r as f32);
+            }
         }
     }
 }

@@ -1,0 +1,496 @@
+//! Persistent worker-pool execution layer.
+//!
+//! Every data-parallel primitive in the crate (`util::parallel`, the SpMM
+//! kernels, feature extraction, the predictor's training labeler) executes
+//! on this pool. Before it existed, each `spmm_into` call spawned fresh OS
+//! threads through `std::thread::scope`; on small-to-mid graphs the spawn +
+//! join cost dwarfed the format differences the paper measures. The pool
+//! replaces that with:
+//!
+//! * **Long-lived parked workers** — `n_threads - 1` threads spawned once
+//!   (the caller is the n-th executor), parked on a condvar between jobs.
+//!   Dispatch is a mutex/condvar handshake: no allocation, no syscall-heavy
+//!   thread creation on the hot path.
+//! * **A single job slot** — jobs are serialized by a lease (`try_lock`):
+//!   whoever holds the lease owns all workers. Contending callers and
+//!   *nested* parallel calls (a task that itself calls a parallel helper)
+//!   degrade to inline serial execution instead of deadlocking, so the pool
+//!   is safe to use from anywhere, including inside its own tasks.
+//! * **Per-task reusable scratch buffers** — [`Pool::scatter_reduce`] hands
+//!   each task a grow-only `Vec<f32>` drawn from a pool-owned registry.
+//!   After warmup the buffers (and the registry spine) are at capacity, so
+//!   a scatter-style SpMM performs **zero heap allocations** per multiply —
+//!   finishing the zero-allocation story the engine's slot workspace pools
+//!   started (DESIGN.md §Execution-Pool).
+//!
+//! The thread count is resolved exactly once at pool construction (a
+//! `OnceLock` — fixing the old double-read race in `num_threads()`):
+//! `GNN_SPMM_THREADS` if set, else `available_parallelism`. The pool owns
+//! that number; `util::parallel::num_threads()` just reads it.
+
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::util::parallel::even_range;
+
+/// An erased borrowed task closure. Only valid while the publishing
+/// [`Lease::run_tasks`] call is on the stack: it blocks until `pending == 0`,
+/// i.e. until every claimed task has returned, before the borrow ends.
+type TaskFn = &'static (dyn Fn(usize) + Sync);
+
+/// The shared job slot. All fields are guarded by one mutex; workers claim
+/// task indices under the lock (jobs are coarse — one task per worker-sized
+/// chunk — so the lock is uncontended in practice).
+struct SlotState {
+    task: Option<TaskFn>,
+    n_tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Claimed-but-unfinished plus unclaimed task count. The publisher waits
+    /// for this to hit zero before returning (and before the closure borrow
+    /// expires).
+    pending: usize,
+    /// Set when a worker's task panicked (caught so `pending` still drains
+    /// and the publisher can't deadlock); the publisher re-raises.
+    poisoned: bool,
+}
+
+struct Shared {
+    slot: Mutex<SlotState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The publisher parks here while tasks drain.
+    done_cv: Condvar,
+}
+
+/// The persistent worker pool. One per process (see [`global`]).
+pub struct Pool {
+    n_threads: usize,
+    shared: Arc<Shared>,
+    /// Exclusive right to dispatch on the workers. `try_lock` only — a
+    /// contended or nested caller runs inline instead of blocking.
+    lease_lock: Mutex<()>,
+    /// Grow-only scratch buffers for [`Pool::scatter_reduce`]. Taken as a
+    /// whole set under the lease, returned after the reduction; steady-state
+    /// reuse is allocation-free.
+    scratch: Mutex<Vec<Vec<f32>>>,
+}
+
+thread_local! {
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True on pool worker threads. Nested data-parallel calls check this and
+/// run inline (serially) rather than re-entering the pool.
+pub fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, created on first use. Thread-count resolution and
+/// worker spawning happen exactly once, behind the `OnceLock`.
+pub fn global() -> &'static Pool {
+    POOL.get_or_init(Pool::new)
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL.with(|c| c.set(true));
+    let mut slot = shared.slot.lock().unwrap();
+    loop {
+        // `task` is Copy (a shared reference), so claim it into locals
+        // before touching the guard again.
+        let task_opt = slot.task;
+        let claim = match task_opt {
+            Some(task) if slot.next < slot.n_tasks => {
+                let i = slot.next;
+                slot.next += 1;
+                Some((task, i))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((task, i)) => {
+                drop(slot);
+                // Catch panics so `pending` always drains — otherwise the
+                // publisher would wait forever on a buggy task.
+                let result =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
+                slot = shared.slot.lock().unwrap();
+                slot.pending -= 1;
+                if result.is_err() {
+                    slot.poisoned = true;
+                }
+                if slot.pending == 0 {
+                    shared.done_cv.notify_all();
+                }
+            }
+            None => {
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        }
+    }
+}
+
+/// Exclusive dispatch right on the pool's workers, released on drop.
+struct Lease<'a> {
+    shared: &'a Shared,
+    _guard: MutexGuard<'a, ()>,
+}
+
+impl Lease<'_> {
+    /// Execute `f(0..n_tasks)` across the workers and the calling thread,
+    /// returning once every task has finished.
+    fn run_tasks<F>(&self, n_tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased reference is only reachable through the job
+        // slot, and this function does not return until `pending == 0`,
+        // which requires every claimed task to have finished executing the
+        // closure. The slot's `task` is cleared before returning, so no
+        // worker can observe the reference after the borrow of `f` ends.
+        let erased: TaskFn = unsafe { std::mem::transmute(f_ref) };
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.task = Some(erased);
+            s.n_tasks = n_tasks;
+            s.next = 0;
+            s.pending = n_tasks;
+            s.poisoned = false;
+        }
+        self.shared.work_cv.notify_all();
+        // The caller participates as the n-th executor. Its own task panics
+        // are caught and re-raised only after every outstanding task has
+        // drained — unwinding earlier would end the closure borrow while
+        // workers still hold the erased reference.
+        let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        loop {
+            let mut s = self.shared.slot.lock().unwrap();
+            if caller_panic.is_none() && s.next < n_tasks {
+                let i = s.next;
+                s.next += 1;
+                drop(s);
+                let result =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+                let mut s = self.shared.slot.lock().unwrap();
+                s.pending -= 1;
+                let done = s.pending == 0;
+                if let Err(payload) = result {
+                    caller_panic = Some(payload);
+                }
+                drop(s);
+                if done {
+                    self.shared.done_cv.notify_all();
+                }
+            } else {
+                while s.pending > 0 {
+                    s = self.shared.done_cv.wait(s).unwrap();
+                }
+                s.task = None;
+                let worker_panicked = s.poisoned;
+                s.poisoned = false;
+                drop(s);
+                if let Some(payload) = caller_panic {
+                    std::panic::resume_unwind(payload);
+                }
+                if worker_panicked {
+                    panic!("pool worker task panicked");
+                }
+                return;
+            }
+        }
+    }
+}
+
+impl Pool {
+    fn new() -> Pool {
+        let n_threads = std::env::var("GNN_SPMM_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+            .max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(SlotState {
+                task: None,
+                n_tasks: 0,
+                next: 0,
+                pending: 0,
+                poisoned: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        // The caller of a parallel region is always one executor, so spawn
+        // n_threads - 1 long-lived workers. They park between jobs and die
+        // with the process.
+        for idx in 1..n_threads {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("gnn-pool-{idx}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn pool worker");
+        }
+        Pool {
+            n_threads,
+            shared,
+            lease_lock: Mutex::new(()),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The worker-thread budget (env-resolved once at construction).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Try to acquire exclusive dispatch. `None` ⇒ run inline: the pool is
+    /// single-threaded, the caller is itself a pool worker (nested call), or
+    /// another thread currently holds the lease.
+    fn lease(&self) -> Option<Lease<'_>> {
+        if self.n_threads <= 1 || in_pool_worker() {
+            return None;
+        }
+        match self.lease_lock.try_lock() {
+            Ok(guard) => Some(Lease { shared: &self.shared, _guard: guard }),
+            Err(_) => None,
+        }
+    }
+
+    /// Run `f` over an even partition of `[0, n)` — one contiguous range per
+    /// executor. `f` must be safe to run concurrently on disjoint ranges.
+    pub fn run_ranges<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let k = self.n_threads.min(n);
+        self.run_weighted_ranges(k, |i| even_range(n, k, i), f);
+    }
+
+    /// Run `f(span_of(i))` for every task `i < n_tasks`, skipping empty
+    /// spans. This is the weighted-scheduling entry point: callers compute
+    /// spans with equal *work* (non-zeros), not equal length — e.g. via
+    /// [`crate::util::parallel::indptr_span`] — so no worker is stuck with
+    /// all the hub rows of a power-law graph. Spans must be disjoint when
+    /// `f` writes to shared output.
+    pub fn run_weighted_ranges<S, F>(&self, n_tasks: usize, span_of: S, f: F)
+    where
+        S: Fn(usize) -> Range<usize> + Sync,
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        let lease = if n_tasks > 1 { self.lease() } else { None };
+        match lease {
+            Some(lease) => lease.run_tasks(n_tasks, |i| {
+                let span = span_of(i);
+                if !span.is_empty() {
+                    f(span);
+                }
+            }),
+            None => {
+                for i in 0..n_tasks {
+                    let span = span_of(i);
+                    if !span.is_empty() {
+                        f(span);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scatter-reduce: `out = Σ_i contribution(span_of(i))` over an
+    /// `n_rows × row_len` row-major buffer, overwriting `out` completely.
+    ///
+    /// Each task scatters into a zeroed per-task scratch buffer from the
+    /// pool registry (grow-only: steady state performs no heap allocation),
+    /// then the scratches are summed into `out` in parallel over row blocks.
+    /// Single-threaded, nested and lease-contended calls scatter straight
+    /// into `out` serially — same result, no scratch.
+    pub fn scatter_reduce<S, F>(
+        &self,
+        out: &mut [f32],
+        n_rows: usize,
+        row_len: usize,
+        n_tasks: usize,
+        span_of: S,
+        scatter: F,
+    ) where
+        S: Fn(usize) -> Range<usize> + Sync,
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        let nd = n_rows * row_len;
+        debug_assert_eq!(out.len(), nd);
+        let lease = if n_tasks > 1 { self.lease() } else { None };
+        let Some(lease) = lease else {
+            out.fill(0.0);
+            for i in 0..n_tasks {
+                let span = span_of(i);
+                if !span.is_empty() {
+                    scatter(span, out);
+                }
+            }
+            return;
+        };
+
+        let mut bufs = std::mem::take(&mut *self.scratch.lock().unwrap());
+        while bufs.len() < n_tasks {
+            bufs.push(Vec::new());
+        }
+        let bufs_addr = bufs.as_mut_ptr() as usize;
+        lease.run_tasks(n_tasks, |i| {
+            // SAFETY: task indices are distinct, so each task gets exclusive
+            // access to its own scratch Vec.
+            let buf = unsafe { &mut *(bufs_addr as *mut Vec<f32>).add(i) };
+            let span = span_of(i);
+            if span.is_empty() {
+                // Mark unused so the reduction skips it.
+                buf.clear();
+            } else {
+                buf.clear();
+                buf.resize(nd, 0.0);
+                scatter(span, buf.as_mut_slice());
+            }
+        });
+
+        let used: &[Vec<f32>] = &bufs[..n_tasks];
+        let k_red = self.n_threads.min(n_rows.max(1));
+        let out_addr = out.as_mut_ptr() as usize;
+        lease.run_tasks(k_red, |j| {
+            let rows = even_range(n_rows, k_red, j);
+            let lo = rows.start * row_len;
+            let len = rows.len() * row_len;
+            // SAFETY: row ranges are disjoint across tasks, so the chunks
+            // never alias.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut((out_addr as *mut f32).add(lo), len)
+            };
+            chunk.fill(0.0);
+            for buf in used {
+                if buf.len() == nd {
+                    for (o, &v) in chunk.iter_mut().zip(buf[lo..lo + len].iter()) {
+                        *o += v;
+                    }
+                }
+            }
+        });
+        // Return the scratch set while still holding the lease: a concurrent
+        // caller that wins the lease next must find the registry populated,
+        // or it would allocate (and later leak) a whole fresh buffer set.
+        *self.scratch.lock().unwrap() = bufs;
+        drop(lease);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::{num_threads, parallel_map};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn run_ranges_covers_and_pool_is_reused() {
+        // Many sequential jobs on the same pool: workers must wake, drain
+        // and park correctly every time.
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            global().run_ranges(1000, |r| {
+                let mut local = 0u64;
+                for i in r {
+                    local += i as u64;
+                }
+                sum.fetch_add(local, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_skip_empty_spans() {
+        let visited = AtomicU64::new(0);
+        let spans = [0..0, 0..5, 5..5, 5..9, 9..9];
+        global().run_weighted_ranges(spans.len(), |i| spans[i].clone(), |r| {
+            visited.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(visited.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_inline() {
+        // Outer parallel_map tasks each start an inner parallel region; the
+        // inner ones must degrade to serial (no deadlock, correct results).
+        let out = parallel_map(8, |i| {
+            let sum = AtomicU64::new(0);
+            global().run_ranges(200, |r| {
+                let mut local = 0u64;
+                for j in r {
+                    local += j as u64;
+                }
+                sum.fetch_add(local, Ordering::Relaxed);
+            });
+            sum.into_inner() + i as u64
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 199 * 200 / 2 + i as u64);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_stay_correct() {
+        // Lease contention: losers run inline; everyone computes the right
+        // answer. (Test-only scope spawn — kernels never spawn.)
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..20 {
+                        let sum = AtomicU64::new(0);
+                        global().run_ranges(512, |r| {
+                            let mut local = 0u64;
+                            for i in r {
+                                local += i as u64;
+                            }
+                            sum.fetch_add(local, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), 511 * 512 / 2);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn scatter_reduce_overwrites_and_sums() {
+        let (n, d) = (64, 3);
+        let mut out = vec![99.0f32; n * d];
+        let k = num_threads().min(8).max(2);
+        // 32 units; unit u bumps column 0 of row u.
+        global().scatter_reduce(&mut out, n, d, k, |i| even_range(32, k, i), |span, buf| {
+            for u in span {
+                buf[u * d] += 1.0;
+            }
+        });
+        for r in 0..n {
+            let want = if r < 32 { 1.0 } else { 0.0 };
+            assert_eq!(out[r * d], want, "row {r}");
+            assert_eq!(out[r * d + 1], 0.0);
+            assert_eq!(out[r * d + 2], 0.0);
+        }
+    }
+
+    #[test]
+    fn scatter_reduce_empty_tasks() {
+        let mut out = vec![7.0f32; 12];
+        global().scatter_reduce(&mut out, 4, 3, 1, |_| 0..0, |_, _| unreachable!());
+        assert_eq!(out, vec![0.0; 12]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Shared helpers for the pool/scheduling integration tests. Files in
+//! `tests/common/` are not compiled as test binaries; the thread-count
+//! pinned binaries (`pool_threads1.rs`, `pool_threads4.rs`) include this via
+//! `mod common;`.
+
+use gnn_spmm::sparse::{Coo, SparseMatrix, ALL_FORMATS};
+use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::rng::Rng;
+
+/// Random COO with a dense hub row and hub column on top of uniform noise —
+/// the degree skew that breaks count-based row partitioning.
+pub fn skewed_coo(rng: &mut Rng, n: usize, m: usize) -> Coo {
+    let mut triples = Vec::new();
+    for c in 0..m {
+        if rng.bernoulli(0.8) {
+            triples.push((0, c as u32, rng.uniform(-1.0, 1.0) as f32));
+        }
+    }
+    for r in 0..n {
+        if rng.bernoulli(0.8) {
+            triples.push((r as u32, 0, rng.uniform(-1.0, 1.0) as f32));
+        }
+    }
+    for r in 0..n {
+        for c in 0..m {
+            if rng.bernoulli(0.05) {
+                triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+            }
+        }
+    }
+    Coo::from_triples(n, m, triples)
+}
+
+/// All seven formats' `spmm_into`/`spmm_t_into` against the dense
+/// reference, on hub-skewed inputs, with stale output buffers that the
+/// kernels must fully overwrite. Widths cover the narrow fallback (d < 16),
+/// the exact-tile case and tile + remainder.
+pub fn check_formats_vs_dense() {
+    let mut rng = Rng::new(0xF00D);
+    for &(n, m, d) in &[(33usize, 47usize, 5usize), (64, 64, 16), (80, 70, 40)] {
+        let coo = skewed_coo(&mut rng, n, m);
+        let dense = coo.to_dense();
+        let x = Matrix::rand(m, d, &mut rng);
+        let xt = Matrix::rand(n, d, &mut rng);
+        let want = dense.matmul(&x);
+        let want_t = dense.transpose().matmul(&xt);
+        let base = SparseMatrix::Coo(coo);
+        for &fmt in &ALL_FORMATS {
+            let Ok(mm) = base.convert(fmt) else {
+                continue; // DIA over budget on scattered patterns
+            };
+            let mut out = Matrix::full(n, d, 123.0);
+            mm.spmm_into(&x, &mut out);
+            assert!(
+                out.max_abs_diff(&want) < 1e-3,
+                "{} spmm_into ({n},{m},{d})",
+                fmt.name()
+            );
+            let mut out_t = Matrix::full(m, d, 123.0);
+            mm.spmm_t_into(&xt, &mut out_t);
+            assert!(
+                out_t.max_abs_diff(&want_t) < 1e-3,
+                "{} spmm_t_into ({n},{m},{d})",
+                fmt.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration tests for the persistent worker pool and nnz-balanced
+//! scheduling layer (`util::pool` + `util::parallel`), at the ambient
+//! thread count. Thread-count-pinned kernel checks live in
+//! `pool_threads1.rs` / `pool_threads4.rs` (own processes).
+
+use gnn_spmm::sparse::{Coo, Csr};
+use gnn_spmm::tensor::Matrix;
+use gnn_spmm::util::parallel::{
+    indptr_span, num_threads, parallel_map, parallel_ranges, split_ranges_by_weight,
+};
+use gnn_spmm::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `split_ranges_by_weight` must return exactly `parts` abutting ranges
+/// covering `[0, n)` for any weight profile: random, all-zero (degenerate),
+/// and hub-dominated.
+#[test]
+fn prop_weight_split_covers_exactly() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..300 {
+        let n = 1 + rng.gen_range(60);
+        let parts = 1 + rng.gen_range(10);
+        let mode = case % 4;
+        let weights: Vec<usize> = (0..n)
+            .map(|i| match mode {
+                0 => 0,                                                // degenerate
+                1 => rng.gen_range(6),                                 // random (zeros included)
+                2 => if i == n / 2 { 100_000 } else { rng.gen_range(2) } // hub-dominated
+                _ => 1,                                                // uniform
+            })
+            .collect();
+        let spans = split_ranges_by_weight(n, parts, |i| weights[i]);
+        assert_eq!(spans.len(), parts, "n={n} parts={parts} mode={mode}");
+        let mut next = 0;
+        for s in &spans {
+            assert_eq!(s.start, next, "n={n} parts={parts} mode={mode}");
+            assert!(s.end >= s.start);
+            next = s.end;
+        }
+        assert_eq!(next, n, "n={n} parts={parts} mode={mode}");
+    }
+    // n = 0 still yields full (empty) coverage.
+    let spans = split_ranges_by_weight(0, 3, |_| 1);
+    assert_eq!(spans.len(), 3);
+    assert!(spans.iter().all(|s| s.is_empty()));
+}
+
+/// `indptr_span` boundaries must abut and cover all units, for indptrs with
+/// empty rows, hub rows and zero total weight.
+#[test]
+fn prop_indptr_span_covers_exactly() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..300 {
+        let n = 1 + rng.gen_range(50);
+        let parts = 1 + rng.gen_range(9);
+        let mode = case % 3;
+        let mut indptr = vec![0usize; n + 1];
+        for i in 0..n {
+            let w = match mode {
+                0 => 0,
+                1 => rng.gen_range(7),
+                _ => if i == 0 { 5_000 } else { rng.gen_range(3) },
+            };
+            indptr[i + 1] = indptr[i] + w;
+        }
+        let mut next = 0;
+        for i in 0..parts {
+            let s = indptr_span(&indptr, parts, i);
+            assert_eq!(s.start, next, "n={n} parts={parts} mode={mode} i={i}");
+            assert!(s.end >= s.start);
+            next = s.end;
+        }
+        assert_eq!(next, n, "n={n} parts={parts} mode={mode}");
+    }
+    // Degenerate: empty indptr (zero units).
+    assert_eq!(indptr_span(&[0usize], 4, 2), 0..0);
+}
+
+/// The hub row must not drag half the matrix onto one worker: with a
+/// two-way split of a hub-dominated indptr, the hub's span holds the hub
+/// and little else.
+#[test]
+fn indptr_span_isolates_hubs() {
+    // Row 0 carries 900 of 1000 nnz; rows 1..=100 carry 1 each.
+    let mut indptr = vec![0usize; 102];
+    indptr[1] = 900;
+    for i in 1..=100 {
+        indptr[i + 1] = indptr[i] + 1;
+    }
+    let a = indptr_span(&indptr, 2, 0);
+    let b = indptr_span(&indptr, 2, 1);
+    assert_eq!(a, 0..1, "hub row sits alone in the first span");
+    assert_eq!(b, 1..101);
+}
+
+#[test]
+fn pool_reuse_across_sequential_calls() {
+    // Many back-to-back jobs: parked workers must wake, drain and re-park
+    // correctly every time, with no cross-job state leakage.
+    for round in 0..40 {
+        let sum = AtomicU64::new(0);
+        parallel_ranges(2_000, |r| {
+            let mut local = 0u64;
+            for i in r {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1_999 * 2_000 / 2, "round {round}");
+    }
+}
+
+#[test]
+fn nested_spmm_inside_parallel_map() {
+    // A pool task that itself runs SpMM (which tries to go parallel) must
+    // degrade to inline serial execution and still be correct — the
+    // training labeler does exactly this shape of nesting.
+    let mut rng = Rng::new(7);
+    let mut triples = Vec::new();
+    for r in 0..40u32 {
+        for c in 0..40u32 {
+            if rng.bernoulli(0.15) {
+                triples.push((r, c, rng.uniform(-1.0, 1.0) as f32));
+            }
+        }
+    }
+    let coo = Coo::from_triples(40, 40, triples);
+    let csr = Csr::from_coo(&coo);
+    let x = Matrix::rand(40, 20, &mut rng);
+    let want = coo.to_dense().matmul(&x);
+
+    let results = parallel_map(8, |i| {
+        let mut out = Matrix::full(40, 20, 99.0);
+        csr.spmm_into(&x, &mut out);
+        (i, out)
+    });
+    assert_eq!(results.len(), 8);
+    for (i, out) in &results {
+        assert!(out.max_abs_diff(&want) < 1e-4, "task {i}");
+    }
+}
+
+#[test]
+fn weighted_spmm_matches_dense_on_powerlaw() {
+    // End-to-end: a power-law-ish matrix through the weighted CSR kernels
+    // at the ambient thread count.
+    let mut rng = Rng::new(13);
+    let n = 200;
+    let mut triples = Vec::new();
+    for _ in 0..4_000 {
+        let r = rng.powerlaw(n, 2.1) as u32;
+        let c = rng.gen_range(n) as u32;
+        triples.push((r, c, rng.uniform(0.1, 1.0) as f32));
+    }
+    let coo = Coo::from_triples(n, n, triples);
+    let csr = Csr::from_coo(&coo);
+    let x = Matrix::rand(n, 33, &mut rng); // tiles + remainder
+    let want = coo.to_dense().matmul(&x);
+    let mut out = Matrix::full(n, 33, -5.0);
+    csr.spmm_into(&x, &mut out);
+    assert!(out.max_abs_diff(&want) < 1e-3);
+
+    let want_t = coo.to_dense().transpose().matmul(&x);
+    let mut out_t = Matrix::full(n, 33, -5.0);
+    csr.spmm_t_into(&x, &mut out_t);
+    assert!(out_t.max_abs_diff(&want_t) < 1e-3);
+}
+
+#[test]
+fn thread_count_is_stable() {
+    // The OnceLock-backed count must be identical on every read, including
+    // concurrent first reads (the old AtomicUsize version could race its
+    // env re-read).
+    let first = num_threads();
+    let reads = parallel_map(16, |_| num_threads());
+    assert!(reads.iter().all(|&n| n == first));
+    assert!(first >= 1);
+}

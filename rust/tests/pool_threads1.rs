@@ -1,0 +1,14 @@
+//! Single-threaded execution pin: `GNN_SPMM_THREADS=1` forces every pool
+//! dispatch onto the serial fallback paths (no lease, direct scatter into
+//! the output). The env var is set before the pool's one-time
+//! initialization — this file is its own process, so the pin cannot race
+//! with other test binaries.
+
+mod common;
+
+#[test]
+fn formats_match_dense_single_thread() {
+    std::env::set_var("GNN_SPMM_THREADS", "1");
+    assert_eq!(gnn_spmm::util::parallel::num_threads(), 1);
+    common::check_formats_vs_dense();
+}

@@ -1,0 +1,14 @@
+//! Multi-threaded execution pin: `GNN_SPMM_THREADS=4` forces pooled
+//! dispatch (3 parked workers + the caller) regardless of the machine's
+//! core count, exercising weighted-span scheduling and the scatter-reduce
+//! scratch path. Its own process, so the pin cannot race with other test
+//! binaries.
+
+mod common;
+
+#[test]
+fn formats_match_dense_four_threads() {
+    std::env::set_var("GNN_SPMM_THREADS", "4");
+    assert_eq!(gnn_spmm::util::parallel::num_threads(), 4);
+    common::check_formats_vs_dense();
+}
