@@ -1,0 +1,167 @@
+//! Sharded mini-batch training bench: epoch time and decision overhead vs
+//! shard count on the full `ogbn-arxiv-scale` synthetic graph (169k nodes —
+//! the workload class that cannot train full-batch at paper scale).
+//!
+//! What it measures, per shard count:
+//!
+//! * epoch wall-clock (shard loop + optimizer step; eval excluded),
+//! * decision overhead (COO views + feature extraction + model inference)
+//!   and extraction time, both charged to the engine stopwatch,
+//! * decision-cache hit rate, warm (post-first-epoch) hit rate,
+//! * the COO-fallback extraction counter delta — **asserted zero**: shard
+//!   extraction must take the direct CSR path (ISSUE-3 acceptance gate).
+//!
+//! Results land in `BENCH_minibatch.json` (override with
+//! `GNN_SPMM_BENCH_MINIBATCH_OUT`) — the start of the minibatch perf
+//! trajectory, alongside `BENCH_spmm.json` for the kernel layer.
+
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{train_minibatch, MinibatchConfig, ModelKind};
+use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
+use gnn_spmm::predictor::training::{train_predictor, TrainingCorpus};
+use gnn_spmm::predictor::PredictedPolicy;
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::json::Json;
+use gnn_spmm::util::rng::Rng;
+use gnn_spmm::util::stats;
+
+fn main() {
+    let out_path = std::env::var("GNN_SPMM_BENCH_MINIBATCH_OUT")
+        .unwrap_or_else(|_| "BENCH_minibatch.json".to_string());
+
+    // Full-scale synthetic ogbn-arxiv (shrink with GNN_SPMM_MB_SHRINK for
+    // quick local iterations).
+    let shrink: usize = std::env::var("GNN_SPMM_MB_SHRINK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let spec = if shrink > 1 {
+        LARGE_DATASETS[0].scaled_same_degree(shrink, 128)
+    } else {
+        LARGE_DATASETS[0]
+    };
+    println!(
+        "generating {} (n={}, avg degree {:.1})…",
+        spec.name,
+        spec.n,
+        spec.n as f64 * spec.adj_density
+    );
+    let mut rng = Rng::new(0xA12C);
+    let ds = GraphDataset::generate(&spec, &mut rng);
+    println!("adjacency nnz {}, feature nnz {}", ds.adj.nnz(), ds.features.nnz());
+
+    // The paper's deployed policy: the learned GBDT predictor — decision
+    // overhead is the quantity of interest, so use the policy that has one.
+    println!("training format predictor…");
+    let corpus = TrainingCorpus::build(60, 64, 256, 16, 2, 7);
+    let mut policy = PredictedPolicy::new(train_predictor(&corpus, 1.0, 7));
+
+    let epochs = 3;
+    let mut records: Vec<Json> = Vec::new();
+    for &n_shards in &[4usize, 8, 16, 32] {
+        let cfg = MinibatchConfig {
+            epochs,
+            hidden: 16,
+            n_shards,
+            fanout: 8,
+            seed: 0xBEEF,
+            ..Default::default()
+        };
+        let report = train_minibatch(ModelKind::Gcn, &ds, &mut policy, &cfg);
+
+        // ISSUE-3 acceptance gate: extraction never round-trips CSR/CSC
+        // through COO (exact: the counter is thread-local to this thread).
+        assert_eq!(
+            report.coo_fallback_extractions, 0,
+            "shard extraction fell back to the COO round-trip"
+        );
+
+        let epoch_ns: Vec<f64> =
+            report.epoch_times.iter().map(|s| s * 1e9).collect();
+        let extract_s = report
+            .phases
+            .iter()
+            .find(|p| p.0 == "extract")
+            .map(|p| p.1)
+            .unwrap_or(0.0);
+        println!(
+            "shards {n_shards:>3}: epoch median {:>8.1} ms | decisions {} (warm hit rate {:.1}%) | decision overhead {:.1} ms | extract {:.1} ms | test acc {:.3}",
+            stats::median(&epoch_ns) / 1e6,
+            report.decisions.len(),
+            report.warm_cache_hit_rate * 100.0,
+            report.decision_overhead_s * 1e3,
+            extract_s * 1e3,
+            report.final_test_acc,
+        );
+        records.push(Json::obj(vec![
+            ("model", Json::Str(report.model.to_string())),
+            ("dataset", Json::Str(report.dataset.clone())),
+            ("policy", Json::Str(report.policy.clone())),
+            ("n", Json::Num(ds.adj.rows as f64)),
+            ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
+            ("shards", Json::Num(n_shards as f64)),
+            ("fanout", Json::Num(cfg.fanout as f64)),
+            ("epochs", Json::Num(epochs as f64)),
+            ("epoch_median_ns", Json::Num(stats::median(&epoch_ns))),
+            ("epoch_min_ns", Json::Num(stats::min(&epoch_ns))),
+            ("decision_overhead_ns", Json::Num(report.decision_overhead_s * 1e9)),
+            ("extract_ns", Json::Num(extract_s * 1e9)),
+            ("decisions", Json::Num(report.decisions.len() as f64)),
+            ("cache_hits", Json::Num(report.cache_hits as f64)),
+            ("cache_misses", Json::Num(report.cache_misses as f64)),
+            ("warm_cache_hit_rate", Json::Num(report.warm_cache_hit_rate)),
+            ("coo_fallback_extractions", Json::Num(report.coo_fallback_extractions as f64)),
+            ("final_test_acc", Json::Num(report.final_test_acc)),
+        ]));
+    }
+
+    // Reference point: the same machinery under a static-CSR policy (no
+    // prediction overhead at all) at one shard count.
+    let mut static_policy = StaticPolicy(Format::Csr);
+    let cfg = MinibatchConfig {
+        epochs,
+        hidden: 16,
+        n_shards: 8,
+        fanout: 8,
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+    let report = train_minibatch(ModelKind::Gcn, &ds, &mut static_policy, &cfg);
+    assert_eq!(report.coo_fallback_extractions, 0);
+    let epoch_ns: Vec<f64> = report.epoch_times.iter().map(|s| s * 1e9).collect();
+    println!(
+        "static-CSR reference (8 shards): epoch median {:.1} ms",
+        stats::median(&epoch_ns) / 1e6
+    );
+    records.push(Json::obj(vec![
+        ("model", Json::Str(report.model.to_string())),
+        ("dataset", Json::Str(report.dataset.clone())),
+        ("policy", Json::Str(report.policy.clone())),
+        ("n", Json::Num(ds.adj.rows as f64)),
+        ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
+        ("shards", Json::Num(8.0)),
+        ("fanout", Json::Num(8.0)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("epoch_median_ns", Json::Num(stats::median(&epoch_ns))),
+        ("epoch_min_ns", Json::Num(stats::min(&epoch_ns))),
+        ("decision_overhead_ns", Json::Num(report.decision_overhead_s * 1e9)),
+        ("warm_cache_hit_rate", Json::Num(report.warm_cache_hit_rate)),
+        ("coo_fallback_extractions", Json::Num(report.coo_fallback_extractions as f64)),
+        ("final_test_acc", Json::Num(report.final_test_acc)),
+    ]));
+
+    let threads = gnn_spmm::util::parallel::num_threads();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_minibatch".to_string())),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "unit",
+            Json::Str("ns (medians over epochs); rates in [0,1]".to_string()),
+        ),
+        ("minibatch", Json::Arr(records)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

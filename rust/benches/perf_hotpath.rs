@@ -18,10 +18,10 @@
 //!
 //! Allocation counts come from a counting global allocator. With the
 //! persistent worker pool, the `_into` kernels are allocation-free in
-//! steady state for the compressed formats (CSR/CSC/COO/BSR/DIA) — the pool
-//! dispatches on parked workers and scatter kernels reuse grow-only scratch
-//! — so `allocs_per_op_into` should read 0 after warmup; LIL pays one small
-//! range-list allocation per call (no `indptr` to binary-search).
+//! steady state for every format — the pool dispatches on parked workers,
+//! scatter kernels reuse grow-only scratch, and LIL binary-searches a
+//! cached per-matrix nnz prefix-sum instead of materializing a range list —
+//! so `allocs_per_op_into` should read 0 after warmup.
 
 use gnn_spmm::bench::{bench, section};
 use gnn_spmm::features::extract_features;

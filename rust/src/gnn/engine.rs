@@ -24,6 +24,7 @@
 //! a cached COO view that is invalidated only when the slot's *content*
 //! changes — format conversions keep it.
 
+use crate::predictor::cache::DecisionCache;
 use crate::sparse::{Coo, Format, SparseMatrix};
 use crate::tensor::Matrix;
 use crate::util::timer::Stopwatch;
@@ -124,6 +125,8 @@ pub struct Decision {
     pub slot: String,
     pub format: Format,
     pub density: f64,
+    /// Answered by the decision cache (no COO view, no policy call).
+    pub cached: bool,
 }
 
 /// The format-switching SpMM engine.
@@ -135,6 +138,11 @@ pub struct AdjEngine<'p> {
     /// "monitor the input matrix sparsity and dynamically adjust").
     pub redecide_rel_drift: f64,
     pub decisions: Vec<Decision>,
+    /// Optional signature-keyed decision cache (mini-batch shard streams;
+    /// see `predictor::cache`). Off by default: full-batch runs decide a
+    /// handful of times and the paper's overhead accounting stays
+    /// untouched.
+    decision_cache: Option<DecisionCache>,
 }
 
 impl<'p> AdjEngine<'p> {
@@ -145,7 +153,20 @@ impl<'p> AdjEngine<'p> {
             sw: Stopwatch::new(),
             redecide_rel_drift: 0.5,
             decisions: Vec::new(),
+            decision_cache: None,
         }
+    }
+
+    /// Turn on the signature-keyed decision cache. The cache's hysteresis
+    /// dead-band inherits [`AdjEngine::redecide_rel_drift`] (set the field
+    /// first if a non-default band is wanted).
+    pub fn enable_decision_cache(&mut self) {
+        self.decision_cache = Some(DecisionCache::new(self.redecide_rel_drift));
+    }
+
+    /// The decision cache, if enabled (hit/miss accounting for reports).
+    pub fn decision_cache(&self) -> Option<&DecisionCache> {
+        self.decision_cache.as_ref()
     }
 
     /// Register a sparse operand; returns its slot id.
@@ -168,6 +189,19 @@ impl<'p> AdjEngine<'p> {
         let s = &mut self.slots[slot];
         s.matrix = SparseMatrix::Coo(coo);
         s.coo_view = None;
+    }
+
+    /// Rebind a slot to a **different operand** in whatever format it
+    /// already carries — the mini-batch shard stream, where each batch's
+    /// extracted submatrix (CSR from the direct extraction path) replaces
+    /// the previous one. Unlike [`AdjEngine::update_slot`], the format
+    /// decision is cleared: a new matrix deserves a fresh decision, which
+    /// the decision cache answers in O(1) for structurally similar shards.
+    pub fn set_slot_matrix(&mut self, slot: usize, m: SparseMatrix) {
+        let s = &mut self.slots[slot];
+        s.matrix = m;
+        s.coo_view = None;
+        s.decided = None;
     }
 
     /// Refresh a slot whose **pattern is unchanged** with new values in
@@ -251,23 +285,43 @@ impl<'p> AdjEngine<'p> {
             }
         };
         if need_decision {
-            // The policy inspects a COO view (cost charged by the policy);
-            // the view is cached across re-decisions until content changes.
-            if self.slots[slot].coo_view.is_none() {
-                let coo =
-                    self.sw.phase("to_coo_view", || self.slots[slot].matrix.to_coo());
-                self.slots[slot].coo_view = Some(coo);
-            }
             let name = self.slots[slot].name.clone();
-            let coo = self.slots[slot].coo_view.take().unwrap();
-            let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
-            self.slots[slot].coo_view = Some(coo);
+            // Cache first: the signature reads O(1) header fields, so a hit
+            // skips both the COO view and the policy (feature extraction /
+            // inference) entirely — the mini-batch amortization.
+            let (rows, _) = self.slots[slot].matrix.ops().shape();
+            let nnz = self.slots[slot].matrix.nnz();
+            let cached_fmt = self
+                .decision_cache
+                .as_mut()
+                .and_then(|c| c.lookup(&name, rows, nnz, density, d));
+            let (fmt, cached) = match cached_fmt {
+                Some(fmt) => (fmt, true),
+                None => {
+                    // The policy inspects a COO view (cost charged by the
+                    // policy); the view is cached across re-decisions until
+                    // content changes.
+                    if self.slots[slot].coo_view.is_none() {
+                        let coo =
+                            self.sw.phase("to_coo_view", || self.slots[slot].matrix.to_coo());
+                        self.slots[slot].coo_view = Some(coo);
+                    }
+                    let coo = self.slots[slot].coo_view.take().unwrap();
+                    let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
+                    self.slots[slot].coo_view = Some(coo);
+                    if let Some(c) = self.decision_cache.as_mut() {
+                        c.store(&name, rows, nnz, density, d, fmt);
+                    }
+                    (fmt, false)
+                }
+            };
             self.slots[slot].decided = Some(fmt);
             self.slots[slot].density_at_decision = density;
             self.decisions.push(Decision {
                 slot: name,
                 format: fmt,
                 density,
+                cached,
             });
         }
         let fmt = self.slots[slot].decided.unwrap();
@@ -455,6 +509,96 @@ mod tests {
             .map(|r| r.2)
             .unwrap_or(0);
         assert_eq!(third, 2, "content update must rebuild the COO view");
+    }
+
+    #[test]
+    fn set_slot_matrix_clears_decision_and_keeps_format() {
+        let mut rng = Rng::new(21);
+        let a = random_coo(&mut rng, 32, 0.1);
+        let b = random_coo(&mut rng, 32, 0.1);
+        let x = Matrix::rand(32, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", a);
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decisions.len(), 1);
+        // Rebinding with an already-CSR matrix: decision re-made, no
+        // conversion needed afterwards (the matrix is already in the
+        // decided format).
+        let csr = SparseMatrix::Csr(crate::sparse::Csr::from_coo(&b));
+        engine.set_slot_matrix(slot, csr);
+        assert_eq!(engine.slot_format(slot), None);
+        let want = b.to_dense().matmul(&x);
+        let y = engine.spmm(slot, &x);
+        assert!(y.max_abs_diff(&want) < 1e-4);
+        assert_eq!(engine.decisions.len(), 2);
+        let converts = engine.sw.report().iter().find(|r| r.0 == "convert").map(|r| r.2).unwrap_or(0);
+        assert_eq!(converts, 1, "only the first decision should convert");
+    }
+
+    #[test]
+    fn decision_cache_answers_similar_slot_streams() {
+        let mut rng = Rng::new(22);
+        let x = Matrix::rand(64, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        // Density 0.15 keeps realized draws clear of the cache's
+        // half-decade bucket boundaries (0.1 and 0.316).
+        let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
+        let _ = engine.spmm(slot, &x);
+        // First decision: miss (policy consulted, COO view built).
+        assert_eq!(engine.decision_cache().unwrap().misses, 1);
+        assert_eq!(engine.decision_cache().unwrap().hits, 0);
+        let views_first = engine
+            .sw
+            .report()
+            .iter()
+            .find(|r| r.0 == "to_coo_view")
+            .map(|r| r.2)
+            .unwrap_or(0);
+        assert_eq!(views_first, 1);
+        // A stream of structurally similar matrices: every further decision
+        // is a cache hit and never materializes a COO view.
+        for _ in 0..5 {
+            engine.set_slot_matrix(
+                slot,
+                SparseMatrix::Coo(random_coo(&mut rng, 64, 0.15)),
+            );
+            let _ = engine.spmm(slot, &x);
+        }
+        let cache = engine.decision_cache().unwrap();
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 5);
+        assert!(cache.hit_rate() > 0.8);
+        let views_after = engine
+            .sw
+            .report()
+            .iter()
+            .find(|r| r.0 == "to_coo_view")
+            .map(|r| r.2)
+            .unwrap_or(0);
+        assert_eq!(views_after, 1, "cache hits must not build COO views");
+        // Decisions record their provenance.
+        assert!(!engine.decisions[0].cached);
+        assert!(engine.decisions[1..].iter().all(|d| d.cached));
+    }
+
+    #[test]
+    fn decision_cache_misses_on_structural_change() {
+        let mut rng = Rng::new(23);
+        let x = Matrix::rand(64, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.05));
+        let _ = engine.spmm(slot, &x);
+        // 6× denser: different density bucket (and beyond the dead-band).
+        engine.set_slot_matrix(slot, SparseMatrix::Coo(random_coo(&mut rng, 64, 0.3)));
+        let _ = engine.spmm(slot, &x);
+        let cache = engine.decision_cache().unwrap();
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 0);
     }
 
     #[test]

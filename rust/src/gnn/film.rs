@@ -15,7 +15,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, SparseMatrix, SparseOps};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -61,6 +61,43 @@ struct Cache {
     p2: Matrix,
 }
 
+/// One FiLM layer's parameter gradients.
+pub struct FilmLayerGrads {
+    pub dw: Matrix,
+    pub dg: Matrix,
+    pub dbm: Matrix,
+    pub dbias: Vec<f32>,
+}
+
+/// One backward pass's parameter gradients — the mini-batch accumulation
+/// unit (see `gnn::minibatch`).
+pub struct FilmGrads {
+    pub l1: FilmLayerGrads,
+    pub l2: FilmLayerGrads,
+}
+
+impl FilmGrads {
+    /// `self += w · other` (shard-weighted gradient accumulation).
+    pub fn add_scaled(&mut self, o: &FilmGrads, w: f32) {
+        for (a, b) in [(&mut self.l1, &o.l1), (&mut self.l2, &o.l2)] {
+            ops::axpy_slice(&mut a.dw.data, &b.dw.data, w);
+            ops::axpy_slice(&mut a.dg.data, &b.dg.data, w);
+            ops::axpy_slice(&mut a.dbm.data, &b.dbm.data, w);
+            ops::axpy_slice(&mut a.dbias, &b.dbias, w);
+        }
+    }
+
+    /// `self *= w`.
+    pub fn scale(&mut self, w: f32) {
+        for l in [&mut self.l1, &mut self.l2] {
+            ops::scale_slice(&mut l.dw.data, w);
+            ops::scale_slice(&mut l.dg.data, w);
+            ops::scale_slice(&mut l.dbm.data, w);
+            ops::scale_slice(&mut l.dbias, w);
+        }
+    }
+}
+
 fn scale_rows(m: &Matrix, rho: &[f32]) -> Matrix {
     let mut out = m.clone();
     for r in 0..out.rows {
@@ -90,10 +127,7 @@ impl Film {
             lr,
         );
         let n = ds.adj.rows;
-        let mut rho = vec![0f32; n];
-        for i in 0..ds.adj_norm.nnz() {
-            rho[ds.adj_norm.row[i] as usize] += ds.adj_norm.val[i];
-        }
+        let rho = SparseOps::row_sums(&ds.adj_norm);
         Film {
             s_x: eng.add_slot("film.X", ds.features.clone()),
             s_a1: eng.add_slot("film.A.l1", ds.adj_norm.clone()),
@@ -133,7 +167,9 @@ impl Film {
         logits
     }
 
-    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+    /// Backward pass returning parameter gradients without applying them
+    /// (the mini-batch accumulation path).
+    pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> FilmGrads {
         let cache = self.cache.take().expect("forward before backward");
         let db2 = ops::col_sums(dlogits);
         // Layer 2.
@@ -164,15 +200,40 @@ impl Film {
         let dg1 = eng.spmm_t(self.s_x, &dgamma1);
         let dbm1 = eng.spmm_t(self.s_x, &dbeta1);
 
+        FilmGrads {
+            l1: FilmLayerGrads { dw: dw1, dg: dg1, dbm: dbm1, dbias: db1 },
+            l2: FilmLayerGrads { dw: dw2, dg: dg2, dbm: dbm2, dbias: db2 },
+        }
+    }
+
+    /// One Adam step from (possibly accumulated) gradients.
+    pub fn apply_grads(&mut self, g: &FilmGrads) {
         self.adam.tick();
-        self.adam.update_matrix(0, &mut self.l1.w, &dw1);
-        self.adam.update_matrix(1, &mut self.l1.g, &dg1);
-        self.adam.update_matrix(2, &mut self.l1.bm, &dbm1);
-        self.adam.update(3, &mut self.l1.bias, &db1);
-        self.adam.update_matrix(4, &mut self.l2.w, &dw2);
-        self.adam.update_matrix(5, &mut self.l2.g, &dg2);
-        self.adam.update_matrix(6, &mut self.l2.bm, &dbm2);
-        self.adam.update(7, &mut self.l2.bias, &db2);
+        self.adam.update_matrix(0, &mut self.l1.w, &g.l1.dw);
+        self.adam.update_matrix(1, &mut self.l1.g, &g.l1.dg);
+        self.adam.update_matrix(2, &mut self.l1.bm, &g.l1.dbm);
+        self.adam.update(3, &mut self.l1.bias, &g.l1.dbias);
+        self.adam.update_matrix(4, &mut self.l2.w, &g.l2.dw);
+        self.adam.update_matrix(5, &mut self.l2.g, &g.l2.dg);
+        self.adam.update_matrix(6, &mut self.l2.bm, &g.l2.dbm);
+        self.adam.update(7, &mut self.l2.bias, &g.l2.dbias);
+    }
+
+    /// Backward + Adam step (full-batch path).
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let g = self.backward_grads(eng, dlogits);
+        self.apply_grads(&g);
+    }
+
+    /// Point the model at a new (sub)graph: induced feature rows `x` and
+    /// induced normalized adjacency `a`. ρ (the per-node normalized degree
+    /// the modulation scales by) is recomputed from `a`'s row sums via the
+    /// format-dispatched `row_sums` — no COO round-trip for CSR shards.
+    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
+        self.rho = a.row_sums();
+        eng.set_slot_matrix(self.s_x, x);
+        eng.set_slot_matrix(self.s_a1, a.clone());
+        eng.set_slot_matrix(self.s_a2, a);
     }
 }
 

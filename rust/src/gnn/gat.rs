@@ -12,7 +12,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -116,6 +116,43 @@ impl GatLayer {
     }
 }
 
+/// One GAT layer's parameter gradients.
+pub struct GatLayerGrads {
+    pub dw: Matrix,
+    pub dal: Vec<f32>,
+    pub dar: Vec<f32>,
+    pub dbias: Vec<f32>,
+}
+
+/// One backward pass's parameter gradients — the mini-batch accumulation
+/// unit (see `gnn::minibatch`).
+pub struct GatGrads {
+    pub l1: GatLayerGrads,
+    pub l2: GatLayerGrads,
+}
+
+impl GatGrads {
+    /// `self += w · other` (shard-weighted gradient accumulation).
+    pub fn add_scaled(&mut self, o: &GatGrads, w: f32) {
+        for (a, b) in [(&mut self.l1, &o.l1), (&mut self.l2, &o.l2)] {
+            ops::axpy_slice(&mut a.dw.data, &b.dw.data, w);
+            ops::axpy_slice(&mut a.dal, &b.dal, w);
+            ops::axpy_slice(&mut a.dar, &b.dar, w);
+            ops::axpy_slice(&mut a.dbias, &b.dbias, w);
+        }
+    }
+
+    /// `self *= w`.
+    pub fn scale(&mut self, w: f32) {
+        for l in [&mut self.l1, &mut self.l2] {
+            ops::scale_slice(&mut l.dw.data, w);
+            ops::scale_slice(&mut l.dal, w);
+            ops::scale_slice(&mut l.dar, w);
+            ops::scale_slice(&mut l.dbias, w);
+        }
+    }
+}
+
 /// Two-layer single-head GAT.
 pub struct Gat {
     l1: GatLayer,
@@ -139,12 +176,7 @@ impl Gat {
     ) -> Gat {
         let n = ds.adj.rows;
         // Attention pattern: adjacency + self loops (values irrelevant).
-        let mut triples: Vec<(u32, u32, f32)> =
-            (0..ds.adj.nnz()).map(|i| (ds.adj.row[i], ds.adj.col[i], 1.0)).collect();
-        for i in 0..n as u32 {
-            triples.push((i, i, 1.0));
-        }
-        let pattern = Coo::from_triples(n, n, triples);
+        let pattern = Gat::attention_pattern(&ds.adj);
         let l1 = GatLayer::new(ds.features.cols, hidden, rng);
         let l2 = GatLayer::new(hidden, ds.n_classes, rng);
         let adam = Adam::new(
@@ -263,7 +295,9 @@ impl Gat {
         )
     }
 
-    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+    /// Backward pass returning parameter gradients without applying them
+    /// (the mini-batch accumulation path).
+    pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> GatGrads {
         let pre1 = self.h1_cache.take().expect("forward before backward");
         let (dh1, dw2, dal2, dar2, db2) = Self::layer_backward(
             &self.pattern, &self.l2, eng, self.s_h1, self.s_att2, dlogits,
@@ -272,15 +306,56 @@ impl Gat {
         let (_dx, dw1, dal1, dar1, db1) = Self::layer_backward(
             &self.pattern, &self.l1, eng, self.s_x, self.s_att1, &dpre1,
         );
+        GatGrads {
+            l1: GatLayerGrads { dw: dw1, dal: dal1, dar: dar1, dbias: db1 },
+            l2: GatLayerGrads { dw: dw2, dal: dal2, dar: dar2, dbias: db2 },
+        }
+    }
+
+    /// One Adam step from (possibly accumulated) gradients.
+    pub fn apply_grads(&mut self, g: &GatGrads) {
         self.adam.tick();
-        self.adam.update_matrix(0, &mut self.l1.w, &dw1);
-        self.adam.update(1, &mut self.l1.al, &dal1);
-        self.adam.update(2, &mut self.l1.ar, &dar1);
-        self.adam.update(3, &mut self.l1.bias, &db1);
-        self.adam.update_matrix(4, &mut self.l2.w, &dw2);
-        self.adam.update(5, &mut self.l2.al, &dal2);
-        self.adam.update(6, &mut self.l2.ar, &dar2);
-        self.adam.update(7, &mut self.l2.bias, &db2);
+        self.adam.update_matrix(0, &mut self.l1.w, &g.l1.dw);
+        self.adam.update(1, &mut self.l1.al, &g.l1.dal);
+        self.adam.update(2, &mut self.l1.ar, &g.l1.dar);
+        self.adam.update(3, &mut self.l1.bias, &g.l1.dbias);
+        self.adam.update_matrix(4, &mut self.l2.w, &g.l2.dw);
+        self.adam.update(5, &mut self.l2.al, &g.l2.dal);
+        self.adam.update(6, &mut self.l2.ar, &g.l2.dar);
+        self.adam.update(7, &mut self.l2.bias, &g.l2.dbias);
+    }
+
+    /// Backward + Adam step (full-batch path).
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let g = self.backward_grads(eng, dlogits);
+        self.apply_grads(&g);
+    }
+
+    /// Point the model at a new (sub)graph: induced feature rows `x` and
+    /// the induced **attention pattern** (raw adjacency + self loops, unit
+    /// values). The attention slots are re-seeded with the pattern so the
+    /// per-forward value refresh (`update_slot_values`) finds a matching
+    /// edge count; their format decision is re-made through the decision
+    /// cache.
+    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, pattern: Coo) {
+        eng.set_slot_matrix(self.s_x, x);
+        eng.set_slot_matrix(self.s_att1, SparseMatrix::Coo(pattern.clone()));
+        eng.set_slot_matrix(self.s_att2, SparseMatrix::Coo(pattern.clone()));
+        self.pattern = pattern;
+    }
+
+    /// Attention pattern for an arbitrary raw adjacency: adjacency + self
+    /// loops, unit values (what [`Gat::new`] builds for the full graph).
+    pub fn attention_pattern(adj: &Coo) -> Coo {
+        let n = adj.rows;
+        let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(adj.nnz() + n);
+        for i in 0..adj.nnz() {
+            triples.push((adj.row[i], adj.col[i], 1.0));
+        }
+        for i in 0..n as u32 {
+            triples.push((i, i, 1.0));
+        }
+        Coo::from_triples(n, n, triples)
     }
 }
 

@@ -15,7 +15,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -36,6 +36,34 @@ pub struct Gcn {
 struct Cache {
     s0_pre: Matrix,
     h1_density: f64,
+}
+
+/// One backward pass's parameter gradients — the mini-batch accumulation
+/// unit (grads are summed shard-weighted across batches, then applied in a
+/// single optimizer step; see `gnn::minibatch`).
+pub struct GcnGrads {
+    pub dw0: Matrix,
+    pub db0: Vec<f32>,
+    pub dw1: Matrix,
+    pub db1: Vec<f32>,
+}
+
+impl GcnGrads {
+    /// `self += w · other` (shard-weighted gradient accumulation).
+    pub fn add_scaled(&mut self, o: &GcnGrads, w: f32) {
+        ops::axpy_slice(&mut self.dw0.data, &o.dw0.data, w);
+        ops::axpy_slice(&mut self.db0, &o.db0, w);
+        ops::axpy_slice(&mut self.dw1.data, &o.dw1.data, w);
+        ops::axpy_slice(&mut self.db1, &o.db1, w);
+    }
+
+    /// `self *= w`.
+    pub fn scale(&mut self, w: f32) {
+        ops::scale_slice(&mut self.dw0.data, w);
+        ops::scale_slice(&mut self.db0, w);
+        ops::scale_slice(&mut self.dw1.data, w);
+        ops::scale_slice(&mut self.db1, w);
+    }
 }
 
 impl Gcn {
@@ -89,8 +117,10 @@ impl Gcn {
         logits
     }
 
-    /// Backward + Adam step from the loss gradient wrt logits.
-    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+    /// Backward pass from the loss gradient wrt logits, returning the
+    /// parameter gradients **without** applying them — the mini-batch loop
+    /// accumulates these across shards before a single optimizer step.
+    pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> GcnGrads {
         let cache = self.cache.take().expect("forward before backward");
         let db1 = ops::col_sums(dlogits);
         // dZ1 = Âᵀ·dlogits (Â symmetric).
@@ -106,12 +136,33 @@ impl Gcn {
         // dW0 = Xᵀ·dZ0 — transpose-free on the X slot.
         let dw0 = eng.spmm_t(self.s_x, &dz0);
         eng.recycle(self.s_a1, dz0);
+        GcnGrads { dw0, db0, dw1, db1 }
+    }
 
+    /// One Adam step from (possibly accumulated) gradients.
+    pub fn apply_grads(&mut self, g: &GcnGrads) {
         self.adam.tick();
-        self.adam.update_matrix(0, &mut self.w0, &dw0);
-        self.adam.update(1, &mut self.b0, &db0);
-        self.adam.update_matrix(2, &mut self.w1, &dw1);
-        self.adam.update(3, &mut self.b1, &db1);
+        self.adam.update_matrix(0, &mut self.w0, &g.dw0);
+        self.adam.update(1, &mut self.b0, &g.db0);
+        self.adam.update_matrix(2, &mut self.w1, &g.dw1);
+        self.adam.update(3, &mut self.b1, &g.db1);
+    }
+
+    /// Backward + Adam step from the loss gradient wrt logits (the
+    /// full-batch path: gradients applied immediately).
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let g = self.backward_grads(eng, dlogits);
+        self.apply_grads(&g);
+    }
+
+    /// Point the model's engine slots at a new (sub)graph: induced feature
+    /// rows `x` and induced normalized adjacency `a` (both layers share
+    /// it). Shapes may differ per shard; the weights don't. H1 re-derives
+    /// itself on the next forward.
+    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
+        eng.set_slot_matrix(self.s_x, x);
+        eng.set_slot_matrix(self.s_a1, a.clone());
+        eng.set_slot_matrix(self.s_a2, a);
     }
 
     /// Density of the sparsified layer-1 activation after the last forward

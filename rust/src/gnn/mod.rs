@@ -8,6 +8,11 @@
 //! format / learned predictor / oracle), converts if needed, and charges
 //! feature-extraction + prediction + conversion overhead to the measured
 //! time — matching the paper's accounting.
+//!
+//! Beyond full-batch scale, [`minibatch`] trains GCN/GAT/FiLM over node
+//! shards (degree-aware partition → seeded neighbor sampling → direct
+//! submatrix extraction → cached per-shard format decisions → gradient
+//! accumulation; DESIGN.md §Minibatch).
 
 pub mod engine;
 pub mod adam;
@@ -17,6 +22,8 @@ pub mod rgcn;
 pub mod film;
 pub mod egc;
 pub mod train;
+pub mod minibatch;
 
 pub use engine::{AdjEngine, FormatPolicy, StaticPolicy};
+pub use minibatch::{train_minibatch, MinibatchConfig, MinibatchReport};
 pub use train::{train, ModelKind, TrainConfig, TrainReport, ALL_MODELS};

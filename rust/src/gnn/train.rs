@@ -44,6 +44,14 @@ impl ModelKind {
     pub fn from_name(name: &str) -> Option<ModelKind> {
         ALL_MODELS.iter().copied().find(|m| m.name().eq_ignore_ascii_case(name))
     }
+
+    /// Whether the model has a sharded mini-batch training path
+    /// (`gnn::minibatch::train_minibatch`). GCN/GAT/FiLM rebind their
+    /// engine slots per shard (`set_graph`) and split gradient computation
+    /// from the optimizer step; RGCN/EGC still train full-batch only.
+    pub fn supports_minibatch(self) -> bool {
+        matches!(self, ModelKind::Gcn | ModelKind::Gat | ModelKind::Film)
+    }
 }
 
 enum AnyModel {
@@ -251,6 +259,44 @@ mod tests {
         }
         assert_eq!(ModelKind::from_name("gcn"), Some(ModelKind::Gcn));
         assert_eq!(ModelKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn minibatch_support_matrix() {
+        assert!(ModelKind::Gcn.supports_minibatch());
+        assert!(ModelKind::Gat.supports_minibatch());
+        assert!(ModelKind::Film.supports_minibatch());
+        assert!(!ModelKind::Rgcn.supports_minibatch());
+        assert!(!ModelKind::Egc.supports_minibatch());
+    }
+
+    /// The grads-split refactor must leave full-batch training identical:
+    /// `backward` ≡ `backward_grads` + `apply_grads` (same Adam sequence).
+    #[test]
+    fn split_backward_matches_fused_backward() {
+        let ds = tiny();
+        let run = |split: bool| -> Matrix {
+            let mut rng = Rng::new(77);
+            let mut policy = StaticPolicy(Format::Csr);
+            let mut eng = AdjEngine::new(&mut policy);
+            let mut model =
+                crate::gnn::gcn::Gcn::new(&ds, 8, 0.02, &mut rng, &mut eng);
+            for _ in 0..4 {
+                let logits = model.forward(&mut eng);
+                let (_, dlogits) =
+                    ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+                if split {
+                    let g = model.backward_grads(&mut eng, &dlogits);
+                    model.apply_grads(&g);
+                } else {
+                    model.backward(&mut eng, &dlogits);
+                }
+            }
+            model.forward(&mut eng)
+        };
+        let a = run(false);
+        let b = run(true);
+        assert!(a.max_abs_diff(&b) < 1e-6, "split/fused backward diverged");
     }
 
     #[test]

@@ -5,21 +5,35 @@
 
 pub mod generators;
 pub mod datasets;
+pub mod partition;
+pub mod sampler;
 
-pub use datasets::{DatasetSpec, GraphDataset, RelationalDataset, PAPER_DATASETS};
+pub use datasets::{DatasetSpec, GraphDataset, RelationalDataset, LARGE_DATASETS, PAPER_DATASETS};
 pub use generators::{gen_matrix, MatrixPattern};
+pub use partition::Partitioning;
+pub use sampler::{NeighborSampler, SubgraphBatch};
 
 use crate::sparse::Coo;
 
 /// Symmetrically normalized adjacency with self-loops:
 /// `Â = D^{-1/2} (A + I) D^{-1/2}` — the GCN propagation operator.
+///
+/// Assumes **nonnegative edge weights**: the degrees are weight sums, so a
+/// negative weight would make `D^{-1/2}` meaningless. Callers own the
+/// invariant (every dataset generator emits unit/positive weights); it is
+/// asserted in debug builds rather than silently patched with `abs()`.
 pub fn normalize_adj(adj: &Coo) -> Coo {
     assert_eq!(adj.rows, adj.cols, "adjacency must be square");
+    debug_assert!(
+        adj.val.iter().all(|&v| v >= 0.0),
+        "normalize_adj requires nonnegative edge weights"
+    );
     let n = adj.rows;
-    // A + I
-    let mut triples: Vec<(u32, u32, f32)> = (0..adj.nnz())
-        .map(|i| (adj.row[i], adj.col[i], adj.val[i].abs()))
-        .collect();
+    // A + I, pre-sized: exactly nnz + n triples, no per-push growth.
+    let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(adj.nnz() + n);
+    for i in 0..adj.nnz() {
+        triples.push((adj.row[i], adj.col[i], adj.val[i]));
+    }
     for i in 0..n {
         triples.push((i as u32, i as u32, 1.0));
     }
@@ -102,6 +116,14 @@ mod tests {
                 assert!((dense.at(r, c) - dense.at(c, r)).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "nonnegative")]
+    fn normalize_rejects_negative_weights() {
+        let adj = Coo::from_triples(2, 2, vec![(0, 1, -1.0), (1, 0, -1.0)]);
+        let _ = normalize_adj(&adj);
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Signature-keyed format-decision cache for streamed inputs.
+//!
+//! Full-batch training asks the predictor for a format a handful of times
+//! per run; sharded mini-batch training asks **per slot per shard per
+//! epoch** — hundreds of decisions over matrices that are structurally
+//! near-identical (same partitioner, same sampler fan-out). Re-running
+//! feature extraction (the paper's Table-2 features are O(nnz)) for every
+//! shard would let decision overhead eat exactly the SpMM savings the
+//! predictor buys — ParamSpMM makes the same amortization argument for
+//! adaptive per-input kernel selection.
+//!
+//! The cache keys decisions by the **slot identity** plus a **cheap
+//! structural signature** — log₂ buckets of rows, nnz and dense-operand
+//! width plus a half-decade density bucket — all O(1) reads off the matrix
+//! header, no COO view, no feature pass. Keying by slot keeps
+//! slot-sensitive policies (`decide_for_slot`) correct: one slot's cached
+//! answer is never served to another. Within a bucket, a **hysteresis dead-band** extends the engine's
+//! `redecide_rel_drift` rule: a cached decision keeps answering until the
+//! observed density drifts more than `rel_drift` from the density anchored
+//! at decision time; then the entry is re-decided and re-anchored. Shards
+//! that straddle a bucket boundary simply occupy two entries.
+
+use crate::sparse::Format;
+use std::collections::HashMap;
+
+/// Pack the structural signature into one key. Buckets are deliberately
+/// coarse: the predictor's own decision boundaries are much coarser than a
+/// factor of 2 in size or √10 in density (paper Fig. 1: winners flip
+/// between density *regimes*, not between adjacent sizes).
+///
+/// The **slot identity** is part of the key (22 bits of FNV-1a over the
+/// slot name): `FormatPolicy::decide_for_slot` may answer differently per
+/// slot (e.g. [`crate::gnn::engine::SlotTargetedPolicy`]), so a decision
+/// cached for one slot must never be served to another.
+fn signature(slot: &str, rows: usize, nnz: usize, density: f64, d: usize) -> u64 {
+    let log2 = |v: usize| u64::from(usize::BITS - v.max(1).leading_zeros());
+    // Half-decade buckets, offset to stay positive in the packing and
+    // clamped so even denormal densities can't bleed into other fields.
+    let density_bucket: u64 = if density > 0.0 {
+        ((density.log10() * 2.0).floor() as i64 + 512).clamp(1, 1023) as u64
+    } else {
+        0
+    };
+    let mut name_hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in slot.bytes() {
+        name_hash = (name_hash ^ u64::from(b)).wrapping_mul(0x0100_0000_01b3);
+    }
+    (log2(rows) << 48)
+        | (log2(nnz) << 40)
+        | (log2(d) << 32)
+        | ((name_hash & 0x3f_ffff) << 10)
+        | density_bucket
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CacheEntry {
+    format: Format,
+    /// Density anchor for the hysteresis dead-band.
+    density: f64,
+}
+
+/// Format-decision cache with drift hysteresis (see module docs).
+#[derive(Clone, Debug)]
+pub struct DecisionCache {
+    entries: HashMap<u64, CacheEntry>,
+    /// Relative density drift tolerated within a signature bucket before
+    /// the cached decision is re-made (inherited from the engine's
+    /// `redecide_rel_drift`).
+    pub rel_drift: f64,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to the policy.
+    pub misses: u64,
+}
+
+impl DecisionCache {
+    pub fn new(rel_drift: f64) -> DecisionCache {
+        DecisionCache { entries: HashMap::new(), rel_drift, hits: 0, misses: 0 }
+    }
+
+    /// Answer a decision from the cache, or record a miss. `slot` is the
+    /// engine slot name (part of the key — policies may be slot-sensitive);
+    /// `d` is the dense operand width of the upcoming multiply (part of
+    /// the signature: the policy sees it too).
+    pub fn lookup(
+        &mut self,
+        slot: &str,
+        rows: usize,
+        nnz: usize,
+        density: f64,
+        d: usize,
+    ) -> Option<Format> {
+        let sig = signature(slot, rows, nnz, density, d);
+        match self.entries.get(&sig) {
+            Some(e) if rel_dev(density, e.density) <= self.rel_drift => {
+                self.hits += 1;
+                Some(e.format)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a freshly made decision, (re-)anchoring the drift dead-band
+    /// at the observed density.
+    pub fn store(
+        &mut self,
+        slot: &str,
+        rows: usize,
+        nnz: usize,
+        density: f64,
+        d: usize,
+        format: Format,
+    ) {
+        let sig = signature(slot, rows, nnz, density, d);
+        self.entries.insert(sig, CacheEntry { format, density });
+    }
+
+    /// Distinct signatures currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fraction of lookups answered from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Relative deviation of `x` from anchor `a` (symmetric in magnitude).
+fn rel_dev(x: f64, a: f64) -> f64 {
+    (x - a).abs() / a.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_for_similar_matrices() {
+        let mut c = DecisionCache::new(0.5);
+        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 16), None);
+        c.store("A", 1000, 5000, 0.005, 16, Format::Csr);
+        // Same bucket, slightly different shard.
+        assert_eq!(c.lookup("A", 990, 5100, 0.0052, 16), Some(Format::Csr));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_buckets_are_distinct_entries() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 5000, 0.005, 16, Format::Csr);
+        // 4× the rows: different rows bucket.
+        assert_eq!(c.lookup("A", 4000, 5000, 0.005, 16), None);
+        // 4× nnz: different nnz bucket.
+        assert_eq!(c.lookup("A", 1000, 20000, 0.005, 16), None);
+        // 10× density: different density bucket.
+        assert_eq!(c.lookup("A", 1000, 5000, 0.05, 16), None);
+        // 4× dense width: different d bucket.
+        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 64), None);
+        c.store("A", 4000, 5000, 0.005, 16, Format::Coo);
+        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 16), Some(Format::Csr));
+        assert_eq!(c.lookup("A", 4000, 5000, 0.005, 16), Some(Format::Coo));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn drift_beyond_band_invalidates_and_restore_reanchors() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 5000, 0.0040, 16, Format::Csr);
+        // Within the same half-decade bucket but > 50% above the anchor:
+        // hysteresis trips, the entry must be re-decided.
+        assert_eq!(c.lookup("A", 1000, 7000, 0.0070, 16), None);
+        c.store("A", 1000, 7000, 0.0070, 16, Format::Csc);
+        // New anchor holds for nearby densities…
+        assert_eq!(c.lookup("A", 1000, 6900, 0.0069, 16), Some(Format::Csc));
+        // …and a density far below the *new* anchor re-decides even though
+        // it sits in the same bucket (dead-band moved with the anchor —
+        // that is the hysteresis).
+        assert_eq!(c.lookup("A", 1000, 5000, 0.0034, 16), None);
+    }
+
+    /// Slot-sensitive policies (`SlotTargetedPolicy`) may answer
+    /// differently for structurally identical matrices: the slot name must
+    /// isolate cache entries.
+    #[test]
+    fn same_structure_different_slots_are_distinct_entries() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("gcn.H1", 1000, 5000, 0.005, 16, Format::Dia);
+        assert_eq!(c.lookup("gcn.A.l1", 1000, 5000, 0.005, 16), None);
+        c.store("gcn.A.l1", 1000, 5000, 0.005, 16, Format::Csr);
+        assert_eq!(c.lookup("gcn.H1", 1000, 5000, 0.005, 16), Some(Format::Dia));
+        assert_eq!(c.lookup("gcn.A.l1", 1000, 5000, 0.005, 16), Some(Format::Csr));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_density_degenerates_safely() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 10, 0, 0.0, 4, Format::Coo);
+        assert_eq!(c.lookup("A", 10, 0, 0.0, 4), Some(Format::Coo));
+    }
+}

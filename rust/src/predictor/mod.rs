@@ -9,12 +9,17 @@
 //!   the learned predictor, the oracle, and prior-work baselines (CNN,
 //!   decision tree) used by Table 3.
 //! * [`spmm_predict`] — the user-facing `SpMMPredict` call of §4.6.
+//! * [`cache`] — the signature-keyed decision cache that amortizes feature
+//!   extraction over streams of structurally similar inputs (the sharded
+//!   mini-batch path; see DESIGN.md §Minibatch).
 
 pub mod labeler;
 pub mod training;
 pub mod policy;
 pub mod spmm_predict;
+pub mod cache;
 
+pub use cache::DecisionCache;
 pub use labeler::{label_for, profile_formats, FormatProfile};
 pub use policy::{OraclePolicy, PredictedPolicy};
 pub use spmm_predict::spmm_predict;

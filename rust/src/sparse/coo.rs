@@ -187,6 +187,13 @@ impl Coo {
         });
     }
 
+    /// Induced submatrix `self[rows, cols]` for sorted, duplicate-free id
+    /// selections — native COO filter (this *is* the canonical form, so no
+    /// round-trip is involved; see `ops::extract_coo`).
+    pub fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> Coo {
+        super::ops::extract_coo(self, rows, cols)
+    }
+
     /// Per-row non-zero counts (used by conversions and feature extraction).
     pub fn row_counts(&self) -> Vec<u32> {
         let mut counts = vec![0u32; self.rows];
@@ -224,6 +231,16 @@ impl SparseOps for Coo {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Coo::spmm_t_into(self, x, out)
+    }
+    fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
+        super::SparseMatrix::Coo(Coo::extract_rows_cols(self, rows, cols))
+    }
+    fn row_sums(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows];
+        for i in 0..self.nnz() {
+            out[self.row[i] as usize] += self.val[i];
+        }
+        out
     }
 }
 

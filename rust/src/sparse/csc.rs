@@ -124,6 +124,37 @@ impl Csc {
         );
     }
 
+    /// Induced submatrix `self[rows, cols]` for sorted, duplicate-free id
+    /// selections, extracted **directly on the CSC arrays** (mirror of
+    /// [`super::Csr::extract_rows_cols`]): one pass over the selected
+    /// columns' spans, row ids re-indexed by binary search into `rows`
+    /// (skipped when `rows` selects every row). No COO round-trip.
+    pub fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> Csc {
+        super::ops::debug_assert_selection(rows, self.rows, "row");
+        super::ops::debug_assert_selection(cols, self.cols, "col");
+        let all_rows = rows.len() == self.rows;
+        let mut indptr = Vec::with_capacity(cols.len() + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for &old_c in cols {
+            let span = self.indptr[old_c as usize]..self.indptr[old_c as usize + 1];
+            if all_rows {
+                indices.extend_from_slice(&self.indices[span.clone()]);
+                vals.extend_from_slice(&self.vals[span]);
+            } else {
+                for i in span {
+                    if let Ok(nr) = rows.binary_search(&self.indices[i]) {
+                        indices.push(nr as u32);
+                        vals.push(self.vals[i]);
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csc { rows: rows.len(), cols: cols.len(), indptr, indices, vals }
+    }
+
     /// Direct CSC→CSR conversion by counting sort over rows (mirror of
     /// [`super::Csr::to_csc`]; skips the COO hub).
     pub fn to_csr(&self) -> super::csr::Csr {
@@ -187,6 +218,16 @@ impl SparseOps for Csc {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Csc::spmm_t_into(self, x, out)
+    }
+    fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
+        super::SparseMatrix::Csc(Csc::extract_rows_cols(self, rows, cols))
+    }
+    fn row_sums(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows];
+        for (i, &r) in self.indices.iter().enumerate() {
+            out[r as usize] += self.vals[i];
+        }
+        out
     }
 }
 

@@ -172,6 +172,38 @@ impl Csr {
         }
     }
 
+    /// Induced submatrix `self[rows, cols]` for sorted, duplicate-free id
+    /// selections, extracted **directly on the CSR arrays** — one pass over
+    /// the selected rows' spans, columns re-indexed by binary search into
+    /// `cols` (skipped entirely when `cols` selects every column, the
+    /// feature-matrix row-slice case). No COO round-trip: this is the
+    /// mini-batch shard-extraction hot path.
+    pub fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> Csr {
+        super::ops::debug_assert_selection(rows, self.rows, "row");
+        super::ops::debug_assert_selection(cols, self.cols, "col");
+        let all_cols = cols.len() == self.cols;
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for &old_r in rows {
+            let span = self.indptr[old_r as usize]..self.indptr[old_r as usize + 1];
+            if all_cols {
+                indices.extend_from_slice(&self.indices[span.clone()]);
+                vals.extend_from_slice(&self.vals[span]);
+            } else {
+                for i in span {
+                    if let Ok(nc) = cols.binary_search(&self.indices[i]) {
+                        indices.push(nc as u32);
+                        vals.push(self.vals[i]);
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: rows.len(), cols: cols.len(), indptr, indices, vals }
+    }
+
     /// Direct CSR→CSC conversion by counting sort over columns (faster than
     /// the COO hub; used on the per-layer format-switch hot path).
     pub fn to_csc(&self) -> super::csc::Csc {
@@ -222,6 +254,14 @@ impl SparseOps for Csr {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Csr::spmm_t_into(self, x, out)
+    }
+    fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
+        super::SparseMatrix::Csr(Csr::extract_rows_cols(self, rows, cols))
+    }
+    fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.vals[self.indptr[r]..self.indptr[r + 1]].iter().sum())
+            .collect()
     }
 }
 

@@ -201,6 +201,23 @@ impl SparseMatrix {
         self.ops().spmm_t_into(x, out)
     }
 
+    /// Induced submatrix `self[rows, cols]` for **sorted, duplicate-free**
+    /// id selections — the mini-batch shard-extraction entry point.
+    ///
+    /// CSR/CSC/COO extract directly on their own arrays and preserve their
+    /// format; the remaining formats fall back through a COO view and
+    /// return a COO result (the caller's next format decision re-homes it).
+    /// See [`super::ops::coo_fallback_extractions`] for the fallback
+    /// accounting the minibatch bench asserts on.
+    pub fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> SparseMatrix {
+        self.ops().extract_rows_cols(rows, cols)
+    }
+
+    /// Per-row sums of stored values (ρ in GNN-FiLM).
+    pub fn row_sums(&self) -> Vec<f32> {
+        self.ops().row_sums()
+    }
+
     /// Transpose, preserving the current format.
     ///
     /// Direct structural paths for COO/CSR/CSC/DIA (no interchange hop);
@@ -415,6 +432,126 @@ mod tests {
                         1e-4,
                         "Aᵀ·x == spmm_t(A, x)",
                     )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Random sorted duplicate-free selection of `[0, n)`.
+    fn random_selection(rng: &mut Rng, n: usize) -> Vec<u32> {
+        let k = rng.gen_range(n + 1);
+        let mut sel: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        sel.sort_unstable();
+        sel
+    }
+
+    /// Induced-submatrix extraction matches the dense reference for every
+    /// format, preserves the format for the direct paths (CSR/CSC/COO), and
+    /// handles the empty and full-graph selections.
+    #[test]
+    fn prop_extract_rows_cols_matches_dense_reference() {
+        check(
+            30,
+            |rng| {
+                let coo = random_coo(rng, 30);
+                let rows = random_selection(rng, coo.rows);
+                let cols = random_selection(rng, coo.cols);
+                (coo, rows, cols)
+            },
+            |(coo, rows, cols)| -> PropResult {
+                let dense = coo.to_dense();
+                let mut want = crate::tensor::Matrix::zeros(rows.len(), cols.len());
+                for (nr, &r) in rows.iter().enumerate() {
+                    for (nc, &c) in cols.iter().enumerate() {
+                        *want.at_mut(nr, nc) = dense.at(r as usize, c as usize);
+                    }
+                }
+                let base = SparseMatrix::Coo(coo.clone());
+                for &fmt in &ALL_FORMATS {
+                    let m = match base.convert(fmt) {
+                        Ok(m) => m,
+                        Err(_) => continue,
+                    };
+                    let sub = m.extract_rows_cols(rows, cols);
+                    prop_assert(
+                        sub.rows() == rows.len() && sub.cols() == cols.len(),
+                        "extracted shape",
+                    )?;
+                    prop_close(&sub.to_dense().data, &want.data, 0.0, fmt.name())?;
+                    // Direct paths keep their format; fallbacks land in COO.
+                    match fmt {
+                        Format::Coo | Format::Csr | Format::Csc => {
+                            prop_assert(sub.format() == fmt, "direct path keeps format")?
+                        }
+                        _ => prop_assert(sub.format() == Format::Coo, "fallback is COO")?,
+                    }
+                    // Output selections are positional: re-extracting
+                    // everything from the submatrix is the identity.
+                    let all_r: Vec<u32> = (0..sub.rows() as u32).collect();
+                    let all_c: Vec<u32> = (0..sub.cols() as u32).collect();
+                    let again = sub.extract_rows_cols(&all_r, &all_c);
+                    prop_assert(again.to_coo() == sub.to_coo(), "full selection is identity")?;
+                }
+                // Empty batch: 0×0 extraction flows through without panics.
+                let empty = base.extract_rows_cols(&[], &[]);
+                prop_assert(empty.nnz() == 0, "empty selection has no entries")?;
+                prop_assert((empty.rows(), empty.cols()) == (0, 0), "empty selection shape")
+            },
+        );
+    }
+
+    #[test]
+    fn extract_output_is_sorted_and_duplicate_free() {
+        // The direct CSR/CSC/COO kernels must emit canonically ordered
+        // output without a re-sort (the `Coo` struct invariant).
+        let mut rng = Rng::new(12);
+        let coo = random_coo(&mut rng, 40);
+        let rows = random_selection(&mut rng, coo.rows);
+        let cols = random_selection(&mut rng, coo.cols);
+        for fmt in [Format::Coo, Format::Csr, Format::Csc] {
+            let m = SparseMatrix::Coo(coo.clone()).convert(fmt).unwrap();
+            let sub = m.extract_rows_cols(&rows, &cols);
+            assert!(sub.to_coo().is_sorted_row_major(), "{fmt}");
+        }
+    }
+
+    /// The fallback counter (thread-local, so exact under parallel tests)
+    /// moves only for default-path formats — never for CSR/CSC/COO.
+    #[test]
+    fn coo_fallback_counter_tracks_only_default_paths() {
+        use super::super::ops::coo_fallback_extractions;
+        let mut rng = Rng::new(13);
+        let coo = random_coo(&mut rng, 40);
+        let rows = random_selection(&mut rng, coo.rows);
+        let cols = random_selection(&mut rng, coo.cols);
+        let before = coo_fallback_extractions();
+        for fmt in [Format::Coo, Format::Csr, Format::Csc] {
+            let m = SparseMatrix::Coo(coo.clone()).convert(fmt).unwrap();
+            let _ = m.extract_rows_cols(&rows, &cols);
+        }
+        assert_eq!(coo_fallback_extractions(), before, "direct paths must not count");
+        let dok = SparseMatrix::Coo(coo).convert(Format::Dok).unwrap();
+        let _ = dok.extract_rows_cols(&rows, &cols);
+        assert_eq!(coo_fallback_extractions(), before + 1);
+    }
+
+    #[test]
+    fn prop_row_sums_match_dense() {
+        check(
+            20,
+            |rng| random_coo(rng, 30),
+            |coo| -> PropResult {
+                let dense = coo.to_dense();
+                let want: Vec<f32> =
+                    (0..coo.rows).map(|r| dense.row(r).iter().sum()).collect();
+                let base = SparseMatrix::Coo(coo.clone());
+                for &fmt in &ALL_FORMATS {
+                    let m = match base.convert(fmt) {
+                        Ok(m) => m,
+                        Err(_) => continue,
+                    };
+                    prop_close(&m.row_sums(), &want, 1e-4, fmt.name())?;
                 }
                 Ok(())
             },

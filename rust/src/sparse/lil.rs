@@ -5,14 +5,34 @@
 use super::coo::Coo;
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
 use crate::tensor::Matrix;
-use crate::util::parallel::{num_threads, parallel_fill_rows_spans, split_ranges_by_weight};
+use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
+use std::sync::OnceLock;
 
 /// LIL sparse matrix: `rows_data[r]` is row `r`'s sorted `(col, val)` list.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Carries a lazily-built nnz **prefix-sum cache** (`indptr`-style) so the
+/// SpMM kernels can binary-search nnz-balanced row spans like the
+/// compressed formats instead of materializing a range list per multiply
+/// (the last per-op allocation the execution-pool rework left behind —
+/// ROADMAP). Structural mutation ([`Lil::insert`]) invalidates the cache;
+/// value-only updates keep it.
+#[derive(Clone, Debug)]
 pub struct Lil {
     pub rows: usize,
     pub cols: usize,
     pub rows_data: Vec<Vec<(u32, f32)>>,
+    /// Cached per-row nnz prefix sums (`len == rows + 1`), built on first
+    /// kernel use. `OnceLock` keeps `Lil: Sync` for the worker pool.
+    indptr: OnceLock<Vec<usize>>,
+}
+
+/// Equality is structural only — the prefix-sum cache is derived state.
+impl PartialEq for Lil {
+    fn eq(&self, other: &Lil) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.rows_data == other.rows_data
+    }
 }
 
 impl Lil {
@@ -21,7 +41,7 @@ impl Lil {
         for i in 0..coo.nnz() {
             rows_data[coo.row[i] as usize].push((coo.col[i], coo.val[i]));
         }
-        Lil { rows: coo.rows, cols: coo.cols, rows_data }
+        Lil { rows: coo.rows, cols: coo.cols, rows_data, indptr: OnceLock::new() }
     }
 
     /// Direct dense→LIL sparsification (single pass).
@@ -36,7 +56,24 @@ impl Lil {
                     .collect()
             })
             .collect();
-        Lil { rows: m.rows, cols: m.cols, rows_data }
+        Lil { rows: m.rows, cols: m.cols, rows_data, indptr: OnceLock::new() }
+    }
+
+    /// The cached nnz prefix-sum (built once per structure): `indptr[r]` is
+    /// the total nnz of rows `0..r`. Lets [`indptr_span`] compute
+    /// nnz-balanced spans with an `O(log n)` binary search and **zero
+    /// allocation per multiply**.
+    fn nnz_prefix(&self) -> &[usize] {
+        self.indptr.get_or_init(|| {
+            let mut p = Vec::with_capacity(self.rows + 1);
+            let mut acc = 0usize;
+            p.push(0);
+            for list in &self.rows_data {
+                acc += list.len();
+                p.push(acc);
+            }
+            p
+        })
     }
 
     pub fn to_coo(&self) -> Coo {
@@ -54,8 +91,10 @@ impl Lil {
     }
 
     /// Insert (or overwrite) a single entry, keeping the row sorted — the
-    /// incremental-build operation LIL exists for.
+    /// incremental-build operation LIL exists for. Invalidates the nnz
+    /// prefix-sum cache (row lengths may change).
     pub fn insert(&mut self, r: usize, c: u32, v: f32) {
+        self.indptr.take();
         let list = &mut self.rows_data[r];
         match list.binary_search_by_key(&c, |&(col, _)| col) {
             Ok(pos) => {
@@ -80,15 +119,14 @@ impl Lil {
     }
 
     /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over nnz-balanced
-    /// row spans (weighted by per-row list length — LIL has no `indptr` to
-    /// binary-search, so the spans are materialized by a weight sweep), into
-    /// a caller-provided buffer.
+    /// row spans (binary-searched on the cached nnz prefix-sum — no range
+    /// list is allocated per multiply), into a caller-provided buffer.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
         let k = num_threads().min(self.rows.max(1));
-        let spans = split_ranges_by_weight(self.rows, k, |r| self.rows_data[r].len());
-        parallel_fill_rows_spans(&mut out.data, self.rows, d, k, |i| spans[i].clone(), |range, chunk| {
+        let prefix = self.nnz_prefix();
+        parallel_fill_rows_spans(&mut out.data, self.rows, d, k, |i| indptr_span(prefix, k, i), |range, chunk| {
             chunk.fill(0.0);
             for (rr, r) in range.clone().enumerate() {
                 let out_row = &mut chunk[rr * d..(rr + 1) * d];
@@ -117,8 +155,8 @@ impl Lil {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
         let k = num_threads().min(self.rows.max(1));
-        let spans = split_ranges_by_weight(self.rows, k, |r| self.rows_data[r].len());
-        scatter_reduce_into(out, k, |i| spans[i].clone(), |rows, buf| {
+        let prefix = self.nnz_prefix();
+        scatter_reduce_into(out, k, |i| indptr_span(prefix, k, i), |rows, buf| {
             for r in rows {
                 let x_row = x.row(r);
                 for &(c, v) in &self.rows_data[r] {
@@ -187,6 +225,62 @@ mod tests {
         let x = Matrix::rand(35, 5, &mut rng);
         let want = coo.to_dense().matmul(&x);
         assert!(lil.spmm(&x).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn nnz_prefix_cache_builds_once_and_invalidates_on_insert() {
+        let mut rng = Rng::new(3);
+        let coo = random_coo(&mut rng, 20, 15, 0.2);
+        let mut lil = Lil::from_coo(&coo);
+        let p1 = lil.nnz_prefix().to_vec();
+        assert_eq!(p1.len(), lil.rows + 1);
+        assert_eq!(*p1.last().unwrap(), lil.nnz());
+        for r in 0..lil.rows {
+            assert_eq!(p1[r + 1] - p1[r], lil.rows_data[r].len());
+        }
+        // Second call returns the same cached slice (no rebuild observable
+        // via pointer identity).
+        let ptr1 = lil.nnz_prefix().as_ptr();
+        let ptr2 = lil.nnz_prefix().as_ptr();
+        assert_eq!(ptr1, ptr2);
+        // Structural mutation invalidates; the rebuilt prefix reflects it.
+        lil.insert(0, 14, 9.0);
+        let p2 = lil.nnz_prefix();
+        assert_eq!(*p2.last().unwrap(), lil.nnz());
+    }
+
+    #[test]
+    fn spmm_correct_after_insert_invalidation() {
+        // The kernels read the cached prefix for span scheduling; a stale
+        // cache after insert would mis-partition rows. Verify numerics
+        // against dense before and after mutation.
+        let mut rng = Rng::new(4);
+        let coo = random_coo(&mut rng, 31, 23, 0.15);
+        let mut lil = Lil::from_coo(&coo);
+        let x = Matrix::rand(23, 17, &mut rng);
+        let want = coo.to_dense().matmul(&x);
+        assert!(lil.spmm(&x).max_abs_diff(&want) < 1e-4);
+        lil.insert(5, 7, 2.5);
+        lil.insert(5, 8, -1.5);
+        lil.insert(30, 0, 4.0);
+        let want2 = lil.to_coo().to_dense().matmul(&x);
+        assert!(lil.spmm(&x).max_abs_diff(&want2) < 1e-4);
+        // Transpose kernel shares the same cache.
+        let xt = Matrix::rand(31, 5, &mut rng);
+        let want_t = lil.to_coo().to_dense().transpose().matmul(&xt);
+        let mut out_t = Matrix::full(23, 5, 77.0);
+        lil.spmm_t_into(&xt, &mut out_t);
+        assert!(out_t.max_abs_diff(&want_t) < 1e-4);
+    }
+
+    #[test]
+    fn equality_ignores_prefix_cache_state() {
+        let mut rng = Rng::new(5);
+        let coo = random_coo(&mut rng, 12, 12, 0.2);
+        let a = Lil::from_coo(&coo);
+        let b = Lil::from_coo(&coo);
+        let _ = a.nnz_prefix(); // build cache on one side only
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -33,4 +33,4 @@ pub use bsr::Bsr;
 pub use dok::Dok;
 pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
-pub use ops::SparseOps;
+pub use ops::{coo_fallback_extractions, SparseOps};

@@ -31,7 +31,74 @@
 //! points with per-slot recycled buffers (see `gnn::engine`).
 
 use super::coo::Coo;
+use super::format::SparseMatrix;
 use crate::tensor::Matrix;
+use std::cell::Cell;
+
+std::thread_local! {
+    /// Number of [`SparseOps::extract_rows_cols`] calls **on this thread**
+    /// that fell back to the COO round-trip (the default trait path).
+    /// CSR/CSC/COO extract directly on their own arrays and never bump
+    /// this — the mini-batch pipeline asserts the counter stays flat
+    /// across a sharded training run (`bench_minibatch` and the minibatch
+    /// integration test). Thread-local so concurrently running tests don't
+    /// observe each other's fallbacks; extraction always executes on the
+    /// calling thread, so a caller's delta is exact.
+    static COO_FALLBACK_EXTRACTIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's count of COO-fallback extractions (monotone; compare
+/// deltas around the region of interest).
+pub fn coo_fallback_extractions() -> u64 {
+    COO_FALLBACK_EXTRACTIONS.with(|c| c.get())
+}
+
+/// Debug-build validation of a row/col id selection: strictly ascending
+/// (sorted, duplicate-free) and within the source dimension. The direct
+/// extraction kernels rely on this ordering to emit sorted output without a
+/// re-sort.
+#[inline]
+pub(crate) fn debug_assert_selection(sel: &[u32], bound: usize, what: &str) {
+    debug_assert!(
+        sel.windows(2).all(|w| w[0] < w[1]),
+        "{what} selection must be strictly ascending (sorted, duplicate-free)"
+    );
+    debug_assert!(
+        sel.last().map_or(true, |&v| (v as usize) < bound),
+        "{what} selection index out of bounds"
+    );
+}
+
+/// Induced-submatrix filter on a row-major-sorted COO: keeps entries whose
+/// row id is in `rows` and col id is in `cols`, re-indexing both to the
+/// selection positions. Because the selections are sorted, the output keeps
+/// the COO struct invariant (row-major sorted, unique) without a re-sort.
+pub(crate) fn extract_coo(coo: &Coo, rows: &[u32], cols: &[u32]) -> Coo {
+    debug_assert_selection(rows, coo.rows, "row");
+    debug_assert_selection(cols, coo.cols, "col");
+    // Sorted + in-bounds + len == dim ⇒ the selection is the identity.
+    let all_cols = cols.len() == coo.cols;
+    let mut row = Vec::new();
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    for (new_r, &old_r) in rows.iter().enumerate() {
+        let lo = coo.row.partition_point(|&r| r < old_r);
+        let hi = coo.row.partition_point(|&r| r <= old_r);
+        for i in lo..hi {
+            let nc = if all_cols {
+                Some(coo.col[i] as usize)
+            } else {
+                cols.binary_search(&coo.col[i]).ok()
+            };
+            if let Some(nc) = nc {
+                row.push(new_r as u32);
+                col.push(nc as u32);
+                val.push(coo.val[i]);
+            }
+        }
+    }
+    Coo { rows: rows.len(), cols: cols.len(), row, col, val }
+}
 
 /// Format-agnostic sparse-matrix operations (object-safe; `SparseMatrix`
 /// dispatches through `&dyn SparseOps`).
@@ -47,6 +114,32 @@ pub trait SparseOps {
 
     /// Convert to the canonical COO interchange form.
     fn to_coo(&self) -> Coo;
+
+    /// Induced submatrix `self[rows, cols]` for **sorted, duplicate-free**
+    /// id selections — the mini-batch shard-extraction primitive.
+    ///
+    /// CSR/CSC/COO override this with direct kernels on their own arrays
+    /// (no interchange hop) and preserve their format; the remaining
+    /// formats take this default COO round-trip and return a COO result
+    /// (the caller's next format decision re-homes it — converting back
+    /// eagerly would be wasted work on the shard stream). Fallback calls
+    /// are counted in [`coo_fallback_extractions`].
+    fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> SparseMatrix {
+        COO_FALLBACK_EXTRACTIONS.with(|c| c.set(c.get() + 1));
+        SparseMatrix::Coo(extract_coo(&self.to_coo(), rows, cols))
+    }
+
+    /// Per-row sums of stored values (ρ in GNN-FiLM; degree vector for unit
+    /// weights). Default walks a COO view; CSR/CSC/COO override with
+    /// array-direct loops.
+    fn row_sums(&self) -> Vec<f32> {
+        let coo = self.to_coo();
+        let mut out = vec![0f32; self.shape().0];
+        for i in 0..coo.nnz() {
+            out[coo.row[i] as usize] += coo.val[i];
+        }
+        out
+    }
 
     /// `out = self · x`; `out` must be `rows × x.cols` and is overwritten
     /// completely (no zeroing required from the caller).

@@ -3,6 +3,23 @@
 
 use super::Matrix;
 
+/// `a += w · b` elementwise over raw f32 storage (gradient accumulation —
+/// the mini-batch shard-weighted sum). Slice twin of [`axpy`], for the
+/// bias vectors and `Matrix::data` buffers the grads structs carry.
+pub fn axpy_slice(a: &mut [f32], b: &[f32], w: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b.iter()) {
+        *x += w * y;
+    }
+}
+
+/// `a *= w` elementwise over raw f32 storage (in-place twin of [`scale`]).
+pub fn scale_slice(a: &mut [f32], w: f32) {
+    for x in a.iter_mut() {
+        *x *= w;
+    }
+}
+
 /// ReLU forward.
 pub fn relu(x: &Matrix) -> Matrix {
     Matrix {

@@ -1,0 +1,162 @@
+//! Integration: sharded mini-batch training end to end — partitioner →
+//! neighbor sampler → direct CSR submatrix extraction → cached per-shard
+//! format decisions → gradient accumulation → full-graph eval.
+//!
+//! Runs the `ogbn-arxiv-scale` synthetic spec shrunk degree-preservingly
+//! for CI (tens of thousands of nodes; the full 169k-node graph is the
+//! release-mode territory of `examples/minibatch_gcn.rs` and
+//! `bench_minibatch`). Asserts the ISSUE-3 acceptance gates:
+//! decision-cache hit rate > 80% after the first epoch, and zero
+//! COO-fallback extractions (thread-local counter, exact for this run).
+
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{train_minibatch, MinibatchConfig, ModelKind};
+use gnn_spmm::graph::{GraphDataset, Partitioning, LARGE_DATASETS};
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::rng::Rng;
+
+/// CI-scale ogbn-arxiv-scale: ~21k nodes, full-graph average degree
+/// preserved (~13.7), features capped at 64 — still ≈ 4–8× the laptop-scale
+/// Table-1 graphs every other harness trains full-batch. Set
+/// `GNN_SPMM_FULL_SCALE=1` to run these tests on the unshrunk 169k-node
+/// spec (release-mode recommended; the bench and example default to it).
+fn arxiv_ci() -> GraphDataset {
+    let spec = if std::env::var("GNN_SPMM_FULL_SCALE").is_ok() {
+        LARGE_DATASETS[0]
+    } else {
+        LARGE_DATASETS[0].scaled_same_degree(8, 64)
+    };
+    let mut rng = Rng::new(0xA12C);
+    GraphDataset::generate(&spec, &mut rng)
+}
+
+#[test]
+fn minibatch_gcn_on_arxiv_scale_meets_acceptance_gates() {
+    let ds = arxiv_ci();
+    assert!(ds.adj.rows > 20_000, "CI graph should stay minibatch-scale");
+    let cfg = MinibatchConfig {
+        epochs: 3,
+        hidden: 8,
+        n_shards: 8,
+        fanout: 6,
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+    let mut policy = StaticPolicy(Format::Csr);
+    let report = train_minibatch(ModelKind::Gcn, &ds, &mut policy, &cfg);
+
+    // Completed a seeded multi-epoch run with per-shard decisions.
+    assert_eq!(report.epoch_losses.len(), 3);
+    assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+    assert_eq!(report.test_accs.len(), 3);
+    // Per-shard decisions actually happened: at least (X, A.l1, A.l2) per
+    // shard per epoch plus evals.
+    assert!(
+        report.decisions.len() >= 3 * 8 * 3,
+        "expected a decision stream, got {}",
+        report.decisions.len()
+    );
+
+    // Acceptance gate 1: decision-cache hit rate > 80% after epoch 0.
+    assert!(
+        report.warm_cache_hit_rate > 0.8,
+        "warm cache hit rate {:.3} (hits {} / misses {})",
+        report.warm_cache_hit_rate,
+        report.cache_hits,
+        report.cache_misses
+    );
+
+    // Acceptance gate 2: extraction never round-trips CSR through COO.
+    assert_eq!(
+        report.coo_fallback_extractions, 0,
+        "shard extraction must use the direct CSR path"
+    );
+
+    // The extraction + decision machinery is charged to the engine
+    // stopwatch like every other overhead (paper accounting).
+    assert!(report.phases.iter().any(|p| p.0 == "extract" && p.2 > 0));
+}
+
+#[test]
+fn minibatch_run_is_seed_deterministic() {
+    let ds = arxiv_ci();
+    let cfg = MinibatchConfig {
+        epochs: 2,
+        hidden: 8,
+        n_shards: 6,
+        fanout: 4,
+        seed: 0x5EED,
+        ..Default::default()
+    };
+    let mut p1 = StaticPolicy(Format::Csr);
+    let mut p2 = StaticPolicy(Format::Csr);
+    let r1 = train_minibatch(ModelKind::Gcn, &ds, &mut p1, &cfg);
+    let r2 = train_minibatch(ModelKind::Gcn, &ds, &mut p2, &cfg);
+    assert_eq!(r1.epoch_losses.len(), r2.epoch_losses.len());
+    for (a, b) in r1.epoch_losses.iter().zip(r2.epoch_losses.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+            "seeded runs diverged: {:?} vs {:?}",
+            r1.epoch_losses,
+            r2.epoch_losses
+        );
+    }
+    assert_eq!(r1.final_test_acc, r2.final_test_acc);
+    assert_eq!(r1.cache_hits, r2.cache_hits);
+    assert_eq!(r1.cache_misses, r2.cache_misses);
+}
+
+#[test]
+fn partitioner_covers_arxiv_scale_with_balanced_edges() {
+    let ds = arxiv_ci();
+    let part = Partitioning::by_degree(&ds.adj, 16);
+    // Exact cover, disjoint.
+    let mut seen = vec![false; ds.adj.rows];
+    for shard in &part.shards {
+        for &v in shard {
+            assert!(!seen[v as usize], "node {v} in two shards");
+            seen[v as usize] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s));
+    // Degree balance: LPT bound (max ≤ min + heaviest node degree).
+    let degrees: Vec<usize> = ds.adj.row_counts().iter().map(|&c| c as usize).collect();
+    let loads = part.loads(&degrees);
+    let wmax = degrees.iter().copied().max().unwrap();
+    let (lo, hi) = (*loads.iter().min().unwrap(), *loads.iter().max().unwrap());
+    assert!(hi <= lo + wmax.max(1), "shard edge loads unbalanced: {loads:?}");
+}
+
+#[test]
+fn gat_and_film_minibatch_train_on_a_large_shard_stream() {
+    // Smaller CI slice for the two heavier models: the point is that the
+    // whole pipeline (pattern extraction for GAT, ρ recomputation for
+    // FiLM) works on a sampled shard stream, not peak scale.
+    let spec = LARGE_DATASETS[0].scaled_same_degree(32, 32);
+    let mut rng = Rng::new(0xA12D);
+    let ds = GraphDataset::generate(&spec, &mut rng);
+    for kind in [ModelKind::Gat, ModelKind::Film] {
+        let mut policy = StaticPolicy(Format::Csr);
+        let report = train_minibatch(
+            kind,
+            &ds,
+            &mut policy,
+            &MinibatchConfig {
+                epochs: 2,
+                hidden: 8,
+                n_shards: 4,
+                fanout: 4,
+                seed: 0xF00D,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.epoch_losses.len(), 2, "{}", kind.name());
+        assert!(
+            report.epoch_losses.iter().all(|l| l.is_finite()),
+            "{}: {:?}",
+            kind.name(),
+            report.epoch_losses
+        );
+        assert_eq!(report.coo_fallback_extractions, 0, "{}", kind.name());
+    }
+}
