@@ -22,11 +22,17 @@ echo "== tier-1 again with GNN_SPMM_THREADS=1 (serial fallback paths) =="
 GNN_SPMM_THREADS=1 cargo test -q
 
 # Mini-batch smoke: small shard count, fixed seed, shrunk ogbn-arxiv-scale.
-# The example itself asserts the shard stream reuses cached decisions and
-# never falls back to COO round-trip extraction; the strict >80% warm-rate
-# gate runs in tests/integration_minibatch.rs under tier-1 above.
-echo "== minibatch smoke test (4 shards, fixed seed) =="
+# The examples assert the shard stream reuses cached decisions and never
+# falls back to COO round-trip extraction; the strict >80% warm-rate gate
+# runs in tests/integration_minibatch.rs under tier-1 above.
+echo "== minibatch smoke test: GCN (4 shards, fixed seed) =="
 cargo run --release --example minibatch_gcn -- \
+  --shrink 32 --shards 4 --epochs 2 --fanout 12 --policy static --seed 48879
+
+# RGCN exercises the per-relation extraction path: R slots per layer, one
+# decision-cache entry per relation per shard signature (ISSUE-4).
+echo "== minibatch smoke test: RGCN (4 shards, per-relation extraction) =="
+cargo run --release --example minibatch_rgcn -- \
   --shrink 32 --shards 4 --epochs 2 --fanout 12 --policy static --seed 48879
 
 echo "CI OK"

@@ -9,7 +9,12 @@
 //!   and extraction time, both charged to the engine stopwatch,
 //! * decision-cache hit rate, warm (post-first-epoch) hit rate,
 //! * the COO-fallback extraction counter delta — **asserted zero**: shard
-//!   extraction must take the direct CSR path (ISSUE-3 acceptance gate).
+//!   extraction must take the direct CSR path (ISSUE-3 acceptance gate;
+//!   the counter is pool-aggregated, so extractions on worker threads
+//!   cannot escape it),
+//! * an RGCN pass (ISSUE-4): R relations × shards of per-relation direct
+//!   submatrix extraction, one decision-cache entry per relation per shard
+//!   signature — the workload where per-matrix decisions multiply.
 //!
 //! Results land in `BENCH_minibatch.json` (override with
 //! `GNN_SPMM_BENCH_MINIBATCH_OUT`) — the start of the minibatch perf
@@ -70,7 +75,8 @@ fn main() {
         let report = train_minibatch(ModelKind::Gcn, &ds, &mut policy, &cfg);
 
         // ISSUE-3 acceptance gate: extraction never round-trips CSR/CSC
-        // through COO (exact: the counter is thread-local to this thread).
+        // through COO (the pool-aggregated counter also catches
+        // extractions executed on worker threads).
         assert_eq!(
             report.coo_fallback_extractions, 0,
             "shard extraction fell back to the COO round-trip"
@@ -107,6 +113,69 @@ fn main() {
             ("decision_overhead_ns", Json::Num(report.decision_overhead_s * 1e9)),
             ("extract_ns", Json::Num(extract_s * 1e9)),
             ("decisions", Json::Num(report.decisions.len() as f64)),
+            ("cache_hits", Json::Num(report.cache_hits as f64)),
+            ("cache_misses", Json::Num(report.cache_misses as f64)),
+            ("warm_cache_hit_rate", Json::Num(report.warm_cache_hit_rate)),
+            ("coo_fallback_extractions", Json::Num(report.coo_fallback_extractions as f64)),
+            ("final_test_acc", Json::Num(report.final_test_acc)),
+        ]));
+    }
+
+    // RGCN (ISSUE-4): per-relation induced-submatrix extraction — R
+    // relation slots per layer, each with its own shard-signature cache
+    // entry, so the decision surface is R × shards instead of one
+    // adjacency. Fewer shard counts than GCN: each epoch multiplies R
+    // relation matrices.
+    for &n_shards in &[8usize, 16] {
+        let cfg = MinibatchConfig {
+            epochs,
+            hidden: 16,
+            n_shards,
+            fanout: 8,
+            seed: 0xBEEF,
+            ..Default::default()
+        };
+        let report = train_minibatch(ModelKind::Rgcn, &ds, &mut policy, &cfg);
+        assert_eq!(
+            report.coo_fallback_extractions, 0,
+            "per-relation shard extraction fell back to the COO round-trip"
+        );
+        let rel_decisions = report
+            .decisions
+            .iter()
+            .filter(|d| d.slot.starts_with("rgcn.A"))
+            .count();
+        let epoch_ns: Vec<f64> = report.epoch_times.iter().map(|s| s * 1e9).collect();
+        let extract_s = report
+            .phases
+            .iter()
+            .find(|p| p.0 == "extract")
+            .map(|p| p.1)
+            .unwrap_or(0.0);
+        println!(
+            "RGCN shards {n_shards:>3}: epoch median {:>8.1} ms | decisions {} ({} on relation slots, warm hit rate {:.1}%) | extract {:.1} ms | test acc {:.3}",
+            stats::median(&epoch_ns) / 1e6,
+            report.decisions.len(),
+            rel_decisions,
+            report.warm_cache_hit_rate * 100.0,
+            extract_s * 1e3,
+            report.final_test_acc,
+        );
+        records.push(Json::obj(vec![
+            ("model", Json::Str(report.model.to_string())),
+            ("dataset", Json::Str(report.dataset.clone())),
+            ("policy", Json::Str(report.policy.clone())),
+            ("n", Json::Num(ds.adj.rows as f64)),
+            ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
+            ("shards", Json::Num(n_shards as f64)),
+            ("fanout", Json::Num(cfg.fanout as f64)),
+            ("epochs", Json::Num(epochs as f64)),
+            ("epoch_median_ns", Json::Num(stats::median(&epoch_ns))),
+            ("epoch_min_ns", Json::Num(stats::min(&epoch_ns))),
+            ("decision_overhead_ns", Json::Num(report.decision_overhead_s * 1e9)),
+            ("extract_ns", Json::Num(extract_s * 1e9)),
+            ("decisions", Json::Num(report.decisions.len() as f64)),
+            ("relation_slot_decisions", Json::Num(rel_decisions as f64)),
             ("cache_hits", Json::Num(report.cache_hits as f64)),
             ("cache_misses", Json::Num(report.cache_misses as f64)),
             ("warm_cache_hit_rate", Json::Num(report.warm_cache_hit_rate)),

@@ -13,7 +13,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -54,6 +54,44 @@ struct Cache {
     pre1: Matrix,
     s2: Matrix,
     p2: Vec<Matrix>,
+}
+
+/// One EGC layer's parameter gradients.
+pub struct EgcLayerGrads {
+    pub dw: Vec<Matrix>,
+    pub dws: Matrix,
+    pub dbias: Vec<f32>,
+}
+
+/// One backward pass's parameter gradients — the mini-batch accumulation
+/// unit (see `gnn::minibatch`).
+pub struct EgcGrads {
+    pub l1: EgcLayerGrads,
+    pub l2: EgcLayerGrads,
+}
+
+impl EgcGrads {
+    /// `self += w · other` (shard-weighted gradient accumulation).
+    pub fn add_scaled(&mut self, o: &EgcGrads, w: f32) {
+        for (a, b) in [(&mut self.l1, &o.l1), (&mut self.l2, &o.l2)] {
+            for (da, db) in a.dw.iter_mut().zip(b.dw.iter()) {
+                ops::axpy_slice(&mut da.data, &db.data, w);
+            }
+            ops::axpy_slice(&mut a.dws.data, &b.dws.data, w);
+            ops::axpy_slice(&mut a.dbias, &b.dbias, w);
+        }
+    }
+
+    /// `self *= w`.
+    pub fn scale(&mut self, w: f32) {
+        for l in [&mut self.l1, &mut self.l2] {
+            for dw in &mut l.dw {
+                ops::scale_slice(&mut dw.data, w);
+            }
+            ops::scale_slice(&mut l.dws.data, w);
+            ops::scale_slice(&mut l.dbias, w);
+        }
+    }
 }
 
 /// `out[r] = Σ_c a[r,c]·b[r,c]` — rowwise dot products.
@@ -181,7 +219,9 @@ impl Egc {
         logits
     }
 
-    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+    /// Backward pass returning parameter gradients without applying them
+    /// (the mini-batch accumulation path).
+    pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> EgcGrads {
         let cache = self.cache.take().expect("forward before backward");
         let (dh1, dws2, dw2, db2) = Self::layer_backward(
             &self.l2, eng, self.s_h1, self.s_a2, &cache.s2, &cache.p2, dlogits,
@@ -190,23 +230,47 @@ impl Egc {
         let (_dx, dws1, dw1, db1) = Self::layer_backward(
             &self.l1, eng, self.s_x, self.s_a1, &cache.s1, &cache.p1, &dpre1,
         );
+        EgcGrads {
+            l1: EgcLayerGrads { dw: dw1, dws: dws1, dbias: db1 },
+            l2: EgcLayerGrads { dw: dw2, dws: dws2, dbias: db2 },
+        }
+    }
+
+    /// One Adam step from (possibly accumulated) gradients. Parameter
+    /// order matches `new`.
+    pub fn apply_grads(&mut self, g: &EgcGrads) {
         self.adam.tick();
         let mut idx = 0;
         for b in 0..N_BASES {
-            self.adam.update_matrix(idx, &mut self.l1.w[b], &dw1[b]);
+            self.adam.update_matrix(idx, &mut self.l1.w[b], &g.l1.dw[b]);
             idx += 1;
         }
-        self.adam.update_matrix(idx, &mut self.l1.ws, &dws1);
+        self.adam.update_matrix(idx, &mut self.l1.ws, &g.l1.dws);
         idx += 1;
-        self.adam.update(idx, &mut self.l1.bias, &db1);
+        self.adam.update(idx, &mut self.l1.bias, &g.l1.dbias);
         idx += 1;
         for b in 0..N_BASES {
-            self.adam.update_matrix(idx, &mut self.l2.w[b], &dw2[b]);
+            self.adam.update_matrix(idx, &mut self.l2.w[b], &g.l2.dw[b]);
             idx += 1;
         }
-        self.adam.update_matrix(idx, &mut self.l2.ws, &dws2);
+        self.adam.update_matrix(idx, &mut self.l2.ws, &g.l2.dws);
         idx += 1;
-        self.adam.update(idx, &mut self.l2.bias, &db2);
+        self.adam.update(idx, &mut self.l2.bias, &g.l2.dbias);
+    }
+
+    /// Backward + Adam step (full-batch path).
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let g = self.backward_grads(eng, dlogits);
+        self.apply_grads(&g);
+    }
+
+    /// Point the model at a new (sub)graph: induced feature rows `x` and
+    /// induced normalized adjacency `a` (both layers share it) — same
+    /// rebinding contract as GCN. H1 re-derives on the next forward.
+    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
+        eng.set_slot_matrix(self.s_x, x);
+        eng.set_slot_matrix(self.s_a1, a.clone());
+        eng.set_slot_matrix(self.s_a2, a);
     }
 }
 
@@ -249,6 +313,34 @@ mod tests {
             losses.first(),
             losses.last()
         );
+    }
+
+    /// The grads-split refactor must leave full-batch EGC identical:
+    /// `backward` ≡ `backward_grads` + `apply_grads`.
+    #[test]
+    fn split_backward_matches_fused_backward() {
+        let run = |split: bool| -> Matrix {
+            let mut rng = Rng::new(55);
+            let ds = tiny_dataset(&mut rng);
+            let mut policy = StaticPolicy(Format::Csr);
+            let mut eng = AdjEngine::new(&mut policy);
+            let mut model = Egc::new(&ds, 8, 0.02, &mut rng, &mut eng);
+            for _ in 0..4 {
+                let logits = model.forward(&mut eng);
+                let (_, dlogits) =
+                    ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+                if split {
+                    let g = model.backward_grads(&mut eng, &dlogits);
+                    model.apply_grads(&g);
+                } else {
+                    model.backward(&mut eng, &dlogits);
+                }
+            }
+            model.forward(&mut eng)
+        };
+        let a = run(false);
+        let b = run(true);
+        assert!(a.max_abs_diff(&b) < 1e-6, "split/fused EGC backward diverged");
     }
 
     #[test]

@@ -111,6 +111,13 @@ pub struct Slot {
     pub matrix: SparseMatrix,
     pub decided: Option<Format>,
     pub density_at_decision: f64,
+    /// Shape observed when the current decision was made. A refresh that
+    /// changes the operand's shape (mini-batch H1 slots resize per shard)
+    /// is a structure change the density dead-band alone can mask —
+    /// density is nnz-per-cell, so a differently-sized matrix can sit
+    /// within the drift band while its signature differs. `ensure`
+    /// re-decides whenever the shape moved, regardless of drift.
+    shape_at_decision: (usize, usize),
     /// Recycled output buffers (raw storage; resized on reuse). Populated
     /// by [`AdjEngine::recycle`], drained by `spmm`/`spmm_t`.
     pool: Vec<Vec<f32>>,
@@ -176,6 +183,7 @@ impl<'p> AdjEngine<'p> {
             matrix: SparseMatrix::Coo(coo),
             decided: None,
             density_at_decision: 0.0,
+            shape_at_decision: (0, 0),
             pool: Vec::new(),
             coo_view: None,
         });
@@ -277,11 +285,20 @@ impl<'p> AdjEngine<'p> {
     /// re-deciding and converting as needed.
     fn ensure(&mut self, slot: usize, d: usize) {
         let density = self.slots[slot].matrix.density();
+        let shape = self.slots[slot].matrix.ops().shape();
         let need_decision = match self.slots[slot].decided {
             None => true,
             Some(_) => {
-                let base = self.slots[slot].density_at_decision.max(1e-12);
-                (density - base).abs() / base > self.redecide_rel_drift
+                // Structure change first: a refresh that resized the
+                // operand invalidates the decision outright — the density
+                // dead-band below must never mask a signature change
+                // (shape is part of the decision-cache signature).
+                if shape != self.slots[slot].shape_at_decision {
+                    true
+                } else {
+                    let base = self.slots[slot].density_at_decision.max(1e-12);
+                    (density - base).abs() / base > self.redecide_rel_drift
+                }
             }
         };
         if need_decision {
@@ -289,12 +306,12 @@ impl<'p> AdjEngine<'p> {
             // Cache first: the signature reads O(1) header fields, so a hit
             // skips both the COO view and the policy (feature extraction /
             // inference) entirely — the mini-batch amortization.
-            let (rows, _) = self.slots[slot].matrix.ops().shape();
+            let (rows, cols) = shape;
             let nnz = self.slots[slot].matrix.nnz();
             let cached_fmt = self
                 .decision_cache
                 .as_mut()
-                .and_then(|c| c.lookup(&name, rows, nnz, density, d));
+                .and_then(|c| c.lookup(&name, rows, cols, nnz, density, d));
             let (fmt, cached) = match cached_fmt {
                 Some(fmt) => (fmt, true),
                 None => {
@@ -310,13 +327,14 @@ impl<'p> AdjEngine<'p> {
                     let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
                     self.slots[slot].coo_view = Some(coo);
                     if let Some(c) = self.decision_cache.as_mut() {
-                        c.store(&name, rows, nnz, density, d, fmt);
+                        c.store(&name, rows, cols, nnz, density, d, fmt);
                     }
                     (fmt, false)
                 }
             };
             self.slots[slot].decided = Some(fmt);
             self.slots[slot].density_at_decision = density;
+            self.slots[slot].shape_at_decision = shape;
             self.decisions.push(Decision {
                 slot: name,
                 format: fmt,
@@ -534,6 +552,81 @@ mod tests {
         assert_eq!(engine.decisions.len(), 2);
         let converts = engine.sw.report().iter().find(|r| r.0 == "convert").map(|r| r.2).unwrap_or(0);
         assert_eq!(converts, 1, "only the first decision should convert");
+    }
+
+    /// Regression (ISSUE-4): a refresh that changes the operand's shape
+    /// must re-decide even when the density sits inside the drift
+    /// dead-band. `update_slot` keeps the decision across same-structure
+    /// refreshes; before the shape anchor, a same-density matrix of a
+    /// different size silently kept the stale decision (the mini-batch H1
+    /// slot resizes every shard).
+    #[test]
+    fn shape_change_redecides_despite_density_dead_band() {
+        let mut rng = Rng::new(24);
+        let small = random_coo(&mut rng, 64, 0.1);
+        let x64 = Matrix::rand(64, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("H1", small);
+        let _ = engine.spmm(slot, &x64);
+        assert_eq!(engine.decisions.len(), 1);
+        // Same-shape, near-identical density: the dead-band holds.
+        engine.update_slot(slot, random_coo(&mut rng, 64, 0.1));
+        let _ = engine.spmm(slot, &x64);
+        assert_eq!(engine.decisions.len(), 1, "dead-band should hold decision");
+        // 2× the rows at the same density: structure signature changed —
+        // the decision must be re-made even though drift is ~0.
+        let big = {
+            let mut triples = Vec::new();
+            for r in 0..128u32 {
+                for c in 0..128u32 {
+                    if rng.bernoulli(0.1) {
+                        triples.push((r, c, 1.0f32));
+                    }
+                }
+            }
+            Coo::from_triples(128, 128, triples)
+        };
+        let x128 = Matrix::rand(128, 4, &mut rng);
+        engine.update_slot(slot, big);
+        let _ = engine.spmm(slot, &x128);
+        assert_eq!(engine.decisions.len(), 2, "shape change must re-decide");
+    }
+
+    /// Regression (ISSUE-4): rebinding a slot to a structurally different
+    /// matrix goes back through the decision cache with the **new**
+    /// signature — the stale entry (anchored on the old structure) must
+    /// not answer, dead-band or not.
+    #[test]
+    fn set_slot_matrix_structural_change_misses_cache() {
+        let mut rng = Rng::new(25);
+        let x = Matrix::rand(64, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decision_cache().unwrap().misses, 1);
+        // 4× the rows at the same density: different rows bucket ⇒ the
+        // cached entry must not be served.
+        let big = {
+            let mut triples = Vec::new();
+            for r in 0..256u32 {
+                for c in 0..256u32 {
+                    if rng.bernoulli(0.15) {
+                        triples.push((r, c, 1.0f32));
+                    }
+                }
+            }
+            Coo::from_triples(256, 256, triples)
+        };
+        let x256 = Matrix::rand(256, 4, &mut rng);
+        engine.set_slot_matrix(slot, SparseMatrix::Coo(big));
+        let _ = engine.spmm(slot, &x256);
+        let cache = engine.decision_cache().unwrap();
+        assert_eq!(cache.misses, 2, "structural rebind must miss the cache");
+        assert_eq!(cache.hits, 0);
+        assert!(engine.decisions.iter().all(|d| !d.cached));
     }
 
     #[test]

@@ -30,15 +30,25 @@
 //!   pool and the decision cache persist across shards and epochs — the
 //!   steady-state multiply path stays allocation-free.
 //!
+//! All five models train sharded. GCN/FiLM/EGC slice the shared normalized
+//! adjacency; GAT slices the raw adjacency and re-derives its attention
+//! pattern; **RGCN slices one induced submatrix per relation** off R
+//! per-relation normalized CSR masters — each relation keeps its own
+//! engine slot, so the decision cache holds one entry per relation per
+//! shard signature (R × shards decision surface: the regime where the
+//! paper's per-matrix decisions pay off most).
+//!
 //! Gradient semantics: each shard computes the masked-mean loss over its
 //! *seed* train nodes; shard gradients are accumulated weighted by
 //! `seed-train-count / total-train-count`, so the applied step equals the
 //! full-batch train-set mean gradient up to neighbor-sampling truncation.
 
+use super::egc::{Egc, EgcGrads};
 use super::engine::{AdjEngine, Decision, FormatPolicy};
 use super::film::{Film, FilmGrads};
 use super::gat::{Gat, GatGrads};
 use super::gcn::{Gcn, GcnGrads};
+use super::rgcn::{relation_operands, Rgcn, RgcnGrads};
 use super::train::ModelKind;
 use crate::graph::{GraphDataset, NeighborSampler, Partitioning};
 use crate::sparse::{Coo, Csr, SparseMatrix};
@@ -113,12 +123,16 @@ enum MbModel {
     Gcn(Gcn),
     Gat(Gat),
     Film(Film),
+    Rgcn(Rgcn),
+    Egc(Egc),
 }
 
 enum MbGrads {
     Gcn(GcnGrads),
     Gat(GatGrads),
     Film(FilmGrads),
+    Rgcn(RgcnGrads),
+    Egc(EgcGrads),
 }
 
 impl MbGrads {
@@ -127,6 +141,8 @@ impl MbGrads {
             MbGrads::Gcn(g) => g.scale(w),
             MbGrads::Gat(g) => g.scale(w),
             MbGrads::Film(g) => g.scale(w),
+            MbGrads::Rgcn(g) => g.scale(w),
+            MbGrads::Egc(g) => g.scale(w),
         }
     }
 
@@ -135,9 +151,30 @@ impl MbGrads {
             (MbGrads::Gcn(a), MbGrads::Gcn(b)) => a.add_scaled(b, w),
             (MbGrads::Gat(a), MbGrads::Gat(b)) => a.add_scaled(b, w),
             (MbGrads::Film(a), MbGrads::Film(b)) => a.add_scaled(b, w),
+            (MbGrads::Rgcn(a), MbGrads::Rgcn(b)) => a.add_scaled(b, w),
+            (MbGrads::Egc(a), MbGrads::Egc(b)) => a.add_scaled(b, w),
             _ => unreachable!("gradient kind mismatch"),
         }
     }
+}
+
+/// Full-graph operand masters the shard loop slices from. Everything sits
+/// in a format with a direct extraction path (CSR masters; GAT's raw
+/// adjacency is native COO), so the shard stream never pays the counted
+/// COO fallback.
+struct FullGraphOps<'d> {
+    /// Sparse features, CSR (row slice via the identity-column fast path).
+    feats: SparseMatrix,
+    /// Normalized adjacency, CSR (GCN/FiLM/EGC propagation operand).
+    adjn: SparseMatrix,
+    /// Raw adjacency (GAT derives its attention pattern from it).
+    adj: &'d Coo,
+    /// RGCN: one normalized adjacency per relation, CSR (empty otherwise).
+    /// Each relation is sliced and rebound independently — per-relation
+    /// slots mean per-relation decision-cache entries.
+    rels: Vec<SparseMatrix>,
+    /// GAT: epoch-invariant full-graph attention pattern.
+    pattern: Option<Coo>,
 }
 
 impl MbModel {
@@ -146,6 +183,8 @@ impl MbModel {
             MbModel::Gcn(m) => m.forward(eng),
             MbModel::Gat(m) => m.forward(eng),
             MbModel::Film(m) => m.forward(eng),
+            MbModel::Rgcn(m) => m.forward(eng),
+            MbModel::Egc(m) => m.forward(eng),
         }
     }
 
@@ -154,6 +193,8 @@ impl MbModel {
             MbModel::Gcn(m) => MbGrads::Gcn(m.backward_grads(eng, dlogits)),
             MbModel::Gat(m) => MbGrads::Gat(m.backward_grads(eng, dlogits)),
             MbModel::Film(m) => MbGrads::Film(m.backward_grads(eng, dlogits)),
+            MbModel::Rgcn(m) => MbGrads::Rgcn(m.backward_grads(eng, dlogits)),
+            MbModel::Egc(m) => MbGrads::Egc(m.backward_grads(eng, dlogits)),
         }
     }
 
@@ -162,55 +203,65 @@ impl MbModel {
             (MbModel::Gcn(m), MbGrads::Gcn(g)) => m.apply_grads(g),
             (MbModel::Gat(m), MbGrads::Gat(g)) => m.apply_grads(g),
             (MbModel::Film(m), MbGrads::Film(g)) => m.apply_grads(g),
+            (MbModel::Rgcn(m), MbGrads::Rgcn(g)) => m.apply_grads(g),
+            (MbModel::Egc(m), MbGrads::Egc(g)) => m.apply_grads(g),
             _ => unreachable!("gradient kind mismatch"),
         }
     }
 
-    /// Extract the induced graph operand this model actually propagates
-    /// over and rebind its slots. GCN/FiLM slice the normalized adjacency
-    /// (direct CSR path); GAT slices the raw adjacency (native COO path)
-    /// and derives its attention pattern from it. Either way exactly one
-    /// adjacency extraction runs per batch, charged to the `extract` phase.
+    /// Extract the induced graph operands this model actually propagates
+    /// over and rebind its slots. GCN/FiLM/EGC slice the normalized
+    /// adjacency (direct CSR path); GAT slices the raw adjacency (native
+    /// COO path) and derives its attention pattern from it; RGCN slices
+    /// each relation's normalized CSR master independently. Every
+    /// extraction is charged to the `extract` phase.
     fn bind_subgraph(
         &mut self,
         eng: &mut AdjEngine,
         x: SparseMatrix,
         nodes: &[u32],
-        adjn_csr: &SparseMatrix,
-        adj: &Coo,
+        full: &FullGraphOps,
     ) {
         if let MbModel::Gat(m) = self {
             let pat = eng.sw.phase("extract", || {
-                Gat::attention_pattern(&adj.extract_rows_cols(nodes, nodes))
+                Gat::attention_pattern(&full.adj.extract_rows_cols(nodes, nodes))
             });
             m.set_graph(eng, x, pat);
             return;
         }
-        let a = eng.sw.phase("extract", || adjn_csr.extract_rows_cols(nodes, nodes));
+        if let MbModel::Rgcn(m) = self {
+            // One induced submatrix per relation: a symmetric principal
+            // submatrix of a symmetric relation stays symmetric, so the
+            // model's Â_rᵀ = Â_r backward identity holds per shard.
+            let subs: Vec<SparseMatrix> = eng.sw.phase("extract", || {
+                full.rels.iter().map(|rm| rm.extract_rows_cols(nodes, nodes)).collect()
+            });
+            m.set_graph(eng, x, subs);
+            return;
+        }
+        let a = eng.sw.phase("extract", || full.adjn.extract_rows_cols(nodes, nodes));
         match self {
             MbModel::Gcn(m) => m.set_graph(eng, x, a),
             MbModel::Film(m) => m.set_graph(eng, x, a),
-            MbModel::Gat(_) => unreachable!("handled above"),
+            MbModel::Egc(m) => m.set_graph(eng, x, a),
+            MbModel::Gat(_) | MbModel::Rgcn(_) => unreachable!("handled above"),
         }
     }
 
     /// Rebind to the full graph for eval. The GAT attention pattern is
     /// invariant across epochs, so it is built once by the caller and only
-    /// cloned here.
-    fn bind_full_graph(
-        &mut self,
-        eng: &mut AdjEngine,
-        x_full: SparseMatrix,
-        a_full: &SparseMatrix,
-        full_pattern: &Option<Coo>,
-    ) {
+    /// cloned here; RGCN rebinds every relation master.
+    fn bind_full_graph(&mut self, eng: &mut AdjEngine, full: &FullGraphOps) {
+        let x_full = full.feats.clone();
         match self {
-            MbModel::Gcn(m) => m.set_graph(eng, x_full, a_full.clone()),
-            MbModel::Film(m) => m.set_graph(eng, x_full, a_full.clone()),
+            MbModel::Gcn(m) => m.set_graph(eng, x_full, full.adjn.clone()),
+            MbModel::Film(m) => m.set_graph(eng, x_full, full.adjn.clone()),
+            MbModel::Egc(m) => m.set_graph(eng, x_full, full.adjn.clone()),
+            MbModel::Rgcn(m) => m.set_graph(eng, x_full, full.rels.clone()),
             MbModel::Gat(m) => m.set_graph(
                 eng,
                 x_full,
-                full_pattern.clone().expect("pattern precomputed for GAT"),
+                full.pattern.clone().expect("pattern precomputed for GAT"),
             ),
         }
     }
@@ -218,8 +269,8 @@ impl MbModel {
 
 /// Train `kind` on `ds` with sharded mini-batches under `policy`.
 ///
-/// Panics if `kind` has no mini-batch path yet (see
-/// [`ModelKind::supports_minibatch`]).
+/// Every [`ModelKind`] has a mini-batch path (the assert guards future
+/// models added without one; see [`ModelKind::supports_minibatch`]).
 pub fn train_minibatch(
     kind: ModelKind,
     ds: &GraphDataset,
@@ -228,7 +279,7 @@ pub fn train_minibatch(
 ) -> MinibatchReport {
     assert!(
         kind.supports_minibatch(),
-        "{} has no mini-batch training path (GCN/GAT/FiLM only)",
+        "{} has no mini-batch training path",
         kind.name()
     );
     let policy_name = policy.policy_name();
@@ -238,9 +289,28 @@ pub fn train_minibatch(
     let mut eng = AdjEngine::new(policy);
     eng.enable_decision_cache();
 
-    // Full-graph operands in CSR: row/col slicing runs on the CSR arrays.
-    let feats_csr = SparseMatrix::Csr(Csr::from_coo(&ds.features));
-    let adjn_csr = SparseMatrix::Csr(Csr::from_coo(&ds.adj_norm));
+    // Full-graph operand masters in CSR: row/col slicing runs directly on
+    // the CSR arrays. RGCN additionally materializes one normalized CSR
+    // per relation — split + normalized once, shared with the model's
+    // slots below, so the single-shard degenerate run reproduces the
+    // full-batch step exactly.
+    let rel_ops = if kind == ModelKind::Rgcn {
+        relation_operands(&ds.adj)
+    } else {
+        Vec::new()
+    };
+    let full = FullGraphOps {
+        feats: SparseMatrix::Csr(Csr::from_coo(&ds.features)),
+        adjn: SparseMatrix::Csr(Csr::from_coo(&ds.adj_norm)),
+        adj: &ds.adj,
+        rels: rel_ops.iter().map(|r| SparseMatrix::Csr(Csr::from_coo(r))).collect(),
+        // GAT's full-graph attention pattern is epoch-invariant: build it
+        // once for the eval rebinds instead of re-deriving it per epoch.
+        pattern: match kind {
+            ModelKind::Gat => Some(Gat::attention_pattern(&ds.adj)),
+            _ => None,
+        },
+    };
     let adj_csr = Csr::from_coo(&ds.adj); // sampler neighbor lists
     let all_feat_cols: Vec<u32> = (0..ds.features.cols as u32).collect();
 
@@ -251,16 +321,13 @@ pub fn train_minibatch(
         ModelKind::Gcn => MbModel::Gcn(Gcn::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
         ModelKind::Gat => MbModel::Gat(Gat::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
         ModelKind::Film => MbModel::Film(Film::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
-        _ => unreachable!("guarded by supports_minibatch"),
+        ModelKind::Rgcn => MbModel::Rgcn(Rgcn::with_relations(
+            ds, &rel_ops, cfg.hidden, cfg.lr, &mut rng, &mut eng,
+        )),
+        ModelKind::Egc => MbModel::Egc(Egc::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
     };
 
     let total_train = ds.train_mask.iter().filter(|&&m| m).count().max(1);
-    // GAT's full-graph attention pattern is epoch-invariant: build it once
-    // for the eval rebinds instead of re-deriving it per epoch.
-    let full_pattern = match kind {
-        ModelKind::Gat => Some(Gat::attention_pattern(&ds.adj)),
-        _ => None,
-    };
 
     let mut epoch_losses = Vec::with_capacity(cfg.epochs);
     let mut epoch_times = Vec::with_capacity(cfg.epochs);
@@ -294,8 +361,8 @@ pub fn train_minibatch(
             // other engine overhead.
             let x_sub = eng
                 .sw
-                .phase("extract", || feats_csr.extract_rows_cols(nodes, &all_feat_cols));
-            model.bind_subgraph(&mut eng, x_sub, nodes, &adjn_csr, &ds.adj);
+                .phase("extract", || full.feats.extract_rows_cols(nodes, &all_feat_cols));
+            model.bind_subgraph(&mut eng, x_sub, nodes, &full);
             let logits = model.forward(&mut eng);
             let (loss, dlogits) =
                 ops::masked_xent_with_grad(&logits, &labels_sub, &mask_sub);
@@ -318,7 +385,7 @@ pub fn train_minibatch(
         epoch_losses.push(epoch_loss);
 
         // Full-graph eval on the updated weights.
-        model.bind_full_graph(&mut eng, feats_csr.clone(), &adjn_csr, &full_pattern);
+        model.bind_full_graph(&mut eng, &full);
         let logits = model.forward(&mut eng);
         train_accs.push(ops::masked_accuracy(&logits, &ds.labels, &ds.train_mask));
         test_accs.push(ops::masked_accuracy(&logits, &ds.labels, &ds.test_mask));
@@ -450,15 +517,47 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no mini-batch training path")]
-    fn unsupported_model_panics() {
+    fn rgcn_minibatch_trains_with_per_relation_decisions() {
         let ds = small();
         let mut policy = StaticPolicy(Format::Csr);
-        let _ = train_minibatch(
+        let report = train_minibatch(
             ModelKind::Rgcn,
             &ds,
             &mut policy,
-            &MinibatchConfig::default(),
+            &MinibatchConfig { epochs: 8, hidden: 12, n_shards: 4, fanout: 6, ..Default::default() },
         );
+        assert_eq!(report.epoch_losses.len(), 8);
+        assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+        let first = report.epoch_losses[0];
+        let last = *report.epoch_losses.last().unwrap();
+        assert!(last < first, "RGCN minibatch loss should drop: {first} -> {last}");
+        // Per-relation extraction stays on the direct CSR path.
+        assert_eq!(report.coo_fallback_extractions, 0);
+        // Every relation slot decided independently, on both layers.
+        for r in 0..crate::gnn::rgcn::N_RELATIONS {
+            for layer in 1..=2 {
+                let slot = format!("rgcn.A{r}.l{layer}");
+                assert!(
+                    report.decisions.iter().any(|d| d.slot == slot),
+                    "missing decisions for relation slot {slot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn egc_minibatch_runs() {
+        let ds = small();
+        let mut policy = StaticPolicy(Format::Csr);
+        let report = train_minibatch(
+            ModelKind::Egc,
+            &ds,
+            &mut policy,
+            &MinibatchConfig { epochs: 3, hidden: 8, n_shards: 4, fanout: 4, ..Default::default() },
+        );
+        assert_eq!(report.epoch_losses.len(), 3);
+        assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
+        assert!(report.final_train_acc > 0.0);
+        assert_eq!(report.coo_fallback_extractions, 0);
     }
 }

@@ -9,10 +9,12 @@
 //! feature-extraction + prediction + conversion overhead to the measured
 //! time — matching the paper's accounting.
 //!
-//! Beyond full-batch scale, [`minibatch`] trains GCN/GAT/FiLM over node
+//! Beyond full-batch scale, [`minibatch`] trains all five models over node
 //! shards (degree-aware partition → seeded neighbor sampling → direct
 //! submatrix extraction → cached per-shard format decisions → gradient
-//! accumulation; DESIGN.md §Minibatch).
+//! accumulation; DESIGN.md §Minibatch). RGCN extracts one induced
+//! submatrix **per relation**, multiplying the decision surface the format
+//! predictor optimizes over (R relations × shards).
 
 pub mod engine;
 pub mod adam;

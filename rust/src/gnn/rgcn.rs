@@ -14,7 +14,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::{normalize_adj, GraphDataset};
-use crate::sparse::Coo;
+use crate::sparse::{Coo, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -73,6 +73,51 @@ pub fn split_relations(adj: &Coo, n_rels: usize) -> Vec<Coo> {
         .collect()
 }
 
+/// Full-graph per-relation **normalized** adjacencies — the operands
+/// [`Rgcn::new`] registers per layer, and the masters the mini-batch
+/// driver slices shard submatrices off (`gnn::minibatch`).
+pub fn relation_operands(adj: &Coo) -> Vec<Coo> {
+    split_relations(adj, N_RELATIONS).iter().map(normalize_adj).collect()
+}
+
+/// One RGCN layer's parameter gradients.
+pub struct RgcnLayerGrads {
+    pub dw_rel: Vec<Matrix>,
+    pub dw_self: Matrix,
+    pub dbias: Vec<f32>,
+}
+
+/// One backward pass's parameter gradients — the mini-batch accumulation
+/// unit (see `gnn::minibatch`).
+pub struct RgcnGrads {
+    pub l1: RgcnLayerGrads,
+    pub l2: RgcnLayerGrads,
+}
+
+impl RgcnGrads {
+    /// `self += w · other` (shard-weighted gradient accumulation).
+    pub fn add_scaled(&mut self, o: &RgcnGrads, w: f32) {
+        for (a, b) in [(&mut self.l1, &o.l1), (&mut self.l2, &o.l2)] {
+            for (da, db) in a.dw_rel.iter_mut().zip(b.dw_rel.iter()) {
+                ops::axpy_slice(&mut da.data, &db.data, w);
+            }
+            ops::axpy_slice(&mut a.dw_self.data, &b.dw_self.data, w);
+            ops::axpy_slice(&mut a.dbias, &b.dbias, w);
+        }
+    }
+
+    /// `self *= w`.
+    pub fn scale(&mut self, w: f32) {
+        for l in [&mut self.l1, &mut self.l2] {
+            for dw in &mut l.dw_rel {
+                ops::scale_slice(&mut dw.data, w);
+            }
+            ops::scale_slice(&mut l.dw_self.data, w);
+            ops::scale_slice(&mut l.dbias, w);
+        }
+    }
+}
+
 impl Rgcn {
     pub fn new(
         ds: &GraphDataset,
@@ -81,10 +126,23 @@ impl Rgcn {
         rng: &mut Rng,
         eng: &mut AdjEngine,
     ) -> Rgcn {
-        let rels: Vec<Coo> = split_relations(&ds.adj, N_RELATIONS)
-            .iter()
-            .map(normalize_adj)
-            .collect();
+        Rgcn::with_relations(ds, &relation_operands(&ds.adj), hidden, lr, rng, eng)
+    }
+
+    /// Build from **precomputed** normalized relation operands
+    /// ([`relation_operands`]). The mini-batch driver computes them once
+    /// and shares them between the model's slots and its extraction
+    /// masters instead of splitting + normalizing the edge set twice.
+    /// Consumes `rng` exactly like [`Rgcn::new`].
+    pub fn with_relations(
+        ds: &GraphDataset,
+        rels: &[Coo],
+        hidden: usize,
+        lr: f32,
+        rng: &mut Rng,
+        eng: &mut AdjEngine,
+    ) -> Rgcn {
+        assert_eq!(rels.len(), N_RELATIONS, "one operand per relation");
         let l1 = RgcnLayer::new(ds.features.cols, hidden, rng);
         let l2 = RgcnLayer::new(hidden, ds.n_classes, rng);
         let mut sizes = Vec::new();
@@ -148,7 +206,9 @@ impl Rgcn {
         logits
     }
 
-    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+    /// Backward pass returning parameter gradients without applying them
+    /// (the mini-batch accumulation path).
+    pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> RgcnGrads {
         let cache = self.cache.take().expect("forward before backward");
         let db2 = ops::col_sums(dlogits);
         // Layer 2 gradients.
@@ -174,24 +234,53 @@ impl Rgcn {
         }
         let dw1_self = eng.spmm_t(self.s_x, &dpre1);
 
-        // Adam updates (parameter order matches `new`).
+        RgcnGrads {
+            l1: RgcnLayerGrads { dw_rel: dw1_rel, dw_self: dw1_self, dbias: db1 },
+            l2: RgcnLayerGrads { dw_rel: dw2_rel, dw_self: dw2_self, dbias: db2 },
+        }
+    }
+
+    /// One Adam step from (possibly accumulated) gradients. Parameter
+    /// order matches `new`.
+    pub fn apply_grads(&mut self, g: &RgcnGrads) {
         self.adam.tick();
         let mut idx = 0;
         for r in 0..N_RELATIONS {
-            self.adam.update_matrix(idx, &mut self.l1.w_rel[r], &dw1_rel[r]);
+            self.adam.update_matrix(idx, &mut self.l1.w_rel[r], &g.l1.dw_rel[r]);
             idx += 1;
         }
-        self.adam.update_matrix(idx, &mut self.l1.w_self, &dw1_self);
+        self.adam.update_matrix(idx, &mut self.l1.w_self, &g.l1.dw_self);
         idx += 1;
-        self.adam.update(idx, &mut self.l1.bias, &db1);
+        self.adam.update(idx, &mut self.l1.bias, &g.l1.dbias);
         idx += 1;
         for r in 0..N_RELATIONS {
-            self.adam.update_matrix(idx, &mut self.l2.w_rel[r], &dw2_rel[r]);
+            self.adam.update_matrix(idx, &mut self.l2.w_rel[r], &g.l2.dw_rel[r]);
             idx += 1;
         }
-        self.adam.update_matrix(idx, &mut self.l2.w_self, &dw2_self);
+        self.adam.update_matrix(idx, &mut self.l2.w_self, &g.l2.dw_self);
         idx += 1;
-        self.adam.update(idx, &mut self.l2.bias, &db2);
+        self.adam.update(idx, &mut self.l2.bias, &g.l2.dbias);
+    }
+
+    /// Backward + Adam step (full-batch path).
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        let g = self.backward_grads(eng, dlogits);
+        self.apply_grads(&g);
+    }
+
+    /// Point the model at a new (sub)graph: induced feature rows `x` and
+    /// one induced **normalized relation adjacency per relation** (both
+    /// layers share each relation's matrix). This is the per-relation
+    /// rebinding the mini-batch driver uses — every relation keeps its own
+    /// slot, so the decision cache holds one entry per relation per shard
+    /// signature. H1 re-derives itself on the next forward.
+    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, rels: Vec<SparseMatrix>) {
+        assert_eq!(rels.len(), N_RELATIONS, "one submatrix per relation");
+        eng.set_slot_matrix(self.s_x, x);
+        for (r, sub) in rels.into_iter().enumerate() {
+            eng.set_slot_matrix(self.s_rel[0][r], sub.clone());
+            eng.set_slot_matrix(self.s_rel[1][r], sub);
+        }
     }
 }
 
@@ -226,6 +315,127 @@ mod tests {
         for r in &rels {
             assert_eq!(r.transpose(), *r);
         }
+    }
+
+    /// Property suite (ISSUE-4): for random symmetric graphs and relation
+    /// counts, the relation split is an exact disjoint cover of the edge
+    /// set (values preserved), every relation matrix stays symmetric, and
+    /// the partition is deterministic.
+    #[test]
+    fn prop_split_relations_cover_disjoint_symmetric() {
+        use crate::testing::{check, prop_assert, PropResult};
+        use std::collections::HashMap;
+        check(
+            25,
+            |rng| {
+                let n = 20 + rng.gen_range(80);
+                let mut triples = Vec::new();
+                for r in 0..n as u32 {
+                    for c in (r + 1)..n as u32 {
+                        if rng.bernoulli(0.08) {
+                            let v = rng.uniform(0.1, 1.0) as f32;
+                            triples.push((r, c, v));
+                            triples.push((c, r, v));
+                        }
+                    }
+                }
+                let n_rels = 1 + rng.gen_range(5);
+                (Coo::from_triples(n, n, triples), n_rels)
+            },
+            |(adj, n_rels)| -> PropResult {
+                let rels = split_relations(adj, *n_rels);
+                prop_assert(rels.len() == *n_rels, "one bucket per relation")?;
+                // Disjoint cover with values preserved: the multiset of
+                // entries across relations equals the original edge set.
+                let mut seen: HashMap<(u32, u32), f32> = HashMap::new();
+                for rel in &rels {
+                    prop_assert(
+                        (rel.rows, rel.cols) == (adj.rows, adj.cols),
+                        "relation keeps the graph shape",
+                    )?;
+                    for i in 0..rel.nnz() {
+                        prop_assert(
+                            seen.insert((rel.row[i], rel.col[i]), rel.val[i]).is_none(),
+                            "edge assigned to exactly one relation",
+                        )?;
+                    }
+                    // Symmetry: both directions of an undirected edge hash
+                    // to the same relation.
+                    prop_assert(rel.transpose() == *rel, "relation symmetric")?;
+                }
+                prop_assert(seen.len() == adj.nnz(), "edges covered exactly")?;
+                for i in 0..adj.nnz() {
+                    prop_assert(
+                        seen.get(&(adj.row[i], adj.col[i])) == Some(&adj.val[i]),
+                        "edge value preserved",
+                    )?;
+                }
+                // Deterministic for the same input.
+                prop_assert(split_relations(adj, *n_rels) == rels, "deterministic")
+            },
+        );
+    }
+
+    /// Self-loops hash on the degenerate key (v, v): each lands in exactly
+    /// one relation with its weight intact, and symmetry is unaffected.
+    #[test]
+    fn split_relations_handles_self_loops() {
+        let adj = Coo::from_triples(
+            6,
+            6,
+            vec![
+                (0, 0, 2.0),
+                (1, 1, 3.0),
+                (5, 5, 1.0),
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (2, 4, 1.0),
+                (4, 2, 1.0),
+            ],
+        );
+        let rels = split_relations(&adj, N_RELATIONS);
+        let total: usize = rels.iter().map(|r| r.nnz()).sum();
+        assert_eq!(total, adj.nnz());
+        let mut loop_count = 0;
+        for rel in &rels {
+            assert_eq!(rel.transpose(), *rel);
+            for i in 0..rel.nnz() {
+                if rel.row[i] == rel.col[i] {
+                    loop_count += 1;
+                    let v = rel.val[i];
+                    assert!(v == 2.0 || v == 3.0 || v == 1.0);
+                }
+            }
+        }
+        assert_eq!(loop_count, 3, "every self-loop lands in exactly one relation");
+    }
+
+    /// The grads-split refactor must leave full-batch RGCN identical:
+    /// `backward` ≡ `backward_grads` + `apply_grads`.
+    #[test]
+    fn split_backward_matches_fused_backward() {
+        let run = |split: bool| -> Matrix {
+            let mut rng = Rng::new(77);
+            let ds = tiny_dataset(&mut rng);
+            let mut policy = StaticPolicy(Format::Csr);
+            let mut eng = AdjEngine::new(&mut policy);
+            let mut model = Rgcn::new(&ds, 8, 0.02, &mut rng, &mut eng);
+            for _ in 0..4 {
+                let logits = model.forward(&mut eng);
+                let (_, dlogits) =
+                    ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+                if split {
+                    let g = model.backward_grads(&mut eng, &dlogits);
+                    model.apply_grads(&g);
+                } else {
+                    model.backward(&mut eng, &dlogits);
+                }
+            }
+            model.forward(&mut eng)
+        };
+        let a = run(false);
+        let b = run(true);
+        assert!(a.max_abs_diff(&b) < 1e-6, "split/fused RGCN backward diverged");
     }
 
     #[test]

@@ -46,11 +46,14 @@ impl ModelKind {
     }
 
     /// Whether the model has a sharded mini-batch training path
-    /// (`gnn::minibatch::train_minibatch`). GCN/GAT/FiLM rebind their
+    /// (`gnn::minibatch::train_minibatch`). All five models rebind their
     /// engine slots per shard (`set_graph`) and split gradient computation
-    /// from the optimizer step; RGCN/EGC still train full-batch only.
+    /// (`backward_grads`) from the optimizer step (`apply_grads`): GCN/EGC/
+    /// FiLM slice the shared normalized adjacency, GAT its attention
+    /// pattern, and RGCN one induced submatrix **per relation** (each
+    /// relation keeps its own slot and decision-cache entry).
     pub fn supports_minibatch(self) -> bool {
-        matches!(self, ModelKind::Gcn | ModelKind::Gat | ModelKind::Film)
+        true
     }
 }
 
@@ -263,11 +266,10 @@ mod tests {
 
     #[test]
     fn minibatch_support_matrix() {
-        assert!(ModelKind::Gcn.supports_minibatch());
-        assert!(ModelKind::Gat.supports_minibatch());
-        assert!(ModelKind::Film.supports_minibatch());
-        assert!(!ModelKind::Rgcn.supports_minibatch());
-        assert!(!ModelKind::Egc.supports_minibatch());
+        // ISSUE-4 closed the last coverage gap: every model trains sharded.
+        for kind in ALL_MODELS {
+            assert!(kind.supports_minibatch(), "{}", kind.name());
+        }
     }
 
     /// The grads-split refactor must leave full-batch training identical:

@@ -28,11 +28,18 @@ use std::collections::HashMap;
 /// factor of 2 in size or √10 in density (paper Fig. 1: winners flip
 /// between density *regimes*, not between adjacent sizes).
 ///
+/// **Both** dimensions are keyed (log₂ rows *and* cols): density alone
+/// cannot distinguish two shapes — equal rows/nnz with 2× the cols gives
+/// 2× the density, which can still land in the same half-decade bucket —
+/// so a rebind to a differently-shaped operand must change the signature,
+/// not ride the dead-band (ISSUE-4 hardening; the engine additionally
+/// re-decides on any shape change).
+///
 /// The **slot identity** is part of the key (22 bits of FNV-1a over the
 /// slot name): `FormatPolicy::decide_for_slot` may answer differently per
 /// slot (e.g. [`crate::gnn::engine::SlotTargetedPolicy`]), so a decision
 /// cached for one slot must never be served to another.
-fn signature(slot: &str, rows: usize, nnz: usize, density: f64, d: usize) -> u64 {
+fn signature(slot: &str, rows: usize, cols: usize, nnz: usize, density: f64, d: usize) -> u64 {
     let log2 = |v: usize| u64::from(usize::BITS - v.max(1).leading_zeros());
     // Half-decade buckets, offset to stay positive in the packing and
     // clamped so even denormal densities can't bleed into other fields.
@@ -45,7 +52,8 @@ fn signature(slot: &str, rows: usize, nnz: usize, density: f64, d: usize) -> u64
     for b in slot.bytes() {
         name_hash = (name_hash ^ u64::from(b)).wrapping_mul(0x0100_0000_01b3);
     }
-    (log2(rows) << 48)
+    (log2(cols) << 56)
+        | (log2(rows) << 48)
         | (log2(nnz) << 40)
         | (log2(d) << 32)
         | ((name_hash & 0x3f_ffff) << 10)
@@ -86,11 +94,12 @@ impl DecisionCache {
         &mut self,
         slot: &str,
         rows: usize,
+        cols: usize,
         nnz: usize,
         density: f64,
         d: usize,
     ) -> Option<Format> {
-        let sig = signature(slot, rows, nnz, density, d);
+        let sig = signature(slot, rows, cols, nnz, density, d);
         match self.entries.get(&sig) {
             Some(e) if rel_dev(density, e.density) <= self.rel_drift => {
                 self.hits += 1;
@@ -105,16 +114,18 @@ impl DecisionCache {
 
     /// Record a freshly made decision, (re-)anchoring the drift dead-band
     /// at the observed density.
+    #[allow(clippy::too_many_arguments)]
     pub fn store(
         &mut self,
         slot: &str,
         rows: usize,
+        cols: usize,
         nnz: usize,
         density: f64,
         d: usize,
         format: Format,
     ) {
-        let sig = signature(slot, rows, nnz, density, d);
+        let sig = signature(slot, rows, cols, nnz, density, d);
         self.entries.insert(sig, CacheEntry { format, density });
     }
 
@@ -150,10 +161,10 @@ mod tests {
     #[test]
     fn miss_then_hit_for_similar_matrices() {
         let mut c = DecisionCache::new(0.5);
-        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 16), None);
-        c.store("A", 1000, 5000, 0.005, 16, Format::Csr);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), None);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Csr);
         // Same bucket, slightly different shard.
-        assert_eq!(c.lookup("A", 990, 5100, 0.0052, 16), Some(Format::Csr));
+        assert_eq!(c.lookup("A", 990, 990, 5100, 0.0052, 16), Some(Format::Csr));
         assert_eq!(c.hits, 1);
         assert_eq!(c.misses, 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
@@ -162,35 +173,58 @@ mod tests {
     #[test]
     fn different_buckets_are_distinct_entries() {
         let mut c = DecisionCache::new(0.5);
-        c.store("A", 1000, 5000, 0.005, 16, Format::Csr);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Csr);
         // 4× the rows: different rows bucket.
-        assert_eq!(c.lookup("A", 4000, 5000, 0.005, 16), None);
+        assert_eq!(c.lookup("A", 4000, 1000, 5000, 0.005, 16), None);
         // 4× nnz: different nnz bucket.
-        assert_eq!(c.lookup("A", 1000, 20000, 0.005, 16), None);
+        assert_eq!(c.lookup("A", 1000, 1000, 20000, 0.005, 16), None);
         // 10× density: different density bucket.
-        assert_eq!(c.lookup("A", 1000, 5000, 0.05, 16), None);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.05, 16), None);
         // 4× dense width: different d bucket.
-        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 64), None);
-        c.store("A", 4000, 5000, 0.005, 16, Format::Coo);
-        assert_eq!(c.lookup("A", 1000, 5000, 0.005, 16), Some(Format::Csr));
-        assert_eq!(c.lookup("A", 4000, 5000, 0.005, 16), Some(Format::Coo));
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 64), None);
+        c.store("A", 4000, 1000, 5000, 0.005, 16, Format::Coo);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
+        assert_eq!(c.lookup("A", 4000, 1000, 5000, 0.005, 16), Some(Format::Coo));
+        assert_eq!(c.len(), 2);
+    }
+
+    /// Regression (ISSUE-4): cols is part of the signature. A matrix with
+    /// half the cols but comparable nnz can land in the same rows/nnz/
+    /// density buckets *and* inside the density dead-band — without a cols
+    /// bucket it would be served the full-width entry's decision.
+    #[test]
+    fn different_cols_are_distinct_entries_even_in_same_density_bucket() {
+        let mut c = DecisionCache::new(0.5);
+        // 1000×1000, nnz 11000 → density 0.011 (bucket −4; nnz bucket 14).
+        c.store("A", 1000, 1000, 11000, 0.011, 16, Format::Csr);
+        // 1000×500, nnz 8200 → density 0.0164: same nnz bucket (≥ 8192),
+        // same density bucket (−4), rel-drift 0.49 ≤ 0.5 — only the cols
+        // bucket separates the two.
+        assert_eq!(
+            c.lookup("A", 1000, 500, 8200, 0.0164, 16),
+            None,
+            "halved cols must not reuse the full-width entry"
+        );
+        c.store("A", 1000, 500, 8200, 0.0164, 16, Format::Csc);
+        assert_eq!(c.lookup("A", 1000, 1000, 11000, 0.011, 16), Some(Format::Csr));
+        assert_eq!(c.lookup("A", 1000, 500, 8200, 0.0164, 16), Some(Format::Csc));
         assert_eq!(c.len(), 2);
     }
 
     #[test]
     fn drift_beyond_band_invalidates_and_restore_reanchors() {
         let mut c = DecisionCache::new(0.5);
-        c.store("A", 1000, 5000, 0.0040, 16, Format::Csr);
+        c.store("A", 1000, 1000, 5000, 0.0040, 16, Format::Csr);
         // Within the same half-decade bucket but > 50% above the anchor:
         // hysteresis trips, the entry must be re-decided.
-        assert_eq!(c.lookup("A", 1000, 7000, 0.0070, 16), None);
-        c.store("A", 1000, 7000, 0.0070, 16, Format::Csc);
+        assert_eq!(c.lookup("A", 1000, 1000, 7000, 0.0070, 16), None);
+        c.store("A", 1000, 1000, 7000, 0.0070, 16, Format::Csc);
         // New anchor holds for nearby densities…
-        assert_eq!(c.lookup("A", 1000, 6900, 0.0069, 16), Some(Format::Csc));
+        assert_eq!(c.lookup("A", 1000, 1000, 6900, 0.0069, 16), Some(Format::Csc));
         // …and a density far below the *new* anchor re-decides even though
         // it sits in the same bucket (dead-band moved with the anchor —
         // that is the hysteresis).
-        assert_eq!(c.lookup("A", 1000, 5000, 0.0034, 16), None);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.0034, 16), None);
     }
 
     /// Slot-sensitive policies (`SlotTargetedPolicy`) may answer
@@ -199,18 +233,18 @@ mod tests {
     #[test]
     fn same_structure_different_slots_are_distinct_entries() {
         let mut c = DecisionCache::new(0.5);
-        c.store("gcn.H1", 1000, 5000, 0.005, 16, Format::Dia);
-        assert_eq!(c.lookup("gcn.A.l1", 1000, 5000, 0.005, 16), None);
-        c.store("gcn.A.l1", 1000, 5000, 0.005, 16, Format::Csr);
-        assert_eq!(c.lookup("gcn.H1", 1000, 5000, 0.005, 16), Some(Format::Dia));
-        assert_eq!(c.lookup("gcn.A.l1", 1000, 5000, 0.005, 16), Some(Format::Csr));
+        c.store("gcn.H1", 1000, 1000, 5000, 0.005, 16, Format::Dia);
+        assert_eq!(c.lookup("gcn.A.l1", 1000, 1000, 5000, 0.005, 16), None);
+        c.store("gcn.A.l1", 1000, 1000, 5000, 0.005, 16, Format::Csr);
+        assert_eq!(c.lookup("gcn.H1", 1000, 1000, 5000, 0.005, 16), Some(Format::Dia));
+        assert_eq!(c.lookup("gcn.A.l1", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
         assert_eq!(c.len(), 2);
     }
 
     #[test]
     fn zero_density_degenerates_safely() {
         let mut c = DecisionCache::new(0.5);
-        c.store("A", 10, 0, 0.0, 4, Format::Coo);
-        assert_eq!(c.lookup("A", 10, 0, 0.0, 4), Some(Format::Coo));
+        c.store("A", 10, 10, 0, 0.0, 4, Format::Coo);
+        assert_eq!(c.lookup("A", 10, 10, 0, 0.0, 4), Some(Format::Coo));
     }
 }

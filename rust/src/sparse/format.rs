@@ -516,8 +516,10 @@ mod tests {
         }
     }
 
-    /// The fallback counter (thread-local, so exact under parallel tests)
-    /// moves only for default-path formats — never for CSR/CSC/COO.
+    /// The fallback counter moves only for default-path formats — never
+    /// for CSR/CSC/COO. (Inline extractions land in this thread's local
+    /// counter, so concurrently running tests can't perturb the deltas;
+    /// pool-worker visibility is covered by `tests/fallback_counter.rs`.)
     #[test]
     fn coo_fallback_counter_tracks_only_default_paths() {
         use super::super::ops::coo_fallback_extractions;

@@ -34,23 +34,47 @@ use super::coo::Coo;
 use super::format::SparseMatrix;
 use crate::tensor::Matrix;
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 std::thread_local! {
-    /// Number of [`SparseOps::extract_rows_cols`] calls **on this thread**
-    /// that fell back to the COO round-trip (the default trait path).
-    /// CSR/CSC/COO extract directly on their own arrays and never bump
-    /// this — the mini-batch pipeline asserts the counter stays flat
-    /// across a sharded training run (`bench_minibatch` and the minibatch
-    /// integration test). Thread-local so concurrently running tests don't
-    /// observe each other's fallbacks; extraction always executes on the
-    /// calling thread, so a caller's delta is exact.
+    /// [`SparseOps::extract_rows_cols`] calls **on this thread** that fell
+    /// back to the COO round-trip (the default trait path). CSR/CSC/COO
+    /// extract directly on their own arrays and never bump this — the
+    /// mini-batch pipeline asserts the counter stays flat across a sharded
+    /// training run (`bench_minibatch` and the minibatch integration test).
+    /// Thread-local so concurrently running tests don't observe each
+    /// other's fallbacks.
     static COO_FALLBACK_EXTRACTIONS: Cell<u64> = const { Cell::new(0) };
 }
 
-/// This thread's count of COO-fallback extractions (monotone; compare
-/// deltas around the region of interest).
+/// Fallbacks executed **on pool worker threads**. A thread-local alone
+/// would silently miss extractions dispatched onto `util::pool` workers
+/// (e.g. a caller fanning per-relation extraction out via `parallel_map`):
+/// the worker's thread-local is invisible to the measuring thread, and the
+/// zero-fallback acceptance gates would pass vacuously. Worker-side bumps
+/// therefore land in this shared atomic, which
+/// [`coo_fallback_extractions`] folds into its total. Pool jobs are
+/// serialized by the pool's lease, so no concurrent workload can inflate a
+/// caller's delta through this term in practice.
+static POOL_COO_FALLBACK_EXTRACTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one COO-fallback extraction on the executing thread (worker
+/// threads aggregate into the shared pool counter; see above).
+fn count_coo_fallback() {
+    if crate::util::pool::in_pool_worker() {
+        POOL_COO_FALLBACK_EXTRACTIONS.fetch_add(1, Ordering::Relaxed);
+    } else {
+        COO_FALLBACK_EXTRACTIONS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// COO-fallback extractions visible to this thread: its own thread-local
+/// count **plus** everything executed on `util::pool` workers (monotone;
+/// compare deltas around the region of interest). Pool-safe: an extraction
+/// cannot escape the count by running on a pool worker.
 pub fn coo_fallback_extractions() -> u64 {
     COO_FALLBACK_EXTRACTIONS.with(|c| c.get())
+        + POOL_COO_FALLBACK_EXTRACTIONS.load(Ordering::Relaxed)
 }
 
 /// Debug-build validation of a row/col id selection: strictly ascending
@@ -125,7 +149,7 @@ pub trait SparseOps {
     /// eagerly would be wasted work on the shard stream). Fallback calls
     /// are counted in [`coo_fallback_extractions`].
     fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> SparseMatrix {
-        COO_FALLBACK_EXTRACTIONS.with(|c| c.set(c.get() + 1));
+        count_coo_fallback();
         SparseMatrix::Coo(extract_coo(&self.to_coo(), rows, cols))
     }
 

@@ -1,0 +1,64 @@
+//! Pool-safety of the COO-fallback extraction counter.
+//!
+//! This lives in its own test binary on purpose: it deliberately produces
+//! COO-fallback extractions **on `util::pool` worker threads**, which land
+//! in the shared pool-side counter. Any test that asserts a zero fallback
+//! delta (the minibatch suite) runs in a different process and stays
+//! exact.
+
+use gnn_spmm::sparse::{coo_fallback_extractions, Coo, Dok, SparseMatrix, SparseOps};
+use gnn_spmm::util::parallel::parallel_map;
+use gnn_spmm::util::rng::Rng;
+
+fn random_dok(rng: &mut Rng, n: usize) -> Dok {
+    let mut triples = Vec::new();
+    for r in 0..n {
+        for c in 0..n {
+            if rng.bernoulli(0.2) {
+                triples.push((r as u32, c as u32, rng.uniform(-1.0, 1.0) as f32));
+            }
+        }
+    }
+    Dok::from_coo(&Coo::from_triples(n, n, triples))
+}
+
+/// Fallback extractions dispatched across the worker pool must all be
+/// visible to the measuring thread. Before the pool-aggregated counter, a
+/// worker-side extraction bumped only the worker's thread-local and the
+/// caller's delta silently read zero. Under `GNN_SPMM_THREADS=1` every
+/// task runs inline on the caller, which the sum covers equally.
+#[test]
+fn pool_worker_fallbacks_are_visible_to_the_caller() {
+    let mut rng = Rng::new(0xFA11);
+    let dok = random_dok(&mut rng, 24);
+    let rows: Vec<u32> = vec![0, 3, 5, 11, 20];
+    let cols: Vec<u32> = vec![1, 2, 8, 15];
+    let want = {
+        let full = dok.to_coo().to_dense();
+        let mut m = gnn_spmm::tensor::Matrix::zeros(rows.len(), cols.len());
+        for (nr, &r) in rows.iter().enumerate() {
+            for (nc, &c) in cols.iter().enumerate() {
+                *m.at_mut(nr, nc) = full.at(r as usize, c as usize);
+            }
+        }
+        m
+    };
+
+    let n_tasks = 8;
+    let before = coo_fallback_extractions();
+    let subs = parallel_map(n_tasks, |_| SparseOps::extract_rows_cols(&dok, &rows, &cols));
+    assert_eq!(
+        coo_fallback_extractions() - before,
+        n_tasks as u64,
+        "every pool-dispatched fallback extraction must be counted"
+    );
+    for sub in &subs {
+        assert!(matches!(sub, SparseMatrix::Coo(_)), "fallback lands in COO");
+        assert_eq!(sub.to_dense().max_abs_diff(&want), 0.0);
+    }
+
+    // Inline (non-pool) fallbacks keep counting through the same getter.
+    let before = coo_fallback_extractions();
+    let _ = SparseOps::extract_rows_cols(&dok, &rows, &cols);
+    assert_eq!(coo_fallback_extractions() - before, 1);
+}
