@@ -35,4 +35,17 @@ echo "== minibatch smoke test: RGCN (4 shards, per-relation extraction) =="
 cargo run --release --example minibatch_rgcn -- \
   --shrink 32 --shards 4 --epochs 2 --fanout 12 --policy static --seed 48879
 
+# Warm-start flow end to end (§Shared-Ownership): train → save the decision
+# cache → a FRESH PROCESS loads it and asserts the warm hit rate. Two runs
+# of the same example against one cache path = two separate processes.
+echo "== warm-start decision cache smoke (train -> save -> fresh-process load) =="
+WARMSTART_DIR="$(mktemp -d)"
+trap 'rm -rf "$WARMSTART_DIR"' EXIT
+WARMSTART_CACHE="$WARMSTART_DIR/warmstart_cache.json"
+cargo run --release --example warmstart_cache -- \
+  --cache "$WARMSTART_CACHE" --shrink 32 --shards 4 --epochs 2 --fanout 12 --seed 48879
+cargo run --release --example warmstart_cache -- \
+  --cache "$WARMSTART_CACHE" --shrink 32 --shards 4 --epochs 2 --fanout 12 --seed 48879 \
+  --expect-warm 0.8
+
 echo "CI OK"

@@ -1,0 +1,100 @@
+//! Warm-start smoke: persist the decision cache from one training process
+//! and reload it in the next, skipping the cold first epoch entirely.
+//!
+//! ci.sh runs this twice against the same `--cache` path:
+//!
+//! ```bash
+//! # 1st run: no cache file yet → trains cold, saves the cache.
+//! cargo run --release --example warmstart_cache -- --cache /tmp/c.json --shrink 32
+//! # 2nd run (fresh process): loads the cache, trains warm, and asserts
+//! # the overall hit rate clears the warm-rate gate.
+//! cargo run --release --example warmstart_cache -- --cache /tmp/c.json --shrink 32 --expect-warm 0.8
+//! ```
+
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{train_minibatch_warm, MinibatchConfig, ModelKind};
+use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
+use gnn_spmm::predictor::DecisionCache;
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::cli::Args;
+use gnn_spmm::util::rng::Rng;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cache_path = PathBuf::from(args.get_or("cache", "warmstart_cache.json"));
+    let shrink: usize = args.get_or("shrink", "32").parse()?;
+    let n_shards: usize = args.get_or("shards", "4").parse()?;
+    let epochs: usize = args.get_or("epochs", "2").parse()?;
+    let fanout: usize = args.get_or("fanout", "12").parse()?;
+    let seed: u64 = args.get_or("seed", "48879").parse()?;
+    let expect_warm: Option<f64> = args.get("expect-warm").map(|v| v.parse()).transpose()?;
+
+    let spec = if shrink > 1 {
+        LARGE_DATASETS[0].scaled_same_degree(shrink, 64)
+    } else {
+        LARGE_DATASETS[0]
+    };
+    println!("dataset: {} — {} nodes (shrink {shrink})", spec.name, spec.n);
+    let mut rng = Rng::new(seed);
+    let ds = GraphDataset::generate(&spec, &mut rng);
+
+    let warm = if cache_path.exists() {
+        let cache = DecisionCache::load(&cache_path)?;
+        println!(
+            "loaded decision cache: {} entries from {}",
+            cache.len(),
+            cache_path.display()
+        );
+        Some(cache)
+    } else {
+        println!("no cache at {} — cold start", cache_path.display());
+        None
+    };
+    let loaded = warm.is_some();
+
+    let cfg = MinibatchConfig {
+        epochs,
+        hidden: 8,
+        lr: 0.02,
+        seed,
+        n_shards,
+        fanout,
+    };
+    let mut policy = StaticPolicy(Format::Csr);
+    let report = train_minibatch_warm(ModelKind::Gcn, &ds, &mut policy, &cfg, warm);
+
+    let total = report.cache_hits + report.cache_misses;
+    let rate = if total == 0 { 0.0 } else { report.cache_hits as f64 / total as f64 };
+    println!(
+        "run done: {} decisions ({} hits / {} misses, overall rate {:.1}%), \
+         warm-epoch rate {:.1}%, test acc {:.3}",
+        total,
+        report.cache_hits,
+        report.cache_misses,
+        rate * 100.0,
+        report.warm_cache_hit_rate * 100.0,
+        report.final_test_acc,
+    );
+
+    if let Some(gate) = expect_warm {
+        anyhow::ensure!(
+            loaded,
+            "--expect-warm needs an existing cache at {}",
+            cache_path.display()
+        );
+        anyhow::ensure!(
+            rate >= gate,
+            "warm-started overall hit rate {rate:.3} below the {gate} gate"
+        );
+        println!("warm-start gate OK: {rate:.3} >= {gate}");
+    } else {
+        report.final_cache.save(&cache_path)?;
+        println!(
+            "saved {} cache entries to {}",
+            report.final_cache.len(),
+            cache_path.display()
+        );
+    }
+    Ok(())
+}

@@ -14,21 +14,37 @@
 //!   cannot escape it),
 //! * an RGCN pass (ISSUE-4): R relations × shards of per-relation direct
 //!   submatrix extraction, one decision-cache entry per relation per shard
-//!   signature — the workload where per-matrix decisions multiply.
+//!   signature — the workload where per-matrix decisions multiply,
+//! * an **eval-rebind probe** (§Shared-Ownership): the per-epoch
+//!   full-graph eval flip onto the dedicated double-buffered eval slots,
+//!   alloc-counter instrumented under the same accounting rules as
+//!   `perf_hotpath` (DESIGN.md §Perf) — **asserted to perform zero
+//!   allocations** in steady state — next to the legacy deep-clone rebind
+//!   it replaced (`rebind_ns` / `rebind_allocs` / `deep_rebind_ns`
+//!   records).
 //!
 //! Results land in `BENCH_minibatch.json` (override with
 //! `GNN_SPMM_BENCH_MINIBATCH_OUT`) — the start of the minibatch perf
 //! trajectory, alongside `BENCH_spmm.json` for the kernel layer.
 
-use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::bench::{bench, count_allocs, section, CountingAlloc};
+use gnn_spmm::gnn::engine::{AdjEngine, StaticPolicy};
+use gnn_spmm::gnn::gcn::Gcn;
+use gnn_spmm::gnn::rgcn::Rgcn;
 use gnn_spmm::gnn::{train_minibatch, MinibatchConfig, ModelKind};
 use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
 use gnn_spmm::predictor::training::{train_predictor, TrainingCorpus};
 use gnn_spmm::predictor::PredictedPolicy;
-use gnn_spmm::sparse::Format;
+use gnn_spmm::sparse::{Csr, Format, SharedMatrix};
 use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
 use gnn_spmm::util::stats;
+
+// Shared counting allocator (rules live in `bench::alloc_counter`; the
+// counters are gated, so timing sections run uninstrumented). The rebind
+// probe's zero-allocation gate reads it around the eval-slot flip.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     let out_path = std::env::var("GNN_SPMM_BENCH_MINIBATCH_OUT")
@@ -101,8 +117,9 @@ fn main() {
         );
         records.push(Json::obj(vec![
             ("model", Json::Str(report.model.to_string())),
-            ("dataset", Json::Str(report.dataset.clone())),
-            ("policy", Json::Str(report.policy.clone())),
+            // Report fields move into the record — no per-report clones.
+            ("dataset", Json::Str(report.dataset)),
+            ("policy", Json::Str(report.policy)),
             ("n", Json::Num(ds.adj.rows as f64)),
             ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
             ("shards", Json::Num(n_shards as f64)),
@@ -163,8 +180,8 @@ fn main() {
         );
         records.push(Json::obj(vec![
             ("model", Json::Str(report.model.to_string())),
-            ("dataset", Json::Str(report.dataset.clone())),
-            ("policy", Json::Str(report.policy.clone())),
+            ("dataset", Json::Str(report.dataset)),
+            ("policy", Json::Str(report.policy)),
             ("n", Json::Num(ds.adj.rows as f64)),
             ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
             ("shards", Json::Num(n_shards as f64)),
@@ -204,8 +221,8 @@ fn main() {
     );
     records.push(Json::obj(vec![
         ("model", Json::Str(report.model.to_string())),
-        ("dataset", Json::Str(report.dataset.clone())),
-        ("policy", Json::Str(report.policy.clone())),
+        ("dataset", Json::Str(report.dataset)),
+        ("policy", Json::Str(report.policy)),
         ("n", Json::Num(ds.adj.rows as f64)),
         ("adj_nnz", Json::Num(ds.adj.nnz() as f64)),
         ("shards", Json::Num(8.0)),
@@ -218,6 +235,130 @@ fn main() {
         ("coo_fallback_extractions", Json::Num(report.coo_fallback_extractions as f64)),
         ("final_test_acc", Json::Num(report.final_test_acc)),
     ]));
+
+    // ── §Shared-Ownership eval-rebind probe ─────────────────────────────
+    // The per-epoch full-graph eval is an O(1) flip onto dedicated eval
+    // slots bound once at startup. Measure the flip (rebind_ns), gate it
+    // at ZERO allocations (rebind_allocs — the hard acceptance criterion),
+    // and record the legacy deep-clone rebind it replaced for the
+    // before/after story.
+    section("eval rebind (§Shared-Ownership): slot flip vs legacy deep-clone");
+    {
+        let feats = SharedMatrix::from(Csr::from_coo(&ds.features));
+        let adjn = SharedMatrix::from(Csr::from_coo(&ds.adj_norm));
+        let shard: Vec<u32> = (0..ds.adj.rows as u32).step_by(8).collect();
+        let all_cols: Vec<u32> = (0..ds.features.cols as u32).collect();
+        let mut probe_policy = StaticPolicy(Format::Csr);
+        let mut eng = AdjEngine::new(&mut probe_policy);
+        eng.enable_decision_cache();
+        let mut prng = Rng::new(0xE7A1);
+        let mut model = Gcn::new(&ds, 16, 0.02, &mut prng, &mut eng);
+        model.bind_eval_graph(&mut eng, feats.clone(), adjn.clone());
+        // Settle: one shard bind + forward, one eval flip + forward — all
+        // decisions, conversions and workspace pools now exist.
+        model.set_graph(
+            &mut eng,
+            feats.extract_rows_cols(&shard, &all_cols),
+            adjn.extract_rows_cols(&shard, &shard),
+        );
+        let _ = model.forward(&mut eng);
+        model.use_eval_graph();
+        let _ = model.forward(&mut eng);
+        model.use_train_graph();
+        // Hard gate: the steady-state eval rebind performs ZERO allocations.
+        let (rebind_allocs, rebind_bytes) = count_allocs(|| model.use_eval_graph());
+        assert_eq!(
+            (rebind_allocs, rebind_bytes),
+            (0, 0),
+            "eval-slot flip must be allocation-free (got {rebind_allocs} allocs / {rebind_bytes} B)"
+        );
+        model.use_train_graph();
+        let r_flip = bench("rebind/eval_flip/GCN", 4, 32, || {
+            model.use_eval_graph();
+            model.use_train_graph();
+        });
+        // …and the steady-state eval forward makes no new decisions and no
+        // conversions (the slots are literally the same matrices).
+        let decisions_before = eng.decisions.len();
+        let converts_before =
+            eng.sw.report().iter().find(|p| p.0 == "convert").map(|p| p.2).unwrap_or(0);
+        model.use_eval_graph();
+        let _ = model.forward(&mut eng);
+        assert_eq!(
+            eng.decisions.len(),
+            decisions_before,
+            "steady-state eval flip must not re-decide"
+        );
+        let converts_after =
+            eng.sw.report().iter().find(|p| p.0 == "convert").map(|p| p.2).unwrap_or(0);
+        assert_eq!(converts_after, converts_before, "steady-state eval flip must not convert");
+        // Legacy path for comparison: deep-clone the masters into the
+        // train slots (what every epoch used to pay).
+        let r_deep = bench("rebind/deep_clone/GCN", 1, 5, || {
+            model.set_graph(&mut eng, (*feats).clone(), (*adjn).clone());
+        });
+        records.push(Json::obj(vec![
+            ("probe", Json::Str("eval_rebind".to_string())),
+            ("model", Json::Str("GCN".to_string())),
+            ("n", Json::Num(ds.adj.rows as f64)),
+            ("rebind_ns", Json::Num(r_flip.median_s * 1e9)),
+            ("rebind_allocs", Json::Num(rebind_allocs as f64)),
+            ("rebind_alloc_bytes", Json::Num(rebind_bytes as f64)),
+            ("deep_rebind_ns", Json::Num(r_deep.median_s * 1e9)),
+            (
+                "rebind_speedup",
+                Json::Num(r_deep.median_s / r_flip.median_s.max(1e-12)),
+            ),
+        ]));
+    }
+    // RGCN: the worst legacy offender (~2R CSR master copies per epoch).
+    {
+        let rels = gnn_spmm::gnn::rgcn::relation_operands(&ds.adj);
+        let rel_masters: Vec<SharedMatrix> =
+            rels.iter().map(|r| SharedMatrix::from(Csr::from_coo(r))).collect();
+        let feats = SharedMatrix::from(Csr::from_coo(&ds.features));
+        let mut probe_policy = StaticPolicy(Format::Csr);
+        let mut eng = AdjEngine::new(&mut probe_policy);
+        eng.enable_decision_cache();
+        let mut prng = Rng::new(0xE7A2);
+        let mut model = Rgcn::with_relations(&ds, &rels, 16, 0.02, &mut prng, &mut eng);
+        model.bind_eval_graph(&mut eng, feats.clone(), rel_masters.clone());
+        model.use_eval_graph();
+        let _ = model.forward(&mut eng);
+        model.use_train_graph();
+        let (rebind_allocs, rebind_bytes) = count_allocs(|| model.use_eval_graph());
+        assert_eq!(
+            (rebind_allocs, rebind_bytes),
+            (0, 0),
+            "RGCN eval-slot flip must be allocation-free"
+        );
+        model.use_train_graph();
+        let r_flip = bench("rebind/eval_flip/RGCN", 4, 32, || {
+            model.use_eval_graph();
+            model.use_train_graph();
+        });
+        let r_deep = bench("rebind/deep_clone/RGCN", 1, 3, || {
+            let deep: Vec<SharedMatrix> = rel_masters
+                .iter()
+                .map(|r| SharedMatrix::from((**r).clone()))
+                .collect();
+            model.set_graph(&mut eng, (*feats).clone(), deep);
+        });
+        records.push(Json::obj(vec![
+            ("probe", Json::Str("eval_rebind".to_string())),
+            ("model", Json::Str("RGCN".to_string())),
+            ("n", Json::Num(ds.adj.rows as f64)),
+            ("relations", Json::Num(rels.len() as f64)),
+            ("rebind_ns", Json::Num(r_flip.median_s * 1e9)),
+            ("rebind_allocs", Json::Num(rebind_allocs as f64)),
+            ("rebind_alloc_bytes", Json::Num(rebind_bytes as f64)),
+            ("deep_rebind_ns", Json::Num(r_deep.median_s * 1e9)),
+            (
+                "rebind_speedup",
+                Json::Num(r_deep.median_s / r_flip.median_s.max(1e-12)),
+            ),
+        ]));
+    }
 
     let threads = gnn_spmm::util::parallel::num_threads();
     let doc = Json::obj(vec![

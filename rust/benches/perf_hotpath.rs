@@ -23,55 +23,21 @@
 //! cached per-matrix nnz prefix-sum instead of materializing a range list —
 //! so `allocs_per_op_into` should read 0 after warmup.
 
-use gnn_spmm::bench::{bench, section};
+use gnn_spmm::bench::{bench, count_allocs, section, CountingAlloc};
 use gnn_spmm::features::extract_features;
 use gnn_spmm::graph::{gen_matrix, MatrixPattern};
 use gnn_spmm::sparse::{Format, SparseMatrix, ALL_FORMATS};
 use gnn_spmm::tensor::Matrix;
 use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
-use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Counting allocator: tracks calls and bytes so the JSON can report the
-/// per-op allocation cost of each kernel variant.
-struct CountingAlloc;
-
-static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
-static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
+// Shared counting allocator (rules live in `bench::alloc_counter`): the
+// JSON reports the per-op allocation cost of each kernel variant. The
+// counters are gated inside `count_allocs`, so the timing sections run
+// under uninstrumented conditions.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-/// Allocation calls + bytes across one invocation of `f`.
-fn count_allocs<T>(mut f: impl FnMut() -> T) -> (u64, u64) {
-    let c0 = ALLOC_CALLS.load(Ordering::Relaxed);
-    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
-    std::hint::black_box(f());
-    (
-        ALLOC_CALLS.load(Ordering::Relaxed) - c0,
-        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
-    )
-}
 
 /// (format, pattern, n, d) → (spmm_into_ns, spmm_t_into_ns) from a previous
 /// run's JSON, if one exists at `path`. Records predating the `pattern`

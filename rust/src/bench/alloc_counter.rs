@@ -1,0 +1,64 @@
+//! Counting global allocator shared by the bench binaries (DESIGN.md
+//! §Perf accounting rules — one implementation, one rule set).
+//!
+//! Each bench binary that wants allocation counts installs it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: gnn_spmm::bench::CountingAlloc = gnn_spmm::bench::CountingAlloc;
+//! ```
+//!
+//! Counting is **gated**: the atomic counters only tick inside
+//! [`count_allocs`], so the timing sections of a bench run under the same
+//! conditions as an uninstrumented binary (two relaxed atomic RMWs per
+//! allocation would otherwise skew every recorded ns/op, conflating a code
+//! change with the instrumentation in cross-PR comparisons). The gate is a
+//! single relaxed load on the alloc path when disabled.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Counting allocator: tracks calls and bytes (while enabled) so benches
+/// can report the per-op allocation cost of a code path.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocation calls + bytes across one invocation of `f`. Counts every
+/// thread's allocations while `f` runs (pool workers included), exactly
+/// like the always-on counter it replaces did during its window.
+pub fn count_allocs<T>(mut f: impl FnMut() -> T) -> (u64, u64) {
+    let c0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    ENABLED.store(true, Ordering::SeqCst);
+    std::hint::black_box(f());
+    ENABLED.store(false, Ordering::SeqCst);
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed) - c0,
+        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
+    )
+}

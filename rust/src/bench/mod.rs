@@ -1,6 +1,10 @@
 //! Criterion-like micro-bench harness (criterion is unavailable offline).
 //! Used by every binary under `rust/benches/` (built with `harness = false`).
 
+pub mod alloc_counter;
+
+pub use alloc_counter::{count_allocs, CountingAlloc};
+
 use crate::util::stats;
 use crate::util::timer::time_n;
 

@@ -13,7 +13,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::{Coo, SparseMatrix};
+use crate::sparse::{Coo, SharedMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -36,15 +36,24 @@ impl EgcLayer {
     }
 }
 
+/// Engine slot ids for one graph binding (train shards or the dedicated
+/// full-graph eval binding — §Shared-Ownership double-buffering).
+#[derive(Clone, Copy)]
+struct EgcSlots {
+    x: usize,
+    a1: usize,
+    a2: usize,
+    h1: usize,
+}
+
 /// Two-layer EGC-S.
 pub struct Egc {
     l1: EgcLayer,
     l2: EgcLayer,
     adam: Adam,
-    s_x: usize,
-    s_a1: usize,
-    s_a2: usize,
-    s_h1: usize,
+    slots: EgcSlots,
+    train_slots: EgcSlots,
+    eval_slots: Option<EgcSlots>,
     cache: Option<Cache>,
 }
 
@@ -133,11 +142,16 @@ impl Egc {
         }
         let adam = Adam::new(&sizes, lr);
         let n = ds.adj.rows;
+        let train_slots = EgcSlots {
+            x: eng.add_slot("egc.X", ds.features.clone()),
+            a1: eng.add_slot("egc.A.l1", ds.adj_norm.clone()),
+            a2: eng.add_slot("egc.A.l2", ds.adj_norm.clone()),
+            h1: eng.add_slot("egc.H1", Coo::from_triples(n, hidden, vec![])),
+        };
         Egc {
-            s_x: eng.add_slot("egc.X", ds.features.clone()),
-            s_a1: eng.add_slot("egc.A.l1", ds.adj_norm.clone()),
-            s_a2: eng.add_slot("egc.A.l2", ds.adj_norm.clone()),
-            s_h1: eng.add_slot("egc.H1", Coo::from_triples(n, hidden, vec![])),
+            slots: train_slots,
+            train_slots,
+            eval_slots: None,
             l1,
             l2,
             adam,
@@ -211,10 +225,11 @@ impl Egc {
     }
 
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
-        let (s1, p1, pre1) = Self::layer_forward(&self.l1, eng, self.s_x, self.s_a1);
+        let sl = self.slots;
+        let (s1, p1, pre1) = Self::layer_forward(&self.l1, eng, sl.x, sl.a1);
         let h1_dense = ops::relu(&pre1);
-        eng.update_slot_dense(self.s_h1, &h1_dense);
-        let (s2, p2, logits) = Self::layer_forward(&self.l2, eng, self.s_h1, self.s_a2);
+        eng.update_slot_dense(sl.h1, &h1_dense);
+        let (s2, p2, logits) = Self::layer_forward(&self.l2, eng, sl.h1, sl.a2);
         self.cache = Some(Cache { s1, p1, pre1, s2, p2 });
         logits
     }
@@ -223,12 +238,13 @@ impl Egc {
     /// (the mini-batch accumulation path).
     pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> EgcGrads {
         let cache = self.cache.take().expect("forward before backward");
+        let sl = self.slots;
         let (dh1, dws2, dw2, db2) = Self::layer_backward(
-            &self.l2, eng, self.s_h1, self.s_a2, &cache.s2, &cache.p2, dlogits,
+            &self.l2, eng, sl.h1, sl.a2, &cache.s2, &cache.p2, dlogits,
         );
         let dpre1 = ops::relu_grad(&cache.pre1, &dh1);
         let (_dx, dws1, dw1, db1) = Self::layer_backward(
-            &self.l1, eng, self.s_x, self.s_a1, &cache.s1, &cache.p1, &dpre1,
+            &self.l1, eng, sl.x, sl.a1, &cache.s1, &cache.p1, &dpre1,
         );
         EgcGrads {
             l1: EgcLayerGrads { dw: dw1, dws: dws1, dbias: db1 },
@@ -264,13 +280,45 @@ impl Egc {
         self.apply_grads(&g);
     }
 
-    /// Point the model at a new (sub)graph: induced feature rows `x` and
-    /// induced normalized adjacency `a` (both layers share it) — same
-    /// rebinding contract as GCN. H1 re-derives on the next forward.
-    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
-        eng.set_slot_matrix(self.s_x, x);
-        eng.set_slot_matrix(self.s_a1, a.clone());
-        eng.set_slot_matrix(self.s_a2, a);
+    /// Point the model's train slots at a new (sub)graph: induced feature
+    /// rows `x` and induced normalized adjacency `a` (both layers share
+    /// one handle) — same rebinding contract as GCN. H1 re-derives on the
+    /// next forward.
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        a: impl Into<SharedMatrix>,
+    ) {
+        self.slots = self.train_slots;
+        let a = a.into();
+        eng.set_slot_matrix(self.train_slots.x, x);
+        eng.set_slot_matrix(self.train_slots.a1, a.clone());
+        eng.set_slot_matrix(self.train_slots.a2, a);
+    }
+
+    /// Create + bind the dedicated full-graph eval slots once (handle
+    /// bumps, zero matrix-data copies); see [`super::gcn::Gcn::bind_eval_graph`].
+    pub fn bind_eval_graph(&mut self, eng: &mut AdjEngine, x: SharedMatrix, a: SharedMatrix) {
+        assert!(self.eval_slots.is_none(), "eval slots are bound once at startup");
+        let n = a.rows();
+        let hidden = self.l1.bias.len();
+        self.eval_slots = Some(EgcSlots {
+            x: eng.add_slot_shared("egc.X.eval", x),
+            a1: eng.add_slot_shared("egc.A.l1.eval", a.clone()),
+            a2: eng.add_slot_shared("egc.A.l2.eval", a),
+            h1: eng.add_slot("egc.H1.eval", Coo::from_triples(n, hidden, vec![])),
+        });
+    }
+
+    /// Flip onto the full-graph eval slots — O(1), no engine traffic.
+    pub fn use_eval_graph(&mut self) {
+        self.slots = self.eval_slots.expect("bind_eval_graph before use_eval_graph");
+    }
+
+    /// Flip back onto the train/shard slots (`set_graph` also does this).
+    pub fn use_train_graph(&mut self) {
+        self.slots = self.train_slots;
     }
 }
 

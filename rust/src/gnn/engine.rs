@@ -25,7 +25,8 @@
 //! changes — format conversions keep it.
 
 use crate::predictor::cache::DecisionCache;
-use crate::sparse::{Coo, Format, SparseMatrix};
+use crate::sparse::shared::WeakMatrix;
+use crate::sparse::{Coo, Format, SharedMatrix, SparseMatrix};
 use crate::tensor::Matrix;
 use crate::util::timer::Stopwatch;
 
@@ -47,6 +48,21 @@ pub trait FormatPolicy {
         sw: &mut Stopwatch,
     ) -> Format {
         self.decide(coo, d, sw)
+    }
+
+    /// Slot-aware decision plus a **calibrated confidence margin** in
+    /// [0, 1]. Deterministic policies are fully confident (1.0); learned
+    /// policies report the top-1 − top-2 class-probability gap, and the
+    /// decision cache declines to pin low-margin answers behind its
+    /// hysteresis dead-band (see `predictor::cache`).
+    fn decide_for_slot_with_confidence(
+        &mut self,
+        slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, f64) {
+        (self.decide_for_slot(slot, coo, d, sw), 1.0)
     }
 
     /// Human-readable name for reports.
@@ -108,7 +124,22 @@ const SLOT_POOL_CAP: usize = 4;
 /// workspaces and cached decision-path COO view.
 pub struct Slot {
     pub name: String,
-    pub matrix: SparseMatrix,
+    /// The operand in its working representation (possibly converted to the
+    /// decided format). An Arc-backed handle: binding a master here is a
+    /// refcount bump, and conversion installs a *fresh* handle — the bound
+    /// source is never written through (§Shared-Ownership).
+    pub matrix: SharedMatrix,
+    /// Identity of the operand as last bound (`add_slot`/`set_slot_matrix`),
+    /// kept even after `matrix` is replaced by a converted representation —
+    /// so rebinding the *same* handle is a no-op that preserves the
+    /// decision, the conversion and the COO view. A **non-owning** weak
+    /// token: after a conversion replaces the working copy, the original
+    /// operand is freed, not pinned by provenance (a dead token simply
+    /// never matches). `None` once the slot's content has been mutated
+    /// away from any bound handle (`update_slot*` refresh paths): a later
+    /// rebind of the old handle is then a real content change and must go
+    /// through the decision path again.
+    source: Option<WeakMatrix>,
     pub decided: Option<Format>,
     pub density_at_decision: f64,
     /// Shape observed when the current decision was made. A refresh that
@@ -171,16 +202,34 @@ impl<'p> AdjEngine<'p> {
         self.decision_cache = Some(DecisionCache::new(self.redecide_rel_drift));
     }
 
+    /// Install a pre-populated decision cache (warm start: a service loads
+    /// the previous run's persisted cache and skips the cold first epoch).
+    pub fn set_decision_cache(&mut self, cache: DecisionCache) {
+        self.decision_cache = Some(cache);
+    }
+
     /// The decision cache, if enabled (hit/miss accounting for reports).
     pub fn decision_cache(&self) -> Option<&DecisionCache> {
         self.decision_cache.as_ref()
     }
 
+    /// Take ownership of the decision cache (to persist it after a run).
+    pub fn take_decision_cache(&mut self) -> Option<DecisionCache> {
+        self.decision_cache.take()
+    }
+
     /// Register a sparse operand; returns its slot id.
     pub fn add_slot(&mut self, name: &str, coo: Coo) -> usize {
+        self.add_slot_shared(name, SharedMatrix::from(coo))
+    }
+
+    /// Register a sparse operand by shared handle — the master stays
+    /// co-owned by the caller, nothing is copied.
+    pub fn add_slot_shared(&mut self, name: &str, m: SharedMatrix) -> usize {
         self.slots.push(Slot {
             name: name.to_string(),
-            matrix: SparseMatrix::Coo(coo),
+            source: Some(m.downgrade()),
+            matrix: m,
             decided: None,
             density_at_decision: 0.0,
             shape_at_decision: (0, 0),
@@ -195,18 +244,29 @@ impl<'p> AdjEngine<'p> {
     /// The format decision is kept unless density drifts.
     pub fn update_slot(&mut self, slot: usize, coo: Coo) {
         let s = &mut self.slots[slot];
-        s.matrix = SparseMatrix::Coo(coo);
+        s.matrix = SharedMatrix::from(coo);
+        s.source = None;
         s.coo_view = None;
     }
 
     /// Rebind a slot to a **different operand** in whatever format it
     /// already carries — the mini-batch shard stream, where each batch's
     /// extracted submatrix (CSR from the direct extraction path) replaces
-    /// the previous one. Unlike [`AdjEngine::update_slot`], the format
-    /// decision is cleared: a new matrix deserves a fresh decision, which
-    /// the decision cache answers in O(1) for structurally similar shards.
-    pub fn set_slot_matrix(&mut self, slot: usize, m: SparseMatrix) {
+    /// the previous one. Binding is an O(1) handle install: no matrix data
+    /// moves. The format decision is cleared — a new matrix deserves a
+    /// fresh decision, which the decision cache answers in O(1) for
+    /// structurally similar shards — **unless** the incoming handle is the
+    /// very operand already bound (identity match on the slot's weak
+    /// source token): then the slot's decision, conversion and COO view
+    /// are all still literally about this matrix, and the rebind is a
+    /// complete no-op (the per-epoch full-graph eval path).
+    pub fn set_slot_matrix(&mut self, slot: usize, m: impl Into<SharedMatrix>) {
+        let m = m.into();
         let s = &mut self.slots[slot];
+        if s.source.as_ref().is_some_and(|src| src.is_handle_of(&m)) {
+            return;
+        }
+        s.source = Some(m.downgrade());
         s.matrix = m;
         s.coo_view = None;
         s.decided = None;
@@ -221,29 +281,45 @@ impl<'p> AdjEngine<'p> {
     pub fn update_slot_values(&mut self, slot: usize, pattern: &Coo, vals: &[f32]) {
         debug_assert_eq!(pattern.nnz(), vals.len());
         self.slots[slot].coo_view = None;
-        let replaced = self.sw.phase("sparsify", || {
-            match &mut self.slots[slot].matrix {
-                SparseMatrix::Coo(c) if c.val.len() == vals.len() => {
-                    c.val.copy_from_slice(vals);
-                    true
-                }
-                SparseMatrix::Csr(c) if c.vals.len() == vals.len() => {
-                    c.vals.copy_from_slice(vals);
-                    true
-                }
-                SparseMatrix::Lil(l) if l.nnz() == vals.len() => {
-                    let mut i = 0;
-                    for row in &mut l.rows_data {
-                        for entry in row.iter_mut() {
-                            entry.1 = vals[i];
-                            i += 1;
-                        }
+        // Content diverges from whatever handle was bound: drop the source
+        // identity so a later rebind of the old handle re-decides. (The
+        // token is weak, so this has no bearing on the CoW below — only a
+        // slot still sharing its payload with an external master pays one
+        // copy, and is uniquely owned from then on.)
+        self.slots[slot].source = None;
+        // Check writability on a shared view before touching `to_mut`: a
+        // variant mismatch falls through to a rebuild, and cloning the
+        // payload just to discover that would be a wasted deep copy.
+        let can_in_place = match &*self.slots[slot].matrix {
+            SparseMatrix::Coo(c) => c.val.len() == vals.len(),
+            SparseMatrix::Csr(c) => c.vals.len() == vals.len(),
+            SparseMatrix::Lil(l) => l.nnz() == vals.len(),
+            _ => false,
+        };
+        let replaced = can_in_place
+            && self.sw.phase("sparsify", || {
+                match self.slots[slot].matrix.to_mut() {
+                    SparseMatrix::Coo(c) if c.val.len() == vals.len() => {
+                        c.val.copy_from_slice(vals);
+                        true
                     }
-                    true
+                    SparseMatrix::Csr(c) if c.vals.len() == vals.len() => {
+                        c.vals.copy_from_slice(vals);
+                        true
+                    }
+                    SparseMatrix::Lil(l) if l.nnz() == vals.len() => {
+                        let mut i = 0;
+                        for row in &mut l.rows_data {
+                            for entry in row.iter_mut() {
+                                entry.1 = vals[i];
+                                i += 1;
+                            }
+                        }
+                        true
+                    }
+                    _ => false,
                 }
-                _ => false,
-            }
-        });
+            });
         if !replaced {
             let coo = Coo {
                 rows: pattern.rows,
@@ -272,7 +348,8 @@ impl<'p> AdjEngine<'p> {
                 .unwrap_or_else(|_| SparseMatrix::Csr(crate::sparse::Csr::from_dense(dense))),
             None => SparseMatrix::Coo(Coo::from_dense(dense)),
         });
-        self.slots[slot].matrix = built;
+        self.slots[slot].matrix = SharedMatrix::from(built);
+        self.slots[slot].source = None;
         self.slots[slot].coo_view = None;
     }
 
@@ -324,10 +401,15 @@ impl<'p> AdjEngine<'p> {
                         self.slots[slot].coo_view = Some(coo);
                     }
                     let coo = self.slots[slot].coo_view.take().unwrap();
-                    let fmt = self.policy.decide_for_slot(&name, &coo, d, &mut self.sw);
+                    let (fmt, margin) =
+                        self.policy.decide_for_slot_with_confidence(&name, &coo, d, &mut self.sw);
                     self.slots[slot].coo_view = Some(coo);
                     if let Some(c) = self.decision_cache.as_mut() {
-                        c.store(&name, rows, cols, nnz, density, d, fmt);
+                        // Low-margin predictions are *used* but not pinned:
+                        // the cache declines them (see `store_with_margin`)
+                        // so the hysteresis dead-band can't freeze a coin
+                        // flip into a standing answer.
+                        c.store_with_margin(&name, rows, cols, nnz, density, d, fmt, margin);
                     }
                     (fmt, false)
                 }
@@ -355,8 +437,12 @@ impl<'p> AdjEngine<'p> {
                         .convert(Format::Csr)
                         .expect("CSR conversion cannot fail")
                 });
-            // Conversion preserves content: the cached COO view stays valid.
-            self.slots[slot].matrix = converted;
+            // Conversion preserves content: the cached COO view stays
+            // valid, and so does the bound-source identity — a later rebind
+            // of the same master handle is still a no-op. The converted
+            // representation gets a fresh handle; the source (possibly a
+            // co-owned master) is released untouched.
+            self.slots[slot].matrix = SharedMatrix::from(converted);
         }
     }
 
@@ -748,6 +834,142 @@ mod tests {
         let y = engine.spmm(slot, &x);
         assert!(y.max_abs_diff(&want) < 1e-4);
         assert_eq!(engine.slots[slot].matrix.format(), Format::Csr);
+    }
+
+    /// §Shared-Ownership: rebinding the **same handle** (the per-epoch
+    /// eval path before dedicated eval slots existed) is a complete no-op —
+    /// decision, conversion and COO view all survive, even after the slot
+    /// converted its working representation away from the bound source.
+    #[test]
+    fn rebinding_same_handle_is_a_noop() {
+        let mut rng = Rng::new(26);
+        let master = SharedMatrix::from(random_coo(&mut rng, 48, 0.1));
+        let x = Matrix::rand(48, 4, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot_shared("A", master.clone());
+        let want = master.to_dense().matmul(&x);
+        let y1 = engine.spmm(slot, &x);
+        assert!(y1.max_abs_diff(&want) < 1e-4);
+        // COO master + CSR policy: the slot converted (fresh handle), the
+        // master itself is untouched and still COO.
+        assert_eq!(engine.slots[slot].matrix.format(), Format::Csr);
+        assert_eq!(master.format(), Format::Coo);
+        assert_eq!(engine.decisions.len(), 1);
+        let converts =
+            engine.sw.report().iter().find(|r| r.0 == "convert").map(|r| r.2).unwrap_or(0);
+        assert_eq!(converts, 1);
+        // Rebind the same handle: no new decision, no new conversion, the
+        // converted working copy is kept.
+        engine.set_slot_matrix(slot, master.clone());
+        let y2 = engine.spmm(slot, &x);
+        assert!(y2.max_abs_diff(&want) < 1e-4);
+        assert_eq!(engine.decisions.len(), 1, "same-handle rebind must not re-decide");
+        let converts_after =
+            engine.sw.report().iter().find(|r| r.0 == "convert").map(|r| r.2).unwrap_or(0);
+        assert_eq!(converts_after, 1, "same-handle rebind must not re-convert");
+        assert_eq!(engine.slots[slot].matrix.format(), Format::Csr);
+        // A *different* handle with identical content is still a rebind
+        // (identity, not equality, is the key).
+        let other = SharedMatrix::from(master.to_coo());
+        engine.set_slot_matrix(slot, other);
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decisions.len(), 2, "new handle must re-decide");
+    }
+
+    /// §Shared-Ownership: binding a master never deep-copies it, and the
+    /// slot's handle count returns to baseline after rebinds.
+    #[test]
+    fn slot_binding_shares_instead_of_copying() {
+        let mut rng = Rng::new(27);
+        let master = SharedMatrix::from(crate::sparse::Csr::from_coo(&random_coo(
+            &mut rng, 40, 0.1,
+        )));
+        assert_eq!(master.strong_count(), 1);
+        let x = Matrix::rand(40, 3, &mut rng);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot_shared("A", master.clone());
+        // Slot holds one working handle (the source identity is a weak
+        // token), no copies.
+        assert_eq!(master.strong_count(), 2);
+        // Already CSR + CSR policy: no conversion, the master's own arrays
+        // execute the kernel.
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(master.strong_count(), 2, "no conversion, no copies");
+        // Rebinds of the same handle don't accumulate references…
+        for _ in 0..10 {
+            engine.set_slot_matrix(slot, master.clone());
+        }
+        assert_eq!(master.strong_count(), 2);
+        // …and binding something else releases the master entirely.
+        engine.set_slot_matrix(slot, random_coo(&mut rng, 40, 0.1));
+        assert_eq!(master.strong_count(), 1);
+    }
+
+    /// A policy with tunable confidence for the margin-bypass test.
+    struct FixedConfidencePolicy {
+        format: Format,
+        margin: f64,
+    }
+
+    impl FormatPolicy for FixedConfidencePolicy {
+        fn decide(&mut self, _coo: &Coo, _d: usize, _sw: &mut Stopwatch) -> Format {
+            self.format
+        }
+
+        fn decide_for_slot_with_confidence(
+            &mut self,
+            _slot: &str,
+            coo: &Coo,
+            d: usize,
+            sw: &mut Stopwatch,
+        ) -> (Format, f64) {
+            (self.decide(coo, d, sw), self.margin)
+        }
+
+        fn policy_name(&self) -> String {
+            "fixed-confidence".to_string()
+        }
+    }
+
+    /// Low-margin decisions are used once but never pinned: every
+    /// structurally similar rebind consults the policy again instead of
+    /// being answered by a cache entry the dead-band would freeze.
+    #[test]
+    fn low_margin_decisions_bypass_the_cache() {
+        let mut rng = Rng::new(28);
+        let x = Matrix::rand(64, 4, &mut rng);
+        let mut policy = FixedConfidencePolicy { format: Format::Csr, margin: 0.01 };
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
+        let _ = engine.spmm(slot, &x);
+        for _ in 0..3 {
+            engine.set_slot_matrix(slot, random_coo(&mut rng, 64, 0.15));
+            let _ = engine.spmm(slot, &x);
+        }
+        let cache = engine.decision_cache().unwrap();
+        assert_eq!(cache.hits, 0, "low-margin answers must never be served");
+        assert_eq!(cache.misses, 4);
+        assert_eq!(cache.len(), 0, "low-margin answers must not be stored");
+        assert_eq!(cache.low_margin_bypasses, 4);
+        // Confident answers for the same stream do get pinned.
+        let mut policy = FixedConfidencePolicy { format: Format::Csr, margin: 0.9 };
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        let mut rng = Rng::new(28);
+        let _ = Matrix::rand(64, 4, &mut rng); // consume like above
+        let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
+        let _ = engine.spmm(slot, &x);
+        for _ in 0..3 {
+            engine.set_slot_matrix(slot, random_coo(&mut rng, 64, 0.15));
+            let _ = engine.spmm(slot, &x);
+        }
+        let cache = engine.decision_cache().unwrap();
+        assert_eq!(cache.hits, 3);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.low_margin_bypasses, 0);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::{Coo, SparseMatrix, SparseOps};
+use crate::sparse::{Coo, SharedMatrix, SparseOps};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -37,17 +37,29 @@ impl FilmLayer {
     }
 }
 
+/// Engine slot ids for one graph binding (train shards or the dedicated
+/// full-graph eval binding — §Shared-Ownership double-buffering).
+#[derive(Clone, Copy)]
+struct FilmSlots {
+    x: usize,
+    a1: usize,
+    a2: usize,
+    h1: usize,
+}
+
 /// Two-layer GNN-FiLM.
 pub struct Film {
     l1: FilmLayer,
     l2: FilmLayer,
     adam: Adam,
-    s_x: usize,
-    s_a1: usize,
-    s_a2: usize,
-    s_h1: usize,
-    /// ρ: row sums of Â.
-    rho: Vec<f32>,
+    slots: FilmSlots,
+    train_slots: FilmSlots,
+    eval_slots: Option<FilmSlots>,
+    /// ρ: row sums of Â for the train/shard binding (recomputed per
+    /// `set_graph`).
+    train_rho: Vec<f32>,
+    /// ρ for the full-graph eval binding, computed once at bind time.
+    eval_rho: Vec<f32>,
     cache: Option<Cache>,
 }
 
@@ -128,39 +140,56 @@ impl Film {
         );
         let n = ds.adj.rows;
         let rho = SparseOps::row_sums(&ds.adj_norm);
+        let train_slots = FilmSlots {
+            x: eng.add_slot("film.X", ds.features.clone()),
+            a1: eng.add_slot("film.A.l1", ds.adj_norm.clone()),
+            a2: eng.add_slot("film.A.l2", ds.adj_norm.clone()),
+            h1: eng.add_slot("film.H1", Coo::from_triples(n, hidden, vec![])),
+        };
         Film {
-            s_x: eng.add_slot("film.X", ds.features.clone()),
-            s_a1: eng.add_slot("film.A.l1", ds.adj_norm.clone()),
-            s_a2: eng.add_slot("film.A.l2", ds.adj_norm.clone()),
-            s_h1: eng.add_slot("film.H1", Coo::from_triples(n, hidden, vec![])),
+            slots: train_slots,
+            train_slots,
+            eval_slots: None,
             l1,
             l2,
             adam,
-            rho,
+            train_rho: rho,
+            eval_rho: Vec::new(),
             cache: None,
         }
     }
 
+    /// ρ for the active binding — derived from which slot set is active,
+    /// so the engine operands and the model-side ρ can never desync.
+    fn rho(&self) -> &[f32] {
+        if self.eval_slots.is_some_and(|e| e.x == self.slots.x) {
+            &self.eval_rho
+        } else {
+            &self.train_rho
+        }
+    }
+
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        let sl = self.slots;
         // Layer 1 (input = sparse X).
-        let gamma1 = eng.spmm(self.s_x, &self.l1.g);
-        let beta1 = eng.spmm(self.s_x, &self.l1.bm);
-        let zw1 = eng.spmm(self.s_x, &self.l1.w);
-        let p1 = eng.spmm(self.s_a1, &zw1);
+        let gamma1 = eng.spmm(sl.x, &self.l1.g);
+        let beta1 = eng.spmm(sl.x, &self.l1.bm);
+        let zw1 = eng.spmm(sl.x, &self.l1.w);
+        let p1 = eng.spmm(sl.a1, &zw1);
         let pre1 = ops::add_row(
-            &ops::add(&ops::mul(&gamma1, &p1), &scale_rows(&beta1, &self.rho)),
+            &ops::add(&ops::mul(&gamma1, &p1), &scale_rows(&beta1, self.rho())),
             &self.l1.bias,
         );
         let h1_dense = ops::relu(&pre1);
-        eng.update_slot_dense(self.s_h1, &h1_dense);
+        eng.update_slot_dense(sl.h1, &h1_dense);
 
         // Layer 2 (input = sparsified H1).
-        let gamma2 = eng.spmm(self.s_h1, &self.l2.g);
-        let beta2 = eng.spmm(self.s_h1, &self.l2.bm);
-        let zw2 = eng.spmm(self.s_h1, &self.l2.w);
-        let p2 = eng.spmm(self.s_a2, &zw2);
+        let gamma2 = eng.spmm(sl.h1, &self.l2.g);
+        let beta2 = eng.spmm(sl.h1, &self.l2.bm);
+        let zw2 = eng.spmm(sl.h1, &self.l2.w);
+        let p2 = eng.spmm(sl.a2, &zw2);
         let logits = ops::add_row(
-            &ops::add(&ops::mul(&gamma2, &p2), &scale_rows(&beta2, &self.rho)),
+            &ops::add(&ops::mul(&gamma2, &p2), &scale_rows(&beta2, self.rho())),
             &self.l2.bias,
         );
         self.cache = Some(Cache { gamma1, p1, pre1, gamma2, p2 });
@@ -171,16 +200,17 @@ impl Film {
     /// (the mini-batch accumulation path).
     pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> FilmGrads {
         let cache = self.cache.take().expect("forward before backward");
+        let sl = self.slots;
         let db2 = ops::col_sums(dlogits);
         // Layer 2.
         let dgamma2 = ops::mul(&cache.p2, dlogits);
         let dp2 = ops::mul(&cache.gamma2, dlogits);
-        let dbeta2 = scale_rows(dlogits, &self.rho);
-        let dzw2 = eng.spmm(self.s_a2, &dp2); // Âᵀ = Â
+        let dbeta2 = scale_rows(dlogits, self.rho());
+        let dzw2 = eng.spmm(sl.a2, &dp2); // Âᵀ = Â
         // H1ᵀ·… — transpose-free on the H1 slot.
-        let dw2 = eng.spmm_t(self.s_h1, &dzw2);
-        let dg2 = eng.spmm_t(self.s_h1, &dgamma2);
-        let dbm2 = eng.spmm_t(self.s_h1, &dbeta2);
+        let dw2 = eng.spmm_t(sl.h1, &dzw2);
+        let dg2 = eng.spmm_t(sl.h1, &dgamma2);
+        let dbm2 = eng.spmm_t(sl.h1, &dbeta2);
         let dh1 = {
             let a = dzw2.matmul_t(&self.l2.w);
             let b = dgamma2.matmul_t(&self.l2.g);
@@ -193,12 +223,12 @@ impl Film {
         let db1 = ops::col_sums(&dpre1);
         let dgamma1 = ops::mul(&cache.p1, &dpre1);
         let dp1 = ops::mul(&cache.gamma1, &dpre1);
-        let dbeta1 = scale_rows(&dpre1, &self.rho);
-        let dzw1 = eng.spmm(self.s_a1, &dp1);
+        let dbeta1 = scale_rows(&dpre1, self.rho());
+        let dzw1 = eng.spmm(sl.a1, &dp1);
         // Xᵀ·… — transpose-free on the X slot.
-        let dw1 = eng.spmm_t(self.s_x, &dzw1);
-        let dg1 = eng.spmm_t(self.s_x, &dgamma1);
-        let dbm1 = eng.spmm_t(self.s_x, &dbeta1);
+        let dw1 = eng.spmm_t(sl.x, &dzw1);
+        let dg1 = eng.spmm_t(sl.x, &dgamma1);
+        let dbm1 = eng.spmm_t(sl.x, &dbeta1);
 
         FilmGrads {
             l1: FilmLayerGrads { dw: dw1, dg: dg1, dbm: dbm1, dbias: db1 },
@@ -225,15 +255,50 @@ impl Film {
         self.apply_grads(&g);
     }
 
-    /// Point the model at a new (sub)graph: induced feature rows `x` and
-    /// induced normalized adjacency `a`. ρ (the per-node normalized degree
-    /// the modulation scales by) is recomputed from `a`'s row sums via the
-    /// format-dispatched `row_sums` — no COO round-trip for CSR shards.
-    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
-        self.rho = a.row_sums();
-        eng.set_slot_matrix(self.s_x, x);
-        eng.set_slot_matrix(self.s_a1, a.clone());
-        eng.set_slot_matrix(self.s_a2, a);
+    /// Point the model's train slots at a new (sub)graph: induced feature
+    /// rows `x` and induced normalized adjacency `a`. ρ (the per-node
+    /// normalized degree the modulation scales by) is recomputed from `a`'s
+    /// row sums via the format-dispatched `row_sums` — no COO round-trip
+    /// for CSR shards.
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        a: impl Into<SharedMatrix>,
+    ) {
+        self.slots = self.train_slots;
+        let a = a.into();
+        self.train_rho = a.row_sums();
+        eng.set_slot_matrix(self.train_slots.x, x);
+        eng.set_slot_matrix(self.train_slots.a1, a.clone());
+        eng.set_slot_matrix(self.train_slots.a2, a);
+    }
+
+    /// Create + bind the dedicated full-graph eval slots once (handle
+    /// bumps, zero matrix-data copies); ρ for the full graph is computed
+    /// here exactly once. See [`super::gcn::Gcn::bind_eval_graph`].
+    pub fn bind_eval_graph(&mut self, eng: &mut AdjEngine, x: SharedMatrix, a: SharedMatrix) {
+        assert!(self.eval_slots.is_none(), "eval slots are bound once at startup");
+        let n = a.rows();
+        let hidden = self.l1.bias.len();
+        self.eval_rho = a.row_sums();
+        self.eval_slots = Some(FilmSlots {
+            x: eng.add_slot_shared("film.X.eval", x),
+            a1: eng.add_slot_shared("film.A.l1.eval", a.clone()),
+            a2: eng.add_slot_shared("film.A.l2.eval", a),
+            h1: eng.add_slot("film.H1.eval", Coo::from_triples(n, hidden, vec![])),
+        });
+    }
+
+    /// Flip onto the full-graph eval slots (and eval ρ) — O(1), no engine
+    /// traffic, no allocations.
+    pub fn use_eval_graph(&mut self) {
+        self.slots = self.eval_slots.expect("bind_eval_graph before use_eval_graph");
+    }
+
+    /// Flip back onto the train/shard slots (`set_graph` also does this).
+    pub fn use_train_graph(&mut self) {
+        self.slots = self.train_slots;
     }
 }
 

@@ -12,9 +12,10 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::{Coo, SparseMatrix};
+use crate::sparse::{Coo, SharedMatrix, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 const LEAKY: f32 = 0.2;
 
@@ -153,16 +154,29 @@ impl GatGrads {
     }
 }
 
+/// Engine slot ids for one graph binding (train shards or the dedicated
+/// full-graph eval binding — §Shared-Ownership double-buffering).
+#[derive(Clone, Copy)]
+struct GatSlots {
+    x: usize,
+    att1: usize,
+    att2: usize,
+    h1: usize,
+}
+
 /// Two-layer single-head GAT.
 pub struct Gat {
     l1: GatLayer,
     l2: GatLayer,
     adam: Adam,
-    pattern: Coo,
-    s_x: usize,
-    s_att1: usize,
-    s_att2: usize,
-    s_h1: usize,
+    /// Attention pattern of the train/shard binding (shared handle — the
+    /// mini-batch driver hands the same `Arc` it keeps as master).
+    train_pattern: Arc<Coo>,
+    /// Epoch-invariant full-graph pattern for the eval binding.
+    eval_pattern: Option<Arc<Coo>>,
+    slots: GatSlots,
+    train_slots: GatSlots,
+    eval_slots: Option<GatSlots>,
     h1_cache: Option<Matrix>, // pre-activation of layer 1
 }
 
@@ -187,12 +201,18 @@ impl Gat {
             lr,
         );
         let empty_h1 = Coo::from_triples(n, hidden, vec![]);
+        let train_slots = GatSlots {
+            x: eng.add_slot("gat.X", ds.features.clone()),
+            att1: eng.add_slot("gat.Att.l1", pattern.clone()),
+            att2: eng.add_slot("gat.Att.l2", pattern.clone()),
+            h1: eng.add_slot("gat.H1", empty_h1),
+        };
         Gat {
-            s_x: eng.add_slot("gat.X", ds.features.clone()),
-            s_att1: eng.add_slot("gat.Att.l1", pattern.clone()),
-            s_att2: eng.add_slot("gat.Att.l2", pattern.clone()),
-            s_h1: eng.add_slot("gat.H1", empty_h1),
-            pattern,
+            slots: train_slots,
+            train_slots,
+            eval_slots: None,
+            train_pattern: Arc::new(pattern),
+            eval_pattern: None,
             l1,
             l2,
             adam,
@@ -284,28 +304,39 @@ impl Gat {
     }
 
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
-        let pre1 = Self::layer_forward(
-            &self.pattern, &mut self.l1, eng, self.s_x, self.s_att1,
-        );
+        let sl = self.slots;
+        // Active pattern derived from which slot set is active (so engine
+        // operands and model-side pattern can never desync); written as a
+        // field-disjoint borrow that stays clear of `l1`/`l2`.
+        let on_eval = self.eval_slots.is_some_and(|e| e.x == sl.x);
+        let pattern: &Coo = if on_eval {
+            self.eval_pattern.as_deref().expect("bind_eval_graph before eval forward")
+        } else {
+            &self.train_pattern
+        };
+        let pre1 = Self::layer_forward(pattern, &mut self.l1, eng, sl.x, sl.att1);
         let h1_dense = ops::relu(&pre1);
-        eng.update_slot_dense(self.s_h1, &h1_dense);
+        eng.update_slot_dense(sl.h1, &h1_dense);
         self.h1_cache = Some(pre1);
-        Self::layer_forward(
-            &self.pattern, &mut self.l2, eng, self.s_h1, self.s_att2,
-        )
+        Self::layer_forward(pattern, &mut self.l2, eng, sl.h1, sl.att2)
     }
 
     /// Backward pass returning parameter gradients without applying them
     /// (the mini-batch accumulation path).
     pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> GatGrads {
         let pre1 = self.h1_cache.take().expect("forward before backward");
-        let (dh1, dw2, dal2, dar2, db2) = Self::layer_backward(
-            &self.pattern, &self.l2, eng, self.s_h1, self.s_att2, dlogits,
-        );
+        let sl = self.slots;
+        let on_eval = self.eval_slots.is_some_and(|e| e.x == sl.x);
+        let pattern: &Coo = if on_eval {
+            self.eval_pattern.as_deref().expect("bind_eval_graph before eval forward")
+        } else {
+            &self.train_pattern
+        };
+        let (dh1, dw2, dal2, dar2, db2) =
+            Self::layer_backward(pattern, &self.l2, eng, sl.h1, sl.att2, dlogits);
         let dpre1 = ops::relu_grad(&pre1, &dh1);
-        let (_dx, dw1, dal1, dar1, db1) = Self::layer_backward(
-            &self.pattern, &self.l1, eng, self.s_x, self.s_att1, &dpre1,
-        );
+        let (_dx, dw1, dal1, dar1, db1) =
+            Self::layer_backward(pattern, &self.l1, eng, sl.x, sl.att1, &dpre1);
         GatGrads {
             l1: GatLayerGrads { dw: dw1, dal: dal1, dar: dar1, dbias: db1 },
             l2: GatLayerGrads { dw: dw2, dal: dal2, dar: dar2, dbias: db2 },
@@ -331,17 +362,52 @@ impl Gat {
         self.apply_grads(&g);
     }
 
-    /// Point the model at a new (sub)graph: induced feature rows `x` and
-    /// the induced **attention pattern** (raw adjacency + self loops, unit
-    /// values). The attention slots are re-seeded with the pattern so the
-    /// per-forward value refresh (`update_slot_values`) finds a matching
-    /// edge count; their format decision is re-made through the decision
-    /// cache.
-    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, pattern: Coo) {
-        eng.set_slot_matrix(self.s_x, x);
-        eng.set_slot_matrix(self.s_att1, SparseMatrix::Coo(pattern.clone()));
-        eng.set_slot_matrix(self.s_att2, SparseMatrix::Coo(pattern.clone()));
-        self.pattern = pattern;
+    /// Point the model's train slots at a new (sub)graph: induced feature
+    /// rows `x` and the induced **attention pattern** (raw adjacency + self
+    /// loops, unit values). The attention slots are re-seeded with the
+    /// pattern so the per-forward value refresh (`update_slot_values`)
+    /// finds a matching edge count; their format decision is re-made
+    /// through the decision cache.
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        pattern: impl Into<Arc<Coo>>,
+    ) {
+        self.slots = self.train_slots;
+        let pattern = pattern.into();
+        eng.set_slot_matrix(self.train_slots.x, x);
+        eng.set_slot_matrix(self.train_slots.att1, SparseMatrix::Coo((*pattern).clone()));
+        eng.set_slot_matrix(self.train_slots.att2, SparseMatrix::Coo((*pattern).clone()));
+        self.train_pattern = pattern;
+    }
+
+    /// Create + bind the dedicated full-graph eval slots once. The feature
+    /// master binds by handle (zero copies); the two attention slots are
+    /// seeded from the epoch-invariant full pattern **once** — every later
+    /// eval forward refreshes their α values in place, and the per-epoch
+    /// flip itself ([`Gat::use_eval_graph`]) touches no matrix data.
+    pub fn bind_eval_graph(&mut self, eng: &mut AdjEngine, x: SharedMatrix, pattern: Arc<Coo>) {
+        assert!(self.eval_slots.is_none(), "eval slots are bound once at startup");
+        let n = pattern.rows;
+        let hidden = self.l1.bias.len();
+        self.eval_slots = Some(GatSlots {
+            x: eng.add_slot_shared("gat.X.eval", x),
+            att1: eng.add_slot("gat.Att.l1.eval", (*pattern).clone()),
+            att2: eng.add_slot("gat.Att.l2.eval", (*pattern).clone()),
+            h1: eng.add_slot("gat.H1.eval", Coo::from_triples(n, hidden, vec![])),
+        });
+        self.eval_pattern = Some(pattern);
+    }
+
+    /// Flip onto the full-graph eval slots — O(1), no engine traffic.
+    pub fn use_eval_graph(&mut self) {
+        self.slots = self.eval_slots.expect("bind_eval_graph before use_eval_graph");
+    }
+
+    /// Flip back onto the train/shard slots (`set_graph` also does this).
+    pub fn use_train_graph(&mut self) {
+        self.slots = self.train_slots;
     }
 
     /// Attention pattern for an arbitrary raw adjacency: adjacency + self
@@ -387,7 +453,7 @@ mod tests {
         let mut model = Gat::new(&ds, 8, 0.01, &mut rng, &mut eng);
         let _ = model.forward(&mut eng);
         let alpha = model.l1.alpha.as_ref().unwrap();
-        for &(s, t) in &row_segments(&model.pattern) {
+        for &(s, t) in &row_segments(&model.train_pattern) {
             let sum: f32 = alpha[s..t].iter().sum();
             assert!((sum - 1.0).abs() < 1e-4, "row softmax sum {sum}");
         }

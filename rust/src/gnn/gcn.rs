@@ -15,9 +15,20 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::GraphDataset;
-use crate::sparse::{Coo, SparseMatrix};
+use crate::sparse::{Coo, SharedMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
+
+/// Engine slot ids for one graph binding — the train/shard binding every
+/// model starts with, or the dedicated full-graph eval binding created by
+/// `bind_eval_graph` (§Shared-Ownership double-buffering).
+#[derive(Clone, Copy)]
+struct GcnSlots {
+    x: usize,
+    a1: usize,
+    a2: usize,
+    h1: usize,
+}
 
 /// Two-layer GCN with sparse intermediate storage.
 pub struct Gcn {
@@ -26,10 +37,11 @@ pub struct Gcn {
     pub w1: Matrix,
     pub b1: Vec<f32>,
     adam: Adam,
-    s_x: usize,
-    s_a1: usize,
-    s_a2: usize,
-    s_h1: usize,
+    /// Slots the forward/backward passes currently run on.
+    slots: GcnSlots,
+    train_slots: GcnSlots,
+    /// Double-buffered full-graph eval slots, bound once (`bind_eval_graph`).
+    eval_slots: Option<GcnSlots>,
     cache: Option<Cache>,
 }
 
@@ -81,11 +93,16 @@ impl Gcn {
         let w1 = Matrix::glorot(hidden, c, rng);
         let adam = Adam::new(&[w0.data.len(), hidden, w1.data.len(), c], lr);
         let empty_h1 = Coo::from_triples(ds.adj.rows, hidden, vec![]);
+        let train_slots = GcnSlots {
+            x: eng.add_slot("gcn.X", ds.features.clone()),
+            a1: eng.add_slot("gcn.A.l1", ds.adj_norm.clone()),
+            a2: eng.add_slot("gcn.A.l2", ds.adj_norm.clone()),
+            h1: eng.add_slot("gcn.H1", empty_h1),
+        };
         Gcn {
-            s_x: eng.add_slot("gcn.X", ds.features.clone()),
-            s_a1: eng.add_slot("gcn.A.l1", ds.adj_norm.clone()),
-            s_a2: eng.add_slot("gcn.A.l2", ds.adj_norm.clone()),
-            s_h1: eng.add_slot("gcn.H1", empty_h1),
+            slots: train_slots,
+            train_slots,
+            eval_slots: None,
             w0,
             b0: vec![0.0; hidden],
             w1,
@@ -97,22 +114,23 @@ impl Gcn {
 
     /// Forward pass; returns logits (n × classes).
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
-        let z0 = eng.spmm(self.s_x, &self.w0);
-        let a1z0 = eng.spmm(self.s_a1, &z0);
-        eng.recycle(self.s_x, z0);
+        let s = self.slots;
+        let z0 = eng.spmm(s.x, &self.w0);
+        let a1z0 = eng.spmm(s.a1, &z0);
+        eng.recycle(s.x, z0);
         let s0_pre = ops::add_row(&a1z0, &self.b0);
-        eng.recycle(self.s_a1, a1z0);
+        eng.recycle(s.a1, a1z0);
         let h1_dense = ops::relu(&s0_pre);
         // Store layer-1 output sparse — the paper's Fig-3 decision point.
         // Sparsified directly into the slot's decided format (§Perf); the
         // backward pass reads the same slot transpose-free via `spmm_t`.
-        eng.update_slot_dense(self.s_h1, &h1_dense);
-        let h1_density = eng.density(self.s_h1);
-        let z1 = eng.spmm(self.s_h1, &self.w1);
-        let a2z1 = eng.spmm(self.s_a2, &z1);
-        eng.recycle(self.s_h1, z1);
+        eng.update_slot_dense(s.h1, &h1_dense);
+        let h1_density = eng.density(s.h1);
+        let z1 = eng.spmm(s.h1, &self.w1);
+        let a2z1 = eng.spmm(s.a2, &z1);
+        eng.recycle(s.h1, z1);
         let logits = ops::add_row(&a2z1, &self.b1);
-        eng.recycle(self.s_a2, a2z1);
+        eng.recycle(s.a2, a2z1);
         self.cache = Some(Cache { s0_pre, h1_density });
         logits
     }
@@ -122,20 +140,21 @@ impl Gcn {
     /// accumulates these across shards before a single optimizer step.
     pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> GcnGrads {
         let cache = self.cache.take().expect("forward before backward");
+        let s = self.slots;
         let db1 = ops::col_sums(dlogits);
         // dZ1 = Âᵀ·dlogits (Â symmetric).
-        let dz1 = eng.spmm(self.s_a2, dlogits);
+        let dz1 = eng.spmm(s.a2, dlogits);
         // dW1 = H1ᵀ·dZ1 — transpose-free on the H1 slot.
-        let dw1 = eng.spmm_t(self.s_h1, &dz1);
+        let dw1 = eng.spmm_t(s.h1, &dz1);
         // dH1 = dZ1·W1ᵀ, gated by ReLU.
         let dh1 = dz1.matmul_t(&self.w1);
-        eng.recycle(self.s_a2, dz1);
+        eng.recycle(s.a2, dz1);
         let ds0 = ops::relu_grad(&cache.s0_pre, &dh1);
         let db0 = ops::col_sums(&ds0);
-        let dz0 = eng.spmm(self.s_a1, &ds0);
+        let dz0 = eng.spmm(s.a1, &ds0);
         // dW0 = Xᵀ·dZ0 — transpose-free on the X slot.
-        let dw0 = eng.spmm_t(self.s_x, &dz0);
-        eng.recycle(self.s_a1, dz0);
+        let dw0 = eng.spmm_t(s.x, &dz0);
+        eng.recycle(s.a1, dz0);
         GcnGrads { dw0, db0, dw1, db1 }
     }
 
@@ -155,14 +174,49 @@ impl Gcn {
         self.apply_grads(&g);
     }
 
-    /// Point the model's engine slots at a new (sub)graph: induced feature
-    /// rows `x` and induced normalized adjacency `a` (both layers share
-    /// it). Shapes may differ per shard; the weights don't. H1 re-derives
-    /// itself on the next forward.
-    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, a: SparseMatrix) {
-        eng.set_slot_matrix(self.s_x, x);
-        eng.set_slot_matrix(self.s_a1, a.clone());
-        eng.set_slot_matrix(self.s_a2, a);
+    /// Point the model's **train slots** at a new (sub)graph: induced
+    /// feature rows `x` and induced normalized adjacency `a` (both layers
+    /// share it — one handle, not two copies). Shapes may differ per shard;
+    /// the weights don't. H1 re-derives itself on the next forward. Also
+    /// flips the model back onto the train slots if it was evaluating.
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        a: impl Into<SharedMatrix>,
+    ) {
+        self.slots = self.train_slots;
+        let a = a.into();
+        eng.set_slot_matrix(self.train_slots.x, x);
+        eng.set_slot_matrix(self.train_slots.a1, a.clone());
+        eng.set_slot_matrix(self.train_slots.a2, a);
+    }
+
+    /// Create the dedicated full-graph eval slots (once) and bind them to
+    /// the shared masters — a refcount bump each, zero matrix-data copies.
+    /// Per-epoch eval then flips onto them via [`Gcn::use_eval_graph`]:
+    /// an O(1) id swap with no engine traffic at all, so format decisions,
+    /// conversions and workspace pools persist across epochs.
+    pub fn bind_eval_graph(&mut self, eng: &mut AdjEngine, x: SharedMatrix, a: SharedMatrix) {
+        assert!(self.eval_slots.is_none(), "eval slots are bound once at startup");
+        let n = a.rows();
+        let hidden = self.b0.len();
+        self.eval_slots = Some(GcnSlots {
+            x: eng.add_slot_shared("gcn.X.eval", x),
+            a1: eng.add_slot_shared("gcn.A.l1.eval", a.clone()),
+            a2: eng.add_slot_shared("gcn.A.l2.eval", a),
+            h1: eng.add_slot("gcn.H1.eval", Coo::from_triples(n, hidden, vec![])),
+        });
+    }
+
+    /// Flip onto the full-graph eval slots ([`Gcn::bind_eval_graph`] first).
+    pub fn use_eval_graph(&mut self) {
+        self.slots = self.eval_slots.expect("bind_eval_graph before use_eval_graph");
+    }
+
+    /// Flip back onto the train/shard slots (`set_graph` also does this).
+    pub fn use_train_graph(&mut self) {
+        self.slots = self.train_slots;
     }
 
     /// Density of the sparsified layer-1 activation after the last forward

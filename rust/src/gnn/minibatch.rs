@@ -51,9 +51,11 @@ use super::gcn::{Gcn, GcnGrads};
 use super::rgcn::{relation_operands, Rgcn, RgcnGrads};
 use super::train::ModelKind;
 use crate::graph::{GraphDataset, NeighborSampler, Partitioning};
-use crate::sparse::{Coo, Csr, SparseMatrix};
+use crate::predictor::cache::DecisionCache;
+use crate::sparse::{Coo, Csr, SharedMatrix, SparseMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Mini-batch training hyperparameters.
 #[derive(Clone, Copy, Debug)]
@@ -117,6 +119,10 @@ pub struct MinibatchReport {
     /// `sparse::coo_fallback_extractions()` delta across the run — 0 when
     /// every shard extraction took a direct format path.
     pub coo_fallback_extractions: u64,
+    /// The decision cache as it stood at the end of the run (taken from
+    /// the engine, not copied). Persist it with [`DecisionCache::save`] to
+    /// warm-start the next process ([`train_minibatch_warm`]).
+    pub final_cache: DecisionCache,
 }
 
 enum MbModel {
@@ -161,20 +167,22 @@ impl MbGrads {
 /// Full-graph operand masters the shard loop slices from. Everything sits
 /// in a format with a direct extraction path (CSR masters; GAT's raw
 /// adjacency is native COO), so the shard stream never pays the counted
-/// COO fallback.
+/// COO fallback. The masters are **shared handles** (§Shared-Ownership):
+/// the model's dedicated eval slots co-own them for the whole run — no
+/// rebind ever copies matrix data out of this struct.
 struct FullGraphOps<'d> {
     /// Sparse features, CSR (row slice via the identity-column fast path).
-    feats: SparseMatrix,
+    feats: SharedMatrix,
     /// Normalized adjacency, CSR (GCN/FiLM/EGC propagation operand).
-    adjn: SparseMatrix,
+    adjn: SharedMatrix,
     /// Raw adjacency (GAT derives its attention pattern from it).
     adj: &'d Coo,
     /// RGCN: one normalized adjacency per relation, CSR (empty otherwise).
     /// Each relation is sliced and rebound independently — per-relation
     /// slots mean per-relation decision-cache entries.
-    rels: Vec<SparseMatrix>,
+    rels: Vec<SharedMatrix>,
     /// GAT: epoch-invariant full-graph attention pattern.
-    pattern: Option<Coo>,
+    pattern: Option<Arc<Coo>>,
 }
 
 impl MbModel {
@@ -232,9 +240,13 @@ impl MbModel {
         if let MbModel::Rgcn(m) = self {
             // One induced submatrix per relation: a symmetric principal
             // submatrix of a symmetric relation stays symmetric, so the
-            // model's Â_rᵀ = Â_r backward identity holds per shard.
-            let subs: Vec<SparseMatrix> = eng.sw.phase("extract", || {
-                full.rels.iter().map(|rm| rm.extract_rows_cols(nodes, nodes)).collect()
+            // model's Â_rᵀ = Â_r backward identity holds per shard. Each
+            // submatrix becomes one shared handle bound to both layers.
+            let subs: Vec<SharedMatrix> = eng.sw.phase("extract", || {
+                full.rels
+                    .iter()
+                    .map(|rm| SharedMatrix::from(rm.extract_rows_cols(nodes, nodes)))
+                    .collect()
             });
             m.set_graph(eng, x, subs);
             return;
@@ -248,21 +260,36 @@ impl MbModel {
         }
     }
 
-    /// Rebind to the full graph for eval. The GAT attention pattern is
-    /// invariant across epochs, so it is built once by the caller and only
-    /// cloned here; RGCN rebinds every relation master.
-    fn bind_full_graph(&mut self, eng: &mut AdjEngine, full: &FullGraphOps) {
-        let x_full = full.feats.clone();
+    /// Create + bind the dedicated double-buffered eval slots, once at
+    /// startup, straight onto the shared masters (refcount bumps only —
+    /// the masters are never copied; for RGCN that deletes the old ~2R CSR
+    /// copies per epoch).
+    fn bind_eval_graph(&mut self, eng: &mut AdjEngine, full: &FullGraphOps) {
+        let x = full.feats.clone();
         match self {
-            MbModel::Gcn(m) => m.set_graph(eng, x_full, full.adjn.clone()),
-            MbModel::Film(m) => m.set_graph(eng, x_full, full.adjn.clone()),
-            MbModel::Egc(m) => m.set_graph(eng, x_full, full.adjn.clone()),
-            MbModel::Rgcn(m) => m.set_graph(eng, x_full, full.rels.clone()),
-            MbModel::Gat(m) => m.set_graph(
+            MbModel::Gcn(m) => m.bind_eval_graph(eng, x, full.adjn.clone()),
+            MbModel::Film(m) => m.bind_eval_graph(eng, x, full.adjn.clone()),
+            MbModel::Egc(m) => m.bind_eval_graph(eng, x, full.adjn.clone()),
+            MbModel::Rgcn(m) => m.bind_eval_graph(eng, x, full.rels.clone()),
+            MbModel::Gat(m) => m.bind_eval_graph(
                 eng,
-                x_full,
+                x,
                 full.pattern.clone().expect("pattern precomputed for GAT"),
             ),
+        }
+    }
+
+    /// Flip onto the eval slots for the per-epoch full-graph eval: an O(1)
+    /// id swap — zero engine traffic, zero matrix-data allocations
+    /// (asserted by `bench_minibatch`'s alloc-counter gate). The next
+    /// `bind_subgraph` flips back implicitly via `set_graph`.
+    fn use_eval_graph(&mut self) {
+        match self {
+            MbModel::Gcn(m) => m.use_eval_graph(),
+            MbModel::Gat(m) => m.use_eval_graph(),
+            MbModel::Film(m) => m.use_eval_graph(),
+            MbModel::Rgcn(m) => m.use_eval_graph(),
+            MbModel::Egc(m) => m.use_eval_graph(),
         }
     }
 }
@@ -277,6 +304,21 @@ pub fn train_minibatch(
     policy: &mut dyn FormatPolicy,
     cfg: &MinibatchConfig,
 ) -> MinibatchReport {
+    train_minibatch_warm(kind, ds, policy, cfg, None)
+}
+
+/// [`train_minibatch`] with an optional **warm-started decision cache** —
+/// a cache persisted by a previous process ([`DecisionCache::save`] on
+/// [`MinibatchReport::final_cache`], [`DecisionCache::load`] here) answers
+/// decisions from the first shard onward, skipping the cold first epoch a
+/// fresh service would otherwise pay.
+pub fn train_minibatch_warm(
+    kind: ModelKind,
+    ds: &GraphDataset,
+    policy: &mut dyn FormatPolicy,
+    cfg: &MinibatchConfig,
+    warm_cache: Option<DecisionCache>,
+) -> MinibatchReport {
     assert!(
         kind.supports_minibatch(),
         "{} has no mini-batch training path",
@@ -287,7 +329,10 @@ pub fn train_minibatch(
     let start = std::time::Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let mut eng = AdjEngine::new(policy);
-    eng.enable_decision_cache();
+    match warm_cache {
+        Some(cache) => eng.set_decision_cache(cache),
+        None => eng.enable_decision_cache(),
+    }
 
     // Full-graph operand masters in CSR: row/col slicing runs directly on
     // the CSR arrays. RGCN additionally materializes one normalized CSR
@@ -300,14 +345,14 @@ pub fn train_minibatch(
         Vec::new()
     };
     let full = FullGraphOps {
-        feats: SparseMatrix::Csr(Csr::from_coo(&ds.features)),
-        adjn: SparseMatrix::Csr(Csr::from_coo(&ds.adj_norm)),
+        feats: SharedMatrix::from(Csr::from_coo(&ds.features)),
+        adjn: SharedMatrix::from(Csr::from_coo(&ds.adj_norm)),
         adj: &ds.adj,
-        rels: rel_ops.iter().map(|r| SparseMatrix::Csr(Csr::from_coo(r))).collect(),
+        rels: rel_ops.iter().map(|r| SharedMatrix::from(Csr::from_coo(r))).collect(),
         // GAT's full-graph attention pattern is epoch-invariant: build it
-        // once for the eval rebinds instead of re-deriving it per epoch.
+        // once for the eval binding instead of re-deriving it per epoch.
         pattern: match kind {
-            ModelKind::Gat => Some(Gat::attention_pattern(&ds.adj)),
+            ModelKind::Gat => Some(Arc::new(Gat::attention_pattern(&ds.adj))),
             _ => None,
         },
     };
@@ -326,6 +371,9 @@ pub fn train_minibatch(
         )),
         ModelKind::Egc => MbModel::Egc(Egc::new(ds, cfg.hidden, cfg.lr, &mut rng, &mut eng)),
     };
+    // Dedicated double-buffered eval slots, bound once onto the shared
+    // masters: every per-epoch full-graph eval is then a pure slot-id flip.
+    model.bind_eval_graph(&mut eng, &full);
 
     let total_train = ds.train_mask.iter().filter(|&&m| m).count().max(1);
 
@@ -384,8 +432,10 @@ pub fn train_minibatch(
         epoch_times.push(t0.elapsed().as_secs_f64());
         epoch_losses.push(epoch_loss);
 
-        // Full-graph eval on the updated weights.
-        model.bind_full_graph(&mut eng, &full);
+        // Full-graph eval on the updated weights: flip onto the eval slots
+        // (O(1), allocation-free) — decisions, conversions and workspaces
+        // made there in epoch 0 persist for the whole run.
+        model.use_eval_graph();
         let logits = model.forward(&mut eng);
         train_accs.push(ops::masked_accuracy(&logits, &ds.labels, &ds.train_mask));
         test_accs.push(ops::masked_accuracy(&logits, &ds.labels, &ds.test_mask));
@@ -402,10 +452,14 @@ pub fn train_minibatch(
     } else {
         warm.iter().filter(|d| d.cached).count() as f64 / warm.len() as f64
     };
-    let cache = eng.decision_cache().expect("enabled above");
     let decision_overhead_s = eng.sw.total("to_coo_view")
         + eng.sw.total("feature_extract")
         + eng.sw.total("predict");
+    // The engine is dropped with this function: take the decision log and
+    // the cache instead of copying them (the old per-report
+    // `decisions.clone()` duplicated the full history every run).
+    let cache = eng.take_decision_cache().expect("enabled above");
+    let decisions = std::mem::take(&mut eng.decisions);
 
     MinibatchReport {
         model: kind.name(),
@@ -427,7 +481,8 @@ pub fn train_minibatch(
         decision_overhead_s,
         coo_fallback_extractions: crate::sparse::coo_fallback_extractions()
             - fallbacks_before,
-        decisions: eng.decisions.clone(),
+        decisions,
+        final_cache: cache,
     }
 }
 

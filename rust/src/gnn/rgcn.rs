@@ -14,7 +14,7 @@
 use super::adam::Adam;
 use super::engine::AdjEngine;
 use crate::graph::{normalize_adj, GraphDataset};
-use crate::sparse::{Coo, SparseMatrix};
+use crate::sparse::{Coo, SharedMatrix};
 use crate::tensor::{ops, Matrix};
 use crate::util::rng::Rng;
 
@@ -37,15 +37,24 @@ impl RgcnLayer {
     }
 }
 
+/// Engine slot ids for one graph binding (train shards or the dedicated
+/// full-graph eval binding — §Shared-Ownership double-buffering).
+#[derive(Clone, Copy)]
+struct RgcnSlots {
+    x: usize,
+    /// `rel[layer][relation]`.
+    rel: [[usize; N_RELATIONS]; 2],
+    h1: usize,
+}
+
 /// Two-layer RGCN.
 pub struct Rgcn {
     l1: RgcnLayer,
     l2: RgcnLayer,
     adam: Adam,
-    s_x: usize,
-    /// `s_rel[layer][relation]`.
-    s_rel: [[usize; N_RELATIONS]; 2],
-    s_h1: usize,
+    slots: RgcnSlots,
+    train_slots: RgcnSlots,
+    eval_slots: Option<RgcnSlots>,
     cache: Option<Cache>,
 }
 
@@ -161,47 +170,53 @@ impl Rgcn {
             }
         }
         let n = ds.adj.rows;
+        let train_slots = RgcnSlots {
+            x: eng.add_slot("rgcn.X", ds.features.clone()),
+            rel: s_rel,
+            h1: eng.add_slot("rgcn.H1", Coo::from_triples(n, hidden, vec![])),
+        };
         Rgcn {
-            s_x: eng.add_slot("rgcn.X", ds.features.clone()),
-            s_h1: eng.add_slot("rgcn.H1", Coo::from_triples(n, hidden, vec![])),
+            slots: train_slots,
+            train_slots,
+            eval_slots: None,
             l1,
             l2,
             adam,
-            s_rel,
             cache: None,
         }
     }
 
     pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        let sl = self.slots;
         // Layer 1: input X (sparse slot).
         let mut pre1: Option<Matrix> = None;
         for r in 0..N_RELATIONS {
-            let zw = eng.spmm(self.s_x, &self.l1.w_rel[r]); // X·W_r
-            let p = eng.spmm(self.s_rel[0][r], &zw); // Â_r·(X·W_r)
+            let zw = eng.spmm(sl.x, &self.l1.w_rel[r]); // X·W_r
+            let p = eng.spmm(sl.rel[0][r], &zw); // Â_r·(X·W_r)
             pre1 = Some(match pre1 {
                 None => p,
                 Some(acc) => ops::add(&acc, &p),
             });
         }
-        let self1 = eng.spmm(self.s_x, &self.l1.w_self);
+        let self1 = eng.spmm(sl.x, &self.l1.w_self);
         let pre1 = ops::add_row(&ops::add(&pre1.unwrap(), &self1), &self.l1.bias);
-        eng.recycle(self.s_x, self1);
+        eng.recycle(sl.x, self1);
         let h1_dense = ops::relu(&pre1);
-        eng.update_slot_dense(self.s_h1, &h1_dense);
+        eng.update_slot_dense(sl.h1, &h1_dense);
 
         // Layer 2: input H1 (sparse slot).
         let mut pre2: Option<Matrix> = None;
         for r in 0..N_RELATIONS {
-            let zw = eng.spmm(self.s_h1, &self.l2.w_rel[r]);
-            let p = eng.spmm(self.s_rel[1][r], &zw);
+            let zw = eng.spmm(sl.h1, &self.l2.w_rel[r]);
+            let p = eng.spmm(sl.rel[1][r], &zw);
             pre2 = Some(match pre2 {
                 None => p,
                 Some(acc) => ops::add(&acc, &p),
             });
         }
-        let self2 = eng.spmm(self.s_h1, &self.l2.w_self);
+        let self2 = eng.spmm(sl.h1, &self.l2.w_self);
         let logits = ops::add_row(&ops::add(&pre2.unwrap(), &self2), &self.l2.bias);
-        eng.recycle(self.s_h1, self2);
+        eng.recycle(sl.h1, self2);
         self.cache = Some(Cache { pre1 });
         logits
     }
@@ -210,29 +225,30 @@ impl Rgcn {
     /// (the mini-batch accumulation path).
     pub fn backward_grads(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) -> RgcnGrads {
         let cache = self.cache.take().expect("forward before backward");
+        let sl = self.slots;
         let db2 = ops::col_sums(dlogits);
         // Layer 2 gradients.
         let mut dh1 = dlogits.matmul_t(&self.l2.w_self); // self path
         let mut dw2_rel = Vec::with_capacity(N_RELATIONS);
         for r in 0..N_RELATIONS {
-            let da = eng.spmm(self.s_rel[1][r], dlogits); // Â_rᵀ·dlogits (sym)
-            let dw = eng.spmm_t(self.s_h1, &da); // H1ᵀ·(Â_r dlogits)
+            let da = eng.spmm(sl.rel[1][r], dlogits); // Â_rᵀ·dlogits (sym)
+            let dw = eng.spmm_t(sl.h1, &da); // H1ᵀ·(Â_r dlogits)
             dh1 = ops::add(&dh1, &da.matmul_t(&self.l2.w_rel[r]));
-            eng.recycle(self.s_rel[1][r], da);
+            eng.recycle(sl.rel[1][r], da);
             dw2_rel.push(dw);
         }
-        let dw2_self = eng.spmm_t(self.s_h1, dlogits);
+        let dw2_self = eng.spmm_t(sl.h1, dlogits);
 
         // Through ReLU.
         let dpre1 = ops::relu_grad(&cache.pre1, &dh1);
         let db1 = ops::col_sums(&dpre1);
         let mut dw1_rel = Vec::with_capacity(N_RELATIONS);
         for r in 0..N_RELATIONS {
-            let da = eng.spmm(self.s_rel[0][r], &dpre1);
-            dw1_rel.push(eng.spmm_t(self.s_x, &da));
-            eng.recycle(self.s_rel[0][r], da);
+            let da = eng.spmm(sl.rel[0][r], &dpre1);
+            dw1_rel.push(eng.spmm_t(sl.x, &da));
+            eng.recycle(sl.rel[0][r], da);
         }
-        let dw1_self = eng.spmm_t(self.s_x, &dpre1);
+        let dw1_self = eng.spmm_t(sl.x, &dpre1);
 
         RgcnGrads {
             l1: RgcnLayerGrads { dw_rel: dw1_rel, dw_self: dw1_self, dbias: db1 },
@@ -268,19 +284,66 @@ impl Rgcn {
         self.apply_grads(&g);
     }
 
-    /// Point the model at a new (sub)graph: induced feature rows `x` and
-    /// one induced **normalized relation adjacency per relation** (both
-    /// layers share each relation's matrix). This is the per-relation
-    /// rebinding the mini-batch driver uses — every relation keeps its own
-    /// slot, so the decision cache holds one entry per relation per shard
-    /// signature. H1 re-derives itself on the next forward.
-    pub fn set_graph(&mut self, eng: &mut AdjEngine, x: SparseMatrix, rels: Vec<SparseMatrix>) {
+    /// Point the model's train slots at a new (sub)graph: induced feature
+    /// rows `x` and one induced **normalized relation adjacency per
+    /// relation** (both layers share each relation's *handle* — no
+    /// per-layer copy). This is the per-relation rebinding the mini-batch
+    /// driver uses — every relation keeps its own slot, so the decision
+    /// cache holds one entry per relation per shard signature. H1
+    /// re-derives itself on the next forward.
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        rels: Vec<SharedMatrix>,
+    ) {
         assert_eq!(rels.len(), N_RELATIONS, "one submatrix per relation");
-        eng.set_slot_matrix(self.s_x, x);
+        self.slots = self.train_slots;
+        eng.set_slot_matrix(self.train_slots.x, x);
         for (r, sub) in rels.into_iter().enumerate() {
-            eng.set_slot_matrix(self.s_rel[0][r], sub.clone());
-            eng.set_slot_matrix(self.s_rel[1][r], sub);
+            eng.set_slot_matrix(self.train_slots.rel[0][r], sub.clone());
+            eng.set_slot_matrix(self.train_slots.rel[1][r], sub);
         }
+    }
+
+    /// Create + bind the dedicated full-graph eval slots once: the feature
+    /// master and all R relation masters bind by handle (for RGCN the old
+    /// deep-clone eval rebind was the worst offender — ~2R CSR copies per
+    /// epoch, now zero). See [`super::gcn::Gcn::bind_eval_graph`].
+    pub fn bind_eval_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: SharedMatrix,
+        rels: Vec<SharedMatrix>,
+    ) {
+        assert!(self.eval_slots.is_none(), "eval slots are bound once at startup");
+        assert_eq!(rels.len(), N_RELATIONS, "one master per relation");
+        let n = x.rows();
+        let hidden = self.l1.bias.len();
+        let mut rel = [[0usize; N_RELATIONS]; 2];
+        for (layer, slots) in rel.iter_mut().enumerate() {
+            for (r, slot) in slots.iter_mut().enumerate() {
+                *slot = eng.add_slot_shared(
+                    &format!("rgcn.A{r}.l{}.eval", layer + 1),
+                    rels[r].clone(),
+                );
+            }
+        }
+        self.eval_slots = Some(RgcnSlots {
+            x: eng.add_slot_shared("rgcn.X.eval", x),
+            rel,
+            h1: eng.add_slot("rgcn.H1.eval", Coo::from_triples(n, hidden, vec![])),
+        });
+    }
+
+    /// Flip onto the full-graph eval slots — O(1), no engine traffic.
+    pub fn use_eval_graph(&mut self) {
+        self.slots = self.eval_slots.expect("bind_eval_graph before use_eval_graph");
+    }
+
+    /// Flip back onto the train/shard slots (`set_graph` also does this).
+    pub fn use_train_graph(&mut self) {
+        self.slots = self.train_slots;
     }
 }
 

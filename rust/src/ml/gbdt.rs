@@ -165,6 +165,32 @@ impl Gbdt {
         s
     }
 
+    /// Argmax class plus a **calibrated confidence margin**: softmax the
+    /// decision scores and return `p(top1) − p(top2)` ∈ [0, 1]. The margin
+    /// is what the engine's decision cache uses to decline pinning
+    /// near-boundary predictions (`predictor::cache`). Ties break exactly
+    /// like [`Classifier::predict`]; a single-class model reports 1.0.
+    pub fn predict_with_margin(&self, x: &[f64]) -> (usize, f64) {
+        let s = self.decision_scores(x);
+        let max = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = s.iter().map(|v| (v - max).exp()).collect();
+        let z: f64 = exps.iter().sum::<f64>().max(1e-300);
+        let best = exps
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let p1 = exps.get(best).copied().unwrap_or(1.0) / z;
+        let p2 = exps
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != best)
+            .map(|(_, &e)| e / z)
+            .fold(0.0, f64::max);
+        (best, (p1 - p2).clamp(0.0, 1.0))
+    }
+
     /// Gain-normalized feature importance (sums to 1 unless all-zero).
     pub fn importance(&self) -> Vec<f64> {
         let total: f64 = self.feature_gain.iter().sum();
@@ -375,6 +401,27 @@ mod tests {
         let imp = model.importance();
         assert!((imp.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         assert!(imp[0] > 0.8, "feature 0 should dominate: {imp:?}");
+    }
+
+    /// The margin is a probability gap: in [0, 1], argmax-consistent with
+    /// `predict`, and high on the well-separated blobs the model fits.
+    #[test]
+    fn predict_with_margin_is_calibrated_and_consistent() {
+        let mut rng = Rng::new(9);
+        let data = testdata::blobs(&mut rng, 30, 4, 5);
+        let model = Gbdt::fit(&data, GbdtParams { n_rounds: 20, ..Default::default() });
+        let mut confident = 0usize;
+        for x in &data.x {
+            let (label, margin) = model.predict_with_margin(x);
+            assert_eq!(label, model.predict(x), "argmax must match predict");
+            assert!((0.0..=1.0).contains(&margin), "margin {margin} out of range");
+            if margin > 0.5 {
+                confident += 1;
+            }
+        }
+        // Well-separated blobs: the fitted model should be confidently
+        // right on most of its own training points.
+        assert!(confident * 2 > data.x.len(), "{confident}/{} confident", data.x.len());
     }
 
     #[test]

@@ -20,8 +20,23 @@
 //! at decision time; then the entry is re-decided and re-anchored. Shards
 //! that straddle a bucket boundary simply occupy two entries.
 
+//! Two service-oriented extensions (§Shared-Ownership PR):
+//!
+//! * **Persistence** — [`DecisionCache::save`]/[`DecisionCache::load`]
+//!   round-trip the entry table through `util::json`, so a service
+//!   warm-starts with a hot cache instead of paying a cold first epoch.
+//! * **Confidence margins** — [`DecisionCache::store_with_margin`] declines
+//!   to cache decisions whose calibrated confidence margin (top-1 − top-2
+//!   class probability from the predictor) falls below
+//!   [`DecisionCache::min_margin`]. A low-margin prediction is a coin flip
+//!   near a decision boundary; pinning it would let the hysteresis
+//!   dead-band keep serving the flip for the rest of the run. Bypassed
+//!   decisions are still *used* once — they are just re-asked next time.
+
 use crate::sparse::Format;
+use crate::util::json::Json;
 use std::collections::HashMap;
+use std::path::Path;
 
 /// Pack the structural signature into one key. Buckets are deliberately
 /// coarse: the predictor's own decision boundaries are much coarser than a
@@ -67,6 +82,11 @@ struct CacheEntry {
     density: f64,
 }
 
+/// Decisions whose confidence margin falls below this are not cached
+/// (see module docs). Margins are top-1 − top-2 class probabilities in
+/// [0, 1]; deterministic policies report 1.0 and always cache.
+pub const DEFAULT_MIN_MARGIN: f64 = 0.1;
+
 /// Format-decision cache with drift hysteresis (see module docs).
 #[derive(Clone, Debug)]
 pub struct DecisionCache {
@@ -75,15 +95,27 @@ pub struct DecisionCache {
     /// the cached decision is re-made (inherited from the engine's
     /// `redecide_rel_drift`).
     pub rel_drift: f64,
+    /// Minimum confidence margin a decision needs to be pinned
+    /// ([`DEFAULT_MIN_MARGIN`]; tune per deployment).
+    pub min_margin: f64,
     /// Lookups answered from the cache.
     pub hits: u64,
     /// Lookups that fell through to the policy.
     pub misses: u64,
+    /// Decisions declined by the margin gate (used once, not pinned).
+    pub low_margin_bypasses: u64,
 }
 
 impl DecisionCache {
     pub fn new(rel_drift: f64) -> DecisionCache {
-        DecisionCache { entries: HashMap::new(), rel_drift, hits: 0, misses: 0 }
+        DecisionCache {
+            entries: HashMap::new(),
+            rel_drift,
+            min_margin: DEFAULT_MIN_MARGIN,
+            hits: 0,
+            misses: 0,
+            low_margin_bypasses: 0,
+        }
     }
 
     /// Answer a decision from the cache, or record a miss. `slot` is the
@@ -113,7 +145,8 @@ impl DecisionCache {
     }
 
     /// Record a freshly made decision, (re-)anchoring the drift dead-band
-    /// at the observed density.
+    /// at the observed density. Fully-confident shorthand for
+    /// [`DecisionCache::store_with_margin`].
     #[allow(clippy::too_many_arguments)]
     pub fn store(
         &mut self,
@@ -125,6 +158,30 @@ impl DecisionCache {
         d: usize,
         format: Format,
     ) {
+        self.store_with_margin(slot, rows, cols, nnz, density, d, format, 1.0);
+    }
+
+    /// Record a decision together with the predictor's calibrated
+    /// confidence margin. Margins below [`DecisionCache::min_margin`] are
+    /// **not** stored — a near-boundary prediction must not be pinned by
+    /// the hysteresis dead-band; the next structurally similar lookup
+    /// re-consults the policy instead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store_with_margin(
+        &mut self,
+        slot: &str,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        density: f64,
+        d: usize,
+        format: Format,
+        margin: f64,
+    ) {
+        if margin < self.min_margin {
+            self.low_margin_bypasses += 1;
+            return;
+        }
         let sig = signature(slot, rows, cols, nnz, density, d);
         self.entries.insert(sig, CacheEntry { format, density });
     }
@@ -146,6 +203,67 @@ impl DecisionCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// Serialize the entry table + configuration. Signatures are hex
+    /// strings (u64 does not survive a JSON f64), entries are emitted in
+    /// signature order for reproducible dumps. Hit/miss counters are
+    /// run-local accounting and are **not** persisted.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(&u64, &CacheEntry)> = self.entries.iter().collect();
+        entries.sort_by_key(|(sig, _)| **sig);
+        Json::obj(vec![
+            ("rel_drift", Json::Num(self.rel_drift)),
+            ("min_margin", Json::Num(self.min_margin)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .into_iter()
+                        .map(|(sig, e)| {
+                            Json::obj(vec![
+                                ("sig", Json::Str(format!("{sig:016x}"))),
+                                ("format", Json::Str(e.format.name().to_string())),
+                                ("density", Json::Num(e.density)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a cache from [`DecisionCache::to_json`] output. Counters
+    /// start at zero: a warm-started run reports its own hit rate.
+    pub fn from_json(j: &Json) -> anyhow::Result<DecisionCache> {
+        let mut cache = DecisionCache::new(j.req_f64("rel_drift")?);
+        cache.min_margin = j.req_f64("min_margin").unwrap_or(DEFAULT_MIN_MARGIN);
+        for e in j.req_arr("entries")? {
+            let sig = u64::from_str_radix(e.req_str("sig")?, 16)
+                .map_err(|_| anyhow::anyhow!("bad cache signature"))?;
+            let format = Format::from_name(e.req_str("format")?)
+                .ok_or_else(|| anyhow::anyhow!("unknown cached format"))?;
+            let density = e.req_f64("density")?;
+            cache.entries.insert(sig, CacheEntry { format, density });
+        }
+        Ok(cache)
+    }
+
+    /// Persist to a JSON file (warm-start input for the next process).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a cache persisted by [`DecisionCache::save`].
+    pub fn load(path: &Path) -> anyhow::Result<DecisionCache> {
+        let text = std::fs::read_to_string(path)?;
+        DecisionCache::from_json(&Json::parse(&text)?)
     }
 }
 
@@ -246,5 +364,69 @@ mod tests {
         let mut c = DecisionCache::new(0.5);
         c.store("A", 10, 10, 0, 0.0, 4, Format::Coo);
         assert_eq!(c.lookup("A", 10, 10, 0, 0.0, 4), Some(Format::Coo));
+    }
+
+    /// Margin gate: low-confidence decisions are counted but never stored;
+    /// at-threshold and confident decisions are pinned as before.
+    #[test]
+    fn low_margin_store_is_bypassed() {
+        let mut c = DecisionCache::new(0.5);
+        c.store_with_margin("A", 1000, 1000, 5000, 0.005, 16, Format::Csr, 0.02);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.low_margin_bypasses, 1);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), None);
+        // Exactly at the threshold counts as confident enough.
+        c.store_with_margin("A", 1000, 1000, 5000, 0.005, 16, Format::Csr, c.min_margin);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
+        // `store` is the fully-confident shorthand.
+        c.store("B", 10, 10, 5, 0.05, 4, Format::Coo);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.low_margin_bypasses, 1);
+    }
+
+    /// JSON round trip: entries, dead-band and margin gate survive; the
+    /// run-local hit/miss counters reset.
+    #[test]
+    fn json_round_trip_preserves_entries_and_config() {
+        let mut c = DecisionCache::new(0.4);
+        c.min_margin = 0.2;
+        c.store("gcn.A.l1", 1000, 1000, 5000, 0.005, 16, Format::Csr);
+        c.store("gcn.A.l1", 4000, 1000, 5000, 0.005, 16, Format::Coo);
+        c.store("rgcn.A2.l2", 500, 500, 9000, 0.036, 8, Format::Csc);
+        // Generate some counter state that must NOT round-trip.
+        assert!(c.lookup("gcn.A.l1", 1000, 1000, 5000, 0.005, 16).is_some());
+        assert!(c.lookup("nope", 1, 1, 1, 1.0, 1).is_none());
+
+        let j = crate::util::json::Json::parse(&c.to_json().to_string()).unwrap();
+        let r = DecisionCache::from_json(&j).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.rel_drift, 0.4);
+        assert_eq!(r.min_margin, 0.2);
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.misses, 0);
+        let mut r = r;
+        assert_eq!(r.lookup("gcn.A.l1", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
+        assert_eq!(r.lookup("gcn.A.l1", 4000, 1000, 5000, 0.005, 16), Some(Format::Coo));
+        assert_eq!(r.lookup("rgcn.A2.l2", 500, 500, 9000, 0.036, 8), Some(Format::Csc));
+        // Hysteresis anchors survived: same signature bucket (nnz 7200 and
+        // 5000 share the log₂ bucket, densities share the half-decade) but
+        // 44% density drift > the 40% band → still re-decides after load.
+        assert_eq!(r.lookup("gcn.A.l1", 1000, 1000, 7200, 0.0072, 16), None);
+    }
+
+    #[test]
+    fn save_load_file_round_trip_and_garbage_rejection() {
+        let dir = std::env::temp_dir().join("gnn_spmm_cache_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Bsr);
+        c.save(&path).unwrap();
+        let mut r = DecisionCache::load(&path).unwrap();
+        assert_eq!(r.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Bsr));
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(DecisionCache::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

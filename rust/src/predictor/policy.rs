@@ -29,16 +29,38 @@ impl PredictedPolicy {
     }
 }
 
-impl FormatPolicy for PredictedPolicy {
-    fn decide(&mut self, coo: &Coo, _d: usize, sw: &mut Stopwatch) -> Format {
+impl PredictedPolicy {
+    /// Shared decide path: (format, calibrated margin), overheads charged.
+    fn decide_inner(&mut self, coo: &Coo, sw: &mut Stopwatch) -> (Format, f64) {
         if coo.nnz() < MIN_NNZ_TO_PREDICT {
-            return Format::Coo; // tiny matrix: decision cost > any gain
+            // Tiny matrix: decision cost > any gain. The default is a
+            // deliberate, fully-confident choice — cache it freely.
+            return (Format::Coo, 1.0);
         }
         let raw = sw.phase("feature_extract", || extract_features(coo));
         sw.phase("predict", || {
             let x = self.predictor.norm.transform(&raw);
-            Format::from_label(self.predictor.model.predict(&x))
+            let (label, margin) = self.predictor.model.predict_with_margin(&x);
+            (Format::from_label(label), margin)
         })
+    }
+}
+
+impl FormatPolicy for PredictedPolicy {
+    fn decide(&mut self, coo: &Coo, _d: usize, sw: &mut Stopwatch) -> Format {
+        self.decide_inner(coo, sw).0
+    }
+
+    /// The GBDT's softmax top-1 − top-2 gap rides along so the decision
+    /// cache can bypass low-margin answers (predictor::cache).
+    fn decide_for_slot_with_confidence(
+        &mut self,
+        _slot: &str,
+        coo: &Coo,
+        _d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, f64) {
+        self.decide_inner(coo, sw)
     }
 
     fn policy_name(&self) -> String {

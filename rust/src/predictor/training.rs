@@ -81,9 +81,18 @@ pub struct TrainedPredictor {
 impl TrainedPredictor {
     /// Predict the storage format for a matrix.
     pub fn predict(&self, coo: &Coo) -> Format {
+        self.predict_with_margin(coo).0
+    }
+
+    /// Predict plus the calibrated confidence margin (top-1 − top-2 class
+    /// probability; see [`crate::ml::gbdt::Gbdt::predict_with_margin`]) —
+    /// what the runtime decision cache uses to decline pinning
+    /// near-boundary answers.
+    pub fn predict_with_margin(&self, coo: &Coo) -> (Format, f64) {
         let raw = extract_features(coo);
         let x = self.norm.transform(&raw);
-        Format::from_label(self.model.predict(&x))
+        let (label, margin) = self.model.predict_with_margin(&x);
+        (Format::from_label(label), margin)
     }
 
     pub fn to_json(&self) -> Json {

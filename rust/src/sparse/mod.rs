@@ -24,6 +24,7 @@ pub mod bsr;
 pub mod dok;
 pub mod lil;
 pub mod format;
+pub mod shared;
 
 pub use coo::Coo;
 pub use csr::Csr;
@@ -34,3 +35,4 @@ pub use dok::Dok;
 pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
 pub use ops::{coo_fallback_extractions, SparseOps};
+pub use shared::{SharedMatrix, WeakMatrix};

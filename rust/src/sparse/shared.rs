@@ -1,0 +1,171 @@
+//! [`SharedMatrix`] — Arc-backed shared ownership for slot-bound operands
+//! (DESIGN.md §Shared-Ownership).
+//!
+//! The mini-batch driver keeps full-graph **masters** (features, normalized
+//! adjacency, RGCN's per-relation CSRs) alive for a whole run and rebinds
+//! them into model slots every epoch for the full-graph eval. Before this
+//! type, each rebind deep-cloned the master into the slot — for RGCN that
+//! is ~2R CSR copies per epoch, pure memcpy traffic the hardware never
+//! needed (GE-SpMM/ParamSpMM's data-movement argument, applied to our own
+//! runtime). A `SharedMatrix` is a cheap handle: cloning bumps a refcount,
+//! and rebinding a slot is an O(1) pointer bind.
+//!
+//! Mutation is copy-on-write: the few paths that really write through a
+//! handle (the GAT attention value refresh) go through
+//! [`SharedMatrix::to_mut`], which clones the payload only while the handle
+//! is shared — masters are never written through a slot. Paths that
+//! *replace* a representation (format conversion, dense sparsification)
+//! simply install a fresh handle; the previous one is dropped, and the
+//! master it may have pointed at stays untouched.
+
+use super::{Coo, Csr, SparseMatrix};
+use std::sync::{Arc, Weak};
+
+/// Shared, copy-on-write handle to a [`SparseMatrix`].
+///
+/// Dereferences to `SparseMatrix`, so every read-only operation (`spmm`,
+/// `nnz`, `extract_rows_cols`, …) works directly on the handle.
+#[derive(Clone, Debug)]
+pub struct SharedMatrix(Arc<SparseMatrix>);
+
+impl SharedMatrix {
+    pub fn new(m: SparseMatrix) -> SharedMatrix {
+        SharedMatrix(Arc::new(m))
+    }
+
+    /// Mutable access with copy-on-write semantics: clones the payload iff
+    /// the handle is currently shared, then (and on every later call while
+    /// unique) mutates in place.
+    pub fn to_mut(&mut self) -> &mut SparseMatrix {
+        Arc::make_mut(&mut self.0)
+    }
+
+    /// Do `self` and `other` point at the same allocation? This is the
+    /// *handle identity* the engine keys rebind short-circuits and decision
+    /// provenance off — content equality is irrelevant (and far costlier).
+    pub fn ptr_eq(&self, other: &SharedMatrix) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+
+    /// Number of live handles to this payload (test instrumentation: the
+    /// rebind-equivalence suite asserts masters are not duplicated).
+    pub fn strong_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+
+    /// Non-owning identity token for this handle (the engine's rebind
+    /// short-circuit keys on it without pinning the payload).
+    pub fn downgrade(&self) -> WeakMatrix {
+        WeakMatrix(Arc::downgrade(&self.0))
+    }
+}
+
+/// Non-owning identity token for a [`SharedMatrix`]. Lets a slot remember
+/// *which* operand it was bound to (so rebinding the same master is a
+/// no-op) without keeping a replaced operand's memory alive — after the
+/// engine converts a shard submatrix, the original extraction is freed,
+/// not pinned by provenance.
+#[derive(Clone, Debug)]
+pub struct WeakMatrix(Weak<SparseMatrix>);
+
+impl WeakMatrix {
+    /// Does this token denote exactly `m`'s allocation? A dropped payload
+    /// never matches (the upgrade fails first), so a stale token cannot
+    /// alias a new allocation that reused the same address.
+    pub fn is_handle_of(&self, m: &SharedMatrix) -> bool {
+        self.0.upgrade().is_some_and(|live| Arc::ptr_eq(&live, &m.0))
+    }
+}
+
+impl std::ops::Deref for SharedMatrix {
+    type Target = SparseMatrix;
+
+    fn deref(&self) -> &SparseMatrix {
+        &self.0
+    }
+}
+
+impl From<SparseMatrix> for SharedMatrix {
+    fn from(m: SparseMatrix) -> SharedMatrix {
+        SharedMatrix::new(m)
+    }
+}
+
+impl From<Coo> for SharedMatrix {
+    fn from(c: Coo) -> SharedMatrix {
+        SharedMatrix::new(SparseMatrix::Coo(c))
+    }
+}
+
+impl From<Csr> for SharedMatrix {
+    fn from(c: Csr) -> SharedMatrix {
+        SharedMatrix::new(SparseMatrix::Csr(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseMatrix {
+        SparseMatrix::Coo(Coo::from_triples(
+            3,
+            3,
+            vec![(0, 1, 1.0), (1, 2, 2.0), (2, 0, 3.0)],
+        ))
+    }
+
+    #[test]
+    fn clone_is_a_handle_not_a_copy() {
+        let a = SharedMatrix::new(sample());
+        assert_eq!(a.strong_count(), 1);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        assert_eq!(a.strong_count(), 2);
+        assert_eq!(b.nnz(), 3);
+        drop(b);
+        assert_eq!(a.strong_count(), 1);
+    }
+
+    #[test]
+    fn to_mut_copies_only_while_shared() {
+        let mut a = SharedMatrix::new(sample());
+        let master = a.clone();
+        // Shared: the write must not reach the master.
+        if let SparseMatrix::Coo(c) = a.to_mut() {
+            c.val[0] = 99.0;
+        }
+        assert!(!a.ptr_eq(&master), "CoW must detach the written handle");
+        assert_eq!(master.to_coo().val[0], 1.0, "master untouched");
+        assert_eq!(a.to_coo().val[0], 99.0);
+        // Unique: further writes stay in place (no fresh allocation).
+        let before = &*a as *const SparseMatrix;
+        if let SparseMatrix::Coo(c) = a.to_mut() {
+            c.val[1] = 55.0;
+        }
+        assert_eq!(before, &*a as *const SparseMatrix, "unique handle mutates in place");
+    }
+
+    #[test]
+    fn weak_token_matches_identity_without_owning() {
+        let a = SharedMatrix::new(sample());
+        let token = a.downgrade();
+        assert_eq!(a.strong_count(), 1, "token must not own the payload");
+        assert!(token.is_handle_of(&a));
+        // Content-equal but distinct allocation: no match.
+        let other = SharedMatrix::new(sample());
+        assert!(!token.is_handle_of(&other));
+        // Dropped payload: the token goes permanently stale.
+        drop(a);
+        assert!(!token.is_handle_of(&other));
+    }
+
+    #[test]
+    fn deref_reaches_sparse_matrix_api() {
+        let a = SharedMatrix::from(sample());
+        assert_eq!((a.rows(), a.cols()), (3, 3));
+        assert_eq!(a.format(), super::super::Format::Coo);
+        let sub = a.extract_rows_cols(&[0, 1], &[0, 1, 2]);
+        assert_eq!(sub.rows(), 2);
+    }
+}
