@@ -48,4 +48,29 @@ cargo run --release --example warmstart_cache -- \
   --cache "$WARMSTART_CACHE" --shrink 32 --shards 4 --epochs 2 --fanout 12 --seed 48879 \
   --expect-warm 0.8
 
+# Serving smoke (§Serving): power-law request stream, mid-stream epoch
+# swap, warm cache shared read-only across workers. Run once with the
+# SpMM pool pinned serial and once with default threading; both runs must
+# emit non-empty JSON-lines with every latency field.
+echo "== serving smoke: serve_demo (epoch-swap mid-stream, both threading modes) =="
+SERVE_OUT="$WARMSTART_DIR/BENCH_serve.json"
+SERVE_CACHE="$WARMSTART_DIR/serve_cache.json"
+for mode in pinned default; do
+  rm -f "$SERVE_OUT"
+  if [ "$mode" = pinned ]; then
+    GNN_SPMM_THREADS=1 cargo run --release --example serve_demo -- \
+      --shrink 32 --requests 120 --workers 1,4 --seed 48879 \
+      --out "$SERVE_OUT" --cache "$SERVE_CACHE"
+  else
+    cargo run --release --example serve_demo -- \
+      --shrink 32 --requests 120 --workers 1,4 --seed 48879 \
+      --out "$SERVE_OUT" --cache "$SERVE_CACHE"
+  fi
+  test -s "$SERVE_OUT" || { echo "serve smoke ($mode): $SERVE_OUT empty"; exit 1; }
+  for field in p50_ns p95_ns p99_ns ops_per_sec; do
+    grep -q "\"$field\"" "$SERVE_OUT" \
+      || { echo "serve smoke ($mode): $SERVE_OUT missing $field"; exit 1; }
+  done
+done
+
 echo "CI OK"

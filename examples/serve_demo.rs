@@ -1,0 +1,188 @@
+//! Concurrent inference serving demo (DESIGN.md §Serving).
+//!
+//! End-to-end flow of the serving layer:
+//!
+//! 1. full-batch train a template model (the short offline phase),
+//! 2. warm a decision cache on representative request shapes, save it,
+//!    then reload it via `DecisionCache::load` — the same persisted-cache
+//!    handoff `warmstart_cache` demonstrates for training,
+//! 3. serve a power-law request stream at each requested worker count,
+//! 4. epoch-swap a rebuilt graph snapshot mid-stream (in-flight requests
+//!    keep their old snapshot; later ones observe the new version),
+//! 5. append one JSON-lines record per worker count to `BENCH_serve.json`.
+//!
+//! ci.sh smoke-runs this under both `GNN_SPMM_THREADS=1` and default
+//! threading and asserts the emitted records carry every latency field.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo -- --shrink 32 --requests 120
+//! ```
+
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{AdjEngine, ModelKind};
+use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
+use gnn_spmm::predictor::DecisionCache;
+use gnn_spmm::serve::{train_template, EngineSnapshot, InferenceServer, ServeConfig, ServedModel};
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::cli::Args;
+use gnn_spmm::util::json::Json;
+use gnn_spmm::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const HIDDEN: usize = 16;
+
+/// Power-law request stream: heavy-tailed batch sizes, node popularity
+/// skewed toward low ids (u² inverse-CDF) — the serving-traffic shape the
+/// decision cache amortizes over.
+fn power_law_requests(n_nodes: usize, count: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let u = rng.next_f64().max(1e-9);
+            let size = (6.0 / u.powf(0.6)).min(96.0) as usize;
+            (0..size.max(6))
+                .map(|_| {
+                    let v = rng.next_f64();
+                    ((n_nodes - 1) as f64 * v * v) as u32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run representative request shapes through an owned-cache engine so the
+/// server can share the resulting decisions read-only across its workers.
+fn warm_cache(ds: &GraphDataset, template: &ServedModel, requests: &[Vec<u32>]) -> DecisionCache {
+    let mut policy = StaticPolicy(Format::Csr);
+    let mut eng = AdjEngine::new(&mut policy);
+    eng.enable_decision_cache();
+    let mut rng = Rng::new(0xCA0E);
+    let mut replica = template.replicate(ds, HIDDEN, 0.02, &mut rng, &mut eng);
+    let snap = EngineSnapshot::from_dataset(ds, 0);
+    let all_cols: Vec<u32> = (0..ds.features.cols as u32).collect();
+    for req in requests.iter().take(16) {
+        let mut nodes = req.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let x = snap.feats.extract_rows_cols(&nodes, &all_cols);
+        let a = snap.adjn.extract_rows_cols(&nodes, &nodes);
+        replica.set_graph(&mut eng, x, a);
+        let _ = replica.forward(&mut eng);
+    }
+    eng.take_decision_cache().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let shrink: usize = args.get_or("shrink", "32").parse()?;
+    let n_requests: usize = args.get_or("requests", "120").parse()?;
+    let seed: u64 = args.get_or("seed", "48879").parse()?;
+    let out_path = PathBuf::from(args.get_or("out", "BENCH_serve.json"));
+    let cache_path = PathBuf::from(args.get_or("cache", "serve_cache.json"));
+    let kind = match args.get_or("model", "gcn") {
+        "gcn" => ModelKind::Gcn,
+        "film" => ModelKind::Film,
+        "egc" => ModelKind::Egc,
+        other => anyhow::bail!("--model {other}: serving supports gcn | film | egc"),
+    };
+    let worker_counts: Vec<usize> = args
+        .get_or("workers", "1,4")
+        .split(',')
+        .map(|w| w.trim().parse())
+        .collect::<Result<_, _>>()?;
+
+    let spec = if shrink > 1 {
+        LARGE_DATASETS[0].scaled_same_degree(shrink, 64)
+    } else {
+        LARGE_DATASETS[0]
+    };
+    println!("dataset: {} — {} nodes (shrink {shrink})", spec.name, spec.n);
+    let ds = Arc::new(GraphDataset::generate(&spec, &mut Rng::new(seed)));
+    let requests = power_law_requests(spec.n, n_requests, seed ^ 0x90B0);
+
+    println!("training {} template (full-batch, offline)…", kind.name());
+    let template = Arc::new(train_template(kind, &ds, HIDDEN, 0.02, 5, seed));
+
+    // Warm → save → load: the server's cache arrives the way a deployment
+    // would ship it — persisted by a warmup process, reloaded here.
+    warm_cache(&ds, &template, &requests).save(&cache_path)?;
+    let warm = DecisionCache::load(&cache_path)?;
+    println!(
+        "warm decision cache: {} entries via {}",
+        warm.len(),
+        cache_path.display()
+    );
+
+    // Mid-stream snapshot: same spec, regenerated graph — a "graph update"
+    // arriving while requests are in flight.
+    let updated = Arc::new(EngineSnapshot::from_dataset(
+        &GraphDataset::generate(&spec, &mut Rng::new(seed ^ 0xDEAD)),
+        1,
+    ));
+
+    let mut lines = Vec::new();
+    for &workers in &worker_counts {
+        let cfg = ServeConfig {
+            workers,
+            queue_capacity: 32,
+            hidden: HIDDEN,
+            ..Default::default()
+        };
+        let srv = InferenceServer::start(
+            cfg,
+            Arc::clone(&ds),
+            Arc::clone(&template),
+            EngineSnapshot::from_dataset(&ds, 0),
+            Some(warm.clone()),
+        );
+        let half = requests.len() / 2;
+        for req in &requests[..half] {
+            srv.submit(req.clone()).unwrap();
+        }
+        // Epoch-swap while the first half is still draining: readers are
+        // never blocked, the displaced snapshot frees with its last reader.
+        srv.publish_arc(Arc::clone(&updated));
+        for req in &requests[half..] {
+            srv.submit(req.clone()).unwrap();
+        }
+        let responses = srv.drain();
+        anyhow::ensure!(responses.len() == requests.len(), "lost responses");
+        let v1 = responses.iter().filter(|r| r.snapshot_version == 1).count();
+        anyhow::ensure!(v1 > 0, "no request observed the swapped snapshot");
+        anyhow::ensure!(
+            responses.iter().all(|r| r.logits.data.iter().all(|x| x.is_finite())),
+            "non-finite logits"
+        );
+
+        let rep = srv.report(spec.name);
+        println!(
+            "{} w{workers}: {} requests | p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms \
+             | {:.0} req/s | cache hit rate {:.1}% | {}/{} on snapshot v1",
+            kind.name(),
+            rep.requests,
+            rep.p50_ns as f64 / 1e6,
+            rep.p95_ns as f64 / 1e6,
+            rep.p99_ns as f64 / 1e6,
+            rep.ops_per_sec,
+            rep.cache.hit_rate() * 100.0,
+            v1,
+            responses.len(),
+        );
+
+        let line = rep.to_json_line();
+        let parsed = Json::parse(&line)?;
+        for key in ["p50_ns", "p95_ns", "p99_ns", "mean_ns", "max_ns", "ops_per_sec"] {
+            anyhow::ensure!(
+                parsed.get(key).is_some(),
+                "BENCH record missing {key}: {line}"
+            );
+        }
+        lines.push(line);
+        srv.shutdown();
+    }
+
+    std::fs::write(&out_path, lines.join("\n") + "\n")?;
+    println!("wrote {} ({} records)", out_path.display(), lines.len());
+    Ok(())
+}

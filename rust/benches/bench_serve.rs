@@ -1,0 +1,198 @@
+//! Serving-layer bench: request latency and throughput vs worker count on
+//! a power-law workload (DESIGN.md §Serving).
+//!
+//! Per (model, worker-count) it serves a fixed stream of node-batch
+//! requests — batch sizes and node popularity both power-law distributed,
+//! the "heavy traffic from millions of users" shape — and emits one
+//! JSON-lines record with `p50_ns`/`p95_ns`/`p99_ns`/`ops_per_sec`
+//! (DecentDB-style: one JSON object per line, `BENCH_serve.json`).
+//!
+//! Two hard gates ride along:
+//!
+//! * **throughput scales**: ops/sec at the max worker count must beat the
+//!   single-worker run on the same stream (the queue + snapshot design
+//!   has no serialization point to eat the speedup),
+//! * **the swap path is allocation-free**: an alloc-counter probe around
+//!   `EpochCell::publish_arc` (same rules as `bench_minibatch`'s
+//!   `rebind_allocs` gate) — snapshot building is the writer's cost,
+//!   publication is a pointer store.
+
+use gnn_spmm::bench::{count_allocs, section, CountingAlloc};
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{AdjEngine, ModelKind};
+use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
+use gnn_spmm::predictor::DecisionCache;
+use gnn_spmm::serve::{
+    train_template, EngineSnapshot, InferenceServer, ServeConfig, ServedModel,
+};
+use gnn_spmm::sparse::shared::EpochCell;
+use gnn_spmm::sparse::Format;
+use gnn_spmm::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const HIDDEN: usize = 16;
+
+/// Power-law request stream: batch size ~ heavy-tailed in [8, 128], node
+/// popularity skewed toward low ids (u² inverse-CDF — a Zipf-ish head).
+fn power_law_requests(n_nodes: usize, count: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let u = rng.next_f64().max(1e-9);
+            let size = (8.0 / u.powf(0.7)).min(128.0) as usize;
+            (0..size.max(8))
+                .map(|_| {
+                    let v = rng.next_f64();
+                    ((n_nodes - 1) as f64 * v * v) as u32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Warm a decision cache the way a service would (an owned-cache engine
+/// runs representative request shapes; the server then shares the result
+/// read-only across workers — the `DecisionCache::load` flow without the
+/// disk hop, which `serve_demo` exercises end to end).
+fn warm_cache(ds: &GraphDataset, template: &ServedModel, requests: &[Vec<u32>]) -> DecisionCache {
+    let mut policy = StaticPolicy(Format::Csr);
+    let mut eng = AdjEngine::new(&mut policy);
+    eng.enable_decision_cache();
+    let mut rng = Rng::new(0xCA0E);
+    let mut replica = template.replicate(ds, HIDDEN, 0.02, &mut rng, &mut eng);
+    let snap = EngineSnapshot::from_dataset(ds, 0);
+    let all_cols: Vec<u32> = (0..ds.features.cols as u32).collect();
+    for req in requests.iter().take(12) {
+        let mut nodes = req.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let x = snap.feats.extract_rows_cols(&nodes, &all_cols);
+        let a = snap.adjn.extract_rows_cols(&nodes, &nodes);
+        replica.set_graph(&mut eng, x, a);
+        let _ = replica.forward(&mut eng);
+    }
+    eng.take_decision_cache().unwrap()
+}
+
+fn main() {
+    let out_path = std::env::var("GNN_SPMM_BENCH_SERVE_OUT")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let shrink: usize = std::env::var("GNN_SPMM_SERVE_SHRINK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let spec = if shrink > 1 {
+        LARGE_DATASETS[0].scaled_same_degree(shrink, 128)
+    } else {
+        LARGE_DATASETS[0]
+    };
+    println!("generating {} (n={})…", spec.name, spec.n);
+    let ds = Arc::new(GraphDataset::generate(&spec, &mut Rng::new(0xA12C)));
+    let n_requests: usize = std::env::var("GNN_SPMM_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let requests = power_law_requests(spec.n, n_requests, 0x90B0);
+    let max_workers = gnn_spmm::util::parallel::num_threads().clamp(2, 8);
+
+    let mut lines: Vec<String> = Vec::new();
+    let grid: &[(ModelKind, &[usize])] = &[
+        (ModelKind::Gcn, &[1, 2, max_workers]),
+        (ModelKind::Film, &[1, max_workers]),
+        (ModelKind::Egc, &[1, max_workers]),
+    ];
+    for &(kind, worker_counts) in grid {
+        println!("training {} template…", kind.name());
+        let template = Arc::new(train_template(kind, &ds, HIDDEN, 0.02, 5, 0x7E4));
+        let warm = warm_cache(&ds, &template, &requests);
+        let mut ops_by_workers: Vec<(usize, f64)> = Vec::new();
+        for &workers in worker_counts {
+            let cfg = ServeConfig {
+                workers,
+                queue_capacity: 64,
+                hidden: HIDDEN,
+                ..Default::default()
+            };
+            let srv = InferenceServer::start(
+                cfg,
+                Arc::clone(&ds),
+                Arc::clone(&template),
+                EngineSnapshot::from_dataset(&ds, 0),
+                Some(warm.clone()),
+            );
+            let t0 = Instant::now();
+            for req in &requests {
+                srv.submit(req.clone()).unwrap();
+            }
+            let responses = srv.drain();
+            let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+            assert_eq!(responses.len(), requests.len());
+            let mut rep = srv.report(spec.name);
+            rep.ops_per_sec = requests.len() as f64 / elapsed;
+            println!(
+                "{} w{workers}: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | {:.0} req/s | cache hit rate {:.1}%",
+                kind.name(),
+                rep.p50_ns as f64 / 1e6,
+                rep.p95_ns as f64 / 1e6,
+                rep.p99_ns as f64 / 1e6,
+                rep.ops_per_sec,
+                rep.cache.hit_rate() * 100.0,
+            );
+            ops_by_workers.push((workers, rep.ops_per_sec));
+            lines.push(rep.to_json_line());
+            srv.shutdown();
+        }
+        // Acceptance gate: the worker pool actually parallelizes the
+        // stream — max-worker throughput beats single-worker.
+        let single = ops_by_workers.iter().find(|(w, _)| *w == 1).unwrap().1;
+        let best = ops_by_workers
+            .iter()
+            .map(|&(_, ops)| ops)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best > single,
+            "{}: throughput failed to scale (1 worker {single:.0} req/s, best {best:.0} req/s)",
+            kind.name()
+        );
+        println!("  scale 1→{}: ×{:.2}", max_workers, best / single);
+    }
+
+    // ── §Serving swap-path alloc gate ───────────────────────────────────
+    // Snapshot construction (CSR builds, Arc) happens before publication;
+    // the publish itself must allocate NOTHING — pointer store + epoch
+    // bump under a momentary write lock.
+    section("epoch-swap publish: zero-allocation gate");
+    {
+        let cell = EpochCell::new(EngineSnapshot::from_dataset(&ds, 0));
+        let reader = cell.load(); // an in-flight request keeps v0 alive
+        let mut staged = Some(Arc::new(EngineSnapshot::from_dataset(&ds, 1)));
+        let (allocs, bytes) = count_allocs(|| {
+            cell.publish_arc(staged.take().unwrap());
+        });
+        assert_eq!(
+            (allocs, bytes),
+            (0, 0),
+            "epoch-swap publish must be allocation-free (got {allocs} allocs / {bytes} B)"
+        );
+        assert_eq!(reader.version, 0, "in-flight reader keeps its snapshot");
+        assert_eq!(cell.load().version, 1);
+        lines.push(
+            gnn_spmm::util::json::Json::obj(vec![
+                ("name", gnn_spmm::util::json::Json::Str("serve/publish_arc_probe".to_string())),
+                ("publish_allocs", gnn_spmm::util::json::Json::Num(allocs as f64)),
+                ("publish_alloc_bytes", gnn_spmm::util::json::Json::Num(bytes as f64)),
+            ])
+            .to_string(),
+        );
+    }
+
+    let body = lines.join("\n") + "\n";
+    match std::fs::write(&out_path, &body) {
+        Ok(()) => println!("\nwrote {out_path} ({} records)", lines.len()),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

@@ -320,6 +320,19 @@ impl Egc {
     pub fn use_train_graph(&mut self) {
         self.slots = self.train_slots;
     }
+
+    /// Copy trained parameters from a template model (serving replication;
+    /// see [`super::gcn::Gcn::copy_weights_from`]).
+    pub fn copy_weights_from(&mut self, other: &Egc) {
+        for (dst, src) in [(&mut self.l1, &other.l1), (&mut self.l2, &other.l2)] {
+            assert_eq!(dst.ws.data.len(), src.ws.data.len(), "layer shape mismatch");
+            for (dw, sw) in dst.w.iter_mut().zip(src.w.iter()) {
+                dw.data.copy_from_slice(&sw.data);
+            }
+            dst.ws.data.copy_from_slice(&src.ws.data);
+            dst.bias.copy_from_slice(&src.bias);
+        }
+    }
 }
 
 #[cfg(test)]

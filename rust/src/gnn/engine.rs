@@ -29,6 +29,7 @@ use crate::sparse::shared::WeakMatrix;
 use crate::sparse::{Coo, Format, SharedMatrix, SparseMatrix};
 use crate::tensor::Matrix;
 use crate::util::timer::Stopwatch;
+use std::sync::Arc;
 
 /// Strategy for choosing a slot's storage format.
 pub trait FormatPolicy {
@@ -167,6 +168,29 @@ pub struct Decision {
     pub cached: bool,
 }
 
+/// How an engine holds its decision cache.
+///
+/// `Owned` is the training-side default: this engine is the only user, so
+/// fresh decisions are stored back (the cache warms as the run proceeds).
+/// `Shared` is the serving-side mode: many worker engines read **one**
+/// warm cache through an `Arc` — lookups are lock-free (`&self` + atomic
+/// counters), and fresh decisions are *used but not stored*, exactly like
+/// the low-margin bypass: a read-only snapshot cache must never need a
+/// writer lock on the hot path (DESIGN.md §Serving cache-sharing rule).
+enum CacheRef {
+    Owned(DecisionCache),
+    Shared(Arc<DecisionCache>),
+}
+
+impl CacheRef {
+    fn get(&self) -> &DecisionCache {
+        match self {
+            CacheRef::Owned(c) => c,
+            CacheRef::Shared(c) => c,
+        }
+    }
+}
+
 /// The format-switching SpMM engine.
 pub struct AdjEngine<'p> {
     pub slots: Vec<Slot>,
@@ -180,7 +204,7 @@ pub struct AdjEngine<'p> {
     /// see `predictor::cache`). Off by default: full-batch runs decide a
     /// handful of times and the paper's overhead accounting stays
     /// untouched.
-    decision_cache: Option<DecisionCache>,
+    decision_cache: Option<CacheRef>,
 }
 
 impl<'p> AdjEngine<'p> {
@@ -199,23 +223,40 @@ impl<'p> AdjEngine<'p> {
     /// dead-band inherits [`AdjEngine::redecide_rel_drift`] (set the field
     /// first if a non-default band is wanted).
     pub fn enable_decision_cache(&mut self) {
-        self.decision_cache = Some(DecisionCache::new(self.redecide_rel_drift));
+        self.decision_cache = Some(CacheRef::Owned(DecisionCache::new(self.redecide_rel_drift)));
     }
 
     /// Install a pre-populated decision cache (warm start: a service loads
     /// the previous run's persisted cache and skips the cold first epoch).
     pub fn set_decision_cache(&mut self, cache: DecisionCache) {
-        self.decision_cache = Some(cache);
+        self.decision_cache = Some(CacheRef::Owned(cache));
+    }
+
+    /// Share a decision cache with other engines (the serving mode: many
+    /// worker engines read one warm cache lock-free). A shared cache is
+    /// **read-only** from this engine's perspective — fresh decisions are
+    /// used but not stored, so no writer lock is ever needed on the hot
+    /// path. Warm-start the cache (via [`DecisionCache::load`]) before
+    /// sharing it if hits are expected.
+    pub fn share_decision_cache(&mut self, cache: Arc<DecisionCache>) {
+        self.decision_cache = Some(CacheRef::Shared(cache));
     }
 
     /// The decision cache, if enabled (hit/miss accounting for reports).
     pub fn decision_cache(&self) -> Option<&DecisionCache> {
-        self.decision_cache.as_ref()
+        self.decision_cache.as_ref().map(|c| c.get())
     }
 
     /// Take ownership of the decision cache (to persist it after a run).
+    /// Returns `None` for a shared cache — the `Arc` holders own it.
     pub fn take_decision_cache(&mut self) -> Option<DecisionCache> {
-        self.decision_cache.take()
+        match self.decision_cache.take() {
+            Some(CacheRef::Owned(c)) => Some(c),
+            other => {
+                self.decision_cache = other;
+                None
+            }
+        }
     }
 
     /// Register a sparse operand; returns its slot id.
@@ -387,8 +428,8 @@ impl<'p> AdjEngine<'p> {
             let nnz = self.slots[slot].matrix.nnz();
             let cached_fmt = self
                 .decision_cache
-                .as_mut()
-                .and_then(|c| c.lookup(&name, rows, cols, nnz, density, d));
+                .as_ref()
+                .and_then(|c| c.get().lookup(&name, rows, cols, nnz, density, d));
             let (fmt, cached) = match cached_fmt {
                 Some(fmt) => (fmt, true),
                 None => {
@@ -404,11 +445,12 @@ impl<'p> AdjEngine<'p> {
                     let (fmt, margin) =
                         self.policy.decide_for_slot_with_confidence(&name, &coo, d, &mut self.sw);
                     self.slots[slot].coo_view = Some(coo);
-                    if let Some(c) = self.decision_cache.as_mut() {
+                    if let Some(CacheRef::Owned(c)) = self.decision_cache.as_mut() {
                         // Low-margin predictions are *used* but not pinned:
                         // the cache declines them (see `store_with_margin`)
                         // so the hysteresis dead-band can't freeze a coin
-                        // flip into a standing answer.
+                        // flip into a standing answer. A `Shared` cache is
+                        // read-only by construction — skip the store.
                         c.store_with_margin(&name, rows, cols, nnz, density, d, fmt, margin);
                     }
                     (fmt, false)
@@ -692,7 +734,7 @@ mod tests {
         engine.enable_decision_cache();
         let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
         let _ = engine.spmm(slot, &x);
-        assert_eq!(engine.decision_cache().unwrap().misses, 1);
+        assert_eq!(engine.decision_cache().unwrap().misses(), 1);
         // 4× the rows at the same density: different rows bucket ⇒ the
         // cached entry must not be served.
         let big = {
@@ -710,8 +752,8 @@ mod tests {
         engine.set_slot_matrix(slot, SparseMatrix::Coo(big));
         let _ = engine.spmm(slot, &x256);
         let cache = engine.decision_cache().unwrap();
-        assert_eq!(cache.misses, 2, "structural rebind must miss the cache");
-        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses(), 2, "structural rebind must miss the cache");
+        assert_eq!(cache.hits(), 0);
         assert!(engine.decisions.iter().all(|d| !d.cached));
     }
 
@@ -727,8 +769,8 @@ mod tests {
         let slot = engine.add_slot("A", random_coo(&mut rng, 64, 0.15));
         let _ = engine.spmm(slot, &x);
         // First decision: miss (policy consulted, COO view built).
-        assert_eq!(engine.decision_cache().unwrap().misses, 1);
-        assert_eq!(engine.decision_cache().unwrap().hits, 0);
+        assert_eq!(engine.decision_cache().unwrap().misses(), 1);
+        assert_eq!(engine.decision_cache().unwrap().hits(), 0);
         let views_first = engine
             .sw
             .report()
@@ -747,8 +789,8 @@ mod tests {
             let _ = engine.spmm(slot, &x);
         }
         let cache = engine.decision_cache().unwrap();
-        assert_eq!(cache.misses, 1);
-        assert_eq!(cache.hits, 5);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 5);
         assert!(cache.hit_rate() > 0.8);
         let views_after = engine
             .sw
@@ -776,8 +818,8 @@ mod tests {
         engine.set_slot_matrix(slot, SparseMatrix::Coo(random_coo(&mut rng, 64, 0.3)));
         let _ = engine.spmm(slot, &x);
         let cache = engine.decision_cache().unwrap();
-        assert_eq!(cache.misses, 2);
-        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
     }
 
     #[test]
@@ -950,10 +992,10 @@ mod tests {
             let _ = engine.spmm(slot, &x);
         }
         let cache = engine.decision_cache().unwrap();
-        assert_eq!(cache.hits, 0, "low-margin answers must never be served");
-        assert_eq!(cache.misses, 4);
+        assert_eq!(cache.hits(), 0, "low-margin answers must never be served");
+        assert_eq!(cache.misses(), 4);
         assert_eq!(cache.len(), 0, "low-margin answers must not be stored");
-        assert_eq!(cache.low_margin_bypasses, 4);
+        assert_eq!(cache.low_margin_bypasses(), 4);
         // Confident answers for the same stream do get pinned.
         let mut policy = FixedConfidencePolicy { format: Format::Csr, margin: 0.9 };
         let mut engine = AdjEngine::new(&mut policy);
@@ -967,9 +1009,9 @@ mod tests {
             let _ = engine.spmm(slot, &x);
         }
         let cache = engine.decision_cache().unwrap();
-        assert_eq!(cache.hits, 3);
-        assert_eq!(cache.misses, 1);
-        assert_eq!(cache.low_margin_bypasses, 0);
+        assert_eq!(cache.hits(), 3);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.low_margin_bypasses(), 0);
     }
 
     #[test]

@@ -300,6 +300,19 @@ impl Film {
     pub fn use_train_graph(&mut self) {
         self.slots = self.train_slots;
     }
+
+    /// Copy trained parameters from a template model (serving replication;
+    /// see [`super::gcn::Gcn::copy_weights_from`]). ρ is a graph property,
+    /// not a weight — it stays per-replica and follows `set_graph`.
+    pub fn copy_weights_from(&mut self, other: &Film) {
+        for (dst, src) in [(&mut self.l1, &other.l1), (&mut self.l2, &other.l2)] {
+            assert_eq!(dst.w.data.len(), src.w.data.len(), "layer shape mismatch");
+            dst.w.data.copy_from_slice(&src.w.data);
+            dst.g.data.copy_from_slice(&src.g.data);
+            dst.bm.data.copy_from_slice(&src.bm.data);
+            dst.bias.copy_from_slice(&src.bias);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -224,6 +224,19 @@ impl Gcn {
     pub fn h1_density(&self) -> Option<f64> {
         self.cache.as_ref().map(|c| c.h1_density)
     }
+
+    /// Copy trained parameters from a template model (serving replication:
+    /// each worker builds its own model against its own engine, then takes
+    /// the trained weights — optimizer state stays per-replica and unused,
+    /// since serving is forward-only). Panics on shape mismatch.
+    pub fn copy_weights_from(&mut self, other: &Gcn) {
+        assert_eq!(self.w0.data.len(), other.w0.data.len(), "w0 shape mismatch");
+        assert_eq!(self.w1.data.len(), other.w1.data.len(), "w1 shape mismatch");
+        self.w0.data.copy_from_slice(&other.w0.data);
+        self.b0.copy_from_slice(&other.b0);
+        self.w1.data.copy_from_slice(&other.w1.data);
+        self.b1.copy_from_slice(&other.b1);
+    }
 }
 
 #[cfg(test)]

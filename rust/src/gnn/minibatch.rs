@@ -170,19 +170,42 @@ impl MbGrads {
 /// COO fallback. The masters are **shared handles** (§Shared-Ownership):
 /// the model's dedicated eval slots co-own them for the whole run — no
 /// rebind ever copies matrix data out of this struct.
-struct FullGraphOps<'d> {
+pub struct FullGraphOps<'d> {
     /// Sparse features, CSR (row slice via the identity-column fast path).
-    feats: SharedMatrix,
+    pub feats: SharedMatrix,
     /// Normalized adjacency, CSR (GCN/FiLM/EGC propagation operand).
-    adjn: SharedMatrix,
+    pub adjn: SharedMatrix,
     /// Raw adjacency (GAT derives its attention pattern from it).
-    adj: &'d Coo,
+    pub adj: &'d Coo,
     /// RGCN: one normalized adjacency per relation, CSR (empty otherwise).
     /// Each relation is sliced and rebound independently — per-relation
     /// slots mean per-relation decision-cache entries.
-    rels: Vec<SharedMatrix>,
+    pub rels: Vec<SharedMatrix>,
     /// GAT: epoch-invariant full-graph attention pattern.
-    pattern: Option<Arc<Coo>>,
+    pub pattern: Option<Arc<Coo>>,
+}
+
+impl<'d> FullGraphOps<'d> {
+    /// Build the shared masters for `kind` from a dataset: CSR features and
+    /// normalized adjacency (direct extraction paths), per-relation CSRs
+    /// for RGCN (`rel_ops` from [`relation_operands`], empty otherwise),
+    /// and GAT's epoch-invariant attention pattern. Shared by the
+    /// mini-batch trainer and the serving layer's snapshot builder — both
+    /// need the same "slice-friendly masters" invariant.
+    pub fn new(ds: &'d GraphDataset, kind: ModelKind, rel_ops: &[Coo]) -> FullGraphOps<'d> {
+        FullGraphOps {
+            feats: SharedMatrix::from(Csr::from_coo(&ds.features)),
+            adjn: SharedMatrix::from(Csr::from_coo(&ds.adj_norm)),
+            adj: &ds.adj,
+            rels: rel_ops.iter().map(|r| SharedMatrix::from(Csr::from_coo(r))).collect(),
+            // GAT's full-graph attention pattern is epoch-invariant: build
+            // it once here instead of re-deriving it per epoch.
+            pattern: match kind {
+                ModelKind::Gat => Some(Arc::new(Gat::attention_pattern(&ds.adj))),
+                _ => None,
+            },
+        }
+    }
 }
 
 impl MbModel {
@@ -344,18 +367,7 @@ pub fn train_minibatch_warm(
     } else {
         Vec::new()
     };
-    let full = FullGraphOps {
-        feats: SharedMatrix::from(Csr::from_coo(&ds.features)),
-        adjn: SharedMatrix::from(Csr::from_coo(&ds.adj_norm)),
-        adj: &ds.adj,
-        rels: rel_ops.iter().map(|r| SharedMatrix::from(Csr::from_coo(r))).collect(),
-        // GAT's full-graph attention pattern is epoch-invariant: build it
-        // once for the eval binding instead of re-deriving it per epoch.
-        pattern: match kind {
-            ModelKind::Gat => Some(Arc::new(Gat::attention_pattern(&ds.adj))),
-            _ => None,
-        },
-    };
+    let full = FullGraphOps::new(ds, kind, &rel_ops);
     let adj_csr = Csr::from_coo(&ds.adj); // sampler neighbor lists
     let all_feat_cols: Vec<u32> = (0..ds.features.cols as u32).collect();
 
@@ -475,8 +487,8 @@ pub fn train_minibatch_warm(
         test_accs,
         total_time,
         phases: eng.sw.report(),
-        cache_hits: cache.hits,
-        cache_misses: cache.misses,
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
         warm_cache_hit_rate,
         decision_overhead_s,
         coo_fallback_extractions: crate::sparse::coo_fallback_extractions()

@@ -27,5 +27,7 @@ pub mod train;
 pub mod minibatch;
 
 pub use engine::{AdjEngine, FormatPolicy, StaticPolicy};
-pub use minibatch::{train_minibatch, train_minibatch_warm, MinibatchConfig, MinibatchReport};
+pub use minibatch::{
+    train_minibatch, train_minibatch_warm, FullGraphOps, MinibatchConfig, MinibatchReport,
+};
 pub use train::{train, ModelKind, TrainConfig, TrainReport, ALL_MODELS};

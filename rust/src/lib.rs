@@ -19,7 +19,9 @@
 //! * [`runtime`] — the PJRT bridge that loads JAX/Pallas-AOT-compiled HLO
 //!   artifacts so the dense compute runs through XLA,
 //! * [`coordinator`] — the experiment/training orchestrator that performs
-//!   per-layer format switching and collects the paper's metrics.
+//!   per-layer format switching and collects the paper's metrics,
+//! * [`serve`] — concurrent inference serving over trained models with
+//!   epoch-swap snapshot isolation and a shared read-only decision cache.
 //!
 //! Support plumbing (offline build: no external crates beyond `xla`/`anyhow`)
 //! is under [`util`], [`testing`] and [`bench`].
@@ -33,6 +35,7 @@ pub mod tensor;
 pub mod graph;
 pub mod gnn;
 pub mod predictor;
+pub mod serve;
 pub mod coordinator;
 /// PJRT bridge — compiled only with `--features pjrt` (needs the image's
 /// `xla` crate; the default offline build stays dependency-free).

@@ -37,6 +37,7 @@ use crate::sparse::Format;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Pack the structural signature into one key. Buckets are deliberately
 /// coarse: the predictor's own decision boundaries are much coarser than a
@@ -87,8 +88,40 @@ struct CacheEntry {
 /// [0, 1]; deterministic policies report 1.0 and always cache.
 pub const DEFAULT_MIN_MARGIN: f64 = 0.1;
 
+/// Point-in-time counter readout from [`DecisionCache::snapshot`] — a
+/// plain-data struct concurrent reporting paths can hold without touching
+/// the live cache again.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub low_margin_bypasses: u64,
+    /// Distinct signatures stored at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups answered from the cache; 0 with no lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// Format-decision cache with drift hysteresis (see module docs).
-#[derive(Clone, Debug)]
+///
+/// Concurrency: [`DecisionCache::lookup`] takes `&self` — the entry table
+/// is only read, and the hit/miss accounting lives in relaxed atomics — so
+/// a warm cache behind an `Arc` serves any number of inference workers
+/// with **no mutex on the hot path** (the serving layer's cache-sharing
+/// rule, DESIGN.md §Serving). Mutation (`store*`, `load`) still requires
+/// `&mut self`/ownership: writes happen in single-writer phases (training,
+/// warm-up), never concurrently with shared readers.
+#[derive(Debug)]
 pub struct DecisionCache {
     entries: HashMap<u64, CacheEntry>,
     /// Relative density drift tolerated within a signature bucket before
@@ -98,12 +131,29 @@ pub struct DecisionCache {
     /// Minimum confidence margin a decision needs to be pinned
     /// ([`DEFAULT_MIN_MARGIN`]; tune per deployment).
     pub min_margin: f64,
-    /// Lookups answered from the cache.
-    pub hits: u64,
+    /// Lookups answered from the cache (relaxed atomic: exactness under
+    /// contention matters less than never serializing readers).
+    hits: AtomicU64,
     /// Lookups that fell through to the policy.
-    pub misses: u64,
+    misses: AtomicU64,
     /// Decisions declined by the margin gate (used once, not pinned).
-    pub low_margin_bypasses: u64,
+    low_margin_bypasses: AtomicU64,
+}
+
+impl Clone for DecisionCache {
+    /// Clones entries and configuration; the run-local counters restart at
+    /// zero (same rule as the JSON round trip — accounting belongs to one
+    /// run, the entry table to the workload).
+    fn clone(&self) -> DecisionCache {
+        DecisionCache {
+            entries: self.entries.clone(),
+            rel_drift: self.rel_drift,
+            min_margin: self.min_margin,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            low_margin_bypasses: AtomicU64::new(0),
+        }
+    }
 }
 
 impl DecisionCache {
@@ -112,18 +162,19 @@ impl DecisionCache {
             entries: HashMap::new(),
             rel_drift,
             min_margin: DEFAULT_MIN_MARGIN,
-            hits: 0,
-            misses: 0,
-            low_margin_bypasses: 0,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            low_margin_bypasses: AtomicU64::new(0),
         }
     }
 
     /// Answer a decision from the cache, or record a miss. `slot` is the
     /// engine slot name (part of the key — policies may be slot-sensitive);
     /// `d` is the dense operand width of the upcoming multiply (part of
-    /// the signature: the policy sees it too).
+    /// the signature: the policy sees it too). Takes `&self`: concurrent
+    /// readers share one cache lock-free (see the type docs).
     pub fn lookup(
-        &mut self,
+        &self,
         slot: &str,
         rows: usize,
         cols: usize,
@@ -134,13 +185,40 @@ impl DecisionCache {
         let sig = signature(slot, rows, cols, nnz, density, d);
         match self.entries.get(&sig) {
             Some(e) if rel_dev(density, e.density) <= self.rel_drift => {
-                self.hits += 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(e.format)
             }
             _ => {
-                self.misses += 1;
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
+        }
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to the policy so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Decisions declined by the margin gate so far.
+    pub fn low_margin_bypasses(&self) -> u64 {
+        self.low_margin_bypasses.load(Ordering::Relaxed)
+    }
+
+    /// Read-only stats snapshot — one consistent-enough readout (each
+    /// counter is read once, relaxed) for reports from concurrently
+    /// serving readers.
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            low_margin_bypasses: self.low_margin_bypasses(),
+            entries: self.entries.len(),
         }
     }
 
@@ -179,7 +257,7 @@ impl DecisionCache {
         margin: f64,
     ) {
         if margin < self.min_margin {
-            self.low_margin_bypasses += 1;
+            self.low_margin_bypasses.fetch_add(1, Ordering::Relaxed);
             return;
         }
         let sig = signature(slot, rows, cols, nnz, density, d);
@@ -197,12 +275,7 @@ impl DecisionCache {
 
     /// Fraction of lookups answered from the cache.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            0.0
-        } else {
-            self.hits as f64 / total as f64
-        }
+        self.snapshot().hit_rate()
     }
 
     /// Serialize the entry table + configuration. Signatures are hex
@@ -283,9 +356,15 @@ mod tests {
         c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Csr);
         // Same bucket, slightly different shard.
         assert_eq!(c.lookup("A", 990, 990, 5100, 0.0052, 16), Some(Format::Csr));
-        assert_eq!(c.hits, 1);
-        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+        let stats = c.snapshot();
+        assert_eq!(
+            stats,
+            CacheStats { hits: 1, misses: 1, low_margin_bypasses: 0, entries: 1 }
+        );
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -373,7 +452,7 @@ mod tests {
         let mut c = DecisionCache::new(0.5);
         c.store_with_margin("A", 1000, 1000, 5000, 0.005, 16, Format::Csr, 0.02);
         assert_eq!(c.len(), 0);
-        assert_eq!(c.low_margin_bypasses, 1);
+        assert_eq!(c.low_margin_bypasses(), 1);
         assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), None);
         // Exactly at the threshold counts as confident enough.
         c.store_with_margin("A", 1000, 1000, 5000, 0.005, 16, Format::Csr, c.min_margin);
@@ -382,7 +461,7 @@ mod tests {
         // `store` is the fully-confident shorthand.
         c.store("B", 10, 10, 5, 0.05, 4, Format::Coo);
         assert_eq!(c.len(), 2);
-        assert_eq!(c.low_margin_bypasses, 1);
+        assert_eq!(c.low_margin_bypasses(), 1);
     }
 
     /// JSON round trip: entries, dead-band and margin gate survive; the
@@ -403,9 +482,8 @@ mod tests {
         assert_eq!(r.len(), 3);
         assert_eq!(r.rel_drift, 0.4);
         assert_eq!(r.min_margin, 0.2);
-        assert_eq!(r.hits, 0);
-        assert_eq!(r.misses, 0);
-        let mut r = r;
+        assert_eq!(r.hits(), 0);
+        assert_eq!(r.misses(), 0);
         assert_eq!(r.lookup("gcn.A.l1", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
         assert_eq!(r.lookup("gcn.A.l1", 4000, 1000, 5000, 0.005, 16), Some(Format::Coo));
         assert_eq!(r.lookup("rgcn.A2.l2", 500, 500, 9000, 0.036, 8), Some(Format::Csc));
@@ -423,10 +501,55 @@ mod tests {
         let mut c = DecisionCache::new(0.5);
         c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Bsr);
         c.save(&path).unwrap();
-        let mut r = DecisionCache::load(&path).unwrap();
+        let r = DecisionCache::load(&path).unwrap();
         assert_eq!(r.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Bsr));
         std::fs::write(&path, "{not json").unwrap();
         assert!(DecisionCache::load(&path).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Serving's cache-sharing rule: a warm cache behind an `Arc` answers
+    /// concurrent readers through `&self` — no mutex, and the relaxed
+    /// counters still account every lookup exactly (each thread's bumps
+    /// are atomic; only cross-thread ordering is relaxed).
+    #[test]
+    fn shared_cache_serves_concurrent_readers() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Csr);
+        let shared = std::sync::Arc::new(c);
+        let per_thread = 500;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = std::sync::Arc::clone(&shared);
+                s.spawn(move || {
+                    for _ in 0..per_thread {
+                        assert_eq!(
+                            cache.lookup("A", 1000, 1000, 5000, 0.005, 16),
+                            Some(Format::Csr)
+                        );
+                        assert_eq!(cache.lookup("B", 1000, 1000, 5000, 0.005, 16), None);
+                    }
+                });
+            }
+        });
+        let stats = shared.snapshot();
+        assert_eq!(stats.hits, 4 * per_thread);
+        assert_eq!(stats.misses, 4 * per_thread);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    /// Cloning shares nothing mutable: entries/config copy over, counters
+    /// restart (the clone begins its own run's accounting).
+    #[test]
+    fn clone_copies_entries_and_resets_counters() {
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Dia);
+        assert_eq!(c.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Dia));
+        let d = c.clone();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.hits(), 0);
+        assert_eq!(d.misses(), 0);
+        assert_eq!(d.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Dia));
+        assert_eq!(c.hits(), 1, "original accounting unaffected by the clone");
     }
 }

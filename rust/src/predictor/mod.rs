@@ -19,7 +19,7 @@ pub mod policy;
 pub mod spmm_predict;
 pub mod cache;
 
-pub use cache::DecisionCache;
+pub use cache::{CacheStats, DecisionCache};
 pub use labeler::{label_for, profile_formats, FormatProfile};
 pub use policy::{OraclePolicy, PredictedPolicy};
 pub use spmm_predict::spmm_predict;

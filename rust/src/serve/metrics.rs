@@ -1,0 +1,195 @@
+//! Lock-free per-request latency histogram.
+//!
+//! Workers record nanosecond latencies concurrently with four relaxed
+//! atomic RMWs (bucket, count, sum, max); there is no lock anywhere, so recording
+//! never perturbs the tail latencies it measures. Buckets are log-linear
+//! (HdrHistogram-style): exact below 8 ns, then 4 linear sub-buckets per
+//! power of two — ≤ 25 % relative width everywhere, 256 counters total.
+//!
+//! Percentile queries use the **nearest-rank** convention (the bucket
+//! holding the ⌈p/100·n⌉-th observation, reported as the bucket's lower
+//! bound), matching `util::stats::percentile_nearest_rank` up to bucket
+//! resolution. Queries racing with recorders read a slightly stale but
+//! internally consistent-enough view — metrics, not ledgers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const N_BUCKETS: usize = 256;
+
+fn bucket_index(ns: u64) -> usize {
+    if ns < 8 {
+        return ns as usize;
+    }
+    let major = 63 - ns.leading_zeros() as usize; // ≥ 3
+    let sub = ((ns >> (major - 2)) & 0b11) as usize;
+    8 + (major - 3) * 4 + sub
+}
+
+/// Lower bound of a bucket — the value a percentile query reports.
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let major = (idx - 8) / 4 + 3;
+    let sub = ((idx - 8) % 4) as u64;
+    (1u64 << major) + (sub << (major - 2))
+}
+
+/// Lock-free latency histogram (nanoseconds).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Wait-free: four relaxed RMWs, no CAS loop
+    /// (`fetch_max` is a single RMW on every 64-bit platform we target).
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile, reported as the owning bucket's lower
+    /// bound. 0 for an empty histogram.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (idx, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_floor(idx);
+            }
+        }
+        bucket_floor(N_BUCKETS - 1)
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.percentile_ns(50.0)
+    }
+
+    pub fn p95_ns(&self) -> u64 {
+        self.percentile_ns(95.0)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.percentile_ns(99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn buckets_are_monotone_and_invertible() {
+        // Every bucket's floor maps back into that bucket, and indices are
+        // monotone in the value.
+        let mut prev = 0usize;
+        for ns in [0u64, 1, 5, 7, 8, 9, 15, 16, 100, 1_000, 1 << 20, u64::MAX / 2] {
+            let idx = bucket_index(ns);
+            assert!(idx >= prev, "bucket index must be monotone at {ns}");
+            assert!(bucket_floor(idx) <= ns, "floor exceeds value at {ns}");
+            assert_eq!(bucket_index(bucket_floor(idx)), idx, "floor left its bucket at {ns}");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn percentiles_on_known_distribution() {
+        let h = LatencyHistogram::new();
+        // 0..7 land in exact buckets: percentiles are exact here.
+        for ns in 0..8u64 {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.p50_ns(), 3);
+        assert_eq!(h.percentile_ns(100.0), 7);
+        assert_eq!(h.max_ns(), 7);
+        assert!((h.mean_ns() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_ns(), 0);
+        assert_eq!(h.p99_ns(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn tail_percentile_within_bucket_resolution() {
+        let h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        let p99 = h.p99_ns();
+        // Nearest rank of 100 obs at p99 is the 99th: the 1 µs cohort.
+        assert!(p99 <= 1_000 && p99 >= 768, "p99 {p99} outside 1µs bucket");
+        // The outlier surfaces at p100 with ≤25% relative error.
+        let top = h.percentile_ns(100.0) as f64;
+        assert!(top >= 750_000.0 && top <= 1_000_000.0, "p100 {top}");
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Arc::new(LatencyHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1_000u64 {
+                        h.record(t * 1_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4_000);
+    }
+}

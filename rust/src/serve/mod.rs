@@ -1,0 +1,539 @@
+//! Concurrent inference serving with epoch-swap snapshot isolation
+//! (DESIGN.md §Serving).
+//!
+//! The training side of this repo amortizes format decisions over shard
+//! streams; this module amortizes them over *request* streams — the
+//! ROADMAP's "heavy traffic" regime, and ParamSpMM's point that adaptive
+//! SpMM only pays off across many invocations. One process serves many
+//! concurrent node-batch requests:
+//!
+//! ```text
+//! submit(nodes) → bounded MPMC queue → worker pool (N threads)
+//!   each worker: long-lived AdjEngine + model replica (trained weights)
+//!     request → snapshot.load()  (lock held only for the Arc clone)
+//!             → extract_rows_cols (induced subgraph, direct CSR paths)
+//!             → forward-only inference → logits + latency record
+//! writer: publish(EngineSnapshot)  — never blocks readers
+//! ```
+//!
+//! Three rules make the hot path scale:
+//!
+//! * **Reads are lock-free during SpMM.** A request clones the snapshot
+//!   `Arc` under a momentary read lock ([`EpochCell`]), then computes on
+//!   an immutable graph no writer can touch; displaced snapshots free
+//!   themselves when their last in-flight reader drops.
+//! * **One warm [`DecisionCache`], shared read-only.** Workers consult it
+//!   through relaxed atomics ([`AdjEngine::share_decision_cache`]); fresh
+//!   decisions fall back to the worker's policy and are *not* stored —
+//!   no writer lock exists to contend on.
+//! * **Metrics are wait-free.** Per-request latency lands in a lock-free
+//!   log-bucketed histogram ([`LatencyHistogram`]); p50/p95/p99 and
+//!   ops/sec are emitted as JSON-lines ([`ServeReport`], `BENCH_serve.json`).
+
+pub mod metrics;
+pub mod queue;
+pub mod snapshot;
+mod worker;
+
+pub use metrics::LatencyHistogram;
+pub use queue::RequestQueue;
+pub use snapshot::EngineSnapshot;
+
+use crate::gnn::egc::Egc;
+use crate::gnn::engine::StaticPolicy;
+use crate::gnn::film::Film;
+use crate::gnn::gcn::Gcn;
+use crate::gnn::{AdjEngine, ModelKind};
+use crate::graph::GraphDataset;
+use crate::predictor::cache::{CacheStats, DecisionCache};
+use crate::sparse::shared::EpochCell;
+use crate::sparse::{Format, SharedMatrix};
+use crate::tensor::{ops, Matrix};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A trained model the server replicates into each worker. Only the
+/// shared-adjacency architectures serve for now (GCN / FiLM / EGC — one
+/// induced adjacency per request); GAT needs a per-request attention
+/// pattern and RGCN per-relation extraction, both deferred.
+pub enum ServedModel {
+    Gcn(Gcn),
+    Film(Film),
+    Egc(Egc),
+}
+
+impl ServedModel {
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ServedModel::Gcn(_) => ModelKind::Gcn,
+            ServedModel::Film(_) => ModelKind::Film,
+            ServedModel::Egc(_) => ModelKind::Egc,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Build an untrained model of `kind` on `eng`. Panics for kinds
+    /// without a serving path (GAT, RGCN).
+    pub fn build(
+        kind: ModelKind,
+        ds: &GraphDataset,
+        hidden: usize,
+        lr: f32,
+        rng: &mut Rng,
+        eng: &mut AdjEngine,
+    ) -> ServedModel {
+        match kind {
+            ModelKind::Gcn => ServedModel::Gcn(Gcn::new(ds, hidden, lr, rng, eng)),
+            ModelKind::Film => ServedModel::Film(Film::new(ds, hidden, lr, rng, eng)),
+            ModelKind::Egc => ServedModel::Egc(Egc::new(ds, hidden, lr, rng, eng)),
+            other => panic!("{} has no serving path", other.name()),
+        }
+    }
+
+    /// Build a fresh replica on `eng` carrying this template's trained
+    /// weights (`hidden` must match the template's).
+    pub fn replicate(
+        &self,
+        ds: &GraphDataset,
+        hidden: usize,
+        lr: f32,
+        rng: &mut Rng,
+        eng: &mut AdjEngine,
+    ) -> ServedModel {
+        let mut replica = ServedModel::build(self.kind(), ds, hidden, lr, rng, eng);
+        replica.copy_weights_from(self);
+        replica
+    }
+
+    pub fn copy_weights_from(&mut self, other: &ServedModel) {
+        match (self, other) {
+            (ServedModel::Gcn(a), ServedModel::Gcn(b)) => a.copy_weights_from(b),
+            (ServedModel::Film(a), ServedModel::Film(b)) => a.copy_weights_from(b),
+            (ServedModel::Egc(a), ServedModel::Egc(b)) => a.copy_weights_from(b),
+            _ => panic!("model kind mismatch in copy_weights_from"),
+        }
+    }
+
+    pub fn set_graph(
+        &mut self,
+        eng: &mut AdjEngine,
+        x: impl Into<SharedMatrix>,
+        a: impl Into<SharedMatrix>,
+    ) {
+        match self {
+            ServedModel::Gcn(m) => m.set_graph(eng, x, a),
+            ServedModel::Film(m) => m.set_graph(eng, x, a),
+            ServedModel::Egc(m) => m.set_graph(eng, x, a),
+        }
+    }
+
+    pub fn forward(&mut self, eng: &mut AdjEngine) -> Matrix {
+        match self {
+            ServedModel::Gcn(m) => m.forward(eng),
+            ServedModel::Film(m) => m.forward(eng),
+            ServedModel::Egc(m) => m.forward(eng),
+        }
+    }
+
+    pub fn backward(&mut self, eng: &mut AdjEngine, dlogits: &Matrix) {
+        match self {
+            ServedModel::Gcn(m) => m.backward(eng, dlogits),
+            ServedModel::Film(m) => m.backward(eng, dlogits),
+            ServedModel::Egc(m) => m.backward(eng, dlogits),
+        }
+    }
+}
+
+/// Full-batch train a serving template: the short offline phase that
+/// produces the weights every worker replica copies.
+pub fn train_template(
+    kind: ModelKind,
+    ds: &GraphDataset,
+    hidden: usize,
+    lr: f32,
+    epochs: usize,
+    seed: u64,
+) -> ServedModel {
+    let mut rng = Rng::new(seed);
+    let mut policy = StaticPolicy(Format::Csr);
+    let mut eng = AdjEngine::new(&mut policy);
+    let mut model = ServedModel::build(kind, ds, hidden, lr, &mut rng, &mut eng);
+    for _ in 0..epochs {
+        let logits = model.forward(&mut eng);
+        let (_, dlogits) = ops::masked_xent_with_grad(&logits, &ds.labels, &ds.train_mask);
+        model.backward(&mut eng, &dlogits);
+    }
+    model
+}
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads (each with its own engine + model replica).
+    pub workers: usize,
+    /// Bounded request-queue capacity (back-pressure threshold).
+    pub queue_capacity: usize,
+    /// Hidden width — must match the template's.
+    pub hidden: usize,
+    /// Replica-construction learning rate (optimizer state is unused;
+    /// serving is forward-only).
+    pub lr: f32,
+    pub seed: u64,
+    /// Per-worker fallback policy when the shared cache has no answer.
+    pub fallback_format: Format,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 4,
+            queue_capacity: 64,
+            hidden: 16,
+            lr: 0.02,
+            seed: 0x5E21,
+            fallback_format: Format::Csr,
+        }
+    }
+}
+
+/// One enqueued node-batch inference request.
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Sorted, duplicate-free node ids (the `extract_rows_cols` contract;
+    /// [`InferenceServer::submit`] normalizes).
+    pub nodes: Vec<u32>,
+}
+
+/// A completed request: logits for `nodes` (row i ↔ nodes\[i\]) computed
+/// against snapshot `snapshot_version`.
+pub struct InferenceResponse {
+    pub id: u64,
+    pub nodes: Vec<u32>,
+    pub logits: Matrix,
+    pub snapshot_version: u64,
+    pub worker: usize,
+    pub latency_ns: u64,
+}
+
+/// State shared between the server handle and its workers.
+pub(crate) struct ServerShared {
+    pub(crate) queue: RequestQueue<InferenceRequest>,
+    pub(crate) snapshot: EpochCell<EngineSnapshot>,
+    pub(crate) cache: Arc<DecisionCache>,
+    pub(crate) hist: LatencyHistogram,
+    pub(crate) ds: Arc<GraphDataset>,
+    pub(crate) template: Arc<ServedModel>,
+    pub(crate) cfg: ServeConfig,
+    results: Mutex<Vec<InferenceResponse>>,
+    pending: Mutex<usize>,
+    drained: Condvar,
+}
+
+impl ServerShared {
+    pub(crate) fn complete(&self, resp: InferenceResponse) {
+        self.results.lock().unwrap().push(resp);
+        let mut p = self.pending.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            self.drained.notify_all();
+        }
+    }
+}
+
+/// Handle to a running inference service. Dropping without
+/// [`InferenceServer::shutdown`] detaches the workers; prefer an explicit
+/// shutdown so the queue closes and threads join.
+pub struct InferenceServer {
+    shared: Arc<ServerShared>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl InferenceServer {
+    /// Spawn the worker pool. `warm_cache` (e.g. [`DecisionCache::load`]
+    /// of a training run's persisted cache) is shared read-only by every
+    /// worker; `None` serves with an empty cache (all decisions fall back
+    /// to the worker policy).
+    pub fn start(
+        cfg: ServeConfig,
+        ds: Arc<GraphDataset>,
+        template: Arc<ServedModel>,
+        initial: EngineSnapshot,
+        warm_cache: Option<DecisionCache>,
+    ) -> InferenceServer {
+        assert!(cfg.workers > 0, "at least one worker");
+        let cache = Arc::new(
+            warm_cache.unwrap_or_else(|| DecisionCache::new(0.5)),
+        );
+        let shared = Arc::new(ServerShared {
+            queue: RequestQueue::bounded(cfg.queue_capacity),
+            snapshot: EpochCell::new(initial),
+            cache,
+            hist: LatencyHistogram::new(),
+            ds,
+            template,
+            cfg: cfg.clone(),
+            results: Mutex::new(Vec::new()),
+            pending: Mutex::new(0),
+            drained: Condvar::new(),
+        });
+        let handles = (0..cfg.workers)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker::worker_loop(shared, wid))
+            })
+            .collect();
+        InferenceServer { shared, handles, next_id: AtomicU64::new(0), started: Instant::now() }
+    }
+
+    /// Enqueue a node-batch request (ids are sorted + deduplicated here —
+    /// the extraction contract). Blocks while the queue is full; returns
+    /// the request id, or `None` if the server is shutting down.
+    pub fn submit(&self, mut nodes: Vec<u32>) -> Option<u64> {
+        assert!(!nodes.is_empty(), "empty request");
+        nodes.sort_unstable();
+        nodes.dedup();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        *self.shared.pending.lock().unwrap() += 1;
+        if self.shared.queue.push(InferenceRequest { id, nodes }) {
+            Some(id)
+        } else {
+            let mut p = self.shared.pending.lock().unwrap();
+            *p -= 1;
+            if *p == 0 {
+                self.shared.drained.notify_all();
+            }
+            None
+        }
+    }
+
+    /// Publish a new snapshot; returns the cell epoch it became current
+    /// at. Never blocks readers beyond their momentary pointer clone.
+    pub fn publish(&self, snap: EngineSnapshot) -> u64 {
+        self.shared.snapshot.publish(snap)
+    }
+
+    /// Publish a pre-built `Arc` — the zero-allocation swap path.
+    pub fn publish_arc(&self, snap: Arc<EngineSnapshot>) -> u64 {
+        self.shared.snapshot.publish_arc(snap)
+    }
+
+    /// The currently served snapshot (a co-owning handle).
+    pub fn current_snapshot(&self) -> Arc<EngineSnapshot> {
+        self.shared.snapshot.load()
+    }
+
+    pub fn snapshot_epoch(&self) -> u64 {
+        self.shared.snapshot.epoch()
+    }
+
+    /// Wait until every submitted request has completed, then take the
+    /// accumulated responses (ordering across workers is arbitrary).
+    pub fn drain(&self) -> Vec<InferenceResponse> {
+        let mut p = self.shared.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.shared.drained.wait(p).unwrap();
+        }
+        drop(p);
+        std::mem::take(&mut *self.shared.results.lock().unwrap())
+    }
+
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.shared.hist
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.snapshot()
+    }
+
+    /// Latency/throughput summary over everything served so far.
+    pub fn report(&self, dataset: &str) -> ServeReport {
+        let h = &self.shared.hist;
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        ServeReport {
+            model: self.shared.template.name().to_string(),
+            dataset: dataset.to_string(),
+            workers: self.shared.cfg.workers,
+            requests: h.count(),
+            p50_ns: h.p50_ns(),
+            p95_ns: h.p95_ns(),
+            p99_ns: h.p99_ns(),
+            mean_ns: h.mean_ns(),
+            max_ns: h.max_ns(),
+            ops_per_sec: h.count() as f64 / elapsed,
+            cache: self.cache_stats(),
+            snapshot_epoch: self.snapshot_epoch(),
+        }
+    }
+
+    /// Close the queue, join every worker, and return any undrained
+    /// responses.
+    pub fn shutdown(self) -> Vec<InferenceResponse> {
+        self.shared.queue.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+        std::mem::take(&mut *self.shared.results.lock().unwrap())
+    }
+}
+
+/// One JSON-lines record of serving metrics (`BENCH_serve.json`,
+/// DecentDB-style: one object per line, keyed by a run name).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub model: String,
+    pub dataset: String,
+    pub workers: usize,
+    pub requests: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub mean_ns: f64,
+    pub max_ns: u64,
+    pub ops_per_sec: f64,
+    pub cache: CacheStats,
+    pub snapshot_epoch: u64,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(format!("serve/{}/{}/w{}", self.dataset, self.model, self.workers))),
+            ("model", Json::Str(self.model.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("p95_ns", Json::Num(self.p95_ns as f64)),
+            ("p99_ns", Json::Num(self.p99_ns as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("cache_hits", Json::Num(self.cache.hits as f64)),
+            ("cache_misses", Json::Num(self.cache.misses as f64)),
+            ("cache_hit_rate", Json::Num(self.cache.hit_rate())),
+            ("snapshot_epoch", Json::Num(self.snapshot_epoch as f64)),
+        ])
+    }
+
+    /// One line of `BENCH_serve.json`.
+    pub fn to_json_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+
+    fn tiny() -> GraphDataset {
+        let spec = DatasetSpec {
+            name: "Tiny",
+            n: 80,
+            feat_dim: 16,
+            adj_density: 0.06,
+            feat_density: 0.2,
+            n_classes: 3,
+        };
+        GraphDataset::generate(&spec, &mut Rng::new(11))
+    }
+
+    fn boot(kind: ModelKind, workers: usize) -> (Arc<GraphDataset>, InferenceServer) {
+        let ds = Arc::new(tiny());
+        let template = Arc::new(train_template(kind, &ds, 16, 0.02, 5, 7));
+        let cfg = ServeConfig { workers, ..ServeConfig::default() };
+        let snap = EngineSnapshot::from_dataset(&ds, 0);
+        let srv = InferenceServer::start(cfg, Arc::clone(&ds), template, snap, None);
+        (ds, srv)
+    }
+
+    #[test]
+    fn serves_logits_for_every_request() {
+        let (ds, srv) = boot(ModelKind::Gcn, 2);
+        for start in 0..10u32 {
+            srv.submit((start..start + 8).collect()).unwrap();
+        }
+        let responses = srv.drain();
+        assert_eq!(responses.len(), 10);
+        for r in &responses {
+            assert_eq!(r.logits.rows, r.nodes.len());
+            assert_eq!(r.logits.cols, ds.n_classes);
+            assert!(r.logits.data.iter().all(|v| v.is_finite()));
+            assert_eq!(r.snapshot_version, 0);
+        }
+        assert_eq!(srv.histogram().count(), 10);
+        assert!(srv.shutdown().is_empty(), "drain already took the results");
+    }
+
+    #[test]
+    fn submit_normalizes_node_ids() {
+        let (_ds, srv) = boot(ModelKind::Gcn, 1);
+        srv.submit(vec![5, 3, 5, 1]).unwrap();
+        let r = srv.drain();
+        assert_eq!(r[0].nodes, vec![1, 3, 5], "sorted + deduplicated");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn replicas_match_template_inference() {
+        // A worker replica must produce the template's own full-graph
+        // logits: copy_weights_from is exact, inference is deterministic.
+        let ds = tiny();
+        let template = train_template(ModelKind::Egc, &ds, 16, 0.02, 4, 9);
+        let infer = |seed: u64| -> Matrix {
+            let mut policy = StaticPolicy(Format::Csr);
+            let mut eng = AdjEngine::new(&mut policy);
+            let mut rng = Rng::new(seed);
+            let mut replica = template.replicate(&ds, 16, 0.02, &mut rng, &mut eng);
+            replica.forward(&mut eng)
+        };
+        // Different init seeds: the template copy must erase every trace
+        // of the replica's own initialization.
+        let a = infer(1234);
+        let b = infer(77);
+        assert_eq!(a.data, b.data, "replica logits must be bit-identical");
+    }
+
+    #[test]
+    fn epoch_swap_is_visible_to_later_requests() {
+        let (ds, srv) = boot(ModelKind::Film, 2);
+        srv.submit(vec![0, 1, 2, 3]).unwrap();
+        let first = srv.drain();
+        assert_eq!(first[0].snapshot_version, 0);
+        let epoch = srv.publish(EngineSnapshot::from_dataset(&ds, 42));
+        assert_eq!(epoch, 1);
+        srv.submit(vec![0, 1, 2, 3]).unwrap();
+        let second = srv.drain();
+        assert_eq!(second[0].snapshot_version, 42);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn report_emits_all_latency_fields() {
+        let (_ds, srv) = boot(ModelKind::Gcn, 2);
+        for _ in 0..20 {
+            srv.submit(vec![0, 1, 2, 3, 4]).unwrap();
+        }
+        srv.drain();
+        let rep = srv.report("Tiny");
+        assert_eq!(rep.requests, 20);
+        assert!(rep.p50_ns > 0 && rep.p95_ns >= rep.p50_ns && rep.p99_ns >= rep.p95_ns);
+        assert!(rep.ops_per_sec > 0.0);
+        let line = rep.to_json_line();
+        for key in ["p50_ns", "p95_ns", "p99_ns", "ops_per_sec", "workers"] {
+            assert!(line.contains(key), "JSON line missing {key}: {line}");
+        }
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("requests").and_then(Json::as_usize), Some(20));
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,166 @@
+//! Bounded MPMC request queue (std `Mutex` + two `Condvar`s).
+//!
+//! The serving hot path holds the queue lock only to move one item in or
+//! out of a `VecDeque` — producers block while full (back-pressure toward
+//! the client instead of unbounded memory growth), consumers block while
+//! empty. `close` wakes everyone: producers see a rejected push, consumers
+//! drain the remaining items and then observe `None`, which is the worker
+//! shutdown signal.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer FIFO.
+pub struct RequestQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn bounded(capacity: usize) -> RequestQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        RequestQueue {
+            state: Mutex::new(QueueState { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Returns `false`
+    /// (item dropped) iff the queue has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.items.len() >= self.capacity && !s.closed {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return false;
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue, blocking while empty. `None` means closed **and** drained —
+    /// the consumer's signal to exit; items enqueued before `close` are
+    /// always delivered.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: further pushes are rejected, consumers drain what
+    /// remains and then see `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = RequestQueue::bounded(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = RequestQueue::bounded(4);
+        q.push(7);
+        q.close();
+        assert!(!q.push(8), "push after close must be rejected");
+        assert_eq!(q.pop(), Some(7), "pre-close items are delivered");
+        assert_eq!(q.pop(), None, "then consumers see the exit signal");
+    }
+
+    #[test]
+    fn full_queue_blocks_producer_until_consumed() {
+        let q = Arc::new(RequestQueue::bounded(1));
+        q.push(0);
+        let prod = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(1))
+        };
+        // The producer is blocked on capacity; popping frees its slot.
+        assert_eq!(q.pop(), Some(0));
+        assert!(prod.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn mpmc_delivers_every_item_exactly_once() {
+        let q = Arc::new(RequestQueue::bounded(8));
+        let n_prod = 4;
+        let per_prod = 100u64;
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..n_prod)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..per_prod {
+                        assert!(q.push(p * per_prod + i));
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..n_prod * per_prod).collect();
+        assert_eq!(all, expect);
+    }
+}

@@ -1,0 +1,98 @@
+//! Engine snapshots — the unit of epoch-swap publication.
+//!
+//! A snapshot is the pair of full-graph masters a request's induced
+//! subgraph is sliced from (CSR features + CSR normalized adjacency, the
+//! same "direct extraction path" invariant as `gnn::minibatch`'s
+//! [`FullGraphOps`]), tagged with a caller-assigned version. Snapshots are
+//! immutable once built: publication swaps an `Arc<EngineSnapshot>` in an
+//! [`EpochCell`], in-flight requests keep the `Arc` they loaded, and the
+//! displaced snapshot frees itself when its last reader drops — see
+//! `sparse::shared::EpochCell` for the lock discipline.
+//!
+//! Building a snapshot (CSR conversion, allocation) happens entirely
+//! *before* publication, on the writer's time; the swap itself is a
+//! pointer store (the `bench_serve` alloc gate pins this at zero
+//! allocations).
+
+use crate::gnn::FullGraphOps;
+use crate::graph::GraphDataset;
+use crate::sparse::{Csr, SharedMatrix};
+
+/// Immutable full-graph operand set served to inference requests.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    /// Sparse features, CSR (row slice via the identity-column fast path).
+    pub feats: SharedMatrix,
+    /// Normalized adjacency, CSR (direct row/col extraction).
+    pub adjn: SharedMatrix,
+    /// Caller-assigned version, echoed into every response served from
+    /// this snapshot — the stress test replays logits against it.
+    pub version: u64,
+}
+
+impl EngineSnapshot {
+    pub fn new(feats: SharedMatrix, adjn: SharedMatrix, version: u64) -> EngineSnapshot {
+        EngineSnapshot { feats, adjn, version }
+    }
+
+    /// Build from a dataset (CSR conversion happens here, pre-publication).
+    pub fn from_dataset(ds: &GraphDataset, version: u64) -> EngineSnapshot {
+        EngineSnapshot {
+            feats: SharedMatrix::from(Csr::from_coo(&ds.features)),
+            adjn: SharedMatrix::from(Csr::from_coo(&ds.adj_norm)),
+            version,
+        }
+    }
+
+    /// Share the mini-batch trainer's masters (refcount bumps, zero matrix
+    /// data copies): train and serve can co-own one set of CSR masters.
+    pub fn from_ops(ops: &FullGraphOps, version: u64) -> EngineSnapshot {
+        EngineSnapshot { feats: ops.feats.clone(), adjn: ops.adjn.clone(), version }
+    }
+
+    /// Number of graph nodes this snapshot serves.
+    pub fn n_nodes(&self) -> usize {
+        self.adjn.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::ModelKind;
+    use crate::graph::DatasetSpec;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> GraphDataset {
+        let spec = DatasetSpec {
+            name: "Tiny",
+            n: 60,
+            feat_dim: 12,
+            adj_density: 0.08,
+            feat_density: 0.2,
+            n_classes: 3,
+        };
+        GraphDataset::generate(&spec, &mut Rng::new(5))
+    }
+
+    #[test]
+    fn from_ops_shares_masters() {
+        let ds = tiny();
+        let ops = FullGraphOps::new(&ds, ModelKind::Gcn, &[]);
+        let before = ops.feats.strong_count();
+        let snap = EngineSnapshot::from_ops(&ops, 3);
+        assert!(snap.feats.ptr_eq(&ops.feats), "snapshot must co-own, not copy");
+        assert_eq!(ops.feats.strong_count(), before + 1);
+        assert_eq!(snap.version, 3);
+        assert_eq!(snap.n_nodes(), 60);
+    }
+
+    #[test]
+    fn from_dataset_builds_csr_masters() {
+        let ds = tiny();
+        let snap = EngineSnapshot::from_dataset(&ds, 0);
+        assert_eq!(snap.feats.format(), crate::sparse::Format::Csr);
+        assert_eq!(snap.adjn.format(), crate::sparse::Format::Csr);
+        assert_eq!(snap.feats.nnz(), ds.features.nnz());
+    }
+}

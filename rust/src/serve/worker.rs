@@ -1,0 +1,59 @@
+//! The per-worker serving loop.
+//!
+//! Each worker owns a full engine stack on its own thread: a fallback
+//! `StaticPolicy`, an [`AdjEngine`] whose slot workspaces persist across
+//! requests (the long-lived-workspace amortization the engine was built
+//! for), and a private model replica carrying the template's trained
+//! weights. The only shared state a request touches is read-only or
+//! lock-free: the snapshot `Arc` (one brief read-lock for the pointer
+//! clone), the shared [`DecisionCache`] (relaxed atomics), and the latency
+//! histogram — so workers scale without a serialization point.
+//!
+//! The engine's policy borrow (`&mut dyn FormatPolicy`) pins both policy
+//! and engine to this thread's stack frame; that is why replicas are built
+//! here rather than handed in from the spawner.
+
+use super::{InferenceResponse, ServerShared};
+use crate::gnn::engine::StaticPolicy;
+use crate::gnn::AdjEngine;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub(crate) fn worker_loop(shared: Arc<ServerShared>, worker_id: usize) {
+    let mut policy = StaticPolicy(shared.cfg.fallback_format);
+    let mut eng = AdjEngine::new(&mut policy);
+    eng.share_decision_cache(Arc::clone(&shared.cache));
+    // Replica init weights are throwaway (overwritten by the template
+    // copy), but distinct seeds keep any future shared-rng misuse loud.
+    let mut rng = Rng::new(shared.cfg.seed ^ (worker_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut model = shared.template.replicate(
+        &shared.ds,
+        shared.cfg.hidden,
+        shared.cfg.lr,
+        &mut rng,
+        &mut eng,
+    );
+    let feat_cols: Vec<u32> = (0..shared.ds.features.cols as u32).collect();
+
+    while let Some(req) = shared.queue.pop() {
+        let t0 = Instant::now();
+        // Lock held only for the Arc clone; the whole request below runs
+        // against an immutable snapshot no writer can touch.
+        let snap = shared.snapshot.load();
+        let x = snap.feats.extract_rows_cols(&req.nodes, &feat_cols);
+        let a = snap.adjn.extract_rows_cols(&req.nodes, &req.nodes);
+        model.set_graph(&mut eng, x, a);
+        let logits = model.forward(&mut eng);
+        let latency_ns = t0.elapsed().as_nanos() as u64;
+        shared.hist.record(latency_ns);
+        shared.complete(InferenceResponse {
+            id: req.id,
+            nodes: req.nodes,
+            logits,
+            snapshot_version: snap.version,
+            worker: worker_id,
+            latency_ns,
+        });
+    }
+}

@@ -35,4 +35,4 @@ pub use dok::Dok;
 pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
 pub use ops::{coo_fallback_extractions, SparseOps};
-pub use shared::{SharedMatrix, WeakMatrix};
+pub use shared::{EpochCell, SharedMatrix, WeakMatrix};

@@ -19,7 +19,8 @@
 //! master it may have pointed at stays untouched.
 
 use super::{Coo, Csr, SparseMatrix};
-use std::sync::{Arc, Weak};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, Weak};
 
 /// Shared, copy-on-write handle to a [`SparseMatrix`].
 ///
@@ -57,6 +58,66 @@ impl SharedMatrix {
     /// short-circuit keys on it without pinning the payload).
     pub fn downgrade(&self) -> WeakMatrix {
         WeakMatrix(Arc::downgrade(&self.0))
+    }
+}
+
+/// Epoch-swap snapshot cell (DESIGN.md §Serving): a single writer publishes
+/// new `Arc`-backed snapshots while any number of readers keep serving the
+/// one they loaded.
+///
+/// The lock discipline is the whole point: the `RwLock` guards **only the
+/// pointer clone**, never the payload. `load` takes the read lock for an
+/// `Arc::clone` (a refcount bump, ~nanoseconds) and releases it before the
+/// caller touches the snapshot — so a request's entire SpMM pipeline runs
+/// with *zero* locks held, and a writer's `publish` can never block an
+/// in-flight request, only the instant of pointer acquisition. Old
+/// snapshots free themselves when the last in-flight reader drops its
+/// `Arc` — no reclamation protocol, the refcount *is* the grace period.
+///
+/// The epoch counter is bumped after the swap; readers use
+/// [`EpochCell::epoch`] to cheaply detect "a newer snapshot exists"
+/// without loading it (metrics, staleness probes).
+#[derive(Debug)]
+pub struct EpochCell<T> {
+    inner: RwLock<Arc<T>>,
+    epoch: AtomicU64,
+}
+
+impl<T> EpochCell<T> {
+    pub fn new(value: T) -> EpochCell<T> {
+        EpochCell { inner: RwLock::new(Arc::new(value)), epoch: AtomicU64::new(0) }
+    }
+
+    /// Snapshot handle for a reader. Lock held only for the `Arc` clone.
+    pub fn load(&self) -> Arc<T> {
+        Arc::clone(&self.inner.read().expect("EpochCell poisoned"))
+    }
+
+    /// Publish a new snapshot, returning the epoch it became current at.
+    /// Allocates the `Arc` *outside* the write lock; prefer
+    /// [`EpochCell::publish_arc`] where the swap path itself must be
+    /// allocation-free (the caller pre-builds the `Arc`).
+    pub fn publish(&self, value: T) -> u64 {
+        self.publish_arc(Arc::new(value))
+    }
+
+    /// Publish a pre-built snapshot. The swap path here performs no
+    /// allocation at all: a pointer store under the write lock plus an
+    /// atomic increment. The displaced snapshot's `Arc` is dropped after
+    /// the lock is released, so even its (uncounted) deallocation happens
+    /// off the critical section.
+    pub fn publish_arc(&self, value: Arc<T>) -> u64 {
+        let old = {
+            let mut guard = self.inner.write().expect("EpochCell poisoned");
+            std::mem::replace(&mut *guard, value)
+        };
+        drop(old);
+        self.epoch.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Number of publishes so far (0 for a freshly constructed cell).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
     }
 }
 
@@ -158,6 +219,33 @@ mod tests {
         // Dropped payload: the token goes permanently stale.
         drop(a);
         assert!(!token.is_handle_of(&other));
+    }
+
+    #[test]
+    fn epoch_cell_swap_preserves_in_flight_snapshots() {
+        let cell = EpochCell::new(SharedMatrix::new(sample()));
+        assert_eq!(cell.epoch(), 0);
+        let held = cell.load(); // in-flight reader
+        let epoch = cell.publish(SharedMatrix::new(sample()));
+        assert_eq!(epoch, 1);
+        assert_eq!(cell.epoch(), 1);
+        // The reader still sees (and owns) the old snapshot.
+        assert!(!held.ptr_eq(&cell.load()));
+        assert_eq!(held.nnz(), 3);
+        // Dropping the last in-flight handle frees the old snapshot; the
+        // cell's current snapshot is unaffected.
+        drop(held);
+        assert_eq!(cell.load().strong_count(), 2, "cell + our load");
+    }
+
+    #[test]
+    fn epoch_cell_publish_arc_takes_prebuilt_snapshot() {
+        let cell = EpochCell::new(7_u32);
+        let next = Arc::new(8_u32);
+        assert_eq!(cell.publish_arc(Arc::clone(&next)), 1);
+        assert!(Arc::ptr_eq(&cell.load(), &next));
+        assert_eq!(cell.publish(9), 2);
+        assert_eq!(*cell.load(), 9);
     }
 
     #[test]

@@ -58,6 +58,36 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile, p in (0, 100]: the smallest element with at
+/// least ⌈p/100 · n⌉ elements ≤ it. Unlike [`percentile`], this always
+/// returns an **observed** value — the convention latency SLOs use (a
+/// reported p99 is a latency some request actually paid, never an
+/// interpolation between two). Empty input returns 0.
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// Median latency (nearest-rank) — the serving layer's p50.
+pub fn p50(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 50.0)
+}
+
+/// Nearest-rank 95th percentile.
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 95.0)
+}
+
+/// Nearest-rank 99th percentile.
+pub fn p99(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 99.0)
+}
+
 /// Min-max scaling of a value into [0,1] given observed bounds (paper §4.4:
 /// feature normalization with clipping at deployment).
 pub fn minmax_scale(x: f64, lo: f64, hi: f64) -> f64 {
@@ -105,5 +135,46 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(geomean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
+    }
+
+    /// Nearest-rank on a known distribution: 1..=100 puts pXX exactly at
+    /// the value XX (rank ⌈p⌉ of 100 elements).
+    #[test]
+    fn nearest_rank_on_known_distribution() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(p50(&xs), 50.0);
+        assert_eq!(p95(&xs), 95.0);
+        assert_eq!(p99(&xs), 99.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 100.0);
+        // Sub-1% ranks clamp to the smallest observation.
+        assert_eq!(percentile_nearest_rank(&xs, 0.1), 1.0);
+    }
+
+    /// Nearest-rank must return an observed value even where the
+    /// interpolated percentile would not: 4 elements, p50 → rank 2.
+    #[test]
+    fn nearest_rank_returns_observed_values() {
+        let xs = [4.0, 1.0, 3.0, 2.0]; // unsorted on purpose
+        assert_eq!(p50(&xs), 2.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12, "interpolated median differs");
+        assert_eq!(p95(&xs), 4.0);
+        assert_eq!(p99(&xs), 4.0);
+    }
+
+    #[test]
+    fn nearest_rank_edge_cases() {
+        // Empty slice: all percentiles degrade to 0.
+        assert_eq!(p50(&[]), 0.0);
+        assert_eq!(p95(&[]), 0.0);
+        assert_eq!(p99(&[]), 0.0);
+        // Single element: every percentile is that element.
+        let one = [42.0];
+        assert_eq!(p50(&one), 42.0);
+        assert_eq!(p95(&one), 42.0);
+        assert_eq!(p99(&one), 42.0);
+        // Two elements: p50 is the lower, the tails are the upper.
+        let two = [10.0, 20.0];
+        assert_eq!(p50(&two), 10.0);
+        assert_eq!(p99(&two), 20.0);
     }
 }

@@ -117,7 +117,7 @@ fn decision_cache_warm_start_round_trips_through_json() {
     let warm_cache = DecisionCache::load(&path).unwrap();
     let _ = std::fs::remove_file(&path);
     assert_eq!(warm_cache.len(), cold.final_cache.len(), "entry table must round-trip");
-    assert_eq!(warm_cache.hits, 0, "counters are run-local");
+    assert_eq!(warm_cache.hits(), 0, "counters are run-local");
 
     // Same workload, fresh everything except the loaded cache: the run is
     // warm from the very first shard.
