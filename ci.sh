@@ -73,4 +73,22 @@ for mode in pinned default; do
   done
 done
 
+# Fault-injection smoke (§Fault-Tolerance): GNN_FAULT_SEED arms the
+# deterministic harness inside serve_demo — the decision-cache file is torn
+# in half before reload (must cold-start, not abort), workers draw seeded
+# panics/delays (supervisor respawns within the restart budget), and
+# expired-deadline probes exercise admission control. The demo itself
+# asserts the liveness contract (one response per admitted request); here
+# we assert the report carries the fault accounting.
+echo "== fault-injection smoke: serve_demo armed via GNN_FAULT_SEED =="
+rm -f "$SERVE_OUT"
+GNN_FAULT_SEED=48879 cargo run --release --example serve_demo -- \
+  --shrink 32 --requests 120 --workers 1,4 --seed 48879 \
+  --out "$SERVE_OUT" --cache "$SERVE_CACHE"
+test -s "$SERVE_OUT" || { echo "fault smoke: $SERVE_OUT empty"; exit 1; }
+for field in shed expired restarts panics degraded; do
+  grep -q "\"$field\"" "$SERVE_OUT" \
+    || { echo "fault smoke: $SERVE_OUT missing $field"; exit 1; }
+done
+
 echo "CI OK"

@@ -4,18 +4,28 @@
 //!
 //! 1. full-batch train a template model (the short offline phase),
 //! 2. warm a decision cache on representative request shapes, save it,
-//!    then reload it via `DecisionCache::load` — the same persisted-cache
-//!    handoff `warmstart_cache` demonstrates for training,
+//!    then reload it via `DecisionCache::load_or_cold` — the same
+//!    persisted-cache handoff `warmstart_cache` demonstrates for training,
+//!    hardened to cold-start on a torn file,
 //! 3. serve a power-law request stream at each requested worker count,
 //! 4. epoch-swap a rebuilt graph snapshot mid-stream (in-flight requests
 //!    keep their old snapshot; later ones observe the new version),
 //! 5. append one JSON-lines record per worker count to `BENCH_serve.json`.
 //!
+//! Setting `GNN_FAULT_SEED=<u64>` arms the deterministic fault harness
+//! (`testing::fault`): the cache file is torn in half before reload (the
+//! cold-start path must absorb it), workers draw seeded panics/delays, and
+//! the run asserts the liveness contract instead of all-success — every
+//! admitted request still gets exactly one (possibly typed-error) response,
+//! and the report carries the shed/expired/panics/restarts accounting.
+//!
 //! ci.sh smoke-runs this under both `GNN_SPMM_THREADS=1` and default
-//! threading and asserts the emitted records carry every latency field.
+//! threading and asserts the emitted records carry every latency field;
+//! a third armed run asserts the fault-accounting fields.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo -- --shrink 32 --requests 120
+//! GNN_FAULT_SEED=48879 cargo run --release --example serve_demo
 //! ```
 
 use gnn_spmm::gnn::engine::StaticPolicy;
@@ -24,6 +34,7 @@ use gnn_spmm::graph::{GraphDataset, LARGE_DATASETS};
 use gnn_spmm::predictor::DecisionCache;
 use gnn_spmm::serve::{train_template, EngineSnapshot, InferenceServer, ServeConfig, ServedModel};
 use gnn_spmm::sparse::Format;
+use gnn_spmm::testing::{FaultKind, FaultPlan};
 use gnn_spmm::util::cli::Args;
 use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
@@ -104,10 +115,24 @@ fn main() -> anyhow::Result<()> {
     println!("training {} template (full-batch, offline)…", kind.name());
     let template = Arc::new(train_template(kind, &ds, HIDDEN, 0.02, 5, seed));
 
+    let faults = Arc::new(FaultPlan::from_env().unwrap_or_default());
+    if faults.armed() {
+        println!("fault harness ARMED (GNN_FAULT_SEED)");
+    }
+
     // Warm → save → load: the server's cache arrives the way a deployment
-    // would ship it — persisted by a warmup process, reloaded here.
-    warm_cache(&ds, &template, &requests).save(&cache_path)?;
-    let warm = DecisionCache::load(&cache_path)?;
+    // would ship it — persisted by a warmup process, reloaded here. Armed
+    // runs tear the file in half first: the load boundary must degrade to
+    // a cold start, never refuse to boot.
+    let warmed = warm_cache(&ds, &template, &requests);
+    warmed.save(&cache_path)?;
+    if faults.maybe_truncate_file(&cache_path)? {
+        println!("fault harness tore {} in half", cache_path.display());
+    }
+    let warm = DecisionCache::load_or_cold(&cache_path).unwrap_or_else(|| {
+        println!("torn cache absorbed: serving cold-starts with the in-process warm copy");
+        warmed.clone()
+    });
     println!(
         "warm decision cache: {} entries via {}",
         warm.len(),
@@ -123,10 +148,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut lines = Vec::new();
     for &workers in &worker_counts {
+        // Fresh plan per server: each worker-count run replays the same
+        // deterministic fault schedule from ordinal 0.
+        let plan = Arc::new(FaultPlan::from_env().unwrap_or_default());
+        let armed = plan.armed();
         let cfg = ServeConfig {
             workers,
             queue_capacity: 32,
             hidden: HIDDEN,
+            faults: Arc::clone(&plan),
             ..Default::default()
         };
         let srv = InferenceServer::start(
@@ -136,29 +166,73 @@ fn main() -> anyhow::Result<()> {
             EngineSnapshot::from_dataset(&ds, 0),
             Some(warm.clone()),
         );
+        let mut admitted = 0usize;
+        let mut submit_all = |reqs: &[Vec<u32>]| {
+            for req in reqs {
+                match srv.submit(req.clone()) {
+                    Ok(_) => admitted += 1,
+                    // An armed crash loop may exhaust the restart budget
+                    // mid-stream; typed rejection is the contract then.
+                    Err(e) if armed => {
+                        println!("admission rejected under faults: {e}");
+                        break;
+                    }
+                    Err(e) => panic!("unexpected admission failure: {e}"),
+                }
+            }
+        };
         let half = requests.len() / 2;
-        for req in &requests[..half] {
-            srv.submit(req.clone()).unwrap();
-        }
+        submit_all(&requests[..half]);
         // Epoch-swap while the first half is still draining: readers are
         // never blocked, the displaced snapshot frees with its last reader.
-        srv.publish_arc(Arc::clone(&updated));
-        for req in &requests[half..] {
-            srv.submit(req.clone()).unwrap();
+        srv.publish_arc(Arc::clone(&updated))?;
+        submit_all(&requests[half..]);
+        let mut probes = 0u64;
+        if armed {
+            // Deadline probes: already expired at submission, so workers
+            // must drop them at dequeue (counted in `expired`).
+            for _ in 0..3 {
+                match srv.submit_with_deadline(vec![0, 1, 2, 3], Some(std::time::Instant::now())) {
+                    Ok(_) => {
+                        admitted += 1;
+                        probes += 1;
+                    }
+                    Err(_) => break,
+                }
+            }
         }
         let responses = srv.drain();
-        anyhow::ensure!(responses.len() == requests.len(), "lost responses");
-        let v1 = responses.iter().filter(|r| r.snapshot_version == 1).count();
-        anyhow::ensure!(v1 > 0, "no request observed the swapped snapshot");
         anyhow::ensure!(
-            responses.iter().all(|r| r.logits.data.iter().all(|x| x.is_finite())),
+            responses.len() == admitted,
+            "liveness violated: {admitted} admitted, {} responses",
+            responses.len()
+        );
+        let v1 = responses
+            .iter()
+            .filter_map(|r| r.ok())
+            .filter(|inf| inf.snapshot_version == 1)
+            .count();
+        anyhow::ensure!(
+            responses
+                .iter()
+                .filter_map(|r| r.ok())
+                .all(|inf| inf.logits.data.iter().all(|x| x.is_finite())),
             "non-finite logits"
         );
+        if armed {
+            for r in responses.iter().filter(|r| !r.is_ok()) {
+                println!("request {} failed typed: {}", r.id, r.err().unwrap());
+            }
+        } else {
+            anyhow::ensure!(responses.iter().all(|r| r.is_ok()), "unarmed run must not fail");
+            anyhow::ensure!(v1 > 0, "no request observed the swapped snapshot");
+        }
 
         let rep = srv.report(spec.name);
         println!(
             "{} w{workers}: {} requests | p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms \
-             | {:.0} req/s | cache hit rate {:.1}% | {}/{} on snapshot v1",
+             | {:.0} req/s | cache hit rate {:.1}% | {}/{} on snapshot v1 \
+             | shed {} expired {} panics {} restarts {}{}",
             kind.name(),
             rep.requests,
             rep.p50_ns as f64 / 1e6,
@@ -168,11 +242,20 @@ fn main() -> anyhow::Result<()> {
             rep.cache.hit_rate() * 100.0,
             v1,
             responses.len(),
+            rep.shed,
+            rep.expired,
+            rep.panics,
+            rep.restarts,
+            if rep.degraded { " | DEGRADED" } else { "" },
         );
+        anyhow::ensure!(rep.expired >= probes, "every admitted deadline probe must expire");
 
         let line = rep.to_json_line();
         let parsed = Json::parse(&line)?;
-        for key in ["p50_ns", "p95_ns", "p99_ns", "mean_ns", "max_ns", "ops_per_sec"] {
+        for key in [
+            "p50_ns", "p95_ns", "p99_ns", "mean_ns", "max_ns", "ops_per_sec",
+            "shed", "expired", "panics", "restarts", "degraded",
+        ] {
             anyhow::ensure!(
                 parsed.get(key).is_some(),
                 "BENCH record missing {key}: {line}"

@@ -39,18 +39,17 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(seed);
     let ds = GraphDataset::generate(&spec, &mut rng);
 
-    let warm = if cache_path.exists() {
-        let cache = DecisionCache::load(&cache_path)?;
-        println!(
+    // Hardened warm-start boundary: a missing file cold-starts quietly, a
+    // corrupt/truncated one warns and cold-starts — never aborts the run.
+    let warm = DecisionCache::load_or_cold(&cache_path);
+    match &warm {
+        Some(cache) => println!(
             "loaded decision cache: {} entries from {}",
             cache.len(),
             cache_path.display()
-        );
-        Some(cache)
-    } else {
-        println!("no cache at {} — cold start", cache_path.display());
-        None
-    };
+        ),
+        None => println!("no usable cache at {} — cold start", cache_path.display()),
+    }
     let loaded = warm.is_some();
 
     let cfg = MinibatchConfig {

@@ -31,6 +31,23 @@ use crate::tensor::Matrix;
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
 
+/// Slot-bind operand gate (DESIGN.md §Fault-Tolerance): the always-on tier
+/// is [`SparseMatrix::validate_quick`] — O(outer-dim) shape/length
+/// coherence, cheap enough for every bind — and debug builds additionally
+/// run the full O(nnz) [`SparseMatrix::validate`] sweep. Binding is a
+/// programmer-controlled boundary (unlike snapshot publication or request
+/// operands, which get typed errors in `serve`), so a malformed operand
+/// here is a caller bug and panics with the format diagnosis.
+fn check_operand(op: &str, slot: &str, m: &SparseMatrix) {
+    if let Err(e) = m.validate_quick() {
+        panic!("{op}({slot}): {e}");
+    }
+    #[cfg(debug_assertions)]
+    if let Err(e) = m.validate() {
+        panic!("{op}({slot}): {e}");
+    }
+}
+
 /// Strategy for choosing a slot's storage format.
 pub trait FormatPolicy {
     /// Choose a format for a matrix about to be multiplied with a dense
@@ -267,6 +284,7 @@ impl<'p> AdjEngine<'p> {
     /// Register a sparse operand by shared handle — the master stays
     /// co-owned by the caller, nothing is copied.
     pub fn add_slot_shared(&mut self, name: &str, m: SharedMatrix) -> usize {
+        check_operand("add_slot_shared", name, &m);
         self.slots.push(Slot {
             name: name.to_string(),
             source: Some(m.downgrade()),
@@ -284,8 +302,10 @@ impl<'p> AdjEngine<'p> {
     /// pattern — e.g. a sparsified activation that changes every epoch).
     /// The format decision is kept unless density drifts.
     pub fn update_slot(&mut self, slot: usize, coo: Coo) {
+        let m = SharedMatrix::from(coo);
         let s = &mut self.slots[slot];
-        s.matrix = SharedMatrix::from(coo);
+        check_operand("update_slot", &s.name, &m);
+        s.matrix = m;
         s.source = None;
         s.coo_view = None;
     }
@@ -307,6 +327,10 @@ impl<'p> AdjEngine<'p> {
         if s.source.as_ref().is_some_and(|src| src.is_handle_of(&m)) {
             return;
         }
+        // After the identity short-circuit on purpose: the per-epoch
+        // eval-flip rebind of an already-validated master must stay O(1)
+        // and allocation-free (the bench_engine gate).
+        check_operand("set_slot_matrix", &s.name, &m);
         s.source = Some(m.downgrade());
         s.matrix = m;
         s.coo_view = None;
@@ -1012,6 +1036,35 @@ mod tests {
         assert_eq!(cache.hits(), 3);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.low_margin_bypasses(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "set_slot_matrix(A)")]
+    fn binding_a_malformed_operand_panics() {
+        let mut rng = Rng::new(17);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let slot = engine.add_slot("A", random_coo(&mut rng, 32, 0.1));
+        // Torn CSR: indptr no longer ends at nnz — the always-on
+        // validate_quick tier must refuse the bind.
+        let mut csr = crate::sparse::Csr::from_coo(&random_coo(&mut rng, 32, 0.1));
+        csr.indptr.pop();
+        engine.set_slot_matrix(slot, SparseMatrix::Csr(csr));
+    }
+
+    #[test]
+    fn rebinding_the_same_handle_skips_the_operand_gate() {
+        // The identity short-circuit must stay ahead of validation: the
+        // eval-flip rebind of an already-bound master is a no-op.
+        let mut rng = Rng::new(18);
+        let mut policy = StaticPolicy(Format::Csr);
+        let mut engine = AdjEngine::new(&mut policy);
+        let master = SharedMatrix::from(random_coo(&mut rng, 32, 0.1));
+        let slot = engine.add_slot_shared("A", master.clone());
+        let x = Matrix::rand(32, 4, &mut rng);
+        let _ = engine.spmm(slot, &x);
+        engine.set_slot_matrix(slot, master.clone());
+        assert!(engine.slot_format(slot).is_some(), "no-op rebind keeps the decision");
     }
 
     #[test]

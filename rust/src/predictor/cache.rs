@@ -309,14 +309,24 @@ impl DecisionCache {
     /// Rebuild a cache from [`DecisionCache::to_json`] output. Counters
     /// start at zero: a warm-started run reports its own hit rate.
     pub fn from_json(j: &Json) -> anyhow::Result<DecisionCache> {
-        let mut cache = DecisionCache::new(j.req_f64("rel_drift")?);
+        let rel_drift = j.req_f64("rel_drift")?;
+        if !rel_drift.is_finite() || rel_drift < 0.0 {
+            anyhow::bail!("bad rel_drift {rel_drift}");
+        }
+        let mut cache = DecisionCache::new(rel_drift);
         cache.min_margin = j.req_f64("min_margin").unwrap_or(DEFAULT_MIN_MARGIN);
+        if !cache.min_margin.is_finite() || !(0.0..=1.0).contains(&cache.min_margin) {
+            anyhow::bail!("bad min_margin {}", cache.min_margin);
+        }
         for e in j.req_arr("entries")? {
             let sig = u64::from_str_radix(e.req_str("sig")?, 16)
                 .map_err(|_| anyhow::anyhow!("bad cache signature"))?;
             let format = Format::from_name(e.req_str("format")?)
                 .ok_or_else(|| anyhow::anyhow!("unknown cached format"))?;
             let density = e.req_f64("density")?;
+            if !density.is_finite() || !(0.0..=1.0).contains(&density) {
+                anyhow::bail!("bad cached density {density}");
+            }
             cache.entries.insert(sig, CacheEntry { format, density });
         }
         Ok(cache)
@@ -337,6 +347,28 @@ impl DecisionCache {
     pub fn load(path: &Path) -> anyhow::Result<DecisionCache> {
         let text = std::fs::read_to_string(path)?;
         DecisionCache::from_json(&Json::parse(&text)?)
+    }
+
+    /// Warm-start load that **cannot fail** (DESIGN.md §Fault-Tolerance):
+    /// a missing file is a quiet cold start (first run, nothing persisted
+    /// yet), while a corrupt one — truncated mid-write, garbage bytes,
+    /// missing fields, non-finite values — logs one warning and also cold
+    /// starts. The cache is a performance hint; its on-disk state must
+    /// never be able to stop a training run or a server boot.
+    pub fn load_or_cold(path: &Path) -> Option<DecisionCache> {
+        if !path.exists() {
+            return None;
+        }
+        match DecisionCache::load(path) {
+            Ok(cache) => Some(cache),
+            Err(e) => {
+                eprintln!(
+                    "warning: decision cache {} is unreadable ({e}); cold-starting",
+                    path.display()
+                );
+                None
+            }
+        }
     }
 }
 
@@ -505,6 +537,48 @@ mod tests {
         assert_eq!(r.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Bsr));
         std::fs::write(&path, "{not json").unwrap();
         assert!(DecisionCache::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The warm-start boundary must be total: every way the on-disk cache
+    /// can be wrong — absent, truncated mid-write, garbage, structurally
+    /// valid JSON missing fields, non-finite values — degrades to a cold
+    /// start instead of an error (DESIGN.md §Fault-Tolerance).
+    #[test]
+    fn load_or_cold_survives_every_corruption_mode() {
+        let dir = std::env::temp_dir().join("gnn_spmm_cache_cold_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.json");
+        let _ = std::fs::remove_file(&path);
+
+        assert!(DecisionCache::load_or_cold(&path).is_none(), "missing file: quiet cold start");
+
+        let mut c = DecisionCache::new(0.5);
+        c.store("A", 1000, 1000, 5000, 0.005, 16, Format::Csr);
+        c.save(&path).unwrap();
+        let warm = DecisionCache::load_or_cold(&path).expect("intact file loads");
+        assert_eq!(warm.lookup("A", 1000, 1000, 5000, 0.005, 16), Some(Format::Csr));
+
+        // Torn write: the fault harness's file truncation (half the bytes).
+        let plan = crate::testing::FaultPlan::inert()
+            .with_rate(crate::testing::FaultKind::TruncateFile, 1.0);
+        assert!(plan.maybe_truncate_file(&path).unwrap());
+        assert!(DecisionCache::load_or_cold(&path).is_none(), "truncated file: cold start");
+
+        std::fs::write(&path, "\u{0}\u{1}garbage\u{2}").unwrap();
+        assert!(DecisionCache::load_or_cold(&path).is_none(), "garbage bytes: cold start");
+
+        std::fs::write(&path, "{\"rel_drift\": 0.5}").unwrap();
+        assert!(DecisionCache::load_or_cold(&path).is_none(), "missing entries field: cold start");
+
+        std::fs::write(
+            &path,
+            "{\"rel_drift\": 0.5, \"min_margin\": 0.05, \"entries\": \
+             [{\"sig\": \"00000000000000aa\", \"format\": \"csr\", \"density\": 1e999}]}",
+        )
+        .unwrap();
+        assert!(DecisionCache::load_or_cold(&path).is_none(), "non-finite density: cold start");
+
         let _ = std::fs::remove_file(&path);
     }
 

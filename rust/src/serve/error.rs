@@ -1,0 +1,115 @@
+//! The serving error taxonomy (DESIGN.md §Fault-Tolerance).
+//!
+//! Every failure a request can meet maps to one typed variant, and every
+//! submitted request gets **exactly one** response carrying either logits
+//! or one of these — a panic costs the request, never the server. The
+//! variants split by where the failure was decided: at admission
+//! (`QueueFull`, `Closed`, `Degraded`), at dequeue (`DeadlineExceeded`),
+//! or during inference (`WorkerPanic`, `CorruptOperand`);
+//! `InvalidSnapshot` is the publish-side rejection that never reaches a
+//! request at all.
+
+use crate::sparse::FormatError;
+
+/// Why a request (or a snapshot publication) failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The worker's inference panicked; the worker is respawned by the
+    /// supervisor (within the restart budget) and only this request pays.
+    WorkerPanic { worker: usize, detail: String },
+    /// `try_submit` shed the request: the queue is at capacity.
+    QueueFull,
+    /// The server is shutting down; the queue no longer admits work.
+    Closed,
+    /// The request's deadline had already passed when a worker dequeued
+    /// it — dropped without inference (the work would be wasted anyway).
+    DeadlineExceeded,
+    /// A per-request sparse operand failed structural validation.
+    CorruptOperand(FormatError),
+    /// A published snapshot failed structural validation; the previous
+    /// snapshot stays current.
+    InvalidSnapshot(FormatError),
+    /// The restart budget is exhausted and the server stopped admitting
+    /// (or, with no workers left, serving) requests.
+    Degraded,
+}
+
+impl ServeError {
+    /// Stable short tag for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::WorkerPanic { .. } => "worker_panic",
+            ServeError::QueueFull => "queue_full",
+            ServeError::Closed => "closed",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::CorruptOperand(_) => "corrupt_operand",
+            ServeError::InvalidSnapshot(_) => "invalid_snapshot",
+            ServeError::Degraded => "degraded",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::WorkerPanic { worker, detail } => {
+                write!(f, "worker {worker} panicked during inference: {detail}")
+            }
+            ServeError::QueueFull => write!(f, "request shed: queue at capacity"),
+            ServeError::Closed => write!(f, "server is shutting down"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before inference started"),
+            ServeError::CorruptOperand(e) => write!(f, "corrupt request operand: {e}"),
+            ServeError::InvalidSnapshot(e) => write!(f, "rejected snapshot: {e}"),
+            ServeError::Degraded => write!(f, "server degraded: worker restart budget exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::CorruptOperand(e) | ServeError::InvalidSnapshot(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (for `WorkerPanic::detail`).
+pub(crate) fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Format;
+
+    #[test]
+    fn kinds_and_display_are_stable() {
+        let e = ServeError::WorkerPanic { worker: 3, detail: "boom".into() };
+        assert_eq!(e.kind(), "worker_panic");
+        assert!(e.to_string().contains("worker 3"));
+        assert_eq!(ServeError::QueueFull.kind(), "queue_full");
+        assert_eq!(ServeError::DeadlineExceeded.kind(), "deadline_exceeded");
+        let fe = FormatError { format: Format::Csr, what: "test".into() };
+        assert_eq!(ServeError::CorruptOperand(fe.clone()).kind(), "corrupt_operand");
+        use std::error::Error;
+        assert!(ServeError::InvalidSnapshot(fe).source().is_some());
+    }
+
+    #[test]
+    fn panic_detail_extracts_strings() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_detail(s.as_ref()), "static str");
+        let s: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_detail(s.as_ref()), "owned");
+        let s: Box<dyn std::any::Any + Send> = Box::new(42u8);
+        assert_eq!(panic_detail(s.as_ref()), "non-string panic payload");
+    }
+}

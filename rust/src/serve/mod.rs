@@ -1,5 +1,5 @@
-//! Concurrent inference serving with epoch-swap snapshot isolation
-//! (DESIGN.md §Serving).
+//! Concurrent inference serving with epoch-swap snapshot isolation and
+//! worker supervision (DESIGN.md §Serving, §Fault-Tolerance).
 //!
 //! The training side of this repo amortizes format decisions over shard
 //! streams; this module amortizes them over *request* streams — the
@@ -12,8 +12,9 @@
 //!   each worker: long-lived AdjEngine + model replica (trained weights)
 //!     request → snapshot.load()  (lock held only for the Arc clone)
 //!             → extract_rows_cols (induced subgraph, direct CSR paths)
-//!             → forward-only inference → logits + latency record
-//! writer: publish(EngineSnapshot)  — never blocks readers
+//!             → validate operands → forward-only inference → logits
+//! writer: publish(EngineSnapshot)  — validated, never blocks readers
+//! supervisor: respawns panicked workers within a restart budget
 //! ```
 //!
 //! Three rules make the hot path scale:
@@ -29,14 +30,34 @@
 //! * **Metrics are wait-free.** Per-request latency lands in a lock-free
 //!   log-bucketed histogram ([`LatencyHistogram`]); p50/p95/p99 and
 //!   ops/sec are emitted as JSON-lines ([`ServeReport`], `BENCH_serve.json`).
+//!
+//! And three rules keep it alive under failure (the §Fault-Tolerance
+//! contract):
+//!
+//! * **Every submitted request gets exactly one response** — logits or a
+//!   typed [`ServeError`]. A worker panic is caught per request, answered
+//!   as [`ServeError::WorkerPanic`], and the worker is respawned by a
+//!   supervisor thread until `restart_budget` is spent; past the budget
+//!   the server degrades to typed rejection instead of hanging.
+//! * **No lock ever wedges.** Every mutex/condvar in this module recovers
+//!   from poisoning (`util::sync`), so one panic cannot take down
+//!   `submit`, `drain`, or `report` for everyone else.
+//! * **Operands are validated at trust boundaries.** Published snapshots
+//!   and per-request extractions pass [`SparseMatrix::validate`]
+//!   (`sparse::validate`) before any kernel indexes off them.
+//!
+//! [`SparseMatrix::validate`]: crate::sparse::SparseMatrix::validate
 
+pub mod error;
 pub mod metrics;
 pub mod queue;
 pub mod snapshot;
+mod supervisor;
 mod worker;
 
+pub use error::ServeError;
 pub use metrics::LatencyHistogram;
-pub use queue::RequestQueue;
+pub use queue::{RequestQueue, TryPushError};
 pub use snapshot::EngineSnapshot;
 
 use crate::gnn::egc::Egc;
@@ -49,12 +70,14 @@ use crate::predictor::cache::{CacheStats, DecisionCache};
 use crate::sparse::shared::EpochCell;
 use crate::sparse::{Format, SharedMatrix};
 use crate::tensor::{ops, Matrix};
+use crate::testing::FaultPlan;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{lock_recover, wait_timeout_recover};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A trained model the server replicates into each worker. Only the
 /// shared-adjacency architectures serve for now (GCN / FiLM / EGC — one
@@ -188,6 +211,12 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Per-worker fallback policy when the shared cache has no answer.
     pub fallback_format: Format,
+    /// Cumulative worker-respawn allowance before the server degrades to
+    /// typed rejection (see `serve::supervisor`).
+    pub restart_budget: usize,
+    /// Fault-injection schedule — inert by default; tests and the ci.sh
+    /// smoke arm it ([`FaultPlan`]).
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for ServeConfig {
@@ -199,6 +228,8 @@ impl Default for ServeConfig {
             lr: 0.02,
             seed: 0x5E21,
             fallback_format: Format::Csr,
+            restart_budget: 8,
+            faults: Arc::new(FaultPlan::inert()),
         }
     }
 }
@@ -209,20 +240,49 @@ pub struct InferenceRequest {
     /// Sorted, duplicate-free node ids (the `extract_rows_cols` contract;
     /// [`InferenceServer::submit`] normalizes).
     pub nodes: Vec<u32>,
+    /// Admission-control deadline: a worker dequeuing this request after
+    /// the instant has passed drops it as [`ServeError::DeadlineExceeded`]
+    /// without doing the inference.
+    pub deadline: Option<Instant>,
 }
 
-/// A completed request: logits for `nodes` (row i ↔ nodes\[i\]) computed
-/// against snapshot `snapshot_version`.
+/// The success payload of a request: logits for its nodes (row i ↔
+/// nodes\[i\]) computed against snapshot `snapshot_version`.
+pub struct Inference {
+    pub logits: Matrix,
+    pub snapshot_version: u64,
+}
+
+/// A completed request — exactly one per submission, success or typed
+/// failure (the §Fault-Tolerance liveness contract).
 pub struct InferenceResponse {
     pub id: u64,
     pub nodes: Vec<u32>,
-    pub logits: Matrix,
-    pub snapshot_version: u64,
-    pub worker: usize,
+    pub result: Result<Inference, ServeError>,
+    /// Worker that produced the response; `None` for responses synthesized
+    /// off-worker (degraded-mode queue failure).
+    pub worker: Option<usize>,
     pub latency_ns: u64,
 }
 
-/// State shared between the server handle and its workers.
+impl InferenceResponse {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    /// The inference, if the request succeeded.
+    pub fn ok(&self) -> Option<&Inference> {
+        self.result.as_ref().ok()
+    }
+
+    /// The typed error, if the request failed.
+    pub fn err(&self) -> Option<&ServeError> {
+        self.result.as_ref().err()
+    }
+}
+
+/// State shared between the server handle, its workers, and the
+/// supervisor.
 pub(crate) struct ServerShared {
     pub(crate) queue: RequestQueue<InferenceRequest>,
     pub(crate) snapshot: EpochCell<EngineSnapshot>,
@@ -234,16 +294,51 @@ pub(crate) struct ServerShared {
     results: Mutex<Vec<InferenceResponse>>,
     pending: Mutex<usize>,
     drained: Condvar,
+    // §Fault-Tolerance accounting (all surfaced in [`ServeReport`]).
+    pub(crate) shed: AtomicU64,
+    pub(crate) expired: AtomicU64,
+    pub(crate) panics: AtomicU64,
+    pub(crate) restarts: AtomicU64,
+    pub(crate) live_workers: AtomicUsize,
+    pub(crate) degraded: AtomicBool,
+    pub(crate) supervisor: Mutex<supervisor::SupervisorInbox>,
+    pub(crate) supervisor_cv: Condvar,
+    /// Handles of supervisor-respawned workers, joined at shutdown.
+    pub(crate) respawned: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ServerShared {
+    /// Deliver a response and retire its pending slot — the single point
+    /// every request (ok, error, or synthesized failure) exits through,
+    /// which is what makes "exactly one response per submission" and
+    /// `drain` termination local invariants instead of distributed hope.
     pub(crate) fn complete(&self, resp: InferenceResponse) {
-        self.results.lock().unwrap().push(resp);
-        let mut p = self.pending.lock().unwrap();
-        *p -= 1;
+        lock_recover(&self.results).push(resp);
+        let mut p = lock_recover(&self.pending);
+        *p = p.saturating_sub(1);
         if *p == 0 {
             self.drained.notify_all();
         }
+    }
+
+    /// Fail every currently queued request with a typed error (degraded
+    /// mode with no live worker left to pop them).
+    pub(crate) fn fail_queued(&self, err: impl Fn() -> ServeError) {
+        while let Some(req) = self.queue.try_pop() {
+            self.complete(InferenceResponse {
+                id: req.id,
+                nodes: req.nodes,
+                result: Err(err()),
+                worker: None,
+                latency_ns: 0,
+            });
+        }
+    }
+
+    /// Report an abnormal worker exit to the supervisor.
+    pub(crate) fn notify_worker_death(&self, worker_id: usize) {
+        lock_recover(&self.supervisor).dead.push(worker_id);
+        self.supervisor_cv.notify_all();
     }
 }
 
@@ -253,15 +348,18 @@ impl ServerShared {
 pub struct InferenceServer {
     shared: Arc<ServerShared>,
     handles: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     started: Instant,
 }
 
 impl InferenceServer {
-    /// Spawn the worker pool. `warm_cache` (e.g. [`DecisionCache::load`]
-    /// of a training run's persisted cache) is shared read-only by every
-    /// worker; `None` serves with an empty cache (all decisions fall back
-    /// to the worker policy).
+    /// Spawn the worker pool and its supervisor. `warm_cache` (e.g.
+    /// [`DecisionCache::load`] of a training run's persisted cache) is
+    /// shared read-only by every worker; `None` serves with an empty cache
+    /// (all decisions fall back to the worker policy). The initial
+    /// snapshot passes the same validation gate as `publish` — a server
+    /// must not boot onto operands it would refuse at runtime.
     pub fn start(
         cfg: ServeConfig,
         ds: Arc<GraphDataset>,
@@ -270,6 +368,9 @@ impl InferenceServer {
         warm_cache: Option<DecisionCache>,
     ) -> InferenceServer {
         assert!(cfg.workers > 0, "at least one worker");
+        if let Err(e) = initial.validate() {
+            panic!("initial snapshot rejected: {e}");
+        }
         let cache = Arc::new(
             warm_cache.unwrap_or_else(|| DecisionCache::new(0.5)),
         );
@@ -284,6 +385,15 @@ impl InferenceServer {
             results: Mutex::new(Vec::new()),
             pending: Mutex::new(0),
             drained: Condvar::new(),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            live_workers: AtomicUsize::new(cfg.workers),
+            degraded: AtomicBool::new(false),
+            supervisor: Mutex::new(supervisor::SupervisorInbox::default()),
+            supervisor_cv: Condvar::new(),
+            respawned: Mutex::new(Vec::new()),
         });
         let handles = (0..cfg.workers)
             .map(|wid| {
@@ -291,39 +401,102 @@ impl InferenceServer {
                 std::thread::spawn(move || worker::worker_loop(shared, wid))
             })
             .collect();
-        InferenceServer { shared, handles, next_id: AtomicU64::new(0), started: Instant::now() }
+        let supervisor = {
+            let shared = Arc::clone(&shared);
+            Some(std::thread::spawn(move || supervisor::supervisor_loop(shared)))
+        };
+        InferenceServer {
+            shared,
+            handles,
+            supervisor,
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    fn admit(&self, mut nodes: Vec<u32>) -> Result<(u64, Vec<u32>), ServeError> {
+        assert!(!nodes.is_empty(), "empty request");
+        if self.shared.degraded.load(Ordering::SeqCst) {
+            return Err(ServeError::Degraded);
+        }
+        nodes.sort_unstable();
+        nodes.dedup();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        *lock_recover(&self.shared.pending) += 1;
+        Ok((id, nodes))
+    }
+
+    fn retire_pending(&self) {
+        let mut p = lock_recover(&self.shared.pending);
+        *p = p.saturating_sub(1);
+        if *p == 0 {
+            self.shared.drained.notify_all();
+        }
     }
 
     /// Enqueue a node-batch request (ids are sorted + deduplicated here —
     /// the extraction contract). Blocks while the queue is full; returns
-    /// the request id, or `None` if the server is shutting down.
-    pub fn submit(&self, mut nodes: Vec<u32>) -> Option<u64> {
-        assert!(!nodes.is_empty(), "empty request");
-        nodes.sort_unstable();
-        nodes.dedup();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        *self.shared.pending.lock().unwrap() += 1;
-        if self.shared.queue.push(InferenceRequest { id, nodes }) {
-            Some(id)
+    /// the request id, or a typed error when shutting down or degraded.
+    pub fn submit(&self, nodes: Vec<u32>) -> Result<u64, ServeError> {
+        self.submit_with_deadline(nodes, None)
+    }
+
+    /// [`InferenceServer::submit`] with an admission-control deadline:
+    /// workers drop the request unserved if they dequeue it after
+    /// `deadline` ([`ServeError::DeadlineExceeded`] in its response).
+    pub fn submit_with_deadline(
+        &self,
+        nodes: Vec<u32>,
+        deadline: Option<Instant>,
+    ) -> Result<u64, ServeError> {
+        let (id, nodes) = self.admit(nodes)?;
+        if self.shared.queue.push(InferenceRequest { id, nodes, deadline }) {
+            Ok(id)
         } else {
-            let mut p = self.shared.pending.lock().unwrap();
-            *p -= 1;
-            if *p == 0 {
-                self.shared.drained.notify_all();
-            }
-            None
+            self.retire_pending();
+            Err(ServeError::Closed)
         }
     }
 
-    /// Publish a new snapshot; returns the cell epoch it became current
-    /// at. Never blocks readers beyond their momentary pointer clone.
-    pub fn publish(&self, snap: EngineSnapshot) -> u64 {
-        self.shared.snapshot.publish(snap)
+    /// Non-blocking admission: sheds the request with
+    /// [`ServeError::QueueFull`] when the queue is saturated instead of
+    /// parking the caller — load-shedding back-pressure for callers with
+    /// their own latency budget (counted in [`ServeReport::shed`]).
+    pub fn try_submit(
+        &self,
+        nodes: Vec<u32>,
+        deadline: Option<Instant>,
+    ) -> Result<u64, ServeError> {
+        let (id, nodes) = self.admit(nodes)?;
+        match self.shared.queue.try_push(InferenceRequest { id, nodes, deadline }) {
+            Ok(()) => Ok(id),
+            Err(TryPushError::Full(_)) => {
+                self.retire_pending();
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::QueueFull)
+            }
+            Err(TryPushError::Closed(_)) => {
+                self.retire_pending();
+                Err(ServeError::Closed)
+            }
+        }
     }
 
-    /// Publish a pre-built `Arc` — the zero-allocation swap path.
-    pub fn publish_arc(&self, snap: Arc<EngineSnapshot>) -> u64 {
-        self.shared.snapshot.publish_arc(snap)
+    /// Publish a new snapshot after validating it; returns the cell epoch
+    /// it became current at. Never blocks readers beyond their momentary
+    /// pointer clone. A malformed snapshot is refused
+    /// ([`ServeError::InvalidSnapshot`]) and the previous one stays
+    /// current — the snapshot-publish trust boundary.
+    pub fn publish(&self, snap: EngineSnapshot) -> Result<u64, ServeError> {
+        snap.validate().map_err(ServeError::InvalidSnapshot)?;
+        Ok(self.shared.snapshot.publish(snap))
+    }
+
+    /// Publish a pre-built `Arc` — the zero-allocation swap path (the
+    /// validation sweep reads, never allocates).
+    pub fn publish_arc(&self, snap: Arc<EngineSnapshot>) -> Result<u64, ServeError> {
+        snap.validate().map_err(ServeError::InvalidSnapshot)?;
+        Ok(self.shared.snapshot.publish_arc(snap))
     }
 
     /// The currently served snapshot (a co-owning handle).
@@ -335,15 +508,37 @@ impl InferenceServer {
         self.shared.snapshot.epoch()
     }
 
+    /// Has the restart budget been exhausted (new work is rejected)?
+    pub fn is_degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::SeqCst)
+    }
+
     /// Wait until every submitted request has completed, then take the
     /// accumulated responses (ordering across workers is arbitrary).
+    ///
+    /// Liveness: every admitted request is completed by a worker (ok or
+    /// typed error — panics included, see `serve::worker`), so `pending`
+    /// always reaches zero. The timed re-check is the belt-and-braces
+    /// backstop for the degraded edge where the last worker dies with
+    /// requests still queued: those are failed here with typed errors
+    /// rather than waited on forever.
     pub fn drain(&self) -> Vec<InferenceResponse> {
-        let mut p = self.shared.pending.lock().unwrap();
+        let mut p = lock_recover(&self.shared.pending);
         while *p > 0 {
-            p = self.shared.drained.wait(p).unwrap();
+            let (guard, timed_out) =
+                wait_timeout_recover(&self.shared.drained, p, Duration::from_millis(50));
+            p = guard;
+            if timed_out
+                && self.shared.degraded.load(Ordering::SeqCst)
+                && self.shared.live_workers.load(Ordering::SeqCst) == 0
+            {
+                drop(p);
+                self.shared.fail_queued(|| ServeError::Degraded);
+                p = lock_recover(&self.shared.pending);
+            }
         }
         drop(p);
-        std::mem::take(&mut *self.shared.results.lock().unwrap())
+        std::mem::take(&mut *lock_recover(&self.shared.results))
     }
 
     pub fn histogram(&self) -> &LatencyHistogram {
@@ -355,6 +550,8 @@ impl InferenceServer {
     }
 
     /// Latency/throughput summary over everything served so far.
+    /// `requests` counts successful inferences (the histogram population);
+    /// shed/expired/panicked requests are tallied separately.
     pub fn report(&self, dataset: &str) -> ServeReport {
         let h = &self.shared.hist;
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -371,17 +568,32 @@ impl InferenceServer {
             ops_per_sec: h.count() as f64 / elapsed,
             cache: self.cache_stats(),
             snapshot_epoch: self.snapshot_epoch(),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            expired: self.shared.expired.load(Ordering::Relaxed),
+            panics: self.shared.panics.load(Ordering::Relaxed),
+            restarts: self.shared.restarts.load(Ordering::Relaxed),
+            degraded: self.is_degraded(),
         }
     }
 
-    /// Close the queue, join every worker, and return any undrained
-    /// responses.
-    pub fn shutdown(self) -> Vec<InferenceResponse> {
+    /// Close the queue, retire the supervisor, join every worker
+    /// (original and respawned), and return any undrained responses.
+    pub fn shutdown(mut self) -> Vec<InferenceResponse> {
         self.shared.queue.close();
-        for h in self.handles {
+        lock_recover(&self.shared.supervisor).closed = true;
+        self.shared.supervisor_cv.notify_all();
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
-        std::mem::take(&mut *self.shared.results.lock().unwrap())
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // Respawned workers were pushed by the (now joined) supervisor;
+        // one sweep after its join sees the complete set.
+        for h in std::mem::take(&mut *lock_recover(&self.shared.respawned)) {
+            let _ = h.join();
+        }
+        std::mem::take(&mut *lock_recover(&self.shared.results))
     }
 }
 
@@ -401,6 +613,15 @@ pub struct ServeReport {
     pub ops_per_sec: f64,
     pub cache: CacheStats,
     pub snapshot_epoch: u64,
+    /// Requests shed by `try_submit` on a saturated queue.
+    pub shed: u64,
+    /// Requests dropped at dequeue with an expired deadline.
+    pub expired: u64,
+    /// Worker panics caught (each cost exactly one request).
+    pub panics: u64,
+    /// Supervisor respawns performed.
+    pub restarts: u64,
+    pub degraded: bool,
 }
 
 impl ServeReport {
@@ -421,6 +642,11 @@ impl ServeReport {
             ("cache_misses", Json::Num(self.cache.misses as f64)),
             ("cache_hit_rate", Json::Num(self.cache.hit_rate())),
             ("snapshot_epoch", Json::Num(self.snapshot_epoch as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("panics", Json::Num(self.panics as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("degraded", Json::Bool(self.degraded)),
         ])
     }
 
@@ -434,6 +660,7 @@ impl ServeReport {
 mod tests {
     use super::*;
     use crate::graph::DatasetSpec;
+    use crate::testing::FaultKind;
 
     fn tiny() -> GraphDataset {
         let spec = DatasetSpec {
@@ -447,13 +674,16 @@ mod tests {
         GraphDataset::generate(&spec, &mut Rng::new(11))
     }
 
-    fn boot(kind: ModelKind, workers: usize) -> (Arc<GraphDataset>, InferenceServer) {
+    fn boot_cfg(kind: ModelKind, cfg: ServeConfig) -> (Arc<GraphDataset>, InferenceServer) {
         let ds = Arc::new(tiny());
         let template = Arc::new(train_template(kind, &ds, 16, 0.02, 5, 7));
-        let cfg = ServeConfig { workers, ..ServeConfig::default() };
         let snap = EngineSnapshot::from_dataset(&ds, 0);
         let srv = InferenceServer::start(cfg, Arc::clone(&ds), template, snap, None);
         (ds, srv)
+    }
+
+    fn boot(kind: ModelKind, workers: usize) -> (Arc<GraphDataset>, InferenceServer) {
+        boot_cfg(kind, ServeConfig { workers, ..ServeConfig::default() })
     }
 
     #[test]
@@ -465,10 +695,11 @@ mod tests {
         let responses = srv.drain();
         assert_eq!(responses.len(), 10);
         for r in &responses {
-            assert_eq!(r.logits.rows, r.nodes.len());
-            assert_eq!(r.logits.cols, ds.n_classes);
-            assert!(r.logits.data.iter().all(|v| v.is_finite()));
-            assert_eq!(r.snapshot_version, 0);
+            let inf = r.ok().expect("all requests succeed");
+            assert_eq!(inf.logits.rows, r.nodes.len());
+            assert_eq!(inf.logits.cols, ds.n_classes);
+            assert!(inf.logits.data.iter().all(|v| v.is_finite()));
+            assert_eq!(inf.snapshot_version, 0);
         }
         assert_eq!(srv.histogram().count(), 10);
         assert!(srv.shutdown().is_empty(), "drain already took the results");
@@ -508,17 +739,17 @@ mod tests {
         let (ds, srv) = boot(ModelKind::Film, 2);
         srv.submit(vec![0, 1, 2, 3]).unwrap();
         let first = srv.drain();
-        assert_eq!(first[0].snapshot_version, 0);
-        let epoch = srv.publish(EngineSnapshot::from_dataset(&ds, 42));
+        assert_eq!(first[0].ok().unwrap().snapshot_version, 0);
+        let epoch = srv.publish(EngineSnapshot::from_dataset(&ds, 42)).unwrap();
         assert_eq!(epoch, 1);
         srv.submit(vec![0, 1, 2, 3]).unwrap();
         let second = srv.drain();
-        assert_eq!(second[0].snapshot_version, 42);
+        assert_eq!(second[0].ok().unwrap().snapshot_version, 42);
         srv.shutdown();
     }
 
     #[test]
-    fn report_emits_all_latency_fields() {
+    fn report_emits_all_latency_and_fault_fields() {
         let (_ds, srv) = boot(ModelKind::Gcn, 2);
         for _ in 0..20 {
             srv.submit(vec![0, 1, 2, 3, 4]).unwrap();
@@ -528,12 +759,113 @@ mod tests {
         assert_eq!(rep.requests, 20);
         assert!(rep.p50_ns > 0 && rep.p95_ns >= rep.p50_ns && rep.p99_ns >= rep.p95_ns);
         assert!(rep.ops_per_sec > 0.0);
+        assert_eq!((rep.shed, rep.expired, rep.panics, rep.restarts), (0, 0, 0, 0));
+        assert!(!rep.degraded);
         let line = rep.to_json_line();
-        for key in ["p50_ns", "p95_ns", "p99_ns", "ops_per_sec", "workers"] {
+        for key in ["p50_ns", "p95_ns", "p99_ns", "ops_per_sec", "workers", "shed", "expired", "restarts"] {
             assert!(line.contains(key), "JSON line missing {key}: {line}");
         }
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("requests").and_then(Json::as_usize), Some(20));
+        assert_eq!(parsed.get("panics").and_then(Json::as_usize), Some(0));
+        assert_eq!(parsed.get("degraded").and_then(Json::as_bool), Some(false));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_dropped_at_dequeue() {
+        let (_ds, srv) = boot(ModelKind::Gcn, 1);
+        // Deadline = now: by the time a worker dequeues, it has passed.
+        srv.submit_with_deadline(vec![0, 1, 2], Some(Instant::now())).unwrap();
+        let r = srv.drain();
+        assert_eq!(r.len(), 1, "expired requests still get their one response");
+        assert_eq!(r[0].err(), Some(&ServeError::DeadlineExceeded));
+        let rep = srv.report("Tiny");
+        assert_eq!(rep.expired, 1);
+        assert_eq!(rep.requests, 0, "expired requests never enter the latency histogram");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_yields_typed_response_and_respawn() {
+        let cfg = ServeConfig {
+            workers: 1,
+            restart_budget: 4,
+            faults: Arc::new(FaultPlan::inert().script(FaultKind::Panic, &[0])),
+            ..ServeConfig::default()
+        };
+        let (_ds, srv) = boot_cfg(ModelKind::Gcn, cfg);
+        for _ in 0..3 {
+            srv.submit(vec![0, 1, 2, 3]).unwrap();
+        }
+        let mut responses = srv.drain();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 3, "exactly one response per submission");
+        // One worker, FIFO: the scripted ordinal-0 panic hits request 0.
+        match responses[0].err() {
+            Some(ServeError::WorkerPanic { worker: 0, detail }) => {
+                assert!(detail.contains("fault injection"), "detail: {detail}");
+            }
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        assert!(responses[1].is_ok() && responses[2].is_ok(), "respawned worker serves the rest");
+        let rep = srv.report("Tiny");
+        assert_eq!(rep.panics, 1);
+        assert_eq!(rep.restarts, 1);
+        assert!(!rep.degraded);
+        assert!(srv.submit(vec![0, 1]).is_ok(), "server still admits after respawn");
+        srv.drain();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn exhausted_restart_budget_degrades_but_drain_terminates() {
+        let cfg = ServeConfig {
+            workers: 1,
+            restart_budget: 1,
+            // Panic on every request: burns worker, respawn, then budget.
+            faults: Arc::new(FaultPlan::inert().with_rate(FaultKind::Panic, 1.0)),
+            ..ServeConfig::default()
+        };
+        let (_ds, srv) = boot_cfg(ModelKind::Gcn, cfg);
+        for _ in 0..6 {
+            if srv.submit(vec![0, 1, 2]).is_err() {
+                break; // degraded admission rejection is legal mid-stream
+            }
+        }
+        let responses = srv.drain(); // must terminate (the liveness criterion)
+        assert!(!responses.is_empty());
+        for r in &responses {
+            assert!(
+                matches!(r.err(), Some(ServeError::WorkerPanic { .. } | ServeError::Degraded)),
+                "every response is a typed error, got ok={}",
+                r.is_ok()
+            );
+        }
+        assert!(srv.is_degraded());
+        assert_eq!(srv.report("Tiny").restarts, 1, "budget capped the respawns");
+        assert!(
+            matches!(srv.submit(vec![0, 1]), Err(ServeError::Degraded)),
+            "degraded server rejects new work at admission"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn publish_rejects_malformed_snapshots() {
+        let (ds, srv) = boot(ModelKind::Gcn, 1);
+        let mut bad = EngineSnapshot::from_dataset(&ds, 9);
+        if let crate::sparse::SparseMatrix::Csr(c) = bad.adjn.to_mut() {
+            c.indices[0] = c.cols as u32 + 5;
+        }
+        let before = srv.snapshot_epoch();
+        match srv.publish_arc(Arc::new(bad)) {
+            Err(ServeError::InvalidSnapshot(e)) => assert!(e.what.contains("out of bounds"), "{e}"),
+            other => panic!("expected InvalidSnapshot, got {other:?}"),
+        }
+        assert_eq!(srv.snapshot_epoch(), before, "previous snapshot stays current");
+        srv.submit(vec![0, 1, 2]).unwrap();
+        assert!(srv.drain()[0].is_ok(), "serving continues on the old snapshot");
         srv.shutdown();
     }
 }

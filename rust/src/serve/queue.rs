@@ -6,13 +6,32 @@
 //! empty. `close` wakes everyone: producers see a rejected push, consumers
 //! drain the remaining items and then observe `None`, which is the worker
 //! shutdown signal.
+//!
+//! Fault-tolerance (DESIGN.md §Fault-Tolerance): every lock acquisition
+//! recovers from poison — a panicking worker must never wedge the queue
+//! for its peers — and [`RequestQueue::try_push`] gives admission control
+//! a non-blocking shed path (`Full`) instead of parking the producer. A
+//! producer parked in `not_full` re-checks `closed` on every wakeup and
+//! `close` notifies **all** waiters on both condvars, so a full queue
+//! closed mid-push releases its producers promptly (regression-tested
+//! below).
 
+use crate::util::sync::{lock_recover, wait_recover};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 struct QueueState<T> {
     items: VecDeque<T>,
     closed: bool,
+}
+
+/// Why a [`RequestQueue::try_push`] was refused; carries the item back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPushError<T> {
+    /// At capacity — admission control's shed signal.
+    Full(T),
+    /// Closed — the server is shutting down.
+    Closed(T),
 }
 
 /// Bounded multi-producer multi-consumer FIFO.
@@ -35,11 +54,12 @@ impl<T> RequestQueue<T> {
     }
 
     /// Enqueue, blocking while the queue is at capacity. Returns `false`
-    /// (item dropped) iff the queue has been closed.
+    /// (item dropped) iff the queue has been closed — including a close
+    /// that lands while this producer is parked waiting for a slot.
     pub fn push(&self, item: T) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_recover(&self.state);
         while s.items.len() >= self.capacity && !s.closed {
-            s = self.not_full.wait(s).unwrap();
+            s = wait_recover(&self.not_full, s);
         }
         if s.closed {
             return false;
@@ -50,11 +70,27 @@ impl<T> RequestQueue<T> {
         true
     }
 
+    /// Non-blocking enqueue: `Full` when at capacity (the caller sheds the
+    /// load), `Closed` when shut down. Never parks.
+    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        let mut s = lock_recover(&self.state);
+        if s.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if s.items.len() >= self.capacity {
+            return Err(TryPushError::Full(item));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Dequeue, blocking while empty. `None` means closed **and** drained —
     /// the consumer's signal to exit; items enqueued before `close` are
     /// always delivered.
     pub fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_recover(&self.state);
         loop {
             if let Some(item) = s.items.pop_front() {
                 drop(s);
@@ -64,20 +100,37 @@ impl<T> RequestQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = wait_recover(&self.not_empty, s);
         }
+    }
+
+    /// Non-blocking dequeue: `None` when currently empty (closed or not).
+    /// The degraded-mode failure path uses this to hand queued requests a
+    /// typed error without parking on a queue no worker will ever feed.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut s = lock_recover(&self.state);
+        let item = s.items.pop_front();
+        drop(s);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
     }
 
     /// Close the queue: further pushes are rejected, consumers drain what
     /// remains and then see `None`.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_recover(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
+    pub fn is_closed(&self) -> bool {
+        lock_recover(&self.state).closed
+    }
+
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_recover(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -89,6 +142,7 @@ impl<T> RequestQueue<T> {
 mod tests {
     use super::*;
     use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn fifo_order_single_thread() {
@@ -122,6 +176,56 @@ mod tests {
         assert_eq!(q.pop(), Some(0));
         assert!(prod.join().unwrap());
         assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn try_push_sheds_when_full_and_reports_closed() {
+        let q = RequestQueue::bounded(2);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Ok(()));
+        assert_eq!(q.try_push(3), Err(TryPushError::Full(3)), "at capacity: shed, don't park");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(3), Ok(()), "slot freed");
+        q.close();
+        assert_eq!(q.try_push(4), Err(TryPushError::Closed(4)));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn try_pop_never_blocks_on_empty() {
+        let q: RequestQueue<u32> = RequestQueue::bounded(2);
+        assert_eq!(q.try_pop(), None, "empty + open: immediate None");
+        q.close();
+        assert_eq!(q.try_pop(), None);
+    }
+
+    /// The close-mid-push race: producers parked in `not_full.wait` on a
+    /// full queue must observe `close` and return `false` — not re-sleep
+    /// forever on a condvar nobody will signal again.
+    #[test]
+    fn close_releases_producers_parked_on_a_full_queue() {
+        let q = Arc::new(RequestQueue::bounded(1));
+        assert!(q.push(0)); // fill to capacity
+        let producers: Vec<_> = (0..3)
+            .map(|i| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.push(100 + i))
+            })
+            .collect();
+        // Let the producers reach the capacity wait, then close without
+        // ever popping: their slot never frees, only `close` can wake them.
+        while q.len() < 1 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        for p in producers {
+            assert!(!p.join().unwrap(), "parked producer must observe close and reject");
+        }
+        assert_eq!(q.pop(), Some(0), "the pre-close item still drains");
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::gnn::FullGraphOps;
 use crate::graph::GraphDataset;
-use crate::sparse::{Csr, SharedMatrix};
+use crate::sparse::{Csr, FormatError, SharedMatrix};
 
 /// Immutable full-graph operand set served to inference requests.
 #[derive(Clone, Debug)]
@@ -53,6 +53,33 @@ impl EngineSnapshot {
     /// Number of graph nodes this snapshot serves.
     pub fn n_nodes(&self) -> usize {
         self.adjn.rows()
+    }
+
+    /// Structural validation at the publish trust boundary (DESIGN.md
+    /// §Fault-Tolerance): both masters pass the full per-format sweep, the
+    /// adjacency is square, and the masters agree on the node count. A
+    /// snapshot that fails here is refused by `InferenceServer::publish`
+    /// before any worker can slice from it.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        self.feats.validate()?;
+        self.adjn.validate()?;
+        if self.adjn.rows() != self.adjn.cols() {
+            return Err(FormatError {
+                format: self.adjn.format(),
+                what: format!("adjacency is {}×{}, not square", self.adjn.rows(), self.adjn.cols()),
+            });
+        }
+        if self.feats.rows() != self.adjn.rows() {
+            return Err(FormatError {
+                format: self.feats.format(),
+                what: format!(
+                    "features cover {} nodes but adjacency covers {}",
+                    self.feats.rows(),
+                    self.adjn.rows()
+                ),
+            });
+        }
+        Ok(())
     }
 }
 

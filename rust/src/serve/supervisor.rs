@@ -1,0 +1,62 @@
+//! The worker supervisor (DESIGN.md §Fault-Tolerance).
+//!
+//! One supervisor thread per server owns the respawn decision. Workers
+//! that exit abnormally (a caught inference panic, or an unwind during
+//! replica construction) report their id to the supervisor's inbox; the
+//! supervisor replaces each with a fresh thread — fresh engine, fresh
+//! replica, same worker id — while the cumulative restart count stays
+//! within `ServeConfig::restart_budget`. Past the budget the server goes
+//! **degraded**: new submissions are rejected with `ServeError::Degraded`,
+//! surviving workers keep draining what was admitted, and once no worker
+//! is left the supervisor fails the remaining queued requests with typed
+//! errors so `drain` always terminates.
+//!
+//! The budget is cumulative, not per-worker: a crash loop (e.g. a
+//! poisoned model update panicking every request) burns the budget in
+//! `budget` requests and then stops consuming the stream, rather than
+//! respawn-thrashing forever.
+
+use super::{worker, ServeError, ServerShared};
+use crate::util::sync::{lock_recover, wait_recover};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Dead-worker reports plus the shutdown latch, guarded by
+/// `ServerShared::supervisor`.
+#[derive(Default)]
+pub(crate) struct SupervisorInbox {
+    pub(crate) dead: Vec<usize>,
+    pub(crate) closed: bool,
+}
+
+pub(crate) fn supervisor_loop(shared: Arc<ServerShared>) {
+    loop {
+        let dead_worker = {
+            let mut inbox = lock_recover(&shared.supervisor);
+            loop {
+                if let Some(wid) = inbox.dead.pop() {
+                    break wid;
+                }
+                if inbox.closed {
+                    return;
+                }
+                inbox = wait_recover(&shared.supervisor_cv, inbox);
+            }
+        };
+        if shared.restarts.load(Ordering::Relaxed) >= shared.cfg.restart_budget as u64 {
+            shared.degraded.store(true, Ordering::SeqCst);
+            // No replacement is coming. If that death left zero live
+            // workers, queued requests would wait forever — fail them
+            // with typed errors so `drain` terminates.
+            if shared.live_workers.load(Ordering::SeqCst) == 0 {
+                shared.fail_queued(|| ServeError::Degraded);
+            }
+            continue;
+        }
+        shared.restarts.fetch_add(1, Ordering::Relaxed);
+        shared.live_workers.fetch_add(1, Ordering::SeqCst);
+        let worker_shared = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || worker::worker_loop(worker_shared, dead_worker));
+        lock_recover(&shared.respawned).push(handle);
+    }
+}

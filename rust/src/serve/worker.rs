@@ -1,4 +1,4 @@
-//! The per-worker serving loop.
+//! The per-worker serving loop, supervised (DESIGN.md §Fault-Tolerance).
 //!
 //! Each worker owns a full engine stack on its own thread: a fallback
 //! `StaticPolicy`, an [`AdjEngine`] whose slot workspaces persist across
@@ -12,15 +12,49 @@
 //! The engine's policy borrow (`&mut dyn FormatPolicy`) pins both policy
 //! and engine to this thread's stack frame; that is why replicas are built
 //! here rather than handed in from the spawner.
+//!
+//! Supervision protocol: each request's inference runs under
+//! `catch_unwind`. A panic costs exactly that request — it completes with
+//! a typed [`ServeError::WorkerPanic`] (so `pending` is decremented and
+//! `drain` stays live) — and then the worker **exits**, because its engine
+//! and replica may hold arbitrarily torn state after an unwind. The
+//! supervisor respawns a replacement with a freshly built engine +
+//! replica. Expired deadlines are dropped at dequeue before any work;
+//! corrupt extracted operands fail validation and cost one request as a
+//! typed [`ServeError::CorruptOperand`].
 
-use super::{InferenceResponse, ServerShared};
+use super::error::panic_detail;
+use super::{Inference, InferenceRequest, InferenceResponse, ServeError, ServerShared};
 use crate::gnn::engine::StaticPolicy;
 use crate::gnn::AdjEngine;
 use crate::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Why `serve_requests` returned.
+enum WorkerExit {
+    /// Queue closed and drained — normal shutdown.
+    QueueClosed,
+    /// A request's inference panicked; engine state is suspect.
+    Panicked,
+}
+
 pub(crate) fn worker_loop(shared: Arc<ServerShared>, worker_id: usize) {
+    // The outer catch guards replica construction too: a template/snapshot
+    // bad enough to panic the build must not strand `live_workers`.
+    let exit = catch_unwind(AssertUnwindSafe(|| serve_requests(&shared, worker_id)));
+    if exit.is_err() {
+        shared.panics.fetch_add(1, Ordering::Relaxed);
+    }
+    shared.live_workers.fetch_sub(1, Ordering::SeqCst);
+    if !matches!(exit, Ok(WorkerExit::QueueClosed)) {
+        shared.notify_worker_death(worker_id);
+    }
+}
+
+fn serve_requests(shared: &Arc<ServerShared>, worker_id: usize) -> WorkerExit {
     let mut policy = StaticPolicy(shared.cfg.fallback_format);
     let mut eng = AdjEngine::new(&mut policy);
     eng.share_decision_cache(Arc::clone(&shared.cache));
@@ -38,22 +72,77 @@ pub(crate) fn worker_loop(shared: Arc<ServerShared>, worker_id: usize) {
 
     while let Some(req) = shared.queue.pop() {
         let t0 = Instant::now();
-        // Lock held only for the Arc clone; the whole request below runs
-        // against an immutable snapshot no writer can touch.
-        let snap = shared.snapshot.load();
-        let x = snap.feats.extract_rows_cols(&req.nodes, &feat_cols);
-        let a = snap.adjn.extract_rows_cols(&req.nodes, &req.nodes);
-        model.set_graph(&mut eng, x, a);
-        let logits = model.forward(&mut eng);
+        // Admission control, dequeue side: an already-expired request is
+        // dropped before any extraction or SpMM — the latency budget its
+        // client gave us is spent, so the work would be pure waste.
+        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            shared.expired.fetch_add(1, Ordering::Relaxed);
+            shared.complete(InferenceResponse {
+                id: req.id,
+                nodes: req.nodes,
+                result: Err(ServeError::DeadlineExceeded),
+                worker: Some(worker_id),
+                latency_ns: 0,
+            });
+            continue;
+        }
+        shared.cfg.faults.maybe_delay();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            infer_one(shared, &mut model, &mut eng, &req, &feat_cols)
+        }));
         let latency_ns = t0.elapsed().as_nanos() as u64;
-        shared.hist.record(latency_ns);
-        shared.complete(InferenceResponse {
-            id: req.id,
-            nodes: req.nodes,
-            logits,
-            snapshot_version: snap.version,
-            worker: worker_id,
-            latency_ns,
-        });
+        match outcome {
+            Ok(result) => {
+                if result.is_ok() {
+                    shared.hist.record(latency_ns);
+                }
+                shared.complete(InferenceResponse {
+                    id: req.id,
+                    nodes: req.nodes,
+                    result,
+                    worker: Some(worker_id),
+                    latency_ns,
+                });
+            }
+            Err(payload) => {
+                shared.panics.fetch_add(1, Ordering::Relaxed);
+                shared.complete(InferenceResponse {
+                    id: req.id,
+                    nodes: req.nodes,
+                    result: Err(ServeError::WorkerPanic {
+                        worker: worker_id,
+                        detail: panic_detail(payload.as_ref()),
+                    }),
+                    worker: Some(worker_id),
+                    latency_ns,
+                });
+                return WorkerExit::Panicked;
+            }
+        }
     }
+    WorkerExit::QueueClosed
+}
+
+fn infer_one(
+    shared: &ServerShared,
+    model: &mut super::ServedModel,
+    eng: &mut AdjEngine,
+    req: &InferenceRequest,
+    feat_cols: &[u32],
+) -> Result<Inference, ServeError> {
+    shared.cfg.faults.maybe_panic();
+    // Lock held only for the Arc clone; the whole request below runs
+    // against an immutable snapshot no writer can touch.
+    let snap = shared.snapshot.load();
+    let x = snap.feats.extract_rows_cols(&req.nodes, feat_cols);
+    let mut a = snap.adjn.extract_rows_cols(&req.nodes, &req.nodes);
+    shared.cfg.faults.maybe_corrupt(&mut a);
+    // Per-request operand gate: O(nnz) against the O(nnz·d) forward —
+    // cheap insurance that a torn extraction (or an injected corruption)
+    // costs one typed error, not an out-of-bounds read inside a kernel.
+    x.validate().map_err(ServeError::CorruptOperand)?;
+    a.validate().map_err(ServeError::CorruptOperand)?;
+    model.set_graph(eng, x, a);
+    let logits = model.forward(eng);
+    Ok(Inference { logits, snapshot_version: snap.version })
 }

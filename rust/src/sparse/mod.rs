@@ -25,6 +25,7 @@ pub mod dok;
 pub mod lil;
 pub mod format;
 pub mod shared;
+pub mod validate;
 
 pub use coo::Coo;
 pub use csr::Csr;
@@ -36,3 +37,4 @@ pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
 pub use ops::{coo_fallback_extractions, SparseOps};
 pub use shared::{EpochCell, SharedMatrix, WeakMatrix};
+pub use validate::FormatError;

@@ -19,6 +19,7 @@
 //! master it may have pointed at stays untouched.
 
 use super::{Coo, Csr, SparseMatrix};
+use crate::util::sync::{read_recover, write_recover};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock, Weak};
 
@@ -89,8 +90,11 @@ impl<T> EpochCell<T> {
     }
 
     /// Snapshot handle for a reader. Lock held only for the `Arc` clone.
+    /// Poison-recovering: the critical sections here are single pointer
+    /// ops that cannot tear, so a panicked holder never invalidates the
+    /// cell (DESIGN.md §Fault-Tolerance).
     pub fn load(&self) -> Arc<T> {
-        Arc::clone(&self.inner.read().expect("EpochCell poisoned"))
+        Arc::clone(&read_recover(&self.inner))
     }
 
     /// Publish a new snapshot, returning the epoch it became current at.
@@ -108,7 +112,7 @@ impl<T> EpochCell<T> {
     /// off the critical section.
     pub fn publish_arc(&self, value: Arc<T>) -> u64 {
         let old = {
-            let mut guard = self.inner.write().expect("EpochCell poisoned");
+            let mut guard = write_recover(&self.inner);
             std::mem::replace(&mut *guard, value)
         };
         drop(old);

@@ -1,0 +1,429 @@
+//! Structural validation for every sparse format (DESIGN.md
+//! §Fault-Tolerance: validation trust boundaries).
+//!
+//! The kernels in this crate assume well-formed storage — monotone
+//! `indptr`, in-bounds sorted indices, coherent array lengths, finite
+//! values — and index unchecked off those invariants in their hot loops.
+//! That is the right trade *inside* the engine, where every operand is
+//! produced by our own constructors; it is the wrong trade at **trust
+//! boundaries**, where operands arrive from outside the invariant bubble
+//! (a published serving snapshot, a cache file from disk, a corrupt
+//! extraction under fault injection). [`SparseMatrix::validate`] is the
+//! gate those boundaries call: a full O(nnz) sweep of every per-format
+//! invariant, returning a typed [`FormatError`] naming the violated
+//! invariant instead of letting a kernel read out of bounds or launder a
+//! NaN into logits.
+//!
+//! [`SparseMatrix::validate_quick`] is the O(rows)-at-worst subset (array
+//! length/shape coherence only) cheap enough for always-on enforcement at
+//! per-shard engine binds; the full sweep backs it up in debug builds and
+//! at the explicitly fault-tolerant boundaries.
+
+use super::format::SparseMatrix;
+use super::Format;
+
+/// A violated structural invariant, naming the offending format and what
+/// broke. Typed (rather than a bare panic) so serving can turn a corrupt
+/// operand into a per-request error instead of a dead worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FormatError {
+    pub format: Format,
+    pub what: String,
+}
+
+impl FormatError {
+    fn new(format: Format, what: impl Into<String>) -> FormatError {
+        FormatError { format, what: what.into() }
+    }
+}
+
+impl std::fmt::Display for FormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "malformed {} matrix: {}", self.format.name(), self.what)
+    }
+}
+
+impl std::error::Error for FormatError {}
+
+/// Shorthand: build the error and return early.
+macro_rules! invalid {
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err(FormatError::new($fmt, format!($($arg)*)))
+    };
+}
+
+fn check_finite(fmt: Format, vals: &[f32]) -> Result<(), FormatError> {
+    if let Some(i) = vals.iter().position(|v| !v.is_finite()) {
+        invalid!(fmt, "non-finite value {} at position {i}", vals[i]);
+    }
+    Ok(())
+}
+
+/// `indptr` must be a monotone prefix-sum: len `outer+1`, starts at 0,
+/// never decreases, ends at `nnz`.
+fn check_indptr(fmt: Format, indptr: &[usize], outer: usize, nnz: usize, axis: &str) -> Result<(), FormatError> {
+    if indptr.len() != outer + 1 {
+        invalid!(fmt, "indptr length {} but {axis} count is {outer}", indptr.len());
+    }
+    if indptr[0] != 0 {
+        invalid!(fmt, "indptr must start at 0, starts at {}", indptr[0]);
+    }
+    if let Some(i) = indptr.windows(2).position(|w| w[1] < w[0]) {
+        invalid!(fmt, "indptr decreases at {axis} {i}: {} → {}", indptr[i], indptr[i + 1]);
+    }
+    if indptr[outer] != nnz {
+        invalid!(fmt, "indptr ends at {} but {nnz} entries are stored", indptr[outer]);
+    }
+    Ok(())
+}
+
+/// Compressed index segments: in-bounds and strictly ascending per segment.
+fn check_segments(
+    fmt: Format,
+    indptr: &[usize],
+    indices: &[u32],
+    bound: usize,
+    axis: &str,
+) -> Result<(), FormatError> {
+    for (seg, w) in indptr.windows(2).enumerate() {
+        let ids = &indices[w[0]..w[1]];
+        for (j, &id) in ids.iter().enumerate() {
+            if id as usize >= bound {
+                invalid!(fmt, "{axis} {seg}: index {id} out of bounds (< {bound})");
+            }
+            if j > 0 && ids[j - 1] >= id {
+                invalid!(fmt, "{axis} {seg}: indices not strictly ascending ({} then {id})", ids[j - 1]);
+            }
+        }
+    }
+    Ok(())
+}
+
+impl SparseMatrix {
+    /// Cheap shape/length-coherence check — O(1) for most formats, O(rows)
+    /// never exceeded. Catches torn storage (mismatched array lengths, an
+    /// `indptr` that disagrees with the stored entry count) without paying
+    /// a per-element sweep; always-on at engine slot binds.
+    pub fn validate_quick(&self) -> Result<(), FormatError> {
+        match self {
+            SparseMatrix::Coo(c) => {
+                if c.row.len() != c.val.len() || c.col.len() != c.val.len() {
+                    invalid!(
+                        Format::Coo,
+                        "triple arrays disagree: {} rows / {} cols / {} vals",
+                        c.row.len(),
+                        c.col.len(),
+                        c.val.len()
+                    );
+                }
+            }
+            SparseMatrix::Csr(c) => {
+                if c.indices.len() != c.vals.len() {
+                    invalid!(Format::Csr, "{} indices vs {} vals", c.indices.len(), c.vals.len());
+                }
+                if c.indptr.len() != c.rows + 1 || c.indptr.first() != Some(&0) {
+                    invalid!(Format::Csr, "indptr length {} for {} rows", c.indptr.len(), c.rows);
+                }
+                if c.indptr.last() != Some(&c.vals.len()) {
+                    invalid!(Format::Csr, "indptr end {:?} vs {} stored", c.indptr.last(), c.vals.len());
+                }
+            }
+            SparseMatrix::Csc(c) => {
+                if c.indices.len() != c.vals.len() {
+                    invalid!(Format::Csc, "{} indices vs {} vals", c.indices.len(), c.vals.len());
+                }
+                if c.indptr.len() != c.cols + 1 || c.indptr.first() != Some(&0) {
+                    invalid!(Format::Csc, "indptr length {} for {} cols", c.indptr.len(), c.cols);
+                }
+                if c.indptr.last() != Some(&c.vals.len()) {
+                    invalid!(Format::Csc, "indptr end {:?} vs {} stored", c.indptr.last(), c.vals.len());
+                }
+            }
+            SparseMatrix::Dia(d) => {
+                if d.data.len() != d.offsets.len() * d.rows {
+                    invalid!(
+                        Format::Dia,
+                        "data length {} but {} diagonals × {} rows",
+                        d.data.len(),
+                        d.offsets.len(),
+                        d.rows
+                    );
+                }
+            }
+            SparseMatrix::Bsr(b) => {
+                if b.block == 0 {
+                    invalid!(Format::Bsr, "zero block size");
+                }
+                let block_rows = b.rows.div_ceil(b.block);
+                if b.indptr.len() != block_rows + 1 || b.indptr.first() != Some(&0) {
+                    invalid!(Format::Bsr, "indptr length {} for {} block rows", b.indptr.len(), block_rows);
+                }
+                if b.indptr.last() != Some(&b.indices.len()) {
+                    invalid!(Format::Bsr, "indptr end {:?} vs {} blocks", b.indptr.last(), b.indices.len());
+                }
+                if b.blocks.len() != b.indices.len() * b.block * b.block {
+                    invalid!(
+                        Format::Bsr,
+                        "block storage {} vs {} blocks of {}²",
+                        b.blocks.len(),
+                        b.indices.len(),
+                        b.block
+                    );
+                }
+            }
+            SparseMatrix::Dok(_) => {}
+            SparseMatrix::Lil(l) => {
+                if l.rows_data.len() != l.rows {
+                    invalid!(Format::Lil, "{} row lists for {} rows", l.rows_data.len(), l.rows);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Full structural validation: everything [`SparseMatrix::validate_quick`]
+    /// checks, plus the per-element invariants each format's kernels index
+    /// off — monotone `indptr` (checked whole, not just the endpoints),
+    /// in-bounds strictly-sorted indices, finite values, zeroed
+    /// out-of-matrix padding (DIA lanes, BSR edge blocks). O(nnz); called
+    /// at trust boundaries, not in kernel hot loops.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        self.validate_quick()?;
+        match self {
+            SparseMatrix::Coo(c) => {
+                for i in 0..c.val.len() {
+                    if c.row[i] as usize >= c.rows || c.col[i] as usize >= c.cols {
+                        invalid!(
+                            Format::Coo,
+                            "entry {i} at ({}, {}) outside {}×{}",
+                            c.row[i],
+                            c.col[i],
+                            c.rows,
+                            c.cols
+                        );
+                    }
+                    if i > 0 && (c.row[i - 1], c.col[i - 1]) >= (c.row[i], c.col[i]) {
+                        invalid!(
+                            Format::Coo,
+                            "triples not strictly sorted row-major at {i}: ({}, {}) then ({}, {})",
+                            c.row[i - 1],
+                            c.col[i - 1],
+                            c.row[i],
+                            c.col[i]
+                        );
+                    }
+                }
+                check_finite(Format::Coo, &c.val)?;
+            }
+            SparseMatrix::Csr(c) => {
+                check_indptr(Format::Csr, &c.indptr, c.rows, c.vals.len(), "row")?;
+                check_segments(Format::Csr, &c.indptr, &c.indices, c.cols, "row")?;
+                check_finite(Format::Csr, &c.vals)?;
+            }
+            SparseMatrix::Csc(c) => {
+                check_indptr(Format::Csc, &c.indptr, c.cols, c.vals.len(), "col")?;
+                check_segments(Format::Csc, &c.indptr, &c.indices, c.rows, "col")?;
+                check_finite(Format::Csc, &c.vals)?;
+            }
+            SparseMatrix::Dia(d) => {
+                if let Some(i) = d.offsets.windows(2).position(|w| w[0] >= w[1]) {
+                    invalid!(Format::Dia, "offsets not strictly ascending at {i}");
+                }
+                for (k, &off) in d.offsets.iter().enumerate() {
+                    for r in 0..d.rows {
+                        let v = d.data[k * d.rows + r];
+                        if !v.is_finite() {
+                            invalid!(Format::Dia, "non-finite value {v} on diagonal {off}, row {r}");
+                        }
+                        let c = r as i64 + off;
+                        if (c < 0 || c >= d.cols as i64) && v != 0.0 {
+                            invalid!(Format::Dia, "non-zero {v} outside the matrix on diagonal {off}, row {r}");
+                        }
+                    }
+                }
+            }
+            SparseMatrix::Bsr(b) => {
+                let block_cols = b.cols.div_ceil(b.block);
+                check_segments(Format::Bsr, &b.indptr, &b.indices, block_cols, "block row")?;
+                check_finite(Format::Bsr, &b.blocks)?;
+                // Edge blocks: cells past the logical matrix edge are
+                // padding and must be zero, or SpMM would leak them in.
+                for (br, w) in b.indptr.windows(2).enumerate() {
+                    for slot in w[0]..w[1] {
+                        let bc = b.indices[slot] as usize;
+                        for i in 0..b.block {
+                            for j in 0..b.block {
+                                let (r, c) = (br * b.block + i, bc * b.block + j);
+                                let v = b.blocks[slot * b.block * b.block + i * b.block + j];
+                                if (r >= b.rows || c >= b.cols) && v != 0.0 {
+                                    invalid!(Format::Bsr, "non-zero {v} in padding at ({r}, {c})");
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            SparseMatrix::Dok(d) => {
+                for (&(r, c), &v) in &d.map {
+                    if r as usize >= d.rows || c as usize >= d.cols {
+                        invalid!(Format::Dok, "key ({r}, {c}) outside {}×{}", d.rows, d.cols);
+                    }
+                    if !v.is_finite() {
+                        invalid!(Format::Dok, "non-finite value {v} at ({r}, {c})");
+                    }
+                }
+            }
+            SparseMatrix::Lil(l) => {
+                for (r, list) in l.rows_data.iter().enumerate() {
+                    for (j, &(c, v)) in list.iter().enumerate() {
+                        if c as usize >= l.cols {
+                            invalid!(Format::Lil, "row {r}: column {c} out of bounds (< {})", l.cols);
+                        }
+                        if j > 0 && list[j - 1].0 >= c {
+                            invalid!(Format::Lil, "row {r}: columns not strictly ascending at {j}");
+                        }
+                        if !v.is_finite() {
+                            invalid!(Format::Lil, "row {r}: non-finite value {v} in column {c}");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Bsr, Coo, Csc, Csr, Dia, Dok, Lil, ALL_FORMATS};
+    use super::*;
+
+    fn sample_coo() -> Coo {
+        Coo::from_triples(
+            6,
+            5,
+            vec![(0, 1, 1.0), (1, 4, -2.0), (2, 0, 0.5), (3, 3, 3.0), (5, 2, 4.0)],
+        )
+    }
+
+    #[test]
+    fn well_formed_matrices_pass_in_every_format() {
+        let coo = sample_coo();
+        for &fmt in ALL_FORMATS {
+            let m = SparseMatrix::from_coo(coo.clone())
+                .convert(fmt)
+                .expect("tiny matrix converts everywhere");
+            m.validate_quick().unwrap_or_else(|e| panic!("{fmt:?} quick: {e}"));
+            m.validate().unwrap_or_else(|e| panic!("{fmt:?} full: {e}"));
+        }
+    }
+
+    #[test]
+    fn empty_matrices_pass() {
+        let coo = Coo::from_triples(4, 3, vec![]);
+        for &fmt in ALL_FORMATS {
+            let m = SparseMatrix::from_coo(coo.clone()).convert(fmt).unwrap();
+            m.validate().unwrap_or_else(|e| panic!("{fmt:?}: {e}"));
+        }
+    }
+
+    // One crafted malformed instance per format (the acceptance-criteria
+    // set; integration_faults pushes these through the publish boundary).
+
+    #[test]
+    fn coo_rejects_unsorted_and_out_of_bounds() {
+        let mut c = sample_coo();
+        c.row.swap(0, 1);
+        c.col.swap(0, 1);
+        c.val.swap(0, 1);
+        let err = SparseMatrix::Coo(c).validate().unwrap_err();
+        assert_eq!(err.format, Format::Coo);
+        assert!(err.what.contains("sorted"), "{err}");
+
+        let mut oob = sample_coo();
+        oob.col[0] = 99;
+        assert!(SparseMatrix::Coo(oob).validate().is_err());
+
+        let mut torn = sample_coo();
+        torn.row.push(0);
+        assert!(SparseMatrix::Coo(torn).validate_quick().is_err(), "quick catches torn triples");
+    }
+
+    #[test]
+    fn csr_rejects_decreasing_indptr_and_oob_indices() {
+        let mut c = Csr::from_coo(&sample_coo());
+        let last = c.indptr.len() - 1;
+        c.indptr.swap(1, last - 1);
+        let err = SparseMatrix::Csr(c).validate().unwrap_err();
+        assert_eq!(err.format, Format::Csr);
+
+        let mut oob = Csr::from_coo(&sample_coo());
+        oob.indices[0] = oob.cols as u32 + 3;
+        let err = SparseMatrix::Csr(oob).validate().unwrap_err();
+        assert!(err.what.contains("out of bounds"), "{err}");
+
+        let mut nan = Csr::from_coo(&sample_coo());
+        nan.vals[2] = f32::NAN;
+        assert!(SparseMatrix::Csr(nan).validate().is_err());
+    }
+
+    #[test]
+    fn csc_rejects_torn_indptr() {
+        let mut c = Csc::from_coo(&sample_coo());
+        c.indptr.pop();
+        let err = SparseMatrix::Csc(c).validate_quick().unwrap_err();
+        assert_eq!(err.format, Format::Csc);
+    }
+
+    #[test]
+    fn dia_rejects_data_length_mismatch_and_stray_lane_values() {
+        let mut d = Dia::from_coo(&sample_coo()).unwrap();
+        d.data.pop();
+        assert!(SparseMatrix::Dia(d).validate_quick().is_err());
+
+        // A value on a lane position that falls outside the matrix.
+        let mut stray = Dia::from_coo(&Coo::from_triples(3, 3, vec![(0, 2, 1.0)])).unwrap();
+        // offset +2: rows 1, 2 map to cols 3, 4 — out of a 3-col matrix.
+        stray.data[2] = 7.0;
+        let err = SparseMatrix::Dia(stray).validate().unwrap_err();
+        assert!(err.what.contains("outside the matrix"), "{err}");
+    }
+
+    #[test]
+    fn bsr_rejects_block_storage_mismatch() {
+        let mut b = Bsr::from_coo(&sample_coo(), 2);
+        b.blocks.truncate(b.blocks.len() - 1);
+        let err = SparseMatrix::Bsr(b).validate_quick().unwrap_err();
+        assert_eq!(err.format, Format::Bsr);
+
+        let mut oob = Bsr::from_coo(&sample_coo(), 2);
+        oob.indices[0] = 1000;
+        assert!(SparseMatrix::Bsr(oob).validate().is_err());
+    }
+
+    #[test]
+    fn dok_rejects_out_of_bounds_keys_and_nan() {
+        let mut d = Dok::from_coo(&sample_coo());
+        d.map.insert((50, 50), 1.0);
+        assert!(SparseMatrix::Dok(d).validate().is_err());
+
+        let mut nan = Dok::from_coo(&sample_coo());
+        nan.map.insert((0, 0), f32::NAN);
+        assert!(SparseMatrix::Dok(nan).validate().is_err());
+    }
+
+    #[test]
+    fn lil_rejects_unsorted_rows_and_oob_columns() {
+        let mut l = Lil::from_coo(&sample_coo());
+        l.rows_data[0].push((0, 9.0)); // after column 1 → out of order
+        assert!(SparseMatrix::Lil(l).validate().is_err());
+
+        let mut oob = Lil::from_coo(&sample_coo());
+        oob.rows_data[1].push((77, 1.0));
+        assert!(SparseMatrix::Lil(oob).validate().is_err());
+
+        let mut torn = Lil::from_coo(&sample_coo());
+        torn.rows_data.pop();
+        assert!(SparseMatrix::Lil(torn).validate_quick().is_err());
+    }
+}

@@ -11,6 +11,10 @@
 //! framework reports the seed so the case can be replayed with
 //! [`replay`]. No shrinking — generators are kept small instead.
 
+pub mod fault;
+
+pub use fault::{FaultKind, FaultPlan};
+
 use crate::util::rng::Rng;
 
 /// Outcome of a single property evaluation.

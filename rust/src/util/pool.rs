@@ -29,9 +29,10 @@
 //! that number; `util::parallel::num_threads()` just reads it.
 
 use std::ops::Range;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 
 use crate::util::parallel::even_range;
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// An erased borrowed task closure. Only valid while the publishing
 /// [`Lease::run_tasks`] call is on the stack: it blocks until `pending == 0`,
@@ -96,7 +97,7 @@ pub fn global() -> &'static Pool {
 
 fn worker_loop(shared: Arc<Shared>) {
     IN_POOL.with(|c| c.set(true));
-    let mut slot = shared.slot.lock().unwrap();
+    let mut slot = lock_recover(&shared.slot);
     loop {
         // `task` is Copy (a shared reference), so claim it into locals
         // before touching the guard again.
@@ -116,7 +117,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 // publisher would wait forever on a buggy task.
                 let result =
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
-                slot = shared.slot.lock().unwrap();
+                slot = lock_recover(&shared.slot);
                 slot.pending -= 1;
                 if result.is_err() {
                     slot.poisoned = true;
@@ -126,7 +127,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 }
             }
             None => {
-                slot = shared.work_cv.wait(slot).unwrap();
+                slot = wait_recover(&shared.work_cv, slot);
             }
         }
     }
@@ -156,7 +157,7 @@ impl Lease<'_> {
         // worker can observe the reference after the borrow of `f` ends.
         let erased: TaskFn = unsafe { std::mem::transmute(f_ref) };
         {
-            let mut s = self.shared.slot.lock().unwrap();
+            let mut s = lock_recover(&self.shared.slot);
             s.task = Some(erased);
             s.n_tasks = n_tasks;
             s.next = 0;
@@ -170,14 +171,14 @@ impl Lease<'_> {
         // workers still hold the erased reference.
         let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
         loop {
-            let mut s = self.shared.slot.lock().unwrap();
+            let mut s = lock_recover(&self.shared.slot);
             if caller_panic.is_none() && s.next < n_tasks {
                 let i = s.next;
                 s.next += 1;
                 drop(s);
                 let result =
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
-                let mut s = self.shared.slot.lock().unwrap();
+                let mut s = lock_recover(&self.shared.slot);
                 s.pending -= 1;
                 let done = s.pending == 0;
                 if let Err(payload) = result {
@@ -189,7 +190,7 @@ impl Lease<'_> {
                 }
             } else {
                 while s.pending > 0 {
-                    s = self.shared.done_cv.wait(s).unwrap();
+                    s = wait_recover(&self.shared.done_cv, s);
                 }
                 s.task = None;
                 let worker_panicked = s.poisoned;
@@ -259,7 +260,14 @@ impl Pool {
         }
         match self.lease_lock.try_lock() {
             Ok(guard) => Some(Lease { shared: &self.shared, _guard: guard }),
-            Err(_) => None,
+            // A caller that panicked inside run_tasks (re-raised task panic)
+            // unwound while holding the lease and poisoned this mutex. The
+            // lease guards no data — treating Poisoned as WouldBlock would
+            // silently degrade every later job to serial forever.
+            Err(TryLockError::Poisoned(p)) => {
+                Some(Lease { shared: &self.shared, _guard: p.into_inner() })
+            }
+            Err(TryLockError::WouldBlock) => None,
         }
     }
 
@@ -343,7 +351,7 @@ impl Pool {
             return;
         };
 
-        let mut bufs = std::mem::take(&mut *self.scratch.lock().unwrap());
+        let mut bufs = std::mem::take(&mut *lock_recover(&self.scratch));
         while bufs.len() < n_tasks {
             bufs.push(Vec::new());
         }
@@ -387,7 +395,7 @@ impl Pool {
         // Return the scratch set while still holding the lease: a concurrent
         // caller that wins the lease next must find the registry populated,
         // or it would allocate (and later leak) a whole fresh buffer set.
-        *self.scratch.lock().unwrap() = bufs;
+        *lock_recover(&self.scratch) = bufs;
         drop(lease);
     }
 }

@@ -1,0 +1,148 @@
+//! Poison-recovering lock helpers (DESIGN.md §Fault-Tolerance).
+//!
+//! `std` mutexes poison when a holder panics, and every later
+//! `.lock().unwrap()` then panics too — one worker crash cascades into a
+//! wedged queue, a hanging `drain`, and an unreportable server. Poisoning
+//! is only a *heuristic* ("a critical section may have been cut short");
+//! for the serving structures in this crate the protected state is always
+//! consistent at every await point (counter increments, `VecDeque`
+//! push/pop, `Vec` push are each atomic with respect to panics), so the
+//! right policy is to **recover**: take the guard out of the
+//! `PoisonError` and carry on. These helpers centralize that policy so
+//! call sites read as intent (`lock_recover`) rather than as a sprinkle
+//! of `unwrap_or_else(PoisonError::into_inner)`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` that survives poisoning (the wait itself cannot corrupt
+/// state; poison here only means some *other* holder panicked earlier).
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` with poison recovery. Returns the reacquired
+/// guard and whether the wait timed out.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(p) => {
+            let (g, t) = p.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+    /// Poison `m` by panicking while holding its guard.
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m.lock().unwrap();
+            panic!("poison on purpose");
+        })
+        .join();
+    }
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        poison(&m);
+        assert!(m.lock().is_err(), "precondition: mutex is poisoned");
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn wait_recover_wakes_on_poisoned_mutex() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        poison(&Arc::new(Mutex::new(())));
+        let waiter = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut g = lock_recover(m);
+                while !*g {
+                    g = wait_recover(cv, g);
+                }
+            })
+        };
+        // Poison the waited-on mutex from a third thread, then signal.
+        {
+            let pair = Arc::clone(&pair);
+            let _ = std::thread::spawn(move || {
+                let (m, _cv) = &*pair;
+                let mut g = lock_recover(m);
+                *g = true;
+                panic!("poison while signalling");
+            })
+            .join();
+        }
+        pair.1.notify_all();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_recover_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let (_g, timed_out) = wait_timeout_recover(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_poisoned_writer() {
+        let l = Arc::new(RwLock::new(7));
+        {
+            let l = Arc::clone(&l);
+            let _ = std::thread::spawn(move || {
+                let _g = l.write().unwrap();
+                panic!("poison the rwlock");
+            })
+            .join();
+        }
+        assert!(l.read().is_err(), "precondition: rwlock is poisoned");
+        assert_eq!(*read_recover(&l), 7);
+        *write_recover(&l) = 8;
+        assert_eq!(*read_recover(&l), 8);
+    }
+
+    #[test]
+    fn recovery_composes_with_catch_unwind() {
+        // The serving pattern: a panic inside a critical section is caught,
+        // and the next lock_recover proceeds as if nothing happened.
+        let m = Mutex::new(vec![1, 2, 3]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = lock_recover(&m);
+            panic!("mid-section");
+        }));
+        assert!(r.is_err());
+        assert_eq!(lock_recover(&m).len(), 3);
+    }
+}

@@ -166,6 +166,74 @@ fn weighted_spmm_matches_dense_on_powerlaw() {
     assert!(out_t.max_abs_diff(&want_t) < 1e-3);
 }
 
+/// §Fault-Tolerance audit: a panicking pooled job must cost exactly its
+/// own caller — re-raised once there — and leave the pool fully serviceable
+/// *in parallel*. Before the lease-poisoning fix, the unwound caller
+/// poisoned the lease mutex and every later job silently ran serial.
+#[test]
+fn pool_survives_panicking_jobs() {
+    use gnn_spmm::util::pool::global;
+    for round in 0..5 {
+        // The last task of each doomed job panics (last, so the count below
+        // holds even when the job degrades to inline serial execution); the
+        // publisher must see the panic re-raised — not a hang, not a
+        // swallowed success.
+        let before = AtomicU64::new(0);
+        let doomed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            global().run_weighted_ranges(
+                8,
+                |i| i..i + 1,
+                |span| {
+                    if span.start == 7 {
+                        panic!("fault injection: pooled job");
+                    }
+                    before.fetch_add(span.len() as u64, Ordering::Relaxed);
+                },
+            );
+        }));
+        assert!(doomed.is_err(), "round {round}: the task panic must reach the publisher");
+        assert_eq!(
+            before.load(Ordering::Relaxed),
+            7,
+            "round {round}: the other tasks all ran exactly once"
+        );
+
+        // The very next job on the same pool must run to completion with
+        // consistent accounting (every unit covered exactly once).
+        let sum = AtomicU64::new(0);
+        global().run_ranges(1_000, |r| {
+            let mut local = 0u64;
+            for i in r {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1_000 / 2, "round {round}");
+
+        // scatter_reduce (which takes the same lease twice and swaps the
+        // scratch registry) must also still be coherent.
+        let (n, d) = (32, 2);
+        let mut out = vec![5.0f32; n * d];
+        let k = num_threads().min(4).max(2);
+        global().scatter_reduce(
+            &mut out,
+            n,
+            d,
+            k,
+            |i| gnn_spmm::util::parallel::even_range(n, k, i),
+            |span, buf| {
+                for u in span {
+                    buf[u * d] += 2.0;
+                }
+            },
+        );
+        for r in 0..n {
+            assert_eq!(out[r * d], 2.0, "round {round} row {r}");
+            assert_eq!(out[r * d + 1], 0.0, "round {round} row {r}");
+        }
+    }
+}
+
 #[test]
 fn thread_count_is_stable() {
     // The OnceLock-backed count must be identical on every read, including

@@ -91,7 +91,8 @@ fn stress_swaps_never_corrupt_in_flight_requests() {
     };
     batch(&srv, &mut rng, 10);
     let mut responses = srv.drain();
-    assert!(responses.iter().all(|r| r.snapshot_version == 0));
+    let ver = |r: &gnn_spmm::serve::InferenceResponse| r.ok().expect("request served").snapshot_version;
+    assert!(responses.iter().all(|r| ver(r) == 0));
 
     // Round 2: writer swaps concurrently with the request stream; requests
     // keep completing throughout (a blocked reader would deadlock the
@@ -100,7 +101,7 @@ fn stress_swaps_never_corrupt_in_flight_requests() {
         s.spawn(|| {
             for snap in &snaps {
                 std::thread::sleep(Duration::from_millis(2));
-                srv.publish_arc(Arc::clone(snap));
+                srv.publish_arc(Arc::clone(snap)).unwrap();
             }
         });
         batch(&srv, &mut rng, 80);
@@ -111,24 +112,25 @@ fn stress_swaps_never_corrupt_in_flight_requests() {
     // Round 3: after every swap — only the final version is served.
     batch(&srv, &mut rng, 10);
     let last_round = srv.drain();
-    assert!(last_round.iter().all(|r| r.snapshot_version == snaps.len() as u64));
+    assert!(last_round.iter().all(|r| ver(r) == snaps.len() as u64));
     responses.extend(last_round);
     assert_eq!(responses.len(), 100);
 
     // (a) Bit-identical serial replay against the observed snapshot.
-    let versions: HashSet<u64> = responses.iter().map(|r| r.snapshot_version).collect();
+    let versions: HashSet<u64> = responses.iter().map(&ver).collect();
     assert!(versions.len() >= 2, "stream saw only versions {versions:?}");
     for r in &responses {
-        let snap: &EngineSnapshot = if r.snapshot_version == 0 {
+        let inf = r.ok().expect("request served");
+        let snap: &EngineSnapshot = if inf.snapshot_version == 0 {
             &snap0
         } else {
-            &snaps[(r.snapshot_version - 1) as usize]
+            &snaps[(inf.snapshot_version - 1) as usize]
         };
         let want = serial_replay(&template, &ds, snap, &r.nodes);
         assert_eq!(
-            r.logits.data, want.data,
+            inf.logits.data, want.data,
             "request {} (snapshot v{}) diverged from serial replay",
-            r.id, r.snapshot_version
+            r.id, inf.snapshot_version
         );
     }
 
