@@ -21,6 +21,14 @@ cargo test -q
 echo "== tier-1 again with GNN_SPMM_THREADS=1 (serial fallback paths) =="
 GNN_SPMM_THREADS=1 cargo test -q
 
+# And once more with a forced NON-DEFAULT kernel schedule: every
+# unscheduled spmm_into/spmm_t_into entry point resolves
+# GNN_SPMM_SCHEDULE once per process (sparse::schedule::Schedule), so this
+# run drives the whole suite through the 8-lane tiles, even splits and a
+# serial thread cap — the schedule variants the default run never touches.
+echo "== tier-1 again with GNN_SPMM_SCHEDULE=t8/even/1 (non-default schedule) =="
+GNN_SPMM_SCHEDULE=t8/even/1 cargo test -q
+
 # Mini-batch smoke: small shard count, fixed seed, shrunk ogbn-arxiv-scale.
 # The examples assert the shard stream reuses cached decisions and never
 # falls back to COO round-trip extraction; the strict >80% warm-rate gate
@@ -47,6 +55,12 @@ cargo run --release --example warmstart_cache -- \
 cargo run --release --example warmstart_cache -- \
   --cache "$WARMSTART_CACHE" --shrink 32 --shards 4 --epochs 2 --fanout 12 --seed 48879 \
   --expect-warm 0.8
+# Schedule-space PR: persisted cache entries are complete (format, schedule)
+# plans — the warm-started file must carry the schedule fields.
+for field in tile split threads; do
+  grep -q "\"$field\"" "$WARMSTART_CACHE" \
+    || { echo "warm-start cache: $WARMSTART_CACHE missing schedule field $field"; exit 1; }
+done
 
 # Serving smoke (§Serving): power-law request stream, mid-stream epoch
 # swap, warm cache shared read-only across workers. Run once with the

@@ -26,7 +26,8 @@
 use gnn_spmm::bench::{bench, count_allocs, section, CountingAlloc};
 use gnn_spmm::features::extract_features;
 use gnn_spmm::graph::{gen_matrix, MatrixPattern};
-use gnn_spmm::sparse::{Format, SparseMatrix, ALL_FORMATS};
+use gnn_spmm::predictor::{train_predictor, train_schedule_heads, TrainingCorpus};
+use gnn_spmm::sparse::{Format, Schedule, SparseMatrix, ALL_FORMATS};
 use gnn_spmm::tensor::Matrix;
 use gnn_spmm::util::json::Json;
 use gnn_spmm::util::rng::Rng;
@@ -77,11 +78,25 @@ fn main() {
         println!("loaded {} baseline records from {out_path}", baseline.len());
     }
 
+    // Multi-output schedule predictor for the predicted-rank trajectory:
+    // small corpus, trained once — the bench then scores its schedule pick
+    // against the measured candidate sweep on every workload.
+    section("training schedule heads (predicted-rank tracking)");
+    let corpus = TrainingCorpus::build(20, 48, 128, 8, 1, 0x5EED);
+    let mut predictor = train_predictor(&corpus, 1.0, 7);
+    train_schedule_heads(&corpus, &mut predictor);
+    let mut rank_top2 = 0usize;
+    let mut rank_total = 0usize;
+
     let patterns = [
         (MatrixPattern::Uniform, "uniform"),
         (MatrixPattern::PowerLaw, "powerlaw"),
     ];
-    for &(n, d, density) in &[(1024usize, 16usize, 0.02f64), (2048, 32, 0.01), (4096, 64, 0.01)] {
+    // Feature widths span the tile spectrum (4–64): d=4 is where narrow
+    // tiles and serial schedules win, d=64 is deep-tile territory.
+    for &(n, d, density) in
+        &[(512usize, 4usize, 0.05f64), (1024, 16, 0.02), (2048, 32, 0.01), (4096, 64, 0.01)]
+    {
         for (pi, &(pattern, pat_name)) in patterns.iter().enumerate() {
             // Fresh per-workload RNG so each (n, d, pattern) matrix is
             // reproducible regardless of which workloads a bench version
@@ -95,6 +110,8 @@ fn main() {
                 "\nworkload: {n}×{n} {pat_name} matrix, nnz={nnz} ({:.2}%), dense width {d}",
                 coo.density() * 100.0
             );
+            let (_, predicted_sched, _) = predictor.predict_plan_with_margin(&coo);
+            println!("  predicted schedule: {}", predicted_sched.label());
 
             section("SpMM per format: alloc vs workspace (`_into`) vs transpose");
             let base = SparseMatrix::Coo(coo.clone());
@@ -118,6 +135,66 @@ fn main() {
                 });
                 let (ac, ab) = count_allocs(|| m.spmm(&x));
                 let (ac_into, ab_into) = count_allocs(|| m.spmm_into(&x, &mut out));
+
+                // Schedule sweep: every candidate timed on the `_into` hot
+                // path, plus the predictor's pick (scored by rank among the
+                // measured candidates — rank 1 = it chose the fastest).
+                let mut sched_records: Vec<Json> = Vec::new();
+                let mut sched_times: Vec<(Schedule, f64)> = Vec::new();
+                for &sched in &Schedule::CANDIDATES {
+                    let rs = bench(
+                        &format!("spmm_into/{name}/{pat_name}/{n}x{d}/{}", sched.label()),
+                        1,
+                        5,
+                        || m.spmm_into_with(&x, &mut out, sched),
+                    );
+                    sched_times.push((sched, rs.median_s));
+                    sched_records.push(Json::obj(vec![
+                        ("schedule", Json::Str(sched.label())),
+                        ("spmm_into_ns", Json::Num(rs.median_s * 1e9)),
+                    ]));
+                    if fmtc == Format::Lil {
+                        // PR-2 regression probe: LIL's forward kernel must
+                        // stay allocation-free in steady state (cached nnz
+                        // prefix-sum, no per-multiply range list) under
+                        // every schedule variant.
+                        let (lc, lb) = count_allocs(|| m.spmm_into_with(&x, &mut out, sched));
+                        assert_eq!(
+                            (lc, lb),
+                            (0, 0),
+                            "LIL spmm_into allocated under schedule {}",
+                            sched.label()
+                        );
+                    }
+                }
+                let predicted_s = sched_times
+                    .iter()
+                    .find(|(s, _)| *s == predicted_sched)
+                    .map(|&(_, t)| t)
+                    .unwrap_or_else(|| {
+                        // The heads can compose a plan outside the candidate
+                        // set (16 combinations vs 4 candidates): time it so
+                        // the rank is against real measurements.
+                        let rs = bench(
+                            &format!(
+                                "spmm_into/{name}/{pat_name}/{n}x{d}/{} (predicted)",
+                                predicted_sched.label()
+                            ),
+                            1,
+                            5,
+                            || m.spmm_into_with(&x, &mut out, predicted_sched),
+                        );
+                        rs.median_s
+                    });
+                let predicted_rank = 1 + sched_times
+                    .iter()
+                    .filter(|&&(s, t)| s != predicted_sched && t < predicted_s)
+                    .count();
+                rank_total += 1;
+                if predicted_rank <= 2 {
+                    rank_top2 += 1;
+                }
+
                 let gflops = 2.0 * nnz as f64 * d as f64 / r.median_s / 1e9;
                 println!(
                     "{:<44} {gflops:.2} GFLOP/s | allocs/op {ac} ({ab} B) -> into {ac_into} ({ab_into} B)",
@@ -137,6 +214,9 @@ fn main() {
                     ("alloc_bytes_per_op", Json::Num(ab as f64)),
                     ("allocs_per_op_into", Json::Num(ac_into as f64)),
                     ("alloc_bytes_per_op_into", Json::Num(ab_into as f64)),
+                    ("schedules", Json::Arr(sched_records)),
+                    ("predicted_schedule", Json::Str(predicted_sched.label())),
+                    ("predicted_rank", Json::Num(predicted_rank as f64)),
                 ];
                 // Record before/after against the previous run of this
                 // bench, keyed by (format, pattern, n, d).
@@ -207,10 +287,16 @@ fn main() {
 
     // Machine-readable dump for the perf trajectory.
     let threads = gnn_spmm::util::parallel::num_threads();
+    let top2_rate = if rank_total > 0 { rank_top2 as f64 / rank_total as f64 } else { 0.0 };
+    println!(
+        "\npredicted schedule in measured top-2: {rank_top2}/{rank_total} ({:.0}%)",
+        top2_rate * 100.0
+    );
     let doc = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".to_string())),
         ("threads", Json::Num(threads as f64)),
         ("unit", Json::Str("ns per op (median); allocation calls/bytes per op".to_string())),
+        ("predicted_top2_rate", Json::Num(top2_rate)),
         ("spmm", Json::Arr(records)),
     ]);
     match std::fs::write(&out_path, doc.to_string()) {

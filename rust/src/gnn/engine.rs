@@ -26,7 +26,7 @@
 
 use crate::predictor::cache::DecisionCache;
 use crate::sparse::shared::WeakMatrix;
-use crate::sparse::{Coo, Format, SharedMatrix, SparseMatrix};
+use crate::sparse::{Coo, Format, Schedule, SharedMatrix, SparseMatrix};
 use crate::tensor::Matrix;
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
@@ -81,6 +81,25 @@ pub trait FormatPolicy {
         sw: &mut Stopwatch,
     ) -> (Format, f64) {
         (self.decide_for_slot(slot, coo, d, sw), 1.0)
+    }
+
+    /// Full execution-plan decision: storage format **plus** kernel
+    /// schedule (tile width / split rule / thread cap — see
+    /// `sparse::schedule`), with the calibrated confidence margin of the
+    /// combined plan. The default keeps format-only policies working
+    /// unchanged: they run under [`Schedule::effective`], i.e. the tuned
+    /// default kernels (or the `GNN_SPMM_SCHEDULE` process override).
+    /// Schedule-aware policies — the measured autotuner, the multi-output
+    /// GBDT predictor — override this.
+    fn decide_plan_for_slot(
+        &mut self,
+        slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, Schedule, f64) {
+        let (fmt, margin) = self.decide_for_slot_with_confidence(slot, coo, d, sw);
+        (fmt, Schedule::effective(), margin)
     }
 
     /// Human-readable name for reports.
@@ -159,6 +178,10 @@ pub struct Slot {
     /// through the decision path again.
     source: Option<WeakMatrix>,
     pub decided: Option<Format>,
+    /// Kernel schedule of the current decision — what `spmm`/`spmm_t` hand
+    /// the scheduled kernels. Meaningful only while `decided` is `Some`;
+    /// re-decisions overwrite it together with the format.
+    pub schedule: Schedule,
     pub density_at_decision: f64,
     /// Shape observed when the current decision was made. A refresh that
     /// changes the operand's shape (mini-batch H1 slots resize per shard)
@@ -175,11 +198,13 @@ pub struct Slot {
     coo_view: Option<Coo>,
 }
 
-/// A recorded decision event (slot, chosen format, density at decision).
+/// A recorded decision event (slot, chosen plan, density at decision).
 #[derive(Clone, Debug)]
 pub struct Decision {
     pub slot: String,
     pub format: Format,
+    /// Kernel schedule chosen alongside the format.
+    pub schedule: Schedule,
     pub density: f64,
     /// Answered by the decision cache (no COO view, no policy call).
     pub cached: bool,
@@ -290,6 +315,7 @@ impl<'p> AdjEngine<'p> {
             source: Some(m.downgrade()),
             matrix: m,
             decided: None,
+            schedule: Schedule::effective(),
             density_at_decision: 0.0,
             shape_at_decision: (0, 0),
             pool: Vec::new(),
@@ -450,12 +476,12 @@ impl<'p> AdjEngine<'p> {
             // inference) entirely — the mini-batch amortization.
             let (rows, cols) = shape;
             let nnz = self.slots[slot].matrix.nnz();
-            let cached_fmt = self
+            let cached_plan = self
                 .decision_cache
                 .as_ref()
-                .and_then(|c| c.get().lookup(&name, rows, cols, nnz, density, d));
-            let (fmt, cached) = match cached_fmt {
-                Some(fmt) => (fmt, true),
+                .and_then(|c| c.get().lookup_plan(&name, rows, cols, nnz, density, d));
+            let (fmt, sched, cached) = match cached_plan {
+                Some((fmt, sched)) => (fmt, sched, true),
                 None => {
                     // The policy inspects a COO view (cost charged by the
                     // policy); the view is cached across re-decisions until
@@ -466,26 +492,28 @@ impl<'p> AdjEngine<'p> {
                         self.slots[slot].coo_view = Some(coo);
                     }
                     let coo = self.slots[slot].coo_view.take().unwrap();
-                    let (fmt, margin) =
-                        self.policy.decide_for_slot_with_confidence(&name, &coo, d, &mut self.sw);
+                    let (fmt, sched, margin) =
+                        self.policy.decide_plan_for_slot(&name, &coo, d, &mut self.sw);
                     self.slots[slot].coo_view = Some(coo);
                     if let Some(CacheRef::Owned(c)) = self.decision_cache.as_mut() {
                         // Low-margin predictions are *used* but not pinned:
-                        // the cache declines them (see `store_with_margin`)
-                        // so the hysteresis dead-band can't freeze a coin
-                        // flip into a standing answer. A `Shared` cache is
-                        // read-only by construction — skip the store.
-                        c.store_with_margin(&name, rows, cols, nnz, density, d, fmt, margin);
+                        // the cache declines them (see `store_plan`) so the
+                        // hysteresis dead-band can't freeze a coin flip into
+                        // a standing answer. A `Shared` cache is read-only
+                        // by construction — skip the store.
+                        c.store_plan(&name, rows, cols, nnz, density, d, fmt, sched, margin);
                     }
-                    (fmt, false)
+                    (fmt, sched, false)
                 }
             };
             self.slots[slot].decided = Some(fmt);
+            self.slots[slot].schedule = sched;
             self.slots[slot].density_at_decision = density;
             self.slots[slot].shape_at_decision = shape;
             self.decisions.push(Decision {
                 slot: name,
                 format: fmt,
+                schedule: sched,
                 density,
                 cached,
             });
@@ -535,8 +563,9 @@ impl<'p> AdjEngine<'p> {
         self.ensure(slot, x.cols);
         let rows = self.slots[slot].matrix.rows();
         let mut out = Matrix::from_buffer(rows, x.cols, self.take_buf(slot, rows * x.cols));
+        let sched = self.slots[slot].schedule;
         let m = &self.slots[slot].matrix;
-        self.sw.phase("spmm", || m.spmm_into(x, &mut out));
+        self.sw.phase("spmm", || m.spmm_into_with(x, &mut out, sched));
         out
     }
 
@@ -547,14 +576,21 @@ impl<'p> AdjEngine<'p> {
         self.ensure(slot, x.cols);
         let cols = self.slots[slot].matrix.cols();
         let mut out = Matrix::from_buffer(cols, x.cols, self.take_buf(slot, cols * x.cols));
+        let sched = self.slots[slot].schedule;
         let m = &self.slots[slot].matrix;
-        self.sw.phase("spmm_t", || m.spmm_t_into(x, &mut out));
+        self.sw.phase("spmm_t", || m.spmm_t_into_with(x, &mut out, sched));
         out
     }
 
     /// The format a slot currently uses (after any decision).
     pub fn slot_format(&self, slot: usize) -> Option<Format> {
         self.slots[slot].decided
+    }
+
+    /// The kernel schedule a slot's multiplies run under (after any
+    /// decision; the process default before one is made).
+    pub fn slot_schedule(&self, slot: usize) -> Schedule {
+        self.slots[slot].schedule
     }
 
     /// Total engine-attributed time (spmm + conversions + policy overhead).
@@ -1036,6 +1072,71 @@ mod tests {
         assert_eq!(cache.hits(), 3);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.low_margin_bypasses(), 0);
+    }
+
+    /// A schedule-aware policy for the plan-propagation test: always CSR,
+    /// but under a non-default kernel schedule.
+    struct FixedPlanPolicy(Schedule);
+
+    impl FormatPolicy for FixedPlanPolicy {
+        fn decide(&mut self, _coo: &Coo, _d: usize, _sw: &mut Stopwatch) -> Format {
+            Format::Csr
+        }
+
+        fn decide_plan_for_slot(
+            &mut self,
+            _slot: &str,
+            _coo: &Coo,
+            _d: usize,
+            _sw: &mut Stopwatch,
+        ) -> (Format, Schedule, f64) {
+            (Format::Csr, self.0, 1.0)
+        }
+
+        fn policy_name(&self) -> String {
+            format!("fixed-plan[{}]", self.0.label())
+        }
+    }
+
+    /// The policy's schedule propagates end to end: into the slot (so the
+    /// kernels run under it), into the decision log, into the cache — and a
+    /// cache hit on a structurally similar rebind hands back the **complete
+    /// plan**, not just the format.
+    #[test]
+    fn schedule_flows_through_decisions_and_cache() {
+        use crate::sparse::{Split, ThreadCap, Tile};
+        let plan = Schedule {
+            tile: Tile::T4,
+            split: Split::EvenUnits,
+            threads: ThreadCap::Cap(1),
+        };
+        let mut rng = Rng::new(29);
+        let x = Matrix::rand(64, 4, &mut rng);
+        let coo = random_coo(&mut rng, 64, 0.15);
+        let want = coo.to_dense().matmul(&x);
+        let mut policy = FixedPlanPolicy(plan);
+        let mut engine = AdjEngine::new(&mut policy);
+        engine.enable_decision_cache();
+        let slot = engine.add_slot("A", coo);
+        let y = engine.spmm(slot, &x);
+        assert!(y.max_abs_diff(&want) < 1e-3, "scheduled kernel must stay correct");
+        assert_eq!(engine.slot_schedule(slot), plan);
+        assert_eq!(engine.decisions[0].schedule, plan);
+        assert!(!engine.decisions[0].cached);
+        // Structurally similar rebind: the cache answers with the full plan.
+        engine.set_slot_matrix(slot, SparseMatrix::Coo(random_coo(&mut rng, 64, 0.15)));
+        let _ = engine.spmm(slot, &x);
+        assert_eq!(engine.decision_cache().unwrap().hits(), 1);
+        assert!(engine.decisions[1].cached);
+        assert_eq!(engine.decisions[1].schedule, plan);
+        assert_eq!(engine.slot_schedule(slot), plan);
+        // Format-only policies keep the process-default schedule.
+        let mut plain = StaticPolicy(Format::Csr);
+        let mut engine2 = AdjEngine::new(&mut plain);
+        let mut rng2 = Rng::new(30);
+        let slot2 = engine2.add_slot("B", random_coo(&mut rng2, 32, 0.1));
+        let _ = engine2.spmm(slot2, &Matrix::rand(32, 4, &mut rng2));
+        assert_eq!(engine2.slot_schedule(slot2), Schedule::effective());
     }
 
     #[test]

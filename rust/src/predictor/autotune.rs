@@ -1,0 +1,188 @@
+//! Measured schedule autotuning: the decide-by-timing fallback for the
+//! schedule dimension of the execution plan (DESIGN.md §Schedule-Prediction).
+//!
+//! Mirrors the format oracle's shape (`labeler::profile_formats` →
+//! `label_for`): convert the operand once into its decided format, then time
+//! every [`Schedule::CANDIDATES`] entry on a representative dense operand
+//! and keep the fastest. The search runs **once per slot signature** — the
+//! same coarse structural key the decision cache uses — so a mini-batch
+//! shard stream pays the 4-candidate sweep once, not per shard, exactly the
+//! amortization argument ParamSpMM makes for adaptive kernel selection.
+
+use super::cache::signature;
+use crate::gnn::engine::FormatPolicy;
+use crate::sparse::{Coo, Format, Schedule, SparseMatrix};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::timer::{time_n, Stopwatch};
+use std::collections::HashMap;
+
+/// One schedule candidate's measured profile on one (matrix, format, d).
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleProfile {
+    pub schedule: Schedule,
+    /// Median seconds per SpMM under this schedule.
+    pub secs: f64,
+}
+
+/// Time every schedule candidate's SpMM for `coo` held in `fmt` against a
+/// dense operand of width `d` (`reps` measured repetitions, median
+/// reported). Falls back to CSR when `fmt` cannot hold the matrix (the
+/// DIA-budget rule the engine itself applies).
+pub fn profile_schedules(coo: &Coo, fmt: Format, d: usize, reps: usize) -> Vec<ScheduleProfile> {
+    let mut rng = Rng::new(0x5CED ^ coo.nnz() as u64);
+    let x = Matrix::rand(coo.cols, d.max(1), &mut rng);
+    let base = SparseMatrix::Coo(coo.clone());
+    let m = base
+        .convert(fmt)
+        .unwrap_or_else(|_| base.convert(Format::Csr).expect("CSR conversion cannot fail"));
+    let mut out = Matrix::zeros(coo.rows, d.max(1));
+    Schedule::CANDIDATES
+        .iter()
+        .map(|&schedule| {
+            let samples = time_n(1, reps.max(1), || m.spmm_into_with(&x, &mut out, schedule));
+            ScheduleProfile { schedule, secs: stats::median(&samples) }
+        })
+        .collect()
+}
+
+/// The fastest measured candidate ([`Schedule::default`] on an empty
+/// profile set).
+pub fn best_schedule(profiles: &[ScheduleProfile]) -> Schedule {
+    profiles
+        .iter()
+        .min_by(|a, b| a.secs.total_cmp(&b.secs))
+        .map(|p| p.schedule)
+        .unwrap_or_default()
+}
+
+/// [`FormatPolicy`] adapter that adds a measured schedule to any inner
+/// format policy's decision. The candidate sweep is charged to the
+/// `schedule_autotune` phase and memoized per slot signature; repeat
+/// decisions for structurally similar operands reuse the stored winner
+/// without re-timing.
+pub struct AutotunePolicy<P: FormatPolicy> {
+    pub inner: P,
+    /// Timed repetitions per candidate.
+    pub reps: usize,
+    /// Slot-signature → measured winner.
+    memo: HashMap<u64, Schedule>,
+}
+
+impl<P: FormatPolicy> AutotunePolicy<P> {
+    pub fn new(inner: P) -> AutotunePolicy<P> {
+        AutotunePolicy { inner, reps: 3, memo: HashMap::new() }
+    }
+
+    /// Distinct slot signatures autotuned so far.
+    pub fn tuned_signatures(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+impl<P: FormatPolicy> FormatPolicy for AutotunePolicy<P> {
+    fn decide(&mut self, coo: &Coo, d: usize, sw: &mut Stopwatch) -> Format {
+        self.inner.decide(coo, d, sw)
+    }
+
+    fn decide_for_slot(
+        &mut self,
+        slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> Format {
+        self.inner.decide_for_slot(slot, coo, d, sw)
+    }
+
+    fn decide_for_slot_with_confidence(
+        &mut self,
+        slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, f64) {
+        self.inner.decide_for_slot_with_confidence(slot, coo, d, sw)
+    }
+
+    fn decide_plan_for_slot(
+        &mut self,
+        slot: &str,
+        coo: &Coo,
+        d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, Schedule, f64) {
+        let (fmt, margin) = self.inner.decide_for_slot_with_confidence(slot, coo, d, sw);
+        let sig = signature(slot, coo.rows, coo.cols, coo.nnz(), coo.density(), d);
+        let reps = self.reps;
+        let sched = *self.memo.entry(sig).or_insert_with(|| {
+            sw.phase("schedule_autotune", || best_schedule(&profile_schedules(coo, fmt, d, reps)))
+        });
+        (fmt, sched, margin)
+    }
+
+    fn policy_name(&self) -> String {
+        format!("autotune({})", self.inner.policy_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::engine::StaticPolicy;
+    use crate::graph::{gen_matrix, MatrixPattern};
+
+    #[test]
+    fn profiles_cover_every_candidate_and_pick_a_member() {
+        let mut rng = Rng::new(11);
+        let m = gen_matrix(&mut rng, 128, 0.05, MatrixPattern::PowerLaw);
+        let profiles = profile_schedules(&m, Format::Csr, 8, 1);
+        assert_eq!(profiles.len(), Schedule::CANDIDATES.len());
+        assert!(profiles.iter().all(|p| p.secs.is_finite() && p.secs >= 0.0));
+        let best = best_schedule(&profiles);
+        assert!(Schedule::CANDIDATES.contains(&best));
+    }
+
+    #[test]
+    fn empty_profiles_fall_back_to_default() {
+        assert_eq!(best_schedule(&[]), Schedule::default());
+    }
+
+    #[test]
+    fn infeasible_format_profiles_via_csr_fallback() {
+        // Anti-diagonal blows the DIA budget; the profiler must fall back
+        // instead of panicking (same rule as the engine's convert path).
+        let n = 9000;
+        let triples: Vec<_> = (0..n).map(|i| (i as u32, (n - 1 - i) as u32, 1.0f32)).collect();
+        let coo = Coo::from_triples(n, n, triples);
+        let profiles = profile_schedules(&coo, Format::Dia, 4, 1);
+        assert_eq!(profiles.len(), Schedule::CANDIDATES.len());
+    }
+
+    #[test]
+    fn autotune_memoizes_per_slot_signature() {
+        let mut rng = Rng::new(12);
+        let mut policy = AutotunePolicy::new(StaticPolicy(Format::Csr));
+        policy.reps = 1;
+        let mut sw = Stopwatch::new();
+        let a = gen_matrix(&mut rng, 96, 0.05, MatrixPattern::Uniform);
+        let (fmt, sched, margin) = policy.decide_plan_for_slot("A", &a, 8, &mut sw);
+        assert_eq!(fmt, Format::Csr);
+        assert!(Schedule::CANDIDATES.contains(&sched));
+        assert_eq!(margin, 1.0);
+        assert_eq!(policy.tuned_signatures(), 1);
+        let sweeps = sw.report().iter().find(|r| r.0 == "schedule_autotune").map(|r| r.2);
+        assert_eq!(sweeps, Some(1));
+        // Structurally similar operand, same slot: memo answers, no re-time.
+        let b = gen_matrix(&mut rng, 96, 0.05, MatrixPattern::Uniform);
+        let (_, sched2, _) = policy.decide_plan_for_slot("A", &b, 8, &mut sw);
+        assert_eq!(sched2, sched);
+        assert_eq!(policy.tuned_signatures(), 1);
+        let sweeps = sw.report().iter().find(|r| r.0 == "schedule_autotune").map(|r| r.2);
+        assert_eq!(sweeps, Some(1), "memoized decision must not re-profile");
+        // A different slot name is a different signature: tuned again.
+        let _ = policy.decide_plan_for_slot("B", &a, 8, &mut sw);
+        assert_eq!(policy.tuned_signatures(), 2);
+    }
+}

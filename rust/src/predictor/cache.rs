@@ -33,7 +33,7 @@
 //!   dead-band keep serving the flip for the rest of the run. Bypassed
 //!   decisions are still *used* once — they are just re-asked next time.
 
-use crate::sparse::Format;
+use crate::sparse::{Format, Schedule, Split, ThreadCap, Tile};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::Path;
@@ -55,7 +55,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// slot name): `FormatPolicy::decide_for_slot` may answer differently per
 /// slot (e.g. [`crate::gnn::engine::SlotTargetedPolicy`]), so a decision
 /// cached for one slot must never be served to another.
-fn signature(slot: &str, rows: usize, cols: usize, nnz: usize, density: f64, d: usize) -> u64 {
+pub(crate) fn signature(
+    slot: &str,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    density: f64,
+    d: usize,
+) -> u64 {
     let log2 = |v: usize| u64::from(usize::BITS - v.max(1).leading_zeros());
     // Half-decade buckets, offset to stay positive in the packing and
     // clamped so even denormal densities can't bleed into other fields.
@@ -79,6 +86,11 @@ fn signature(slot: &str, rows: usize, cols: usize, nnz: usize, density: f64, d: 
 #[derive(Clone, Copy, Debug)]
 struct CacheEntry {
     format: Format,
+    /// Kernel schedule pinned alongside the format (tile/split/threads) —
+    /// a cache hit hands workers a complete execution plan, not just a
+    /// storage decision. Pre-schedule cache files load with
+    /// [`Schedule::default`] (the historical fixed behavior).
+    schedule: Schedule,
     /// Density anchor for the hysteresis dead-band.
     density: f64,
 }
@@ -173,6 +185,9 @@ impl DecisionCache {
     /// `d` is the dense operand width of the upcoming multiply (part of
     /// the signature: the policy sees it too). Takes `&self`: concurrent
     /// readers share one cache lock-free (see the type docs).
+    ///
+    /// Format-only view of [`DecisionCache::lookup_plan`] (the schedule is
+    /// dropped); hit/miss accounting happens once, in the plan lookup.
     pub fn lookup(
         &self,
         slot: &str,
@@ -182,11 +197,26 @@ impl DecisionCache {
         density: f64,
         d: usize,
     ) -> Option<Format> {
+        self.lookup_plan(slot, rows, cols, nnz, density, d).map(|(fmt, _)| fmt)
+    }
+
+    /// Answer the complete execution plan — storage format **and** kernel
+    /// schedule — from the cache, or record a miss. Entries loaded from
+    /// pre-schedule cache files carry [`Schedule::default`].
+    pub fn lookup_plan(
+        &self,
+        slot: &str,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        density: f64,
+        d: usize,
+    ) -> Option<(Format, Schedule)> {
         let sig = signature(slot, rows, cols, nnz, density, d);
         match self.entries.get(&sig) {
             Some(e) if rel_dev(density, e.density) <= self.rel_drift => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.format)
+                Some((e.format, e.schedule))
             }
             _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -243,7 +273,8 @@ impl DecisionCache {
     /// confidence margin. Margins below [`DecisionCache::min_margin`] are
     /// **not** stored — a near-boundary prediction must not be pinned by
     /// the hysteresis dead-band; the next structurally similar lookup
-    /// re-consults the policy instead.
+    /// re-consults the policy instead. Format-only shorthand: the entry is
+    /// pinned with the default schedule.
     #[allow(clippy::too_many_arguments)]
     pub fn store_with_margin(
         &mut self,
@@ -256,12 +287,32 @@ impl DecisionCache {
         format: Format,
         margin: f64,
     ) {
+        self.store_plan(slot, rows, cols, nnz, density, d, format, Schedule::default(), margin);
+    }
+
+    /// Record a complete (format, schedule) plan with its confidence
+    /// margin. The margin gate covers the whole plan: a near-boundary
+    /// prediction of either output must not be pinned by the hysteresis
+    /// dead-band.
+    #[allow(clippy::too_many_arguments)]
+    pub fn store_plan(
+        &mut self,
+        slot: &str,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        density: f64,
+        d: usize,
+        format: Format,
+        schedule: Schedule,
+        margin: f64,
+    ) {
         if margin < self.min_margin {
             self.low_margin_bypasses.fetch_add(1, Ordering::Relaxed);
             return;
         }
         let sig = signature(slot, rows, cols, nnz, density, d);
-        self.entries.insert(sig, CacheEntry { format, density });
+        self.entries.insert(sig, CacheEntry { format, schedule, density });
     }
 
     /// Distinct signatures currently cached.
@@ -297,6 +348,9 @@ impl DecisionCache {
                             Json::obj(vec![
                                 ("sig", Json::Str(format!("{sig:016x}"))),
                                 ("format", Json::Str(e.format.name().to_string())),
+                                ("tile", Json::Num(e.schedule.tile.lanes() as f64)),
+                                ("split", Json::Str(e.schedule.split.name().to_string())),
+                                ("threads", Json::Num(e.schedule.threads.encode() as f64)),
                                 ("density", Json::Num(e.density)),
                             ])
                         })
@@ -327,7 +381,36 @@ impl DecisionCache {
             if !density.is_finite() || !(0.0..=1.0).contains(&density) {
                 anyhow::bail!("bad cached density {density}");
             }
-            cache.entries.insert(sig, CacheEntry { format, density });
+            // Schedule fields are optional: pre-schedule cache files carry
+            // format-only entries, which load with the default schedule (the
+            // behavior those runs actually had). Present-but-invalid fields
+            // are corruption and reject like any other bad value.
+            let schedule = Schedule {
+                tile: match e.get("tile") {
+                    None => Schedule::default().tile,
+                    Some(v) => v
+                        .as_f64()
+                        .filter(|l| l.fract() == 0.0 && *l >= 0.0)
+                        .and_then(|l| Tile::from_lanes(l as usize))
+                        .ok_or_else(|| anyhow::anyhow!("bad cached tile width"))?,
+                },
+                split: match e.get("split") {
+                    None => Schedule::default().split,
+                    Some(v) => v
+                        .as_str()
+                        .and_then(Split::from_name)
+                        .ok_or_else(|| anyhow::anyhow!("bad cached split rule"))?,
+                },
+                threads: match e.get("threads") {
+                    None => Schedule::default().threads,
+                    Some(v) => v
+                        .as_f64()
+                        .filter(|t| t.fract() == 0.0 && *t >= 0.0 && *t < 4096.0)
+                        .map(|t| ThreadCap::decode(t as usize))
+                        .ok_or_else(|| anyhow::anyhow!("bad cached thread cap"))?,
+                },
+            };
+            cache.entries.insert(sig, CacheEntry { format, schedule, density });
         }
         Ok(cache)
     }
@@ -523,6 +606,79 @@ mod tests {
         // 5000 share the log₂ bucket, densities share the half-decade) but
         // 44% density drift > the 40% band → still re-decides after load.
         assert_eq!(r.lookup("gcn.A.l1", 1000, 1000, 7200, 0.0072, 16), None);
+    }
+
+    /// The full (format, schedule) plan survives the JSON round trip:
+    /// non-default tiles, splits and caps come back exactly, and the
+    /// format-only `lookup` view stays consistent with `lookup_plan`.
+    #[test]
+    fn schedule_plan_round_trips_through_json() {
+        let mut c = DecisionCache::new(0.5);
+        let fast = Schedule {
+            tile: Tile::T4,
+            split: Split::EvenUnits,
+            threads: ThreadCap::Cap(1),
+        };
+        let wide = Schedule {
+            tile: Tile::T32,
+            split: Split::NnzBalanced,
+            threads: ThreadCap::Auto,
+        };
+        c.store_plan("A", 100, 100, 500, 0.05, 16, Format::Csr, fast, 1.0);
+        c.store_plan("B", 4000, 4000, 80000, 0.005, 64, Format::Csc, wide, 1.0);
+        c.store("C", 1000, 1000, 5000, 0.005, 16, Format::Coo); // default plan
+
+        let j = crate::util::json::Json::parse(&c.to_json().to_string()).unwrap();
+        let r = DecisionCache::from_json(&j).unwrap();
+        assert_eq!(r.lookup_plan("A", 100, 100, 500, 0.05, 16), Some((Format::Csr, fast)));
+        assert_eq!(r.lookup_plan("B", 4000, 4000, 80000, 0.005, 64), Some((Format::Csc, wide)));
+        assert_eq!(
+            r.lookup_plan("C", 1000, 1000, 5000, 0.005, 16),
+            Some((Format::Coo, Schedule::default()))
+        );
+        assert_eq!(r.lookup("A", 100, 100, 500, 0.05, 16), Some(Format::Csr));
+        // The emitted JSON names the schedule fields — what serving's smoke
+        // test greps for after a warm start.
+        let text = c.to_json().to_string();
+        for field in ["\"tile\"", "\"split\"", "\"threads\""] {
+            assert!(text.contains(field), "cache JSON must carry {field}");
+        }
+    }
+
+    /// Cache-compat: a **pre-schedule** cache file (entries carry only
+    /// `sig`/`format`/`density`) must load cleanly — never error — with
+    /// every entry getting the default schedule, which is exactly the fixed
+    /// kernel behavior those runs had.
+    #[test]
+    fn pre_schedule_cache_files_load_with_default_schedule() {
+        // Verbatim layout of a v7-era save (before schedule fields existed).
+        let fixture = "{\"rel_drift\": 0.5, \"min_margin\": 0.1, \"entries\": \
+             [{\"sig\": \"121e0e000623f5fa\", \"format\": \"csr\", \"density\": 0.005}]}";
+        let r = DecisionCache::from_json(&Json::parse(fixture).unwrap())
+            .expect("pre-schedule cache must load");
+        assert_eq!(r.len(), 1);
+        // And through the never-fails warm-start boundary too.
+        let dir = std::env::temp_dir().join("gnn_spmm_cache_prescem_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old_format.json");
+        std::fs::write(&path, fixture).unwrap();
+        let warm = DecisionCache::load_or_cold(&path).expect("old format warm-starts, not cold");
+        let plan = warm.entries.values().next().unwrap();
+        assert_eq!(plan.schedule, Schedule::default());
+        let _ = std::fs::remove_file(&path);
+
+        // Present-but-corrupt schedule fields are rejected (→ cold start at
+        // the load_or_cold boundary), not silently defaulted.
+        for bad in [
+            "{\"rel_drift\": 0.5, \"min_margin\": 0.1, \"entries\": \
+             [{\"sig\": \"aa\", \"format\": \"csr\", \"tile\": 5, \"density\": 0.005}]}",
+            "{\"rel_drift\": 0.5, \"min_margin\": 0.1, \"entries\": \
+             [{\"sig\": \"aa\", \"format\": \"csr\", \"split\": \"fancy\", \"density\": 0.005}]}",
+            "{\"rel_drift\": 0.5, \"min_margin\": 0.1, \"entries\": \
+             [{\"sig\": \"aa\", \"format\": \"csr\", \"threads\": -1, \"density\": 0.005}]}",
+        ] {
+            assert!(DecisionCache::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -12,15 +12,20 @@
 //! * [`cache`] — the signature-keyed decision cache that amortizes feature
 //!   extraction over streams of structurally similar inputs (the sharded
 //!   mini-batch path; see DESIGN.md §Minibatch).
+//! * [`autotune`] — the measured schedule fallback: time the
+//!   [`crate::sparse::Schedule::CANDIDATES`] once per slot signature and
+//!   pin the winner (DESIGN.md §Schedule-Prediction).
 
 pub mod labeler;
 pub mod training;
 pub mod policy;
 pub mod spmm_predict;
 pub mod cache;
+pub mod autotune;
 
+pub use autotune::{best_schedule, profile_schedules, AutotunePolicy, ScheduleProfile};
 pub use cache::{CacheStats, DecisionCache};
 pub use labeler::{label_for, profile_formats, FormatProfile};
 pub use policy::{OraclePolicy, PredictedPolicy};
 pub use spmm_predict::spmm_predict;
-pub use training::{train_predictor, TrainedPredictor, TrainingCorpus};
+pub use training::{train_predictor, train_schedule_heads, ScheduleHeads, TrainedPredictor, TrainingCorpus};

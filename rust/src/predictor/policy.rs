@@ -8,7 +8,7 @@ use crate::features::{extract_features, Normalizer};
 use crate::gnn::engine::FormatPolicy;
 use crate::ml::cnn::{thumbnail, Cnn};
 use crate::ml::Classifier;
-use crate::sparse::{Coo, Format};
+use crate::sparse::{Coo, Format, Schedule};
 use crate::util::timer::Stopwatch;
 
 /// Below this nnz the decision can never pay for its own feature
@@ -61,6 +61,33 @@ impl FormatPolicy for PredictedPolicy {
         sw: &mut Stopwatch,
     ) -> (Format, f64) {
         self.decide_inner(coo, sw)
+    }
+
+    /// Full-plan prediction: one feature pass feeds both the format model
+    /// and the multi-output schedule heads ([`TrainedPredictor::
+    /// predict_plan_with_margin`]). A predictor without trained heads — or
+    /// a matrix under the amortization floor — runs under the process-
+    /// default schedule, exactly the format-only behavior.
+    fn decide_plan_for_slot(
+        &mut self,
+        _slot: &str,
+        coo: &Coo,
+        _d: usize,
+        sw: &mut Stopwatch,
+    ) -> (Format, Schedule, f64) {
+        if coo.nnz() < MIN_NNZ_TO_PREDICT {
+            return (Format::Coo, Schedule::effective(), 1.0);
+        }
+        let raw = sw.phase("feature_extract", || crate::features::extract_features(coo));
+        sw.phase("predict", || {
+            let x = self.predictor.norm.transform(&raw);
+            let (label, fmt_margin) = self.predictor.model.predict_with_margin(&x);
+            let (sched, sched_margin) = match &self.predictor.schedule_heads {
+                Some(heads) => heads.predict_with_margin(&x),
+                None => (Schedule::effective(), 1.0),
+            };
+            (Format::from_label(label), sched, fmt_margin.min(sched_margin))
+        })
     }
 
     fn policy_name(&self) -> String {
@@ -174,6 +201,34 @@ mod tests {
         let _ = policy.decide(&m, 8, &mut sw);
         assert!(sw.total("feature_extract") > 0.0);
         assert!(sw.total("predict") > 0.0);
+    }
+
+    #[test]
+    fn plan_prediction_uses_heads_and_charges_one_feature_pass() {
+        use crate::gnn::engine::FormatPolicy;
+        use crate::sparse::{Split, ThreadCap, Tile};
+        let corpus = TrainingCorpus::build(15, 48, 96, 8, 1, 0xAD);
+        let mut pred = crate::predictor::training::train_predictor(&corpus, 1.0, 1);
+        crate::predictor::training::train_schedule_heads(&corpus, &mut pred);
+        let mut policy = PredictedPolicy::new(pred);
+        let mut rng = Rng::new(4);
+        let m = gen_matrix(&mut rng, 512, 0.05, MatrixPattern::PowerLaw);
+        assert!(m.nnz() >= MIN_NNZ_TO_PREDICT);
+        let mut sw = Stopwatch::new();
+        let (fmt, sched, margin) = policy.decide_plan_for_slot("A", &m, 8, &mut sw);
+        assert!(crate::sparse::ALL_FORMATS.contains(&fmt));
+        assert!(Tile::ALL.contains(&sched.tile));
+        assert!(Split::ALL.contains(&sched.split));
+        assert!(matches!(sched.threads, ThreadCap::Auto | ThreadCap::Cap(1)));
+        assert!((0.0..=1.0).contains(&margin));
+        let extracts = sw.report().iter().find(|r| r.0 == "feature_extract").map(|r| r.2);
+        assert_eq!(extracts, Some(1), "format + schedule share one feature pass");
+        // Tiny matrices skip the heads too and stay fully confident.
+        let tiny = gen_matrix(&mut rng, 48, 0.05, MatrixPattern::Uniform);
+        let (fmt, sched, margin) = policy.decide_plan_for_slot("A", &tiny, 8, &mut sw);
+        assert_eq!(fmt, Format::Coo);
+        assert_eq!(sched, crate::sparse::Schedule::effective());
+        assert_eq!(margin, 1.0);
     }
 
     #[test]

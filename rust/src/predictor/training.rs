@@ -3,13 +3,14 @@
 //! min–max normalizer → fitted GBDT. The corpus profiles are computed once
 //! and can be re-labeled for any `w` (Figs. 6/10) without re-profiling.
 
+use super::autotune::{best_schedule, profile_schedules, ScheduleProfile};
 use super::labeler::{label_for, profile_formats, FormatProfile};
 use crate::features::{extract_features, Normalizer, N_FEATURES};
 use crate::graph::generators::training_corpus;
 use crate::ml::gbdt::{Gbdt, GbdtParams};
 use crate::ml::metrics::{accuracy, kfold};
 use crate::ml::{Classifier, TabularData};
-use crate::sparse::{Coo, Format, ALL_FORMATS};
+use crate::sparse::{Coo, Format, Schedule, Split, ThreadCap, Tile, ALL_FORMATS};
 use crate::util::json::Json;
 use crate::util::parallel::parallel_map;
 use crate::util::rng::Rng;
@@ -20,6 +21,10 @@ pub struct TrainingCorpus {
     pub matrices: Vec<Coo>,
     pub raw_features: Vec<[f64; N_FEATURES]>,
     pub profiles: Vec<Vec<FormatProfile>>,
+    /// Per-matrix timings of every [`Schedule::CANDIDATES`] entry, measured
+    /// under the matrix's Eq-1 speed-label format — the label source for the
+    /// multi-output schedule heads (DESIGN.md §Schedule-Prediction).
+    pub schedule_profiles: Vec<Vec<ScheduleProfile>>,
     /// Density thumbnails for the CNN baseline.
     pub thumbnails: Vec<Vec<f32>>,
 }
@@ -38,9 +43,17 @@ impl TrainingCorpus {
             .iter()
             .map(|m| profile_formats(m, d, reps))
             .collect();
+        // Schedule candidates are timed under each matrix's speed-optimal
+        // format (w = 1.0): that is the format the runtime will actually be
+        // executing when the schedule decision matters.
+        let schedule_profiles: Vec<Vec<ScheduleProfile>> = matrices
+            .iter()
+            .zip(&profiles)
+            .map(|(m, p)| profile_schedules(m, label_for(p, 1.0), d, reps))
+            .collect();
         let raw_features = parallel_map(matrices.len(), |i| extract_features(&matrices[i]));
         let thumbnails = parallel_map(matrices.len(), |i| crate::ml::cnn::thumbnail(&matrices[i]));
-        TrainingCorpus { matrices, raw_features, profiles, thumbnails }
+        TrainingCorpus { matrices, raw_features, profiles, schedule_profiles, thumbnails }
     }
 
     /// Eq-1 labels for a given `w`.
@@ -67,15 +80,75 @@ impl TrainingCorpus {
             .collect();
         (TabularData::new(x, self.labels(w), ALL_FORMATS.len()), norm)
     }
+
+    /// Measured-fastest schedule per matrix (the multi-output label source).
+    pub fn schedule_labels(&self) -> Vec<Schedule> {
+        self.schedule_profiles.iter().map(|p| best_schedule(p)).collect()
+    }
 }
 
-/// A deployable predictor: fitted model + feature normalizer.
+/// Multi-output schedule prediction: one small GBDT ensemble per schedule
+/// knob, all reading the same Table-2 feature vector the format model uses
+/// (no extra extraction pass at decision time). Output class spaces are
+/// [`Tile::ALL`] (4), [`Split::ALL`] (2) and the binary thread-cap class
+/// (auto vs capped-serial).
+pub struct ScheduleHeads {
+    pub tile: Gbdt,
+    pub split: Gbdt,
+    pub threads: Gbdt,
+}
+
+/// Small per-head ensemble: three heads ride along with the format model,
+/// so each stays a fraction of its size (the outputs are 2–4-way splits on
+/// coarse structure, not a 7-way format call).
+fn head_params() -> GbdtParams {
+    GbdtParams { n_rounds: 30, max_depth: 3, ..GbdtParams::default() }
+}
+
+impl ScheduleHeads {
+    /// Predict a schedule from a **normalized** feature vector, with the
+    /// weakest head's confidence margin (the plan is only as trustworthy as
+    /// its least certain output).
+    pub fn predict_with_margin(&self, x: &[f64]) -> (Schedule, f64) {
+        let (tile_c, tile_m) = self.tile.predict_with_margin(x);
+        let (split_c, split_m) = self.split.predict_with_margin(x);
+        let (cap_c, cap_m) = self.threads.predict_with_margin(x);
+        let sched = Schedule {
+            tile: Tile::from_class(tile_c).unwrap_or(Schedule::default().tile),
+            split: Split::from_class(split_c).unwrap_or(Schedule::default().split),
+            threads: ThreadCap::from_class(cap_c).unwrap_or(Schedule::default().threads),
+        };
+        (sched, tile_m.min(split_m).min(cap_m))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tile", self.tile.to_json()),
+            ("split", self.split.to_json()),
+            ("threads", self.threads.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ScheduleHeads> {
+        Ok(ScheduleHeads {
+            tile: Gbdt::from_json(j.req("tile")?)?,
+            split: Gbdt::from_json(j.req("split")?)?,
+            threads: Gbdt::from_json(j.req("threads")?)?,
+        })
+    }
+}
+
+/// A deployable predictor: fitted model + feature normalizer, plus the
+/// optional multi-output schedule heads (absent in format-only predictors
+/// and in models persisted before the schedule-space PR).
 pub struct TrainedPredictor {
     pub model: Gbdt,
     pub norm: Normalizer,
     /// Cross-validated accuracy on the training corpus.
     pub cv_accuracy: f64,
     pub w: f64,
+    /// Schedule heads, when trained (see [`train_schedule_heads`]).
+    pub schedule_heads: Option<ScheduleHeads>,
 }
 
 impl TrainedPredictor {
@@ -95,13 +168,32 @@ impl TrainedPredictor {
         (Format::from_label(label), margin)
     }
 
+    /// Predict the complete execution plan from **one** feature pass:
+    /// format from the main model, schedule from the multi-output heads
+    /// (process-default schedule at full confidence when no heads are
+    /// trained), margin of the weakest output.
+    pub fn predict_plan_with_margin(&self, coo: &Coo) -> (Format, Schedule, f64) {
+        let raw = extract_features(coo);
+        let x = self.norm.transform(&raw);
+        let (label, fmt_margin) = self.model.predict_with_margin(&x);
+        let (sched, sched_margin) = match &self.schedule_heads {
+            Some(heads) => heads.predict_with_margin(&x),
+            None => (Schedule::effective(), 1.0),
+        };
+        (Format::from_label(label), sched, fmt_margin.min(sched_margin))
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", self.model.to_json()),
             ("norm", self.norm.to_json()),
             ("cv_accuracy", Json::Num(self.cv_accuracy)),
             ("w", Json::Num(self.w)),
-        ])
+        ];
+        if let Some(heads) = &self.schedule_heads {
+            fields.push(("schedule_heads", heads.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<TrainedPredictor> {
@@ -110,6 +202,12 @@ impl TrainedPredictor {
             norm: Normalizer::from_json(j.req("norm")?)?,
             cv_accuracy: j.req_f64("cv_accuracy").unwrap_or(0.0),
             w: j.req_f64("w").unwrap_or(1.0),
+            // Optional: format-only models (and pre-schedule saves) load
+            // without heads and predict the default schedule.
+            schedule_heads: match j.get("schedule_heads") {
+                Some(h) => Some(ScheduleHeads::from_json(h)?),
+                None => None,
+            },
         })
     }
 
@@ -128,11 +226,33 @@ impl TrainedPredictor {
 }
 
 /// Fit the GBDT on a corpus for weight `w`, reporting k-fold CV accuracy.
+/// Format-only (no schedule heads); see [`train_schedule_heads`].
 pub fn train_predictor(corpus: &TrainingCorpus, w: f64, seed: u64) -> TrainedPredictor {
     let (data, norm) = corpus.dataset(w);
     let cv_accuracy = cross_validate_gbdt(&data, 5, seed);
     let model = Gbdt::fit(&data, GbdtParams::default());
-    TrainedPredictor { model, norm, cv_accuracy, w }
+    TrainedPredictor { model, norm, cv_accuracy, w, schedule_heads: None }
+}
+
+/// Fit the multi-output schedule heads on the corpus's measured schedule
+/// labels and attach them to `pred` (which supplies the shared normalizer —
+/// the heads must see the exact feature distribution the format model
+/// sees).
+pub fn train_schedule_heads(corpus: &TrainingCorpus, pred: &mut TrainedPredictor) {
+    let x: Vec<Vec<f64>> = corpus
+        .raw_features
+        .iter()
+        .map(|r| pred.norm.transform(r).to_vec())
+        .collect();
+    let labels = corpus.schedule_labels();
+    let fit = |y: Vec<usize>, n_classes: usize| {
+        Gbdt::fit(&TabularData::new(x.clone(), y, n_classes), head_params())
+    };
+    pred.schedule_heads = Some(ScheduleHeads {
+        tile: fit(labels.iter().map(|s| s.tile.class()).collect(), Tile::ALL.len()),
+        split: fit(labels.iter().map(|s| s.split.class()).collect(), Split::ALL.len()),
+        threads: fit(labels.iter().map(|s| s.threads.class()).collect(), 2),
+    });
 }
 
 /// k-fold CV accuracy for the GBDT on a labeled dataset.
@@ -165,6 +285,11 @@ mod tests {
         assert_eq!(c.matrices.len(), 30);
         assert_eq!(c.raw_features.len(), 30);
         assert_eq!(c.profiles.len(), 30);
+        assert_eq!(c.schedule_profiles.len(), 30);
+        assert!(c
+            .schedule_profiles
+            .iter()
+            .all(|p| p.len() == Schedule::CANDIDATES.len()));
         assert_eq!(c.thumbnails.len(), 30);
     }
 
@@ -193,5 +318,44 @@ mod tests {
         for m in c.matrices.iter().take(5) {
             assert_eq!(pred.predict(m), loaded.predict(m));
         }
+    }
+
+    /// Multi-output heads: trained plans stay inside the knob spaces, the
+    /// JSON round trip preserves every head's predictions, and a head-less
+    /// save (the pre-schedule model layout) still loads and predicts the
+    /// process-default schedule at full confidence.
+    #[test]
+    fn schedule_heads_predict_and_round_trip() {
+        let c = small_corpus();
+        let mut pred = train_predictor(&c, 1.0, 42);
+        // Format-only predictor: default schedule, fully confident.
+        let (_, sched, margin) = pred.predict_plan_with_margin(&c.matrices[0]);
+        assert_eq!(sched, Schedule::effective());
+        assert_eq!(margin, 1.0);
+
+        train_schedule_heads(&c, &mut pred);
+        assert!(pred.schedule_heads.is_some());
+        let j = Json::parse(&pred.to_json().to_string()).unwrap();
+        let loaded = TrainedPredictor::from_json(&j).unwrap();
+        assert!(loaded.schedule_heads.is_some(), "heads must survive the round trip");
+        for m in c.matrices.iter().take(8) {
+            let (fmt, sched, margin) = pred.predict_plan_with_margin(m);
+            assert!(ALL_FORMATS.contains(&fmt));
+            assert!(Tile::ALL.contains(&sched.tile));
+            assert!(Split::ALL.contains(&sched.split));
+            assert!(matches!(sched.threads, ThreadCap::Auto | ThreadCap::Cap(1)));
+            assert!((0.0..=1.0).contains(&margin));
+            let (lf, ls, lm) = loaded.predict_plan_with_margin(m);
+            assert_eq!((lf, ls), (fmt, sched));
+            assert!((lm - margin).abs() < 1e-12);
+        }
+
+        // Head-less legacy layout: strip the field and reload.
+        let mut no_heads = pred;
+        no_heads.schedule_heads = None;
+        let j = Json::parse(&no_heads.to_json().to_string()).unwrap();
+        assert!(!j.to_string().contains("schedule_heads"));
+        let legacy = TrainedPredictor::from_json(&j).unwrap();
+        assert!(legacy.schedule_heads.is_none());
     }
 }

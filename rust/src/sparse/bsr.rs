@@ -7,8 +7,9 @@
 
 use super::coo::Coo;
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
+use super::schedule::{Schedule, Split};
 use crate::tensor::Matrix;
-use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
+use crate::util::parallel::{even_range, indptr_span, parallel_fill_rows_spans};
 use std::collections::HashMap;
 
 /// Default block edge; benches ablate 8..128 (see `ablation_block_size`).
@@ -118,24 +119,36 @@ impl Bsr {
     /// into a caller-provided buffer.
     ///
     /// For each stored block, accumulates a dense `block × d` panel:
-    /// `Y[brow·b .. brow·b+b] += A_blk · X[bcol·b .. bcol·b+b]`.
+    /// `Y[brow·b .. brow·b+b] += A_blk · X[bcol·b .. bcol·b+b]`. Runs under
+    /// the process-wide default [`Schedule`].
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Bsr::spmm_into`]: the split rule picks
+    /// stored-block-balanced vs even row-block spans and the thread cap
+    /// folds into the task count. The block edge is fixed at construction,
+    /// so the gather-tile knob does not apply.
+    pub fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.rows, self.cols, x, out);
         let b = self.block;
         let d = x.cols;
         let n = self.rows;
         let rb = n.div_ceil(b);
         // Tasks own contiguous row-block spans, balanced by stored-block
-        // count (`indptr` weight ≈ nnz); spans are converted to row spans so
-        // each task zeroes and fills a disjoint output chunk.
-        let k = num_threads().min(rb.max(1));
+        // count (`indptr` weight ≈ nnz) or split evenly; spans are converted
+        // to row spans so each task zeroes and fills a disjoint output chunk.
+        let k = sched.tasks_for(rb);
         parallel_fill_rows_spans(
             &mut out.data,
             n,
             d,
             k,
             |i| {
-                let bs = indptr_span(&self.indptr, k, i);
+                let bs = match sched.split {
+                    Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+                    Split::EvenUnits => even_range(rb, k, i),
+                };
                 (bs.start * b).min(n)..(bs.end * b).min(n)
             },
             |range, chunk| {
@@ -179,14 +192,24 @@ impl Bsr {
     /// workers own nnz-balanced row-block spans and scatter each stored
     /// block's transposed panel (`Y[c] += A[r][c] · X[r]`) into pool-owned
     /// scratch buffers, reduced at the end. No transposed block index is
-    /// built.
+    /// built. Runs under the process-wide default [`Schedule`].
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_t_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Bsr::spmm_t_into`]. Only the split rule and
+    /// thread cap apply (see [`Bsr::spmm_into_sched`]).
+    pub fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.cols, self.rows, x, out);
         let b = self.block;
         let d = x.cols;
         let rb = self.rows.div_ceil(b);
-        let k = num_threads().min(rb.max(1));
-        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |brange, buf| {
+        let k = sched.tasks_for(rb);
+        let span_of = |i| match sched.split {
+            Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+            Split::EvenUnits => even_range(rb, k, i),
+        };
+        scatter_reduce_into(out, k, span_of, |brange, buf| {
             for brow in brange {
                 let row0 = brow * b;
                 let row1 = (row0 + b).min(self.rows);
@@ -232,6 +255,12 @@ impl SparseOps for Bsr {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Bsr::spmm_t_into(self, x, out)
+    }
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Bsr::spmm_into_sched(self, x, out, sched)
+    }
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Bsr::spmm_t_into_sched(self, x, out, sched)
     }
 }
 

@@ -2,8 +2,9 @@
 //! baselines against, and our canonical interchange representation.
 
 use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
+use super::schedule::{Schedule, Split};
 use crate::tensor::Matrix;
-use crate::util::parallel::{even_range, num_threads, parallel_fill_rows_spans};
+use crate::util::parallel::{even_range, parallel_fill_rows_spans};
 
 /// COO sparse matrix. Invariants: triples sorted by (row, col), unique
 /// coordinates, no explicit zeros.
@@ -117,21 +118,28 @@ impl Coo {
     ///
     /// Because triples are row-sorted, the output can be partitioned by row
     /// ranges: each task binary-searches its triple span and streams it.
-    /// Row spans are **nnz-balanced**: span boundaries are the rows holding
-    /// the triple-count quantiles (`row[nnz·i/k]`), so a hub row never
-    /// shares its worker with half the matrix.
+    /// Under the default nnz-balanced [`Schedule`], span boundaries are the
+    /// rows holding the triple-count quantiles (`row[nnz·i/k]`), so a hub
+    /// row never shares its worker with half the matrix.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Coo::spmm_into`]. The triple stream has no
+    /// gather tile, so the split rule (nnz-quantile vs even row ranges) and
+    /// thread cap are the knobs that apply.
+    pub fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
         let (row, col, val) = (&self.row, &self.col, &self.val);
         let n = self.rows;
         let nnz = self.nnz();
-        let k = num_threads().min(n.max(1));
+        let k = sched.tasks_for(n);
         let span_of = |i: usize| -> std::ops::Range<usize> {
             if n == 0 {
                 return 0..0;
             }
-            if nnz == 0 {
+            if nnz == 0 || sched.split == Split::EvenUnits {
                 return even_range(n, k, i);
             }
             let start = if i == 0 { 0 } else { row[nnz * i / k] as usize };
@@ -165,15 +173,22 @@ impl Coo {
 
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
     /// workers own contiguous triple spans (each triple is one work unit, so
-    /// an even split is already nnz-balanced) and scatter `val·x[row]` into
-    /// output row `col` of pool-owned scratch buffers, which are then
-    /// reduced.
+    /// an even split is already nnz-balanced — both split rules coincide
+    /// here) and scatter `val·x[row]` into output row `col` of pool-owned
+    /// scratch buffers, which are then reduced.
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_t_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Coo::spmm_t_into`]: only the thread cap
+    /// applies (triple spans are already nnz-balanced under either split
+    /// rule, and the scatter stream has no gather tile).
+    pub fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
         let (row, col, val) = (&self.row, &self.col, &self.val);
         let nnz = self.nnz();
-        let k = num_threads().min(nnz.max(1));
+        let k = sched.tasks_for(nnz);
         scatter_reduce_into(out, k, |i| even_range(nnz, k, i), |span, buf| {
             for i in span {
                 let c = col[i] as usize;
@@ -231,6 +246,12 @@ impl SparseOps for Coo {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Coo::spmm_t_into(self, x, out)
+    }
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Coo::spmm_into_sched(self, x, out, sched)
+    }
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Coo::spmm_t_into_sched(self, x, out, sched)
     }
     fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
         super::SparseMatrix::Coo(Coo::extract_rows_cols(self, rows, cols))

@@ -5,9 +5,10 @@
 //! dominates (paper Fig. 3a).
 
 use super::coo::Coo;
-use super::ops::{check_into_shapes, gather_row_tiled, scatter_reduce_into, SparseOps};
+use super::ops::{check_into_shapes, gather_row_lanes, scatter_reduce_into, SparseOps};
+use super::schedule::{Schedule, Split, Tile};
 use crate::tensor::Matrix;
-use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
+use crate::util::parallel::{even_range, indptr_span, parallel_fill_rows_spans};
 
 /// CSC sparse matrix: `indptr[c]..indptr[c+1]` spans column `c`'s entries in
 /// `indices` (row ids, ascending within a column) and `vals`.
@@ -67,15 +68,26 @@ impl Csc {
     /// SpMM `self (n×m) · x (m×d) → out (n×d)` into a caller-provided
     /// buffer.
     ///
-    /// Tasks own disjoint **column** spans, nnz-balanced via `indptr`; each
-    /// accumulates a pool-owned `n×d` scratch buffer (`y[i] += v * x[c]` for
-    /// entries `(i, v)` of column `c`), then the buffers are summed. The
-    /// extra reduction is CSC's intrinsic cost for row-major output.
+    /// Tasks own disjoint **column** spans (nnz-balanced or even per the
+    /// [`Schedule`]); each accumulates a pool-owned `n×d` scratch buffer
+    /// (`y[i] += v * x[c]` for entries `(i, v)` of column `c`), then the
+    /// buffers are summed. The extra reduction is CSC's intrinsic cost for
+    /// row-major output. Runs under the process-wide default schedule.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Csc::spmm_into`]. The scatter kernel has no
+    /// gather tile, so only the split rule and thread cap apply.
+    pub fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.cols.max(1));
-        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |cols, buf| {
+        let k = sched.tasks_for(self.cols);
+        let span_of = |i| match sched.split {
+            Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+            Split::EvenUnits => even_range(self.cols, k, i),
+        };
+        scatter_reduce_into(out, k, span_of, |cols, buf| {
             for c in cols {
                 let x_row = x.row(c);
                 for i in self.indptr[c]..self.indptr[c + 1] {
@@ -102,23 +114,49 @@ impl Csc {
     /// CSR↔CSC duality in the other direction: the CSC arrays of `A` are the
     /// CSR arrays of `Aᵀ`, so `Aᵀ·X` runs as a CSR-style **gather** — each
     /// output row `c` sums `vals[i] · x[indices[i]]` over column `c`'s span.
-    /// This is the cheap direction: parallel over nnz-balanced column spans,
-    /// no reduction needed, and feature-tiled like the CSR forward kernel.
+    /// This is the cheap direction: parallel over column spans, no
+    /// reduction needed, and feature-tiled like the CSR forward kernel.
+    /// Runs under the process-wide default [`Schedule`].
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_t_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Csc::spmm_t_into`]: tile width picks a
+    /// monomorphized gather instantiation (dispatched once per call), split
+    /// rule picks nnz-balanced vs even column spans, thread cap folds into
+    /// the task count.
+    pub fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        match sched.tile {
+            Tile::T4 => self.spmm_t_into_lanes::<4>(x, out, sched),
+            Tile::T8 => self.spmm_t_into_lanes::<8>(x, out, sched),
+            Tile::T16 => self.spmm_t_into_lanes::<16>(x, out, sched),
+            Tile::T32 => self.spmm_t_into_lanes::<32>(x, out, sched),
+        }
+    }
+
+    fn spmm_t_into_lanes<const L: usize>(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.cols.max(1));
+        let k = sched.tasks_for(self.cols);
         parallel_fill_rows_spans(
             &mut out.data,
             self.cols,
             d,
             k,
-            |i| indptr_span(&self.indptr, k, i),
+            |i| match sched.split {
+                Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+                Split::EvenUnits => even_range(self.cols, k, i),
+            },
             |range, chunk| {
                 for (cc, c) in range.clone().enumerate() {
                     let out_row = &mut chunk[cc * d..(cc + 1) * d];
                     let span = self.indptr[c]..self.indptr[c + 1];
-                    gather_row_tiled(out_row, x, &self.indices[span.clone()], &self.vals[span]);
+                    gather_row_lanes::<L>(
+                        out_row,
+                        x,
+                        &self.indices[span.clone()],
+                        &self.vals[span],
+                    );
                 }
             },
         );
@@ -218,6 +256,12 @@ impl SparseOps for Csc {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Csc::spmm_t_into(self, x, out)
+    }
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Csc::spmm_into_sched(self, x, out, sched)
+    }
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Csc::spmm_t_into_sched(self, x, out, sched)
     }
     fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
         super::SparseMatrix::Csc(Csc::extract_rows_cols(self, rows, cols))

@@ -2,9 +2,10 @@
 //! paper's Fig-1 winner for GNN inputs.
 
 use super::coo::Coo;
-use super::ops::{check_into_shapes, gather_row_tiled, scatter_reduce_into, SparseOps};
+use super::ops::{check_into_shapes, gather_row_lanes, scatter_reduce_into, SparseOps};
+use super::schedule::{Schedule, Split, Tile};
 use crate::tensor::Matrix;
-use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
+use crate::util::parallel::{even_range, indptr_span, parallel_fill_rows_spans};
 
 /// CSR sparse matrix: `indptr[r]..indptr[r+1]` spans row `r`'s entries in
 /// `indices` (column ids, ascending within a row) and `vals`.
@@ -98,30 +99,55 @@ impl Csr {
         self.nnz() * 8 + (self.rows + 1) * 8
     }
 
-    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over
-    /// **nnz-balanced** row spans, into a caller-provided buffer (the
-    /// zero-allocation hot path: pool dispatch + per-task `indptr_span`
-    /// boundaries allocate nothing).
+    /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row spans,
+    /// into a caller-provided buffer (the zero-allocation hot path: pool
+    /// dispatch + per-task span boundaries allocate nothing). Runs under the
+    /// process-wide default [`Schedule`].
     ///
-    /// The inner loop is feature-tiled ([`gather_row_tiled`]): a
+    /// The inner loop is feature-tiled ([`gather_row_lanes`]): a
     /// register-resident accumulator block per column tile, streaming `x`
     /// rows — the canonical row-major-friendly kernel (and why CSR usually
     /// wins).
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Csr::spmm_into`]: the tile width picks a
+    /// monomorphized gather instantiation (one `match` per call, outside the
+    /// row loop), the split rule picks nnz-balanced vs even row spans, and
+    /// the thread cap folds into the task count.
+    pub fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        match sched.tile {
+            Tile::T4 => self.spmm_into_lanes::<4>(x, out, sched),
+            Tile::T8 => self.spmm_into_lanes::<8>(x, out, sched),
+            Tile::T16 => self.spmm_into_lanes::<16>(x, out, sched),
+            Tile::T32 => self.spmm_into_lanes::<32>(x, out, sched),
+        }
+    }
+
+    fn spmm_into_lanes<const L: usize>(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.rows.max(1));
+        let k = sched.tasks_for(self.rows);
         parallel_fill_rows_spans(
             &mut out.data,
             self.rows,
             d,
             k,
-            |i| indptr_span(&self.indptr, k, i),
+            |i| match sched.split {
+                Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+                Split::EvenUnits => even_range(self.rows, k, i),
+            },
             |range, chunk| {
                 for (rr, r) in range.clone().enumerate() {
                     let out_row = &mut chunk[rr * d..(rr + 1) * d];
                     let span = self.indptr[r]..self.indptr[r + 1];
-                    gather_row_tiled(out_row, x, &self.indices[span.clone()], &self.vals[span]);
+                    gather_row_lanes::<L>(
+                        out_row,
+                        x,
+                        &self.indices[span.clone()],
+                        &self.vals[span],
+                    );
                 }
             },
         );
@@ -139,11 +165,22 @@ impl Csr {
     /// CSR↔CSC duality: the CSR arrays of `A` *are* the CSC arrays of `Aᵀ`
     /// (`indptr` spans become column spans), so `Aᵀ·X` executes as a
     /// CSC-style scatter over the same three arrays with zero conversion.
+    /// Runs under the process-wide default [`Schedule`].
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_t_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Csr::spmm_t_into`]. The scatter kernel has
+    /// no gather tile, so only the split rule and thread cap apply.
+    pub fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.rows.max(1));
-        scatter_reduce_into(out, k, |i| indptr_span(&self.indptr, k, i), |rows, buf| {
+        let k = sched.tasks_for(self.rows);
+        let span_of = |i| match sched.split {
+            Split::NnzBalanced => indptr_span(&self.indptr, k, i),
+            Split::EvenUnits => even_range(self.rows, k, i),
+        };
+        scatter_reduce_into(out, k, span_of, |rows, buf| {
             for r in rows {
                 let x_row = x.row(r);
                 let span = self.indptr[r]..self.indptr[r + 1];
@@ -254,6 +291,12 @@ impl SparseOps for Csr {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Csr::spmm_t_into(self, x, out)
+    }
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Csr::spmm_into_sched(self, x, out, sched)
+    }
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Csr::spmm_t_into_sched(self, x, out, sched)
     }
     fn extract_rows_cols(&self, rows: &[u32], cols: &[u32]) -> super::SparseMatrix {
         super::SparseMatrix::Csr(Csr::extract_rows_cols(self, rows, cols))

@@ -13,6 +13,7 @@
 //! adding one line to the `sparse_formats!` invocation, not editing eight
 //! hand-written seven-arm `match` blocks.
 
+use super::schedule::Schedule;
 use super::{Bsr, Coo, Csc, Csr, Dia, Dok, Lil, SparseOps};
 use crate::tensor::Matrix;
 
@@ -201,6 +202,19 @@ impl SparseMatrix {
         self.ops().spmm_t_into(x, out)
     }
 
+    /// SpMM into a caller-provided buffer under an explicit kernel
+    /// [`Schedule`] — the engine's decided (format, schedule) plan enters
+    /// here. Formats without a schedule-sensitive kernel ignore it.
+    pub fn spmm_into_with(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        self.ops().spmm_into_sched(x, out, sched)
+    }
+
+    /// Transpose-SpMM into a caller-provided buffer under an explicit
+    /// kernel [`Schedule`].
+    pub fn spmm_t_into_with(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        self.ops().spmm_t_into_sched(x, out, sched)
+    }
+
     /// Induced submatrix `self[rows, cols]` for **sorted, duplicate-free**
     /// id selections — the mini-batch shard-extraction entry point.
     ///
@@ -387,6 +401,70 @@ mod tests {
                 let t = m.transpose().unwrap();
                 assert_eq!((t.rows(), t.cols()), (cols, rows), "{fmt} transpose");
                 assert_eq!(t.format(), fmt, "{fmt} transpose preserves format");
+            }
+        }
+    }
+
+    /// Every (format × tile × split × cap) kernel variant agrees with the
+    /// dense reference on degenerate and tile-hostile shapes: 0-row, 0-col,
+    /// empty, `d` below the narrowest tile, and `d` not a multiple of any
+    /// tile. Both kernel directions, with stale output buffers the variants
+    /// must fully overwrite.
+    #[test]
+    fn schedule_variants_agree_with_dense_on_degenerate_shapes() {
+        use super::super::schedule::{Schedule, Split, ThreadCap, Tile};
+        let mut rng = Rng::new(0x5C4ED);
+        let shapes = [(0usize, 5usize), (5, 0), (0, 0), (1, 1), (7, 5), (33, 47)];
+        // d < 4 (every tile streams), between tile widths, and off-multiple
+        // remainders of 4/8/16/32.
+        let widths = [1usize, 3, 5, 15, 17, 33];
+        for &(rows, cols) in &shapes {
+            let mut triples = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.bernoulli(0.3) {
+                        triples.push((r as u32, c as u32, rng.uniform(-2.0, 2.0) as f32));
+                    }
+                }
+            }
+            let coo = Coo::from_triples(rows, cols, triples);
+            let dense = coo.to_dense();
+            let base = SparseMatrix::Coo(coo);
+            for &d in &widths {
+                let x = Matrix::rand(cols, d, &mut rng);
+                let xt = Matrix::rand(rows, d, &mut rng);
+                let want = dense.matmul(&x);
+                let want_t = dense.transpose().matmul(&xt);
+                for &fmt in &ALL_FORMATS {
+                    let m = match base.convert(fmt) {
+                        Ok(m) => m,
+                        Err(_) => continue, // DIA budget trip is legal
+                    };
+                    for tile in Tile::ALL {
+                        for split in Split::ALL {
+                            for threads in [ThreadCap::Auto, ThreadCap::Cap(1)] {
+                                let sched = Schedule { tile, split, threads };
+                                let label = format!(
+                                    "{} {} ({rows},{cols},{d})",
+                                    fmt.name(),
+                                    sched.label()
+                                );
+                                let mut out = Matrix::full(rows, d, 123.0);
+                                m.spmm_into_with(&x, &mut out, sched);
+                                assert!(
+                                    out.max_abs_diff(&want) < 1e-3,
+                                    "spmm {label}"
+                                );
+                                let mut out_t = Matrix::full(cols, d, -321.0);
+                                m.spmm_t_into_with(&xt, &mut out_t, sched);
+                                assert!(
+                                    out_t.max_abs_diff(&want_t) < 1e-3,
+                                    "spmm_t {label}"
+                                );
+                            }
+                        }
+                    }
+                }
             }
         }
     }

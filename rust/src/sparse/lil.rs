@@ -3,9 +3,10 @@
 //! cost is modeled in the memory footprint.
 
 use super::coo::Coo;
-use super::ops::{check_into_shapes, scatter_reduce_into, SparseOps};
+use super::ops::{check_into_shapes, gather_row_pairs_lanes, scatter_reduce_into, SparseOps};
+use super::schedule::{Schedule, Split, Tile};
 use crate::tensor::Matrix;
-use crate::util::parallel::{indptr_span, num_threads, parallel_fill_rows_spans};
+use crate::util::parallel::{even_range, indptr_span, parallel_fill_rows_spans};
 use std::sync::OnceLock;
 
 /// LIL sparse matrix: `rows_data[r]` is row `r`'s sorted `(col, val)` list.
@@ -120,24 +121,47 @@ impl Lil {
 
     /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over nnz-balanced
     /// row spans (binary-searched on the cached nnz prefix-sum — no range
-    /// list is allocated per multiply), into a caller-provided buffer.
+    /// list is allocated per multiply), into a caller-provided buffer. Runs
+    /// under the process-wide default [`Schedule`].
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Lil::spmm_into`]: the tile width picks a
+    /// monomorphized pair-gather instantiation
+    /// ([`gather_row_pairs_lanes`], dispatched once per call), the split
+    /// rule picks nnz-balanced vs even row spans, and the thread cap folds
+    /// into the task count.
+    pub fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        match sched.tile {
+            Tile::T4 => self.spmm_into_lanes::<4>(x, out, sched),
+            Tile::T8 => self.spmm_into_lanes::<8>(x, out, sched),
+            Tile::T16 => self.spmm_into_lanes::<16>(x, out, sched),
+            Tile::T32 => self.spmm_into_lanes::<32>(x, out, sched),
+        }
+    }
+
+    fn spmm_into_lanes<const L: usize>(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.rows.max(1));
+        let k = sched.tasks_for(self.rows);
         let prefix = self.nnz_prefix();
-        parallel_fill_rows_spans(&mut out.data, self.rows, d, k, |i| indptr_span(prefix, k, i), |range, chunk| {
-            chunk.fill(0.0);
-            for (rr, r) in range.clone().enumerate() {
-                let out_row = &mut chunk[rr * d..(rr + 1) * d];
-                for &(c, v) in &self.rows_data[r] {
-                    let x_row = x.row(c as usize);
-                    for (o, &xv) in out_row.iter_mut().zip(x_row.iter()) {
-                        *o += v * xv;
-                    }
+        parallel_fill_rows_spans(
+            &mut out.data,
+            self.rows,
+            d,
+            k,
+            |i| match sched.split {
+                Split::NnzBalanced => indptr_span(prefix, k, i),
+                Split::EvenUnits => even_range(self.rows, k, i),
+            },
+            |range, chunk| {
+                for (rr, r) in range.clone().enumerate() {
+                    let out_row = &mut chunk[rr * d..(rr + 1) * d];
+                    gather_row_pairs_lanes::<L>(out_row, x, &self.rows_data[r]);
                 }
-            }
-        });
+            },
+        );
     }
 
     /// Allocating SpMM wrapper.
@@ -150,13 +174,23 @@ impl Lil {
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)` — transpose-free:
     /// workers own nnz-balanced row spans and scatter each row list's
     /// `v·x[r]` into output row `c` of pool-owned scratch buffers, reduced
-    /// at the end.
+    /// at the end. Runs under the process-wide default [`Schedule`].
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
+        self.spmm_t_into_sched(x, out, Schedule::effective());
+    }
+
+    /// Schedule-parameterized [`Lil::spmm_t_into`]. The scatter kernel has
+    /// no gather tile, so only the split rule and thread cap apply.
+    pub fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
-        let k = num_threads().min(self.rows.max(1));
+        let k = sched.tasks_for(self.rows);
         let prefix = self.nnz_prefix();
-        scatter_reduce_into(out, k, |i| indptr_span(prefix, k, i), |rows, buf| {
+        let span_of = |i| match sched.split {
+            Split::NnzBalanced => indptr_span(prefix, k, i),
+            Split::EvenUnits => even_range(self.rows, k, i),
+        };
+        scatter_reduce_into(out, k, span_of, |rows, buf| {
             for r in rows {
                 let x_row = x.row(r);
                 for &(c, v) in &self.rows_data[r] {
@@ -188,6 +222,12 @@ impl SparseOps for Lil {
     }
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         Lil::spmm_t_into(self, x, out)
+    }
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Lil::spmm_into_sched(self, x, out, sched)
+    }
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        Lil::spmm_t_into_sched(self, x, out, sched)
     }
 }
 

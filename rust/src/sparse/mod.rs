@@ -24,6 +24,7 @@ pub mod bsr;
 pub mod dok;
 pub mod lil;
 pub mod format;
+pub mod schedule;
 pub mod shared;
 pub mod validate;
 
@@ -36,5 +37,6 @@ pub use dok::Dok;
 pub use lil::Lil;
 pub use format::{Format, SparseMatrix, ALL_FORMATS};
 pub use ops::{coo_fallback_extractions, SparseOps};
+pub use schedule::{Schedule, Split, ThreadCap, Tile};
 pub use shared::{EpochCell, SharedMatrix, WeakMatrix};
 pub use validate::FormatError;

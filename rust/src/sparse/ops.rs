@@ -17,7 +17,7 @@
 //! partitions its source units by **non-zero count** (`indptr_span` /
 //! `split_ranges_by_weight`), so hub rows of power-law graphs don't pile
 //! onto one worker. The CSR/CSC gather loops additionally tile the feature
-//! dimension ([`gather_row_tiled`]) with a register-resident accumulator
+//! dimension ([`gather_row_lanes`]) with a register-resident accumulator
 //! block the compiler can vectorize. Rationale: GE-SpMM (arXiv:2007.03179)
 //! shows load-balanced partitioning plus feature-dimension tiling is what
 //! makes SpMM competitive for GNN workloads, and the paper's
@@ -32,6 +32,7 @@
 
 use super::coo::Coo;
 use super::format::SparseMatrix;
+use super::schedule::Schedule;
 use crate::tensor::Matrix;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -167,11 +168,34 @@ pub trait SparseOps {
 
     /// `out = self · x`; `out` must be `rows × x.cols` and is overwritten
     /// completely (no zeroing required from the caller).
+    ///
+    /// Runs under the process-wide default schedule
+    /// ([`Schedule::effective`]); formats with schedule-parameterized
+    /// kernels implement this as `spmm_into_sched(x, out,
+    /// Schedule::effective())`.
     fn spmm_into(&self, x: &Matrix, out: &mut Matrix);
 
     /// `out = selfᵀ · x`; `out` must be `cols × x.cols` and is overwritten
     /// completely. Executed transpose-free on the format's own arrays.
     fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix);
+
+    /// Schedule-parameterized `out = self · x` (DESIGN.md
+    /// §Schedule-Prediction): the caller picks tile width, split rule and
+    /// thread cap per invocation. CSR/CSC/COO/BSR/LIL override this with
+    /// kernels that honor every knob that applies to them; formats whose
+    /// kernel has no schedule dimension (DIA's diagonal sweep, DOK's
+    /// hash-map stream) take this default and ignore the schedule.
+    fn spmm_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        let _ = sched;
+        self.spmm_into(x, out);
+    }
+
+    /// Schedule-parameterized `out = selfᵀ · x`; see
+    /// [`SparseOps::spmm_into_sched`].
+    fn spmm_t_into_sched(&self, x: &Matrix, out: &mut Matrix, sched: Schedule) {
+        let _ = sched;
+        self.spmm_t_into(x, out);
+    }
 
     /// Allocating convenience wrapper over [`SparseOps::spmm_into`].
     fn spmm(&self, x: &Matrix) -> Matrix {
@@ -204,25 +228,29 @@ pub(crate) fn check_into_shapes(
     );
 }
 
-/// Feature-dimension tile width for the gather kernels: 16 f32 lanes — two
-/// AVX2 (or four NEON) accumulator registers, small enough to stay
-/// register-resident through the non-zero loop.
-pub(crate) const FEAT_TILE: usize = 16;
-
-/// Gather one output row from sparse entries with feature-dimension tiling:
-/// `out_row = Σ_k vals[k] · x[idx[k]]`, overwriting `out_row` completely.
+/// Gather one output row from sparse entries with `L`-lane
+/// feature-dimension tiling: `out_row = Σ_k vals[k] · x[idx[k]]`,
+/// overwriting `out_row` completely.
 ///
-/// For `d ≥ FEAT_TILE`, columns are processed in fixed-width blocks with a
+/// For `d ≥ L`, columns are processed in fixed-width blocks with a
 /// register-resident accumulator array: the inner nnz loop then has no
 /// load/store traffic on the output, and the unrolled lane loop
 /// auto-vectorizes. Narrow rows fall back to the streaming loop (the tile
-/// bookkeeping wouldn't amortize).
+/// bookkeeping wouldn't amortize). `L` is const-generic so each tile width
+/// is a separate monomorphization — callers dispatch on
+/// [`crate::sparse::schedule::Tile`] **once per kernel call**, outside the
+/// row loop, and the row loop itself carries no width branching.
 #[inline]
-pub(crate) fn gather_row_tiled(out_row: &mut [f32], x: &Matrix, idx: &[u32], vals: &[f32]) {
+pub(crate) fn gather_row_lanes<const L: usize>(
+    out_row: &mut [f32],
+    x: &Matrix,
+    idx: &[u32],
+    vals: &[f32],
+) {
     let d = out_row.len();
     debug_assert_eq!(idx.len(), vals.len());
     debug_assert_eq!(d, x.cols);
-    if d < FEAT_TILE {
+    if d < L {
         out_row.fill(0.0);
         for (k, &c) in idx.iter().enumerate() {
             let v = vals[k];
@@ -233,23 +261,66 @@ pub(crate) fn gather_row_tiled(out_row: &mut [f32], x: &Matrix, idx: &[u32], val
         return;
     }
     let mut j = 0;
-    while j + FEAT_TILE <= d {
-        let mut acc = [0.0f32; FEAT_TILE];
+    while j + L <= d {
+        let mut acc = [0.0f32; L];
         for (k, &c) in idx.iter().enumerate() {
             let v = vals[k];
-            let xt = &x.row(c as usize)[j..j + FEAT_TILE];
+            let xt = &x.row(c as usize)[j..j + L];
             for (a, &xv) in acc.iter_mut().zip(xt.iter()) {
                 *a += v * xv;
             }
         }
-        out_row[j..j + FEAT_TILE].copy_from_slice(&acc);
-        j += FEAT_TILE;
+        out_row[j..j + L].copy_from_slice(&acc);
+        j += L;
     }
     if j < d {
         let (_, rem) = out_row.split_at_mut(j);
         rem.fill(0.0);
         for (k, &c) in idx.iter().enumerate() {
             let v = vals[k];
+            for (o, &xv) in rem.iter_mut().zip(x.row(c as usize)[j..].iter()) {
+                *o += v * xv;
+            }
+        }
+    }
+}
+
+/// [`gather_row_lanes`] over `(col, val)` pair lists — the LIL row layout.
+/// Same tiling contract: overwrites `out_row` completely, streams when
+/// `d < L`.
+#[inline]
+pub(crate) fn gather_row_pairs_lanes<const L: usize>(
+    out_row: &mut [f32],
+    x: &Matrix,
+    entries: &[(u32, f32)],
+) {
+    let d = out_row.len();
+    debug_assert_eq!(d, x.cols);
+    if d < L {
+        out_row.fill(0.0);
+        for &(c, v) in entries {
+            for (o, &xv) in out_row.iter_mut().zip(x.row(c as usize).iter()) {
+                *o += v * xv;
+            }
+        }
+        return;
+    }
+    let mut j = 0;
+    while j + L <= d {
+        let mut acc = [0.0f32; L];
+        for &(c, v) in entries {
+            let xt = &x.row(c as usize)[j..j + L];
+            for (a, &xv) in acc.iter_mut().zip(xt.iter()) {
+                *a += v * xv;
+            }
+        }
+        out_row[j..j + L].copy_from_slice(&acc);
+        j += L;
+    }
+    if j < d {
+        let (_, rem) = out_row.split_at_mut(j);
+        rem.fill(0.0);
+        for &(c, v) in entries {
             for (o, &xv) in rem.iter_mut().zip(x.row(c as usize)[j..].iter()) {
                 *o += v * xv;
             }
@@ -304,7 +375,7 @@ mod tests {
     }
 
     #[test]
-    fn gather_row_tiled_matches_naive() {
+    fn gather_row_default_tile_matches_naive() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(11);
         for &d in &[1usize, 3, 15, 16, 17, 32, 40, 64] {
@@ -318,9 +389,49 @@ mod tests {
                 }
             }
             let mut got = vec![123.0f32; d]; // stale garbage: must be overwritten
-            gather_row_tiled(&mut got, &x, &idx, &vals);
+            gather_row_lanes::<16>(&mut got, &x, &idx, &vals);
             for (g, w) in got.iter().zip(naive.iter()) {
                 assert!((g - w).abs() < 1e-4, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_lanes_agree_across_tile_widths() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(23);
+        // Widths straddling every tile boundary: below the narrowest tile,
+        // exact multiples, and off-by-one remainders of each lane count.
+        for &d in &[0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 40, 64] {
+            let x = Matrix::rand(30, d, &mut rng);
+            let idx: Vec<u32> = (0..12).map(|_| rng.gen_range(30) as u32).collect();
+            let vals: Vec<f32> = (0..12).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let pairs: Vec<(u32, f32)> =
+                idx.iter().copied().zip(vals.iter().copied()).collect();
+            let mut want = vec![-9.0f32; d];
+            gather_row_lanes::<16>(&mut want, &x, &idx, &vals);
+            let run = |got: &[f32], label: &str| {
+                assert_eq!(got.len(), d);
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!((g - w).abs() < 1e-4, "{label} d={d}");
+                }
+            };
+            let mut got = vec![123.0f32; d];
+            gather_row_lanes::<4>(&mut got, &x, &idx, &vals);
+            run(&got, "L=4");
+            gather_row_lanes::<8>(&mut got, &x, &idx, &vals);
+            run(&got, "L=8");
+            gather_row_lanes::<32>(&mut got, &x, &idx, &vals);
+            run(&got, "L=32");
+            for (lanes, label) in [(4usize, "pairs L=4"), (16, "pairs L=16"), (32, "pairs L=32")]
+            {
+                got.fill(123.0);
+                match lanes {
+                    4 => gather_row_pairs_lanes::<4>(&mut got, &x, &pairs),
+                    16 => gather_row_pairs_lanes::<16>(&mut got, &x, &pairs),
+                    _ => gather_row_pairs_lanes::<32>(&mut got, &x, &pairs),
+                }
+                run(&got, label);
             }
         }
     }

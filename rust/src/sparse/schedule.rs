@@ -1,0 +1,349 @@
+//! Kernel **schedule** parameterization for the SpMM hot path.
+//!
+//! The paper predicts the *format*; ParamSpMM (arXiv:2605.15695) and
+//! GE-SpMM (arXiv:2007.03179) show the *kernel schedule* — feature-tile
+//! width, work-partitioning rule and thread count — matters just as much on
+//! skewed real-world graphs. A [`Schedule`] bundles the three knobs our
+//! kernels used to hard-code:
+//!
+//! * [`Tile`] — feature-dimension tile width of the gather kernels
+//!   (CSR `A·X`, CSC `Aᵀ·X`, LIL `A·X`). Const-generic lane counts
+//!   (4/8/16/32) are monomorphized per kernel call, so the inner non-zero
+//!   loop carries **no per-row branching**: the one `match` per call sits
+//!   outside the row loop and selects a fully specialized instantiation.
+//! * [`Split`] — how source units (rows / columns / block rows) are
+//!   partitioned across pool tasks: nnz-balanced quantiles
+//!   (`indptr_span` / the COO row-quantile rule) or plain even unit counts.
+//!   Even splitting skips the quantile binary searches and wins on uniform
+//!   graphs; nnz balancing wins under power-law skew.
+//! * [`ThreadCap`] — an optional per-call cap on pool parallelism. The cap
+//!   folds into the task count `k` each kernel hands `util::pool`
+//!   ([`Schedule::tasks_for`]); a capped count of 1 takes the pool's inline
+//!   serial path (no lease, no scratch), which beats dispatch overhead on
+//!   tiny matrices.
+//!
+//! [`Schedule::default`] reproduces the pre-schedule kernels exactly
+//! (16 lanes, nnz-balanced, uncapped). `GNN_SPMM_SCHEDULE` overrides the
+//! default process-wide (resolved once, like `GNN_SPMM_THREADS`) so CI can
+//! force every kernel through a non-default variant.
+
+use std::sync::OnceLock;
+
+/// Feature-dimension tile width (f32 lanes) for the gather kernels. Each
+/// width is a distinct monomorphization of the gather loop — see
+/// `ops::gather_row_lanes`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tile {
+    T4,
+    T8,
+    T16,
+    T32,
+}
+
+impl Tile {
+    /// Every tile width, in class-index order (the multi-output predictor's
+    /// label space for this output).
+    pub const ALL: [Tile; 4] = [Tile::T4, Tile::T8, Tile::T16, Tile::T32];
+
+    /// Lane count of this tile.
+    #[inline]
+    pub fn lanes(self) -> usize {
+        match self {
+            Tile::T4 => 4,
+            Tile::T8 => 8,
+            Tile::T16 => 16,
+            Tile::T32 => 32,
+        }
+    }
+
+    /// Inverse of [`Tile::lanes`].
+    pub fn from_lanes(lanes: usize) -> Option<Tile> {
+        Tile::ALL.into_iter().find(|t| t.lanes() == lanes)
+    }
+
+    /// Class index in [`Tile::ALL`] (predictor label).
+    pub fn class(self) -> usize {
+        match self {
+            Tile::T4 => 0,
+            Tile::T8 => 1,
+            Tile::T16 => 2,
+            Tile::T32 => 3,
+        }
+    }
+
+    /// Inverse of [`Tile::class`].
+    pub fn from_class(c: usize) -> Option<Tile> {
+        Tile::ALL.get(c).copied()
+    }
+}
+
+/// Work-partitioning rule: how a kernel splits its source units across pool
+/// tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Split {
+    /// Quantiles of cumulative non-zero count (`indptr_span` /
+    /// `split_ranges_by_weight`): every task carries an equal share of
+    /// multiply-adds even when hub units dominate.
+    NnzBalanced,
+    /// Near-equal unit counts (`even_range`): no quantile search, optimal
+    /// when per-unit work is uniform.
+    EvenUnits,
+}
+
+impl Split {
+    /// Both rules, in class-index order.
+    pub const ALL: [Split; 2] = [Split::NnzBalanced, Split::EvenUnits];
+
+    /// Stable short name (cache JSON / bench keys / env override).
+    pub fn name(self) -> &'static str {
+        match self {
+            Split::NnzBalanced => "nnz",
+            Split::EvenUnits => "even",
+        }
+    }
+
+    /// Inverse of [`Split::name`].
+    pub fn from_name(s: &str) -> Option<Split> {
+        Split::ALL.into_iter().find(|sp| sp.name() == s)
+    }
+
+    /// Class index in [`Split::ALL`] (predictor label).
+    pub fn class(self) -> usize {
+        match self {
+            Split::NnzBalanced => 0,
+            Split::EvenUnits => 1,
+        }
+    }
+
+    /// Inverse of [`Split::class`].
+    pub fn from_class(c: usize) -> Option<Split> {
+        Split::ALL.get(c).copied()
+    }
+}
+
+/// Optional per-call cap on pool parallelism. Encoded as `0` (= no cap) or
+/// the cap value in cache JSON and the env override.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ThreadCap {
+    /// Use the pool's full thread budget.
+    Auto,
+    /// Use at most this many executors (≥ 1; a cap of 1 runs the kernel on
+    /// the pool's inline serial path).
+    Cap(usize),
+}
+
+impl ThreadCap {
+    /// Executors to use given the pool's `avail` threads (always ≥ 1).
+    #[inline]
+    pub fn apply(self, avail: usize) -> usize {
+        match self {
+            ThreadCap::Auto => avail.max(1),
+            ThreadCap::Cap(c) => avail.max(1).min(c.max(1)),
+        }
+    }
+
+    /// JSON/env encoding: 0 = auto, otherwise the cap.
+    pub fn encode(self) -> usize {
+        match self {
+            ThreadCap::Auto => 0,
+            ThreadCap::Cap(c) => c.max(1),
+        }
+    }
+
+    /// Inverse of [`ThreadCap::encode`].
+    pub fn decode(v: usize) -> ThreadCap {
+        if v == 0 {
+            ThreadCap::Auto
+        } else {
+            ThreadCap::Cap(v)
+        }
+    }
+
+    /// Binary class index for the predictor: 0 = auto, 1 = capped-serial.
+    pub fn class(self) -> usize {
+        match self {
+            ThreadCap::Auto => 0,
+            ThreadCap::Cap(_) => 1,
+        }
+    }
+
+    /// Inverse of [`ThreadCap::class`] (the capped class decodes to 1, the
+    /// only cap the candidate set uses).
+    pub fn from_class(c: usize) -> Option<ThreadCap> {
+        match c {
+            0 => Some(ThreadCap::Auto),
+            1 => Some(ThreadCap::Cap(1)),
+            _ => None,
+        }
+    }
+}
+
+/// A complete kernel schedule: (tile width, split rule, thread cap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    pub tile: Tile,
+    pub split: Split,
+    pub threads: ThreadCap,
+}
+
+impl Default for Schedule {
+    /// The pre-schedule kernel behavior, bit-for-bit: 16-lane gather tiles,
+    /// nnz-balanced splits, full pool parallelism.
+    fn default() -> Schedule {
+        Schedule {
+            tile: Tile::T16,
+            split: Split::NnzBalanced,
+            threads: ThreadCap::Auto,
+        }
+    }
+}
+
+impl Schedule {
+    /// The measured-autotune / bench candidate set (DESIGN.md
+    /// §Schedule-Prediction): the tuned default, a narrow and a wide tile
+    /// for the feature-width extremes, and a serial even-split candidate
+    /// that wins on tiny matrices where pool dispatch overhead dominates.
+    pub const CANDIDATES: [Schedule; 4] = [
+        Schedule { tile: Tile::T16, split: Split::NnzBalanced, threads: ThreadCap::Auto },
+        Schedule { tile: Tile::T4, split: Split::NnzBalanced, threads: ThreadCap::Auto },
+        Schedule { tile: Tile::T32, split: Split::NnzBalanced, threads: ThreadCap::Auto },
+        Schedule { tile: Tile::T16, split: Split::EvenUnits, threads: ThreadCap::Cap(1) },
+    ];
+
+    /// Task count a kernel should hand the pool for `units` source units:
+    /// the capped thread budget, never more tasks than units (or fewer than
+    /// one).
+    #[inline]
+    pub fn tasks_for(self, units: usize) -> usize {
+        self.threads.apply(crate::util::parallel::num_threads()).min(units.max(1))
+    }
+
+    /// Canonical textual form, e.g. `t16/nnz/auto` or `t8/even/1` — used in
+    /// bench keys, logs and the `GNN_SPMM_SCHEDULE` override.
+    pub fn label(self) -> String {
+        let threads = match self.threads {
+            ThreadCap::Auto => "auto".to_string(),
+            ThreadCap::Cap(c) => c.to_string(),
+        };
+        format!("t{}/{}/{}", self.tile.lanes(), self.split.name(), threads)
+    }
+
+    /// Parse the [`Schedule::label`] form. `None` on any malformed field.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let mut parts = s.trim().split('/');
+        let tile = parts.next()?.strip_prefix('t')?.parse::<usize>().ok()?;
+        let tile = Tile::from_lanes(tile)?;
+        let split = Split::from_name(parts.next()?)?;
+        let threads = match parts.next()? {
+            "auto" => ThreadCap::Auto,
+            n => ThreadCap::Cap(n.parse::<usize>().ok().filter(|&c| c >= 1)?),
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(Schedule { tile, split, threads })
+    }
+
+    /// The process-wide default schedule: the `GNN_SPMM_SCHEDULE` override
+    /// if set and well-formed, else [`Schedule::default`]. Resolved exactly
+    /// once (like the pool's thread count); every unscheduled
+    /// `spmm_into`/`spmm_t_into` entry point routes through this, so the CI
+    /// override exercises each kernel variant under the full test suite.
+    pub fn effective() -> Schedule {
+        static OVERRIDE: OnceLock<Option<Schedule>> = OnceLock::new();
+        OVERRIDE
+            .get_or_init(|| {
+                let raw = std::env::var("GNN_SPMM_SCHEDULE").ok()?;
+                match Schedule::parse(&raw) {
+                    Some(s) => Some(s),
+                    None => {
+                        eprintln!(
+                            "warning: ignoring malformed GNN_SPMM_SCHEDULE={raw:?} \
+                             (expected e.g. t16/nnz/auto)"
+                        );
+                        None
+                    }
+                }
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_pre_schedule_behavior() {
+        let s = Schedule::default();
+        assert_eq!(s.tile, Tile::T16);
+        assert_eq!(s.split, Split::NnzBalanced);
+        assert_eq!(s.threads, ThreadCap::Auto);
+        assert_eq!(s, Schedule::CANDIDATES[0]);
+    }
+
+    #[test]
+    fn label_parse_round_trips_every_candidate() {
+        for s in Schedule::CANDIDATES {
+            assert_eq!(Schedule::parse(&s.label()), Some(s), "{}", s.label());
+        }
+        // Explicit thread caps survive too.
+        let capped = Schedule {
+            tile: Tile::T8,
+            split: Split::EvenUnits,
+            threads: ThreadCap::Cap(3),
+        };
+        assert_eq!(capped.label(), "t8/even/3");
+        assert_eq!(Schedule::parse("t8/even/3"), Some(capped));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "t16", "t16/nnz", "t5/nnz/auto", "16/nnz/auto", "t16/fancy/auto",
+            "t16/nnz/0", "t16/nnz/-1", "t16/nnz/auto/extra", "t16/nnz/fast",
+        ] {
+            assert!(Schedule::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn class_round_trips() {
+        for t in Tile::ALL {
+            assert_eq!(Tile::from_class(t.class()), Some(t));
+            assert_eq!(Tile::from_lanes(t.lanes()), Some(t));
+        }
+        for sp in Split::ALL {
+            assert_eq!(Split::from_class(sp.class()), Some(sp));
+            assert_eq!(Split::from_name(sp.name()), Some(sp));
+        }
+        assert_eq!(ThreadCap::from_class(ThreadCap::Auto.class()), Some(ThreadCap::Auto));
+        assert_eq!(ThreadCap::decode(ThreadCap::Cap(2).encode()), ThreadCap::Cap(2));
+        assert_eq!(ThreadCap::decode(0), ThreadCap::Auto);
+    }
+
+    #[test]
+    fn thread_cap_applies() {
+        assert_eq!(ThreadCap::Auto.apply(8), 8);
+        assert_eq!(ThreadCap::Cap(2).apply(8), 2);
+        assert_eq!(ThreadCap::Cap(16).apply(8), 8);
+        assert_eq!(ThreadCap::Cap(1).apply(0), 1);
+        assert_eq!(ThreadCap::Auto.apply(0), 1);
+    }
+
+    #[test]
+    fn candidates_cover_every_output() {
+        // The autotuner can only ever pick what's in the candidate set; make
+        // sure each predicted output dimension has at least two candidate
+        // values so the multi-output heads have something to learn.
+        let tiles: std::collections::HashSet<_> =
+            Schedule::CANDIDATES.iter().map(|s| s.tile).collect();
+        let splits: std::collections::HashSet<_> =
+            Schedule::CANDIDATES.iter().map(|s| s.split).collect();
+        let caps: std::collections::HashSet<_> =
+            Schedule::CANDIDATES.iter().map(|s| s.threads.class()).collect();
+        assert!(tiles.len() >= 3);
+        assert_eq!(splits.len(), 2);
+        assert_eq!(caps.len(), 2);
+    }
+}

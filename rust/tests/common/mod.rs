@@ -3,7 +3,7 @@
 //! pinned binaries (`pool_threads1.rs`, `pool_threads4.rs`) include this via
 //! `mod common;`.
 
-use gnn_spmm::sparse::{Coo, SparseMatrix, ALL_FORMATS};
+use gnn_spmm::sparse::{Coo, Schedule, SparseMatrix, Split, ThreadCap, Tile, ALL_FORMATS};
 use gnn_spmm::tensor::Matrix;
 use gnn_spmm::util::rng::Rng;
 
@@ -63,6 +63,52 @@ pub fn check_formats_vs_dense() {
                 "{} spmm_t_into ({n},{m},{d})",
                 fmt.name()
             );
+        }
+    }
+}
+
+/// Every (format × tile × split × cap) kernel variant against the dense
+/// reference under whatever thread pin the including binary set: the full
+/// schedule space must agree with dense math regardless of how many pool
+/// workers exist. Hub-skewed inputs, stale output buffers, widths spanning
+/// the sub-tile fallback through tile + remainder.
+pub fn check_schedules_vs_dense() {
+    let mut rng = Rng::new(0x5EED_F00D);
+    for &(n, m, d) in &[(33usize, 47usize, 5usize), (64, 64, 16), (80, 70, 40)] {
+        let coo = skewed_coo(&mut rng, n, m);
+        let dense = coo.to_dense();
+        let x = Matrix::rand(m, d, &mut rng);
+        let xt = Matrix::rand(n, d, &mut rng);
+        let want = dense.matmul(&x);
+        let want_t = dense.transpose().matmul(&xt);
+        let base = SparseMatrix::Coo(coo);
+        for &fmt in &ALL_FORMATS {
+            let Ok(mm) = base.convert(fmt) else {
+                continue; // DIA over budget on scattered patterns
+            };
+            for tile in Tile::ALL {
+                for split in Split::ALL {
+                    for threads in [ThreadCap::Auto, ThreadCap::Cap(1), ThreadCap::Cap(3)] {
+                        let sched = Schedule { tile, split, threads };
+                        let mut out = Matrix::full(n, d, 123.0);
+                        mm.spmm_into_with(&x, &mut out, sched);
+                        assert!(
+                            out.max_abs_diff(&want) < 1e-3,
+                            "{} {} spmm_into ({n},{m},{d})",
+                            fmt.name(),
+                            sched.label()
+                        );
+                        let mut out_t = Matrix::full(m, d, -321.0);
+                        mm.spmm_t_into_with(&xt, &mut out_t, sched);
+                        assert!(
+                            out_t.max_abs_diff(&want_t) < 1e-3,
+                            "{} {} spmm_t_into ({n},{m},{d})",
+                            fmt.name(),
+                            sched.label()
+                        );
+                    }
+                }
+            }
         }
     }
 }

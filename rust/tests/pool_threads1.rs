@@ -12,3 +12,14 @@ fn formats_match_dense_single_thread() {
     assert_eq!(gnn_spmm::util::parallel::num_threads(), 1);
     common::check_formats_vs_dense();
 }
+
+/// The full schedule space under the single-thread pin: every
+/// (format × tile × split × cap) variant must agree with dense math when
+/// the pool has no workers at all — `tasks_for` collapses every split to
+/// one span and the serial fallback runs the monomorphized tile kernels.
+#[test]
+fn schedule_space_matches_dense_single_thread() {
+    std::env::set_var("GNN_SPMM_THREADS", "1");
+    assert_eq!(gnn_spmm::util::parallel::num_threads(), 1);
+    common::check_schedules_vs_dense();
+}

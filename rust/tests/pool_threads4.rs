@@ -12,3 +12,13 @@ fn formats_match_dense_four_threads() {
     assert_eq!(gnn_spmm::util::parallel::num_threads(), 4);
     common::check_formats_vs_dense();
 }
+
+/// The full schedule space under pooled dispatch: thread caps below, at and
+/// above the pin (Cap(1) serial, Cap(3) partial, Auto = all 4) all agree
+/// with dense math through the weighted-span and scatter-reduce paths.
+#[test]
+fn schedule_space_matches_dense_four_threads() {
+    std::env::set_var("GNN_SPMM_THREADS", "4");
+    assert_eq!(gnn_spmm::util::parallel::num_threads(), 4);
+    common::check_schedules_vs_dense();
+}
