@@ -1,8 +1,30 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, build and the tier-1 test suite.
-# Usage: ./ci.sh  (from the repo root; cargo required)
+# CI gate, two tiers:
+#   tier-0 — the invariant lint (DESIGN.md §Static-Analysis), via the
+#            stdlib-only Python mirror. Runs in EVERY container, toolchain
+#            or not, and gates everything else.
+#   tier-1 — formatting, clippy, build, the full test suite, the example
+#            smokes and the three bench baselines. Skipped (loudly) when
+#            no cargo toolchain is present.
+# Usage: ./ci.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+echo "== tier-0: invariant lint (python mirror, self-test + deny) =="
+python3 tools/lint.py --self-test
+python3 tools/lint.py --deny
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "cargo not found: tier-0 lint gate passed, skipping toolchain tiers"
+  echo "CI OK (tier-0 only)"
+  exit 0
+fi
+
+# Same spec, same fixtures, second interpreter: the Rust runner must agree
+# with the Python mirror before anything heavier runs.
+echo "== tier-0: invariant lint (rust runner, self-test + deny) =="
+cargo run -q -p lint -- --self-test
+cargo run -q -p lint -- --deny
 
 echo "== cargo fmt --check =="
 cargo fmt --check
@@ -104,5 +126,15 @@ for field in shed expired restarts panics degraded; do
   grep -q "\"$field\"" "$SERVE_OUT" \
     || { echo "fault smoke: $SERVE_OUT missing $field"; exit 1; }
 done
+
+# Bench baselines (EXPERIMENTS.md §Perf): the three perf trajectories —
+# kernel layer (BENCH_spmm.json), mini-batch training (BENCH_minibatch.json)
+# and serving (BENCH_serve.json). Each bench self-compares against the
+# previous JSON at its output path, so running them in CI keeps the
+# trajectory files current.
+echo "== bench baselines: perf_hotpath / bench_minibatch / bench_serve =="
+cargo bench --bench perf_hotpath
+cargo bench --bench bench_minibatch
+cargo bench --bench bench_serve
 
 echo "CI OK"

@@ -1,0 +1,10 @@
+//! Negative fixture: nothing in this file may fire any rule.
+//! Vec::new, .lock().unwrap(), unsafe, Ordering::Relaxed — comments are
+//! invisible to pattern rules, and so are string-literal contents.
+
+pub fn clean() -> String {
+    let s = "Vec::new() and .lock().unwrap() and unsafe and Ordering::SeqCst";
+    let r = r#"panic!("even raw strings may hold Ordering::Relaxed")"#;
+    let joined = [s, r].join(" ");
+    joined
+}

@@ -1,0 +1,28 @@
+//! Exhaustiveness drift fixture, target side: the match arm list drifted
+//! (no Cbm), while the length-pinned ALL const kept up.
+
+use super::drift_source::Format;
+
+pub fn name(f: &Format) -> &'static str {
+    match f {
+        Format::Coo => "coo",
+        Format::Csr => "csr",
+        Format::Csc => "csc",
+        Format::Dia => "dia",
+        Format::Bsr => "bsr",
+        Format::Dok => "dok",
+        Format::Lil => "lil",
+        _ => "other",
+    }
+}
+
+pub const ALL: [&str; 8] = [
+    "Format::Coo",
+    "Format::Csr",
+    "Format::Csc",
+    "Format::Dia",
+    "Format::Bsr",
+    "Format::Dok",
+    "Format::Lil",
+    "Format::Cbm",
+];

@@ -1,0 +1,13 @@
+//! Exhaustiveness drift fixture, source side: 8 variants (the 8th, Cbm, is
+//! deliberately missing from the dispatch match in drift_dispatch.rs).
+
+pub enum Format {
+    Coo,
+    Csr,
+    Csc,
+    Dia,
+    Bsr,
+    Dok,
+    Lil,
+    Cbm,
+}

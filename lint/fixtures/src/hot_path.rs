@@ -1,0 +1,20 @@
+//! hot-path-alloc fixture: allocation inside a marked span fires; the same
+//! token outside a span, inside a string literal, or in a comment does not.
+
+pub fn cold() {
+    let v: Vec<f32> = Vec::new(); // outside any span: no violation
+    drop(v);
+}
+
+// lint: begin(hot-path)
+pub fn kernel(out: &mut [f32]) {
+    let bad: Vec<f32> = Vec::new();
+    let worse: Vec<f32> = out.iter().copied().collect();
+    let msg = "Vec::new inside a string literal is fine";
+    // Box::new in a comment is fine too.
+    let range = 0..out.len();
+    let _ok = range.clone();
+    let sneaky = vec![0.0f32; 4]; // lint: allow(hot-path-alloc) -- fixture: justified scratch buffer
+    drop((bad, worse, msg, sneaky));
+}
+// lint: end(hot-path)

@@ -1,0 +1,20 @@
+//! lock-discipline fixture: raw lock + unwrap/expect fires; the
+//! poison-recovering form and suppressed sites do not.
+
+use std::sync::{Mutex, RwLock};
+
+pub fn bad(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+pub fn also_bad(l: &RwLock<u32>) -> u32 {
+    *l.read().expect("poisoned")
+}
+
+pub fn fine(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+pub fn allowed(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // lint: allow(lock-discipline) -- fixture: intentional raw lock site
+}

@@ -1,0 +1,14 @@
+//! Directive-hygiene fixture: every malformed or stale directive below is
+//! itself a violation.
+
+// lint: begin(hot-path)
+pub fn unclosed() {}
+
+// lint: end(request-path)
+
+pub fn malformed() {
+    let x = 1; // lint: allow(lock-discipline)
+    let y = 2; // lint: allow(no-such-rule) -- fixture: names an unknown rule
+    let z = 3; // lint: allow(lock-discipline) -- fixture: suppresses nothing, stale
+    drop((x, y, z));
+}

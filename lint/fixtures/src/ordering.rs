@@ -1,0 +1,25 @@
+//! atomic-ordering-audit fixture: a bare Ordering site fires; `ord:` on the
+//! same line or in the block above justifies; a comment-line allow covers
+//! the next line.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub static C: AtomicU64 = AtomicU64::new(0);
+
+pub fn bare() -> u64 {
+    C.load(Ordering::Relaxed)
+}
+
+pub fn trailing() -> u64 {
+    C.load(Ordering::Acquire) // ord: fixture — pairs with a Release store
+}
+
+pub fn above() {
+    // ord: fixture — justification in the comment block above.
+    C.store(1, Ordering::Release);
+}
+
+pub fn next_line_allow() -> u64 {
+    // lint: allow(atomic-ordering-audit) -- fixture: allow on a comment line covers the next line
+    C.load(Ordering::SeqCst)
+}

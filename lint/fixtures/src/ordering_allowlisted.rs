@@ -1,0 +1,18 @@
+//! Allowlisted-file fixture for atomic-ordering-audit: the three sites
+//! below are counted as allowlisted, never flagged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub static N: AtomicU64 = AtomicU64::new(0);
+
+pub fn tick() {
+    N.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn read() -> u64 {
+    N.load(Ordering::Relaxed)
+}
+
+pub fn reset() {
+    N.store(0, Ordering::SeqCst);
+}

@@ -1,0 +1,19 @@
+//! panic-freedom fixture: panicking constructs fire only inside the marked
+//! request-path span.
+
+pub fn setup(xs: &[u32]) -> u32 {
+    xs[0] + xs.last().copied().unwrap() // outside the span: no violation
+}
+
+// lint: begin(request-path)
+pub fn handle(xs: &[u32], i: usize) -> u32 {
+    let a = xs[i];
+    let b = xs.first().copied().unwrap();
+    if i > xs.len() {
+        panic!("out of range");
+    }
+    let c = xs.get(1).copied().unwrap_or(0);
+    let d = xs.get(2).copied().expect("nonempty"); // lint: allow(panic-freedom) -- fixture: budgeted assert
+    a + b + c + d
+}
+// lint: end(request-path)

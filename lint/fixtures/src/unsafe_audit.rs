@@ -1,0 +1,20 @@
+//! unsafe-audit fixture: bare `unsafe` fires; a SAFETY comment on the same
+//! line or in the contiguous comment block directly above justifies it.
+
+pub fn naked(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn trailing(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: fixture — caller guarantees p is valid
+}
+
+pub fn block_above(p: *const u8) -> u8 {
+    // SAFETY: fixture — justified by this comment block
+    // spanning two lines directly above the unsafe site.
+    unsafe { *p }
+}
+
+pub fn suppressed(p: *const u8) -> u8 {
+    unsafe { *p } // lint: allow(unsafe-audit) -- fixture: suppression instead of annotation
+}

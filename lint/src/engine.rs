@@ -1,0 +1,784 @@
+//! Rule interpreter — the Rust port of the engine in `tools/lint.py`.
+//!
+//! Shared semantics (kept in lock-step with the Python mirror; the fixture
+//! corpus under `lint/fixtures/` asserts both runners produce identical
+//! (file, line, rule) triples and suppression counts):
+//!
+//! * `forbid-pattern` — regex over the `code` view, optionally restricted
+//!   to `// lint: begin/end(<marker>)` spans, with `except_pattern`
+//!   match-span containment; at most one violation per line.
+//! * `require-annotation` — every pattern site needs the annotation in the
+//!   same-line comment or the contiguous comment block directly above;
+//!   `allow_paths` files count sites instead of reporting them.
+//! * `exhaustive` — tokens from a literal list or a capture-group regex
+//!   over a source region must all appear (via a `{token}`/`{TOKEN}`
+//!   template) in every target region, searched in the `full` view.
+//! * Directive hygiene — unbalanced markers, malformed allows, unknown
+//!   rule names, and allows that suppressed nothing are violations too.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::json::Json;
+use crate::lexer::{lex_plain, lex_rust, Lexed};
+use crate::regex::Regex;
+
+pub const RULE_MARKER_SYNTAX: &str = "lint-marker-syntax";
+pub const RULE_ALLOW_SYNTAX: &str = "lint-allow-syntax";
+pub const RULE_UNKNOWN_RULE: &str = "lint-unknown-rule";
+pub const RULE_UNUSED_ALLOW: &str = "lint-unused-allow";
+
+const SKIP_DIRS: [&str; 4] = [".git", "target", "__pycache__", ".claude"];
+
+/// Translate a path glob to a regex over '/'-separated relative paths.
+/// `**/` crosses directories (including zero), `*` and `?` stay within one
+/// segment. Identical translation in tools/lint.py.
+pub fn glob_to_regex(glob: &str) -> String {
+    let chars: Vec<char> = glob.chars().collect();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '*' {
+            if chars[i..].starts_with(&['*', '*', '/']) {
+                out.push_str("(?:.*/)?");
+                i += 3;
+            } else if chars[i..].starts_with(&['*', '*']) {
+                out.push_str(".*");
+                i += 2;
+            } else {
+                out.push_str("[^/]*");
+                i += 1;
+            }
+        } else if c == '?' {
+            out.push_str("[^/]");
+            i += 1;
+        } else if ".^$+(){}[]|\\".contains(c) {
+            out.push('\\');
+            out.push(c);
+            i += 1;
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+pub struct Allow {
+    pub src_line: usize,
+    pub applies_line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub used: Cell<bool>,
+}
+
+pub struct SourceFile {
+    pub rel: String,
+    pub code: Vec<String>,
+    pub full: Vec<String>,
+    pub comment: Vec<String>,
+    pub is_rust: bool,
+    spans: HashMap<String, Vec<(usize, usize)>>, // marker -> inclusive line ranges
+    pub allows: Vec<Allow>,
+    pub directive_violations: Vec<(usize, &'static str, String)>,
+}
+
+struct DirectiveRes {
+    allow: Regex,
+    allow_any: Regex,
+    begin: Regex,
+    end: Regex,
+}
+
+impl DirectiveRes {
+    fn new() -> DirectiveRes {
+        DirectiveRes {
+            allow: Regex::new(r"lint:\s*allow\(([A-Za-z0-9_,\s-]+)\)\s*--\s*(\S.*)")
+                .expect("built-in allow regex"),
+            allow_any: Regex::new(r"lint:\s*allow").expect("built-in allow-any regex"),
+            begin: Regex::new(r"lint:\s*begin\(([A-Za-z0-9_-]+)\)").expect("built-in begin regex"),
+            end: Regex::new(r"lint:\s*end\(([A-Za-z0-9_-]+)\)").expect("built-in end regex"),
+        }
+    }
+}
+
+impl SourceFile {
+    pub fn new(rel: String, lx: Lexed, is_rust: bool) -> SourceFile {
+        let mut sf = SourceFile {
+            rel,
+            code: lx.code,
+            full: lx.full,
+            comment: lx.comment,
+            is_rust,
+            spans: HashMap::new(),
+            allows: Vec::new(),
+            directive_violations: Vec::new(),
+        };
+        if sf.is_rust {
+            sf.scan_directives();
+        }
+        sf
+    }
+
+    fn scan_directives(&mut self) {
+        let res = DirectiveRes::new();
+        let mut open_spans: BTreeMap<String, usize> = BTreeMap::new();
+        for ln in 1..=self.comment.len() {
+            let com = self.comment[ln - 1].clone();
+            if com.trim().is_empty() {
+                continue;
+            }
+            if let Some(m) = res.begin.search(&com) {
+                let name = m.groups[0].clone().unwrap_or_default();
+                if open_spans.contains_key(&name) {
+                    self.directive_violations.push((
+                        ln,
+                        RULE_MARKER_SYNTAX,
+                        format!("begin({name}) while span already open"),
+                    ));
+                } else {
+                    open_spans.insert(name, ln);
+                }
+            }
+            if let Some(m) = res.end.search(&com) {
+                let name = m.groups[0].clone().unwrap_or_default();
+                match open_spans.remove(&name) {
+                    None => self.directive_violations.push((
+                        ln,
+                        RULE_MARKER_SYNTAX,
+                        format!("end({name}) without begin"),
+                    )),
+                    Some(start) => {
+                        self.spans.entry(name).or_default().push((start, ln));
+                    }
+                }
+            }
+            if res.allow_any.is_match(&com) {
+                match res.allow.search(&com) {
+                    None => self.directive_violations.push((
+                        ln,
+                        RULE_ALLOW_SYNTAX,
+                        "malformed allow: expected `lint: allow(<rule>) -- <reason>`".to_string(),
+                    )),
+                    Some(m) => {
+                        let rules: Vec<String> = m.groups[0]
+                            .as_deref()
+                            .unwrap_or("")
+                            .split(',')
+                            .map(str::trim)
+                            .filter(|r| !r.is_empty())
+                            .map(str::to_string)
+                            .collect();
+                        let comment_only = self.code[ln - 1].trim().is_empty();
+                        let applies = if comment_only { ln + 1 } else { ln };
+                        self.allows.push(Allow {
+                            src_line: ln,
+                            applies_line: applies,
+                            rules,
+                            reason: m.groups[1].as_deref().unwrap_or("").trim().to_string(),
+                            used: Cell::new(false),
+                        });
+                    }
+                }
+            }
+        }
+        for (name, start) in open_spans {
+            self.directive_violations.push((
+                start,
+                RULE_MARKER_SYNTAX,
+                format!("begin({name}) never closed"),
+            ));
+        }
+    }
+
+    pub fn in_span(&self, marker: &str, line: usize) -> bool {
+        self.spans
+            .get(marker)
+            .is_some_and(|ranges| ranges.iter().any(|&(s, e)| s <= line && line <= e))
+    }
+
+    pub fn try_allow(&self, rule_id: &str, line: usize) -> Option<&Allow> {
+        for a in &self.allows {
+            if a.applies_line == line && a.rules.iter().any(|r| r == rule_id) {
+                a.used.set(true);
+                return Some(a);
+            }
+        }
+        None
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rel: String,
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn key(&self) -> (&str, usize, &str) {
+        (&self.rel, self.line, &self.rule)
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.rel, self.line, self.rule, self.msg)
+    }
+}
+
+pub struct Engine {
+    root: PathBuf,
+    rules: Vec<Json>,
+    known_ids: HashSet<String>,
+    pub files: BTreeMap<String, SourceFile>,
+    pub violations: Vec<Violation>,
+    pub suppressed: BTreeMap<String, Vec<(String, usize, String)>>,
+    pub allowlisted: BTreeMap<String, usize>,
+}
+
+impl Engine {
+    pub fn new(root: &Path, spec: &Json) -> Result<Engine, String> {
+        let rules: Vec<Json> = spec
+            .get("rules")
+            .and_then(Json::as_arr)
+            .ok_or("lint: spec has no `rules` array")?
+            .to_vec();
+        let mut known_ids: HashSet<String> = rules
+            .iter()
+            .filter_map(|r| r.str_field("id").map(str::to_string))
+            .collect();
+        for built_in in [RULE_MARKER_SYNTAX, RULE_ALLOW_SYNTAX, RULE_UNKNOWN_RULE, RULE_UNUSED_ALLOW]
+        {
+            known_ids.insert(built_in.to_string());
+        }
+        Ok(Engine {
+            root: root.to_path_buf(),
+            rules,
+            known_ids,
+            files: BTreeMap::new(),
+            violations: Vec::new(),
+            suppressed: BTreeMap::new(),
+            allowlisted: BTreeMap::new(),
+        })
+    }
+
+    // -- file loading -------------------------------------------------------
+
+    fn walk(&self) -> Result<Vec<String>, String> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(d) = stack.pop() {
+            let rd = fs::read_dir(&d).map_err(|e| format!("lint: cannot list {}: {e}", d.display()))?;
+            for entry in rd.flatten() {
+                let p = entry.path();
+                if p.is_dir() {
+                    let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                    if !SKIP_DIRS.contains(&name) {
+                        stack.push(p);
+                    }
+                } else if p.is_file() {
+                    let rel = p
+                        .strip_prefix(&self.root)
+                        .map_err(|e| e.to_string())?
+                        .to_string_lossy()
+                        .replace('\\', "/");
+                    out.push(rel);
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn load(&mut self, rel: &str) -> Result<(), String> {
+        if self.files.contains_key(rel) {
+            return Ok(());
+        }
+        let bytes = fs::read(self.root.join(rel))
+            .map_err(|e| format!("lint: cannot read {rel}: {e}"))?;
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let is_rust = rel.ends_with(".rs");
+        let lx = if is_rust { lex_rust(&text) } else { lex_plain(&text) };
+        self.files.insert(rel.to_string(), SourceFile::new(rel.to_string(), lx, is_rust));
+        Ok(())
+    }
+
+    fn select(&self, globs: &[String], all_files: &[String]) -> Result<Vec<String>, String> {
+        let mut regexes = Vec::new();
+        for g in globs {
+            regexes.push(Regex::new(&format!("^(?:{})$", glob_to_regex(g)))?);
+        }
+        Ok(all_files
+            .iter()
+            .filter(|f| regexes.iter().any(|rx| rx.is_match(f)))
+            .cloned()
+            .collect())
+    }
+
+    // -- main entry ---------------------------------------------------------
+
+    pub fn run(&mut self) -> Result<(), String> {
+        let all_files = self.walk()?;
+        let rules = self.rules.clone();
+        for rule in &rules {
+            let kind = rule.str_field("kind").ok_or("lint: rule missing `kind`")?;
+            match kind {
+                "forbid-pattern" => self.run_forbid(rule, &all_files)?,
+                "require-annotation" => self.run_annotation(rule, &all_files)?,
+                "exhaustive" => self.run_exhaustive(rule)?,
+                other => return Err(format!("lint: unknown rule kind `{other}` in spec")),
+            }
+        }
+        self.finish_directives();
+        self.violations.sort_by(|a, b| a.key().cmp(&b.key()));
+        Ok(())
+    }
+
+    /// Route a hit through the file's allows: suppressed or reported.
+    fn emit(
+        sf: &SourceFile,
+        rule_id: &str,
+        line: usize,
+        msg: String,
+        violations: &mut Vec<Violation>,
+        suppressed: &mut BTreeMap<String, Vec<(String, usize, String)>>,
+    ) {
+        match sf.try_allow(rule_id, line) {
+            Some(a) => suppressed
+                .entry(rule_id.to_string())
+                .or_default()
+                .push((sf.rel.clone(), line, a.reason.clone())),
+            None => violations.push(Violation {
+                rel: sf.rel.clone(),
+                line,
+                rule: rule_id.to_string(),
+                msg,
+            }),
+        }
+    }
+
+    fn run_forbid(&mut self, rule: &Json, all_files: &[String]) -> Result<(), String> {
+        let rule_id = rule.str_field("id").ok_or("lint: rule missing `id`")?.to_string();
+        let pat = Regex::new(rule.str_field("pattern").ok_or("lint: forbid rule missing `pattern`")?)?;
+        let exc = match rule.str_field("except_pattern") {
+            Some(p) => Some(Regex::new(p)?),
+            None => None,
+        };
+        let marker = rule.str_field("within_marker").map(str::to_string);
+        for rel in self.select(&rule.str_list("paths"), all_files)? {
+            self.load(&rel)?;
+            let sf = self.files.get(&rel).expect("just loaded");
+            for ln in 1..=sf.code.len() {
+                if let Some(m) = &marker {
+                    if !sf.in_span(m, ln) {
+                        continue;
+                    }
+                }
+                let codeline = &sf.code[ln - 1];
+                let exc_spans: Vec<(usize, usize)> = match &exc {
+                    Some(e) => e.find_iter(codeline).iter().map(|m| (m.start, m.end)).collect(),
+                    None => Vec::new(),
+                };
+                for m in pat.find_iter(codeline) {
+                    if exc_spans.iter().any(|&(s2, e2)| s2 <= m.start && m.end <= e2) {
+                        continue;
+                    }
+                    Self::emit(
+                        sf,
+                        &rule_id,
+                        ln,
+                        format!("forbidden pattern `{}`", m.text.trim()),
+                        &mut self.violations,
+                        &mut self.suppressed,
+                    );
+                    break; // one violation per line
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run_annotation(&mut self, rule: &Json, all_files: &[String]) -> Result<(), String> {
+        let rule_id = rule.str_field("id").ok_or("lint: rule missing `id`")?.to_string();
+        let pat = Regex::new(rule.str_field("pattern").ok_or("lint: annotation rule missing `pattern`")?)?;
+        let annotation = rule
+            .str_field("annotation")
+            .ok_or("lint: annotation rule missing `annotation`")?
+            .to_string();
+        let ann = Regex::new(&annotation)?;
+        let allow_paths: HashSet<String> = rule.str_list("allow_paths").into_iter().collect();
+        for rel in self.select(&rule.str_list("paths"), all_files)? {
+            self.load(&rel)?;
+            let sf = self.files.get(&rel).expect("just loaded");
+            if allow_paths.contains(&rel) {
+                let sites: usize = sf.code.iter().map(|c| pat.find_iter(c).len()).sum();
+                if sites > 0 {
+                    *self.allowlisted.entry(rule_id.clone()).or_insert(0) += sites;
+                }
+                continue;
+            }
+            for ln in 1..=sf.code.len() {
+                let m = match pat.search(&sf.code[ln - 1]) {
+                    Some(m) => m,
+                    None => continue,
+                };
+                if ann.is_match(&sf.comment[ln - 1]) {
+                    continue;
+                }
+                // Walk the contiguous comment block directly above.
+                let mut justified = false;
+                let mut j = ln - 1;
+                while j >= 1
+                    && sf.code[j - 1].trim().is_empty()
+                    && !sf.comment[j - 1].trim().is_empty()
+                {
+                    if ann.is_match(&sf.comment[j - 1]) {
+                        justified = true;
+                        break;
+                    }
+                    j -= 1;
+                }
+                if !justified {
+                    Self::emit(
+                        sf,
+                        &rule_id,
+                        ln,
+                        format!("`{}` without `{}` justification", m.text, annotation),
+                        &mut self.violations,
+                        &mut self.suppressed,
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- exhaustive ---------------------------------------------------------
+
+    /// 1-based inclusive line range for a source/target region, or None if
+    /// the region_start never matches. Regions and needles match against
+    /// the `full` view so serialized field names stay visible.
+    fn region(sf: &SourceFile, target: &Json) -> Result<Option<(usize, usize)>, String> {
+        let start_re = match target.str_field("region_start") {
+            None => return Ok(Some((1, sf.full.len()))),
+            Some(s) => s,
+        };
+        let rx = Regex::new(start_re)?;
+        let mut start = None;
+        for ln in 1..=sf.full.len() {
+            if rx.is_match(&sf.full[ln - 1]) {
+                start = Some(ln);
+                break;
+            }
+        }
+        let start = match start {
+            None => return Ok(None),
+            Some(s) => s,
+        };
+        let mut end = sf.full.len();
+        if let Some(end_pat) = target.str_field("region_end") {
+            let rx_end = Regex::new(end_pat)?;
+            for ln in start..=sf.full.len() {
+                if rx_end.is_match(&sf.full[ln - 1]) {
+                    end = ln;
+                    break;
+                }
+            }
+        }
+        Ok(Some((start, end)))
+    }
+
+    fn run_exhaustive(&mut self, rule: &Json) -> Result<(), String> {
+        let rule_id = rule.str_field("id").ok_or("lint: rule missing `id`")?.to_string();
+        let src = rule.get("source").ok_or("lint: exhaustive rule missing `source`")?.clone();
+        let tokens: Vec<String> = if src.get("tokens").is_some() {
+            src.str_list("tokens")
+        } else {
+            let path = src
+                .str_field("path")
+                .ok_or("lint: exhaustive source missing `path`")?
+                .to_string();
+            self.load(&path)?;
+            let sf = self.files.get(&path).expect("just loaded");
+            let (start, end) = match Self::region(sf, &src)? {
+                None => {
+                    self.violations.push(Violation {
+                        rel: sf.rel.clone(),
+                        line: 1,
+                        rule: rule_id,
+                        msg: format!(
+                            "source region `{}` not found",
+                            src.str_field("region_start").unwrap_or("")
+                        ),
+                    });
+                    return Ok(());
+                }
+                Some(r) => r,
+            };
+            let tok_re = Regex::new(
+                src.str_field("token_pattern")
+                    .ok_or("lint: exhaustive source missing `token_pattern`")?,
+            )?;
+            let mut toks: Vec<String> = Vec::new();
+            for ln in start..=end {
+                if let Some(m) = tok_re.search(&sf.full[ln - 1]) {
+                    if let Some(g) = m.groups.first().and_then(|g| g.clone()) {
+                        if !toks.contains(&g) {
+                            toks.push(g);
+                        }
+                    }
+                }
+            }
+            if toks.is_empty() {
+                self.violations.push(Violation {
+                    rel: sf.rel.clone(),
+                    line: start,
+                    rule: rule_id,
+                    msg: "no source tokens extracted".to_string(),
+                });
+                return Ok(());
+            }
+            toks
+        };
+        let targets = rule
+            .get("targets")
+            .and_then(Json::as_arr)
+            .ok_or("lint: exhaustive rule missing `targets`")?
+            .to_vec();
+        for target in &targets {
+            let path = target
+                .str_field("path")
+                .ok_or("lint: exhaustive target missing `path`")?
+                .to_string();
+            let template = target
+                .str_field("template")
+                .ok_or("lint: exhaustive target missing `template`")?
+                .to_string();
+            self.load(&path)?;
+            let sf = self.files.get(&path).expect("just loaded");
+            let (start, end) = match Self::region(sf, target)? {
+                None => {
+                    self.violations.push(Violation {
+                        rel: sf.rel.clone(),
+                        line: 1,
+                        rule: rule_id.clone(),
+                        msg: format!(
+                            "target region `{}` not found",
+                            target.str_field("region_start").unwrap_or("")
+                        ),
+                    });
+                    continue;
+                }
+                Some(r) => r,
+            };
+            for tok in &tokens {
+                let needle = template
+                    .replace("{token}", tok)
+                    .replace("{TOKEN}", &tok.to_uppercase());
+                let found = (start..=end).any(|ln| sf.full[ln - 1].contains(&needle));
+                if !found {
+                    Self::emit(
+                        sf,
+                        &rule_id,
+                        start,
+                        format!("`{needle}` missing from target region (drifted from source list)"),
+                        &mut self.violations,
+                        &mut self.suppressed,
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- directive hygiene --------------------------------------------------
+
+    fn finish_directives(&mut self) {
+        for sf in self.files.values() {
+            for (ln, rule_id, msg) in &sf.directive_violations {
+                self.violations.push(Violation {
+                    rel: sf.rel.clone(),
+                    line: *ln,
+                    rule: (*rule_id).to_string(),
+                    msg: msg.clone(),
+                });
+            }
+            for a in &sf.allows {
+                let unknown: Vec<&String> =
+                    a.rules.iter().filter(|r| !self.known_ids.contains(*r)).collect();
+                for r in &unknown {
+                    self.violations.push(Violation {
+                        rel: sf.rel.clone(),
+                        line: a.src_line,
+                        rule: RULE_UNKNOWN_RULE.to_string(),
+                        msg: format!("allow names unknown rule `{r}`"),
+                    });
+                }
+                if !a.used.get() && unknown.is_empty() {
+                    self.violations.push(Violation {
+                        rel: sf.rel.clone(),
+                        line: a.src_line,
+                        rule: RULE_UNUSED_ALLOW.to_string(),
+                        msg: format!(
+                            "allow({}) suppressed nothing — stale?",
+                            a.rules.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // -- reporting ----------------------------------------------------------
+
+    pub fn n_rules(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn report(&self) {
+        for v in &self.violations {
+            println!("{v}");
+        }
+        let n_supp: usize = self.suppressed.values().map(Vec::len).sum();
+        let n_allow: usize = self.allowlisted.values().sum();
+        println!(
+            "lint: {} files, {} rules, {} violations, {} suppressed, {} allowlisted sites",
+            self.files.len(),
+            self.rules.len(),
+            self.violations.len(),
+            n_supp,
+            n_allow
+        );
+        for (rule_id, sites) in &self.suppressed {
+            for (rel, line, reason) in sites {
+                println!("  suppressed {rule_id} at {rel}:{line}: {reason}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-test against the fixture corpus
+// ---------------------------------------------------------------------------
+
+pub fn self_test(fixtures_dir: &Path) -> Result<bool, String> {
+    let read = |name: &str| -> Result<String, String> {
+        fs::read_to_string(fixtures_dir.join(name))
+            .map_err(|e| format!("lint: cannot read fixtures {name}: {e}"))
+    };
+    let spec = Json::parse(&read("rules.json")?)?;
+    let expected = Json::parse(&read("expected.json")?)?;
+    let mut eng = Engine::new(fixtures_dir, &spec)?;
+    eng.run()?;
+
+    let mut got: Vec<(String, usize, String)> = eng
+        .violations
+        .iter()
+        .map(|v| (v.rel.clone(), v.line, v.rule.clone()))
+        .collect();
+    got.sort();
+    let mut want: Vec<(String, usize, String)> = Vec::new();
+    for e in expected.get("violations").and_then(Json::as_arr).unwrap_or(&[]) {
+        want.push((
+            e.str_field("file").unwrap_or("").to_string(),
+            e.get("line").and_then(Json::as_usize).unwrap_or(0),
+            e.str_field("rule").unwrap_or("").to_string(),
+        ));
+    }
+    want.sort();
+
+    let mut ok = true;
+    for miss in want.iter().filter(|w| !got.contains(w)) {
+        println!("self-test: expected violation did not fire: {miss:?}");
+        ok = false;
+    }
+    for extra in got.iter().filter(|g| !want.contains(g)) {
+        println!("self-test: unexpected violation: {extra:?}");
+        ok = false;
+    }
+
+    let counts = |obj: Option<&Json>| -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        if let Some(Json::Obj(pairs)) = obj {
+            for (k, v) in pairs {
+                if let Some(n) = v.as_usize() {
+                    out.insert(k.clone(), n);
+                }
+            }
+        }
+        out
+    };
+    let got_supp: BTreeMap<String, usize> =
+        eng.suppressed.iter().map(|(k, v)| (k.clone(), v.len())).collect();
+    if got_supp != counts(expected.get("suppressed")) {
+        println!(
+            "self-test: suppression counts {got_supp:?} != expected {:?}",
+            counts(expected.get("suppressed"))
+        );
+        ok = false;
+    }
+    if eng.allowlisted != counts(expected.get("allowlisted")) {
+        println!(
+            "self-test: allowlisted counts {:?} != expected {:?}",
+            eng.allowlisted,
+            counts(expected.get("allowlisted"))
+        );
+        ok = false;
+    }
+    println!(
+        "self-test: {} expected violations, {} suppressions — {}",
+        want.len(),
+        got_supp.values().sum::<usize>(),
+        if ok { "OK" } else { "FAIL" }
+    );
+    Ok(ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_translation() {
+        assert_eq!(glob_to_regex("rust/src/sparse/*.rs"), "rust/src/sparse/[^/]*\\.rs");
+        assert_eq!(glob_to_regex("rust/src/**/*.rs"), "rust/src/(?:.*/)?[^/]*\\.rs");
+        assert_eq!(glob_to_regex("ci.sh"), "ci\\.sh");
+    }
+
+    #[test]
+    fn allow_parsing_and_span_tracking() {
+        let src = "\
+// lint: begin(hot)\n\
+let a = 1; // lint: allow(some-rule) -- a fine reason\n\
+// lint: allow(other-rule) -- covers the next line\n\
+let b = 2;\n\
+// lint: end(hot)\n";
+        let sf = SourceFile::new("x.rs".into(), lex_rust(src), true);
+        assert!(sf.directive_violations.is_empty());
+        assert!(sf.in_span("hot", 1) && sf.in_span("hot", 5));
+        assert!(!sf.in_span("hot", 6));
+        assert_eq!(sf.allows.len(), 2);
+        assert_eq!(sf.allows[0].applies_line, 2); // trailing: own line
+        assert_eq!(sf.allows[1].applies_line, 4); // comment-only: next line
+        assert!(sf.try_allow("some-rule", 2).is_some());
+        assert!(sf.try_allow("some-rule", 4).is_none());
+        assert!(sf.allows[0].used.get());
+    }
+
+    #[test]
+    fn unbalanced_markers_are_violations() {
+        let sf = SourceFile::new(
+            "y.rs".into(),
+            lex_rust("// lint: begin(a)\n// lint: end(b)\n"),
+            true,
+        );
+        let rules: Vec<&str> = sf.directive_violations.iter().map(|(_, r, _)| *r).collect();
+        assert_eq!(rules, vec![RULE_MARKER_SYNTAX, RULE_MARKER_SYNTAX]);
+    }
+}

@@ -1,0 +1,324 @@
+//! Comment/string-aware line lexer, mirroring `tools/lint.py::lex_rust`.
+//!
+//! Splits source into three column-preserving per-line views:
+//!
+//! * `code`    — code with string/char-literal *contents* blanked; what
+//!               forbid/annotation patterns match against, so a forbidden
+//!               token inside an error-message string cannot fire.
+//! * `full`    — code with literal contents intact; what exhaustive rules
+//!               search, so serialized field names like `"tile"` stay
+//!               visible.
+//! * `comment` — comment text only; where annotations (`SAFETY:`, `ord:`)
+//!               and `// lint:` directives live.
+//!
+//! Handles line comments, nested block comments, string literals with
+//! escapes and `\`-newline continuation, raw strings `r#"..."#` (any hash
+//! depth, optional `b` prefix), char literals including escapes, and
+//! lifetimes (a lone `'` stays code).
+
+pub struct Lexed {
+    pub code: Vec<String>,
+    pub full: Vec<String>,
+    pub comment: Vec<String>,
+}
+
+#[derive(PartialEq)]
+enum State {
+    Code,
+    Line,
+    Block,
+    Str,
+    RawStr,
+}
+
+/// Match a char literal at `i` (`chars[i] == '\''`), returning the index
+/// one past the closing quote. Mirrors the Python `'(\\[^\n']*|[^\\'\n])'`
+/// regex exactly, including its quirk on `'\''` (matches `'\'`, leaving
+/// the trailing quote to be lexed as a lifetime).
+fn char_lit_end(chars: &[char], i: usize) -> Option<usize> {
+    let n = chars.len();
+    match chars.get(i + 1) {
+        Some('\\') => {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' && chars[j] != '\'' {
+                j += 1;
+            }
+            if j < n && chars[j] == '\'' {
+                Some(j + 1)
+            } else {
+                None
+            }
+        }
+        Some(&c) if c != '\'' && c != '\n' => {
+            if i + 2 < n && chars[i + 2] == '\'' {
+                Some(i + 3)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Match a raw-string opener `b?r#*"` at `i`, returning (end index of the
+/// opener, hash count). Mirrors the Python `b?r(#*)"` anchored match.
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+pub fn lex_rust(text: &str) -> Lexed {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed { code: Vec::new(), full: Vec::new(), comment: Vec::new() };
+    let (mut code, mut full, mut com) = (String::new(), String::new(), String::new());
+    let mut state = State::Code;
+    let mut depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+
+    macro_rules! flush {
+        () => {{
+            out.code.push(std::mem::take(&mut code));
+            out.full.push(std::mem::take(&mut full));
+            out.comment.push(std::mem::take(&mut com));
+        }};
+    }
+    macro_rules! emit_code {
+        ($s:expr) => {{
+            for c in $s.chars() {
+                code.push(c);
+                full.push(c);
+                com.push(' ');
+            }
+        }};
+    }
+    macro_rules! emit_com {
+        ($s:expr) => {{
+            for c in $s.chars() {
+                com.push(c);
+                code.push(' ');
+                full.push(' ');
+            }
+        }};
+    }
+    macro_rules! emit_str {
+        ($s:expr) => {{
+            for c in $s.chars() {
+                full.push(c);
+                code.push(' ');
+                com.push(' ');
+            }
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            flush!();
+            if state == State::Line {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let nxt = chars.get(i + 1).copied();
+                if c == '/' && nxt == Some('/') {
+                    emit_com!("//");
+                    state = State::Line;
+                    i += 2;
+                } else if c == '/' && nxt == Some('*') {
+                    emit_com!("/*");
+                    state = State::Block;
+                    depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    emit_code!("\"");
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'b' || c == 'r' {
+                    if let Some((end, hashes)) = raw_str_open(&chars, i) {
+                        let opener: String = chars[i..end].iter().collect();
+                        emit_code!(opener);
+                        raw_hashes = hashes;
+                        state = State::RawStr;
+                        i = end;
+                    } else {
+                        emit_code!(c.to_string());
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if let Some(end) = char_lit_end(&chars, i) {
+                        let body: String = chars[i + 1..end - 1].iter().collect();
+                        emit_code!("'");
+                        emit_str!(body);
+                        emit_code!("'");
+                        i = end;
+                    } else {
+                        // lifetime
+                        emit_code!("'");
+                        i += 1;
+                    }
+                } else {
+                    emit_code!(c.to_string());
+                    i += 1;
+                }
+            }
+            State::Line => {
+                emit_com!(c.to_string());
+                i += 1;
+            }
+            State::Block => {
+                let nxt = chars.get(i + 1).copied();
+                if c == '*' && nxt == Some('/') {
+                    emit_com!("*/");
+                    depth -= 1;
+                    if depth == 0 {
+                        state = State::Code;
+                    }
+                    i += 2;
+                } else if c == '/' && nxt == Some('*') {
+                    emit_com!("/*");
+                    depth += 1;
+                    i += 2;
+                } else {
+                    emit_com!(c.to_string());
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    match chars.get(i + 1).copied() {
+                        None | Some('\n') => {
+                            emit_str!("\\");
+                            i += 1;
+                        }
+                        Some(nxt) => {
+                            emit_str!(format!("\\{nxt}"));
+                            i += 2;
+                        }
+                    }
+                } else if c == '"' {
+                    emit_code!("\"");
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    emit_str!(c.to_string());
+                    i += 1;
+                }
+            }
+            State::RawStr => {
+                let mut closer = String::from("\"");
+                for _ in 0..raw_hashes {
+                    closer.push('#');
+                }
+                let closes = chars[i..].iter().take(closer.chars().count()).collect::<String>() == closer;
+                if closes {
+                    let len = closer.chars().count();
+                    emit_code!(closer);
+                    state = State::Code;
+                    i += len;
+                } else {
+                    emit_str!(c.to_string());
+                    i += 1;
+                }
+            }
+        }
+    }
+    flush!();
+    if text.ends_with('\n') {
+        out.code.pop();
+        out.full.pop();
+        out.comment.pop();
+    }
+    out
+}
+
+/// Non-.rs files: every line is code (and full); no comment view.
+pub fn lex_plain(text: &str) -> Lexed {
+    let mut lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+    if text.ends_with('\n') {
+        lines.pop();
+    }
+    let comment = vec![String::new(); lines.len()];
+    Lexed { code: lines.clone(), full: lines, comment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_string_contents_in_code_view() {
+        let lx = lex_rust("let x = \"Vec::new()\"; // note\n");
+        assert!(!lx.code[0].contains("Vec::new"));
+        assert!(lx.full[0].contains("Vec::new"));
+        assert!(lx.comment[0].contains("note"));
+        assert!(!lx.code[0].contains("note"));
+        // Column preservation across all three views.
+        assert_eq!(lx.code[0].chars().count(), lx.full[0].chars().count());
+        assert_eq!(lx.code[0].chars().count(), lx.comment[0].chars().count());
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lx = lex_rust("a /* x /* y */ z */ b\n");
+        assert!(lx.code[0].contains('a'));
+        assert!(lx.code[0].contains('b'));
+        assert!(!lx.code[0].contains('y'));
+        assert!(lx.comment[0].contains('y'));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let lx = lex_rust("let c = ','; fn f<'a>(x: &'a str) {}\n");
+        assert!(!lx.code[0].contains(','));
+        assert!(lx.code[0].contains("'a"));
+        let src = concat!(r"let q = '\''; // escaped quote", "\n");
+        let quirk = lex_rust(src);
+        assert!(quirk.comment[0].contains("escaped quote"));
+    }
+
+    #[test]
+    fn raw_strings() {
+        let lx = lex_rust("let s = r#\"has // fake \"comment\"\"#; real();\n");
+        assert!(!lx.code[0].contains("fake"));
+        assert!(lx.full[0].contains("fake"));
+        assert!(lx.code[0].contains("real()"));
+        assert!(lx.comment[0].trim().is_empty());
+    }
+
+    #[test]
+    fn multiline_string_stays_string() {
+        let lx = lex_rust("let s = \"line one\nline // two\";\npanic!();\n");
+        assert!(!lx.code[1].contains("two"));
+        assert!(lx.comment[1].trim().is_empty());
+        assert!(lx.code[2].contains("panic!"));
+    }
+
+    #[test]
+    fn plain_files_have_no_comment_view() {
+        let lx = lex_plain("tile: 4 # not rust\n");
+        assert_eq!(lx.code[0], "tile: 4 # not rust");
+        assert_eq!(lx.full[0], lx.code[0]);
+        assert_eq!(lx.comment[0], "");
+    }
+}

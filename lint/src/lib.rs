@@ -1,0 +1,17 @@
+//! In-tree invariant linter — Rust runner (DESIGN.md §Static-Analysis).
+//!
+//! Interprets the declarative rule spec in `lint/rules.json` against the
+//! repo tree. The same spec is interpreted by the stdlib-only Python
+//! mirror (`tools/lint.py`), which runs even in containers without a
+//! toolchain; the two runners share the fixture corpus under
+//! `lint/fixtures/` so they cannot diverge silently.
+//!
+//! Dependency-free by design: a minimal JSON parser ([`json`]), a
+//! backtracking engine for the regex subset the spec is allowed to use
+//! ([`regex`]), a comment/string-aware line lexer ([`lexer`]), and the
+//! rule interpreter ([`engine`]).
+
+pub mod engine;
+pub mod json;
+pub mod lexer;
+pub mod regex;

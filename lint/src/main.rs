@@ -1,0 +1,88 @@
+//! CLI for the Rust lint runner. Mirrors `tools/lint.py`:
+//!
+//!   lint [--root <dir>] [--rules <spec.json>] [--deny] [--self-test]
+//!
+//! Exit status: 0 clean (or report-only mode), 2 on violations with
+//! `--deny` or on a `--self-test` mismatch, 1 on spec/IO errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use lint::engine::{self_test, Engine};
+use lint::json::Json;
+
+struct Args {
+    root: PathBuf,
+    rules: Option<PathBuf>,
+    deny: bool,
+    self_test: bool,
+}
+
+fn default_root() -> PathBuf {
+    // The crate lives at <repo>/lint, so the repo root is its parent. Fall
+    // back to the current directory if the build path no longer exists
+    // (e.g. a binary copied to another machine).
+    let compiled = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    if compiled.is_dir() {
+        compiled
+    } else {
+        PathBuf::from(".")
+    }
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: default_root(),
+        rules: None,
+        deny: false,
+        self_test: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => args.root = PathBuf::from(it.next().ok_or("--root needs a value")?),
+            "--rules" => args.rules = Some(PathBuf::from(it.next().ok_or("--rules needs a value")?)),
+            "--deny" => args.deny = true,
+            "--self-test" => args.self_test = true,
+            "-h" | "--help" => {
+                println!(
+                    "usage: lint [--root <dir>] [--rules <spec.json>] [--deny] [--self-test]"
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn run() -> Result<u8, String> {
+    let args = parse_args()?;
+    if args.self_test {
+        let fixtures = args.root.join("lint").join("fixtures");
+        return Ok(if self_test(&fixtures)? { 0 } else { 2 });
+    }
+    let rules_path = args
+        .rules
+        .unwrap_or_else(|| args.root.join("lint").join("rules.json"));
+    let text = std::fs::read_to_string(&rules_path)
+        .map_err(|e| format!("lint: cannot read {}: {e}", rules_path.display()))?;
+    let spec = Json::parse(&text)?;
+    let mut eng = Engine::new(&args.root, &spec)?;
+    eng.run()?;
+    eng.report();
+    Ok(if !eng.violations.is_empty() && args.deny { 2 } else { 0 })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => ExitCode::from(code),
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::from(1)
+        }
+    }
+}

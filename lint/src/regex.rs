@@ -1,0 +1,560 @@
+//! Backtracking engine for the regex subset the rule spec is allowed to
+//! use (documented in rules.json `syntax` and DESIGN.md §Static-Analysis):
+//! literals, escapes, `\b \s \S \w \W \d \D`, `[...]` classes, `(?:...)`
+//! and capturing `(...)` groups, alternation `|`, quantifiers `* + ?`, and
+//! anchors `^ $`. No `{m,n}`, no lookaround, no backreferences — that
+//! restriction is what keeps this engine small enough to audit and keeps
+//! the spec portable between the two runners.
+//!
+//! Compilation: pattern → AST → instruction list (`Char`/`Class`/`Split`/
+//! `Jmp`/`Save`/assertions). Matching is depth-first backtracking with
+//! greedy quantifiers, which reproduces Python `re` semantics on this
+//! subset. Positions are char indices (the engine runs on single lines, so
+//! input is short and backtracking depth stays bounded).
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+    Digit,
+    Word,
+    Space,
+}
+
+#[derive(Debug, Clone)]
+struct ClassSpec {
+    neg: bool,
+    items: Vec<ClassItem>,
+}
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+impl ClassSpec {
+    fn matches(&self, c: char) -> bool {
+        let hit = self.items.iter().any(|it| match *it {
+            ClassItem::Ch(x) => c == x,
+            ClassItem::Range(lo, hi) => c >= lo && c <= hi,
+            ClassItem::Digit => c.is_ascii_digit(),
+            ClassItem::Word => is_word(c),
+            ClassItem::Space => c.is_whitespace(),
+        });
+        hit != self.neg
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Ast {
+    Char(char),
+    Any,
+    Class(ClassSpec),
+    Start,
+    End,
+    WordB,
+    Seq(Vec<Ast>),
+    Alt(Vec<Ast>),
+    Group(Box<Ast>, Option<usize>),
+    Star(Box<Ast>),
+    Plus(Box<Ast>),
+    Quest(Box<Ast>),
+}
+
+#[derive(Debug, Clone)]
+enum Inst {
+    Char(char),
+    Any,
+    Class(ClassSpec),
+    Start,
+    End,
+    WordB,
+    Split(usize, usize),
+    Jmp(usize),
+    Save(usize),
+    Match,
+}
+
+pub struct Regex {
+    prog: Vec<Inst>,
+    ngroups: usize,
+}
+
+/// One match: char-index span plus capture-group spans (index 1..).
+pub struct MatchInfo {
+    pub start: usize,
+    pub end: usize,
+    pub text: String,
+    pub groups: Vec<Option<String>>,
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    ngroups: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<char> {
+        self.chars.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn alt(&mut self) -> Result<Ast, String> {
+        let mut alts = vec![self.seq()?];
+        while self.peek() == Some('|') {
+            self.pos += 1;
+            alts.push(self.seq()?);
+        }
+        Ok(if alts.len() == 1 {
+            alts.pop().unwrap()
+        } else {
+            Ast::Alt(alts)
+        })
+    }
+
+    fn seq(&mut self) -> Result<Ast, String> {
+        let mut items = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            items.push(self.rep()?);
+        }
+        Ok(Ast::Seq(items))
+    }
+
+    fn rep(&mut self) -> Result<Ast, String> {
+        let atom = self.atom()?;
+        match self.peek() {
+            Some('*') => {
+                self.pos += 1;
+                Ok(Ast::Star(Box::new(atom)))
+            }
+            Some('+') => {
+                self.pos += 1;
+                Ok(Ast::Plus(Box::new(atom)))
+            }
+            Some('?') => {
+                self.pos += 1;
+                Ok(Ast::Quest(Box::new(atom)))
+            }
+            _ => Ok(atom),
+        }
+    }
+
+    fn atom(&mut self) -> Result<Ast, String> {
+        match self.bump() {
+            None => Err("unexpected end of pattern".into()),
+            Some('(') => {
+                let capturing = if self.peek() == Some('?') {
+                    if self.peek2() == Some(':') {
+                        self.pos += 2;
+                        false
+                    } else {
+                        return Err("only (?:...) groups are supported".into());
+                    }
+                } else {
+                    true
+                };
+                let idx = if capturing {
+                    self.ngroups += 1;
+                    Some(self.ngroups)
+                } else {
+                    None
+                };
+                let inner = self.alt()?;
+                if self.bump() != Some(')') {
+                    return Err("unclosed group".into());
+                }
+                Ok(Ast::Group(Box::new(inner), idx))
+            }
+            Some('[') => Ok(Ast::Class(self.class()?)),
+            Some('.') => Ok(Ast::Any),
+            Some('^') => Ok(Ast::Start),
+            Some('$') => Ok(Ast::End),
+            Some('{') => Err("{m,n} quantifiers are outside the supported subset".into()),
+            Some('\\') => {
+                let e = self.bump().ok_or("trailing backslash")?;
+                Ok(match e {
+                    'b' => Ast::WordB,
+                    'd' => Ast::Class(ClassSpec { neg: false, items: vec![ClassItem::Digit] }),
+                    'D' => Ast::Class(ClassSpec { neg: true, items: vec![ClassItem::Digit] }),
+                    'w' => Ast::Class(ClassSpec { neg: false, items: vec![ClassItem::Word] }),
+                    'W' => Ast::Class(ClassSpec { neg: true, items: vec![ClassItem::Word] }),
+                    's' => Ast::Class(ClassSpec { neg: false, items: vec![ClassItem::Space] }),
+                    'S' => Ast::Class(ClassSpec { neg: true, items: vec![ClassItem::Space] }),
+                    'n' => Ast::Char('\n'),
+                    't' => Ast::Char('\t'),
+                    'r' => Ast::Char('\r'),
+                    other => Ast::Char(other),
+                })
+            }
+            Some(c) => Ok(Ast::Char(c)),
+        }
+    }
+
+    fn class_escape(&mut self) -> Result<ClassItem, String> {
+        let e = self.bump().ok_or("bad escape in class")?;
+        Ok(match e {
+            'd' => ClassItem::Digit,
+            'w' => ClassItem::Word,
+            's' => ClassItem::Space,
+            'n' => ClassItem::Ch('\n'),
+            't' => ClassItem::Ch('\t'),
+            'r' => ClassItem::Ch('\r'),
+            other => ClassItem::Ch(other),
+        })
+    }
+
+    fn class(&mut self) -> Result<ClassSpec, String> {
+        let neg = if self.peek() == Some('^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut items = Vec::new();
+        loop {
+            let c = self.bump().ok_or("unterminated character class")?;
+            if c == ']' {
+                break;
+            }
+            let item = if c == '\\' { self.class_escape()? } else { ClassItem::Ch(c) };
+            if self.peek() == Some('-') && self.peek2().is_some_and(|c2| c2 != ']') {
+                self.pos += 1; // consume '-'
+                let hi_c = self.bump().unwrap();
+                let hi = if hi_c == '\\' {
+                    match self.class_escape()? {
+                        ClassItem::Ch(h) => h,
+                        _ => return Err("class shorthand cannot end a range".into()),
+                    }
+                } else {
+                    hi_c
+                };
+                match item {
+                    ClassItem::Ch(lo) => items.push(ClassItem::Range(lo, hi)),
+                    _ => return Err("class shorthand cannot start a range".into()),
+                }
+            } else {
+                items.push(item);
+            }
+        }
+        Ok(ClassSpec { neg, items })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiler
+// ---------------------------------------------------------------------------
+
+struct Compiler {
+    prog: Vec<Inst>,
+}
+
+impl Compiler {
+    fn patch_split_b(&mut self, at: usize, to: usize) {
+        if let Inst::Split(_, b) = &mut self.prog[at] {
+            *b = to;
+        }
+    }
+
+    fn emit(&mut self, ast: &Ast) {
+        match ast {
+            Ast::Char(c) => self.prog.push(Inst::Char(*c)),
+            Ast::Any => self.prog.push(Inst::Any),
+            Ast::Class(cs) => self.prog.push(Inst::Class(cs.clone())),
+            Ast::Start => self.prog.push(Inst::Start),
+            Ast::End => self.prog.push(Inst::End),
+            Ast::WordB => self.prog.push(Inst::WordB),
+            Ast::Seq(items) => {
+                for it in items {
+                    self.emit(it);
+                }
+            }
+            Ast::Alt(alts) => {
+                let mut jmps = Vec::new();
+                for (i, a) in alts.iter().enumerate() {
+                    if i + 1 < alts.len() {
+                        let sp = self.prog.len();
+                        self.prog.push(Inst::Split(sp + 1, 0));
+                        self.emit(a);
+                        jmps.push(self.prog.len());
+                        self.prog.push(Inst::Jmp(0));
+                        let here = self.prog.len();
+                        self.patch_split_b(sp, here);
+                    } else {
+                        self.emit(a);
+                    }
+                }
+                let end = self.prog.len();
+                for j in jmps {
+                    if let Inst::Jmp(t) = &mut self.prog[j] {
+                        *t = end;
+                    }
+                }
+            }
+            Ast::Group(inner, idx) => {
+                if let Some(i) = idx {
+                    self.prog.push(Inst::Save(2 * i));
+                    self.emit(inner);
+                    self.prog.push(Inst::Save(2 * i + 1));
+                } else {
+                    self.emit(inner);
+                }
+            }
+            Ast::Star(inner) => {
+                let sp = self.prog.len();
+                self.prog.push(Inst::Split(sp + 1, 0));
+                self.emit(inner);
+                self.prog.push(Inst::Jmp(sp));
+                let here = self.prog.len();
+                self.patch_split_b(sp, here);
+            }
+            Ast::Plus(inner) => {
+                let body = self.prog.len();
+                self.emit(inner);
+                let sp = self.prog.len();
+                self.prog.push(Inst::Split(body, sp + 1));
+            }
+            Ast::Quest(inner) => {
+                let sp = self.prog.len();
+                self.prog.push(Inst::Split(sp + 1, 0));
+                self.emit(inner);
+                let here = self.prog.len();
+                self.patch_split_b(sp, here);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, String> {
+        let mut p = Parser { chars: pattern.chars().collect(), pos: 0, ngroups: 0 };
+        let ast = p.alt()?;
+        if p.pos != p.chars.len() {
+            return Err(format!("unbalanced pattern near offset {} in {pattern:?}", p.pos));
+        }
+        let mut c = Compiler { prog: Vec::new() };
+        c.prog.push(Inst::Save(0));
+        c.emit(&ast);
+        c.prog.push(Inst::Save(1));
+        c.prog.push(Inst::Match);
+        Ok(Regex { prog: c.prog, ngroups: p.ngroups })
+    }
+
+    fn step(
+        &self,
+        pc: usize,
+        pos: usize,
+        text: &[char],
+        saves: &mut Vec<Option<usize>>,
+    ) -> Option<usize> {
+        match &self.prog[pc] {
+            Inst::Match => Some(pos),
+            Inst::Char(c) => {
+                if text.get(pos) == Some(c) {
+                    self.step(pc + 1, pos + 1, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::Any => {
+                if pos < text.len() && text[pos] != '\n' {
+                    self.step(pc + 1, pos + 1, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::Class(cs) => {
+                if pos < text.len() && cs.matches(text[pos]) {
+                    self.step(pc + 1, pos + 1, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::Start => {
+                if pos == 0 {
+                    self.step(pc + 1, pos, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::End => {
+                if pos == text.len() {
+                    self.step(pc + 1, pos, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::WordB => {
+                let before = pos > 0 && is_word(text[pos - 1]);
+                let after = pos < text.len() && is_word(text[pos]);
+                if before != after {
+                    self.step(pc + 1, pos, text, saves)
+                } else {
+                    None
+                }
+            }
+            Inst::Jmp(t) => self.step(*t, pos, text, saves),
+            Inst::Split(a, b) => self
+                .step(*a, pos, text, saves)
+                .or_else(|| self.step(*b, pos, text, saves)),
+            Inst::Save(slot) => {
+                let old = saves[*slot];
+                saves[*slot] = Some(pos);
+                match self.step(pc + 1, pos, text, saves) {
+                    Some(end) => Some(end),
+                    None => {
+                        saves[*slot] = old;
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    fn match_at(&self, text: &[char], start: usize) -> Option<(usize, Vec<Option<usize>>)> {
+        let mut saves: Vec<Option<usize>> = vec![None; 2 * (self.ngroups + 1)];
+        self.step(0, start, text, &mut saves)
+            .map(|end| (end, saves))
+    }
+
+    fn info(text: &[char], start: usize, end: usize, saves: &[Option<usize>], ngroups: usize) -> MatchInfo {
+        let slice = |a: usize, b: usize| text[a..b].iter().collect::<String>();
+        let mut groups = Vec::with_capacity(ngroups);
+        for g in 1..=ngroups {
+            let (s, e) = (saves[2 * g], saves[2 * g + 1]);
+            groups.push(match (s, e) {
+                (Some(s), Some(e)) => Some(slice(s, e)),
+                _ => None,
+            });
+        }
+        MatchInfo { start, end, text: slice(start, end), groups }
+    }
+
+    /// Leftmost match anywhere in `line` (Python `re.search`).
+    pub fn search(&self, line: &str) -> Option<MatchInfo> {
+        let text: Vec<char> = line.chars().collect();
+        for start in 0..=text.len() {
+            if let Some((end, saves)) = self.match_at(&text, start) {
+                return Some(Self::info(&text, start, end, &saves, self.ngroups));
+            }
+        }
+        None
+    }
+
+    pub fn is_match(&self, line: &str) -> bool {
+        self.search(line).is_some()
+    }
+
+    /// Non-overlapping leftmost matches (Python `re.finditer`).
+    pub fn find_iter(&self, line: &str) -> Vec<MatchInfo> {
+        let text: Vec<char> = line.chars().collect();
+        let mut out = Vec::new();
+        let mut from = 0;
+        while from <= text.len() {
+            let mut found = None;
+            for start in from..=text.len() {
+                if let Some((end, saves)) = self.match_at(&text, start) {
+                    found = Some(Self::info(&text, start, end, &saves, self.ngroups));
+                    break;
+                }
+            }
+            match found {
+                None => break,
+                Some(m) => {
+                    from = if m.end > m.start { m.end } else { m.start + 1 };
+                    out.push(m);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_and_alternation() {
+        let r = Regex::new(r"\.(?:lock|read|write)\(\)\s*\.(?:unwrap|expect)\(").unwrap();
+        assert!(r.is_match("    *m.lock().unwrap()"));
+        assert!(r.is_match("l.read() .expect(\"x\")"));
+        assert!(!r.is_match("m.lock().unwrap_or_else(recover)"));
+    }
+
+    #[test]
+    fn word_boundary_and_classes() {
+        let r = Regex::new(r"\bunsafe\b").unwrap();
+        assert!(r.is_match("unsafe { *p }"));
+        assert!(!r.is_match("unsafely"));
+        let d = Regex::new(r"Ordering::(?:Relaxed|SeqCst)").unwrap();
+        assert!(d.is_match("x.load(Ordering::SeqCst)"));
+        assert!(!d.is_match("Ordering::Acquire"));
+    }
+
+    #[test]
+    fn captures_and_anchors() {
+        let r = Regex::new(r"^    ([A-Z][A-Za-z0-9]*)\(").unwrap();
+        let m = r.search("    Coo(Coo) = \"COO\",").unwrap();
+        assert_eq!(m.groups[0].as_deref(), Some("Coo"));
+        assert!(r.search("        Coo(Coo)").is_none());
+    }
+
+    #[test]
+    fn two_captures() {
+        let r = Regex::new(r"lint:\s*allow\(([A-Za-z0-9_,\s-]+)\)\s*--\s*(\S.*)").unwrap();
+        let m = r.search("// lint: allow(a-rule, b-rule) -- because reasons").unwrap();
+        assert_eq!(m.groups[0].as_deref(), Some("a-rule, b-rule"));
+        assert_eq!(m.groups[1].as_deref(), Some("because reasons"));
+        assert!(r.search("// lint: allow(a-rule)").is_none());
+    }
+
+    #[test]
+    fn find_iter_non_overlapping() {
+        let r = Regex::new(r"\.clone\(").unwrap();
+        assert_eq!(r.find_iter("a.clone(); b.clone()").len(), 2);
+    }
+
+    #[test]
+    fn fullmatch_globs() {
+        let glob = Regex::new(r"^(?:rust/src/(?:.*/)?[^/]*\.rs)$").unwrap();
+        assert!(glob.is_match("rust/src/sparse/csr.rs"));
+        assert!(glob.is_match("rust/src/lib.rs"));
+        assert!(!glob.is_match("rust/tests/model_tests.rs"));
+        assert!(!glob.is_match("rust/src/sparse/csr.rs.bak"));
+    }
+
+    #[test]
+    fn star_backtracks_for_anchor() {
+        let r = Regex::new(r"^a.*b$").unwrap();
+        assert!(r.is_match("axxbyyb"));
+        assert!(!r.is_match("axxbyyc"));
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        assert!(Regex::new(r"a{2,3}").is_err());
+        assert!(Regex::new(r"(?=x)").is_err());
+    }
+}

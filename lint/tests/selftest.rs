@@ -1,0 +1,76 @@
+//! Integration tests wiring the Rust runner to the shared fixture corpus
+//! and to the real repo tree — the same assertions `tools/lint.py
+//! --self-test` and `--deny` make, so the two runners cannot diverge
+//! silently.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lint::engine::{self_test, Engine};
+use lint::json::Json;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("lint crate sits under the repo root")
+        .to_path_buf()
+}
+
+#[test]
+fn fixture_corpus_matches_expected() {
+    let fixtures = repo_root().join("lint").join("fixtures");
+    assert!(
+        self_test(&fixtures).expect("fixtures readable"),
+        "fixture corpus diverged from expected.json (see stdout)"
+    );
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = repo_root();
+    let spec_text =
+        fs::read_to_string(root.join("lint").join("rules.json")).expect("rules.json readable");
+    let spec = Json::parse(&spec_text).expect("rules.json parses");
+    let mut eng = Engine::new(&root, &spec).expect("spec has rules");
+    eng.run().expect("engine runs");
+    let rendered: Vec<String> = eng.violations.iter().map(ToString::to_string).collect();
+    assert!(
+        eng.violations.is_empty(),
+        "repo tree has lint violations:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn seeded_violation_is_detected() {
+    // Build a tiny throwaway tree with one deliberate violation and check
+    // the engine reports exactly that (file, line, rule).
+    let dir = std::env::temp_dir().join(format!("lint-seeded-{}", std::process::id()));
+    fs::remove_dir_all(&dir).ok();
+    let src = dir.join("src");
+    fs::create_dir_all(&src).expect("mkdir temp tree");
+    fs::write(
+        src.join("bad.rs"),
+        "pub fn f() {\n    let m = std::sync::Mutex::new(1);\n    let _g = m.lock().unwrap();\n}\n",
+    )
+    .expect("write seeded source");
+    let spec = Json::parse(
+        r#"{
+          "rules": [
+            {
+              "id": "lock-discipline",
+              "kind": "forbid-pattern",
+              "paths": ["src/**/*.rs"],
+              "pattern": "\\.(?:lock|read|write)\\(\\)\\s*\\.(?:unwrap|expect)\\("
+            }
+          ]
+        }"#,
+    )
+    .expect("inline spec parses");
+    let mut eng = Engine::new(&dir, &spec).expect("spec has rules");
+    eng.run().expect("engine runs");
+    fs::remove_dir_all(&dir).ok();
+    assert_eq!(eng.violations.len(), 1, "exactly the seeded violation");
+    let v = &eng.violations[0];
+    assert_eq!((v.rel.as_str(), v.line, v.rule.as_str()), ("src/bad.rs", 3, "lock-discipline"));
+}

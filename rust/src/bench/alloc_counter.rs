@@ -26,7 +26,12 @@ static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 /// can report the per-op allocation cost of a code path.
 pub struct CountingAlloc;
 
+// SAFETY: pure pass-through to `System`; the impl upholds `GlobalAlloc`'s
+// contract because every method delegates layout handling verbatim and the
+// counter updates have no effect on the returned memory.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller contract identical to `System.alloc`; we only add
+    // relaxed counter ticks before delegating.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if ENABLED.load(Ordering::Relaxed) {
             ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
@@ -35,10 +40,14 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.alloc(layout)
     }
 
+    // SAFETY: `ptr`/`layout` are forwarded untouched to the allocator that
+    // produced them (`System`, via our `alloc`).
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: same delegation argument as `alloc`/`dealloc`; `new_size`
+    // validity is the caller's obligation, unchanged by the counting.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if ENABLED.load(Ordering::Relaxed) {
             ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);

@@ -215,10 +215,13 @@ impl DecisionCache {
         let sig = signature(slot, rows, cols, nnz, density, d);
         match self.entries.get(&sig) {
             Some(e) if rel_dev(density, e.density) <= self.rel_drift => {
+                // ord: standalone stat counter; no reader infers other
+                // state from its value, so Relaxed suffices.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some((e.format, e.schedule))
             }
             _ => {
+                // ord: same stat-counter argument as `hits` above.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -227,17 +230,17 @@ impl DecisionCache {
 
     /// Lookups answered from the cache so far.
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.load(Ordering::Relaxed) // ord: monotonic stat read, no ordering dependency
     }
 
     /// Lookups that fell through to the policy so far.
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.load(Ordering::Relaxed) // ord: monotonic stat read, no ordering dependency
     }
 
     /// Decisions declined by the margin gate so far.
     pub fn low_margin_bypasses(&self) -> u64 {
-        self.low_margin_bypasses.load(Ordering::Relaxed)
+        self.low_margin_bypasses.load(Ordering::Relaxed) // ord: monotonic stat read, no ordering dependency
     }
 
     /// Read-only stats snapshot — one consistent-enough readout (each
@@ -308,6 +311,8 @@ impl DecisionCache {
         margin: f64,
     ) {
         if margin < self.min_margin {
+            // ord: stat counter only; the early-return is decided by
+            // `margin`, not by the counter value.
             self.low_margin_bypasses.fetch_add(1, Ordering::Relaxed);
             return;
         }

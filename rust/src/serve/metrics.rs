@@ -63,14 +63,17 @@ impl LatencyHistogram {
     /// Record one observation. Wait-free: four relaxed RMWs, no CAS loop
     /// (`fetch_max` is a single RMW on every 64-bit platform we target).
     pub fn record(&self, ns: u64) {
+        // ord: wait-free histogram by design — each counter is independent
+        // and readers tolerate torn cross-counter views (percentiles are
+        // statistical, not transactional), so Relaxed everywhere.
         self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
-        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed); // ord: see record() head comment
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed); // ord: see record() head comment
+        self.max_ns.fetch_max(ns, Ordering::Relaxed); // ord: see record() head comment
     }
 
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.count.load(Ordering::Relaxed) // ord: statistical readout, tearing tolerated
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -78,16 +81,18 @@ impl LatencyHistogram {
         if n == 0 {
             return 0.0;
         }
-        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 // ord: statistical readout, tearing tolerated
     }
 
     pub fn max_ns(&self) -> u64 {
-        self.max_ns.load(Ordering::Relaxed)
+        self.max_ns.load(Ordering::Relaxed) // ord: statistical readout, tearing tolerated
     }
 
     /// Nearest-rank percentile, reported as the owning bucket's lower
     /// bound. 0 for an empty histogram.
     pub fn percentile_ns(&self, p: f64) -> u64 {
+        // ord: per-bucket snapshot may tear across buckets; percentiles on
+        // a live histogram are approximate by contract.
         let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
         if total == 0 {

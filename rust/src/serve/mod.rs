@@ -416,11 +416,15 @@ impl InferenceServer {
 
     fn admit(&self, mut nodes: Vec<u32>) -> Result<(u64, Vec<u32>), ServeError> {
         assert!(!nodes.is_empty(), "empty request");
+        // ord: degraded is a cross-thread mode flag set by the supervisor;
+        // SeqCst keeps the set/observe order consistent with live_workers
+        // so admission can never race past a final degraded flip.
         if self.shared.degraded.load(Ordering::SeqCst) {
             return Err(ServeError::Degraded);
         }
         nodes.sort_unstable();
         nodes.dedup();
+        // ord: id allocator only needs uniqueness, not ordering.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         *lock_recover(&self.shared.pending) += 1;
         Ok((id, nodes))
@@ -472,6 +476,7 @@ impl InferenceServer {
             Ok(()) => Ok(id),
             Err(TryPushError::Full(_)) => {
                 self.retire_pending();
+                // ord: fault stat counter, read only in report().
                 self.shared.shed.fetch_add(1, Ordering::Relaxed);
                 Err(ServeError::QueueFull)
             }
@@ -510,7 +515,7 @@ impl InferenceServer {
 
     /// Has the restart budget been exhausted (new work is rejected)?
     pub fn is_degraded(&self) -> bool {
-        self.shared.degraded.load(Ordering::SeqCst)
+        self.shared.degraded.load(Ordering::SeqCst) // ord: mode flag, see admit()
     }
 
     /// Wait until every submitted request has completed, then take the
@@ -528,9 +533,13 @@ impl InferenceServer {
             let (guard, timed_out) =
                 wait_timeout_recover(&self.shared.drained, p, Duration::from_millis(50));
             p = guard;
+            // SeqCst on both flags gives a single total order between the
+            // supervisor's (degraded=true, live_workers=0) writes and this
+            // read pair, so the backstop can't fire on a half-updated
+            // state nor miss a settled one.
             if timed_out
-                && self.shared.degraded.load(Ordering::SeqCst)
-                && self.shared.live_workers.load(Ordering::SeqCst) == 0
+                && self.shared.degraded.load(Ordering::SeqCst) // ord: see block comment above the `if`
+                && self.shared.live_workers.load(Ordering::SeqCst) == 0 // ord: see block comment above the `if`
             {
                 drop(p);
                 self.shared.fail_queued(|| ServeError::Degraded);
@@ -568,10 +577,12 @@ impl InferenceServer {
             ops_per_sec: h.count() as f64 / elapsed,
             cache: self.cache_stats(),
             snapshot_epoch: self.snapshot_epoch(),
+            // ord: fault stat counters; report() is a statistical readout
+            // and tolerates tearing across the four loads.
             shed: self.shared.shed.load(Ordering::Relaxed),
-            expired: self.shared.expired.load(Ordering::Relaxed),
-            panics: self.shared.panics.load(Ordering::Relaxed),
-            restarts: self.shared.restarts.load(Ordering::Relaxed),
+            expired: self.shared.expired.load(Ordering::Relaxed), // ord: see shed above
+            panics: self.shared.panics.load(Ordering::Relaxed), // ord: see shed above
+            restarts: self.shared.restarts.load(Ordering::Relaxed), // ord: see shed above
             degraded: self.is_degraded(),
         }
     }

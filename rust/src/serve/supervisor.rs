@@ -43,18 +43,23 @@ pub(crate) fn supervisor_loop(shared: Arc<ServerShared>) {
                 inbox = wait_recover(&shared.supervisor_cv, inbox);
             }
         };
+        // ord: restarts is written by this supervisor thread only (workers
+        // never touch it), so its own program order makes Relaxed exact here.
         if shared.restarts.load(Ordering::Relaxed) >= shared.cfg.restart_budget as u64 {
+            // ord: degraded + live_workers share one SeqCst total order with
+            // admit()/drain() readers — see serve/mod.rs admit().
             shared.degraded.store(true, Ordering::SeqCst);
             // No replacement is coming. If that death left zero live
             // workers, queued requests would wait forever — fail them
             // with typed errors so `drain` terminates.
+            // ord: same SeqCst total order as the degraded store above.
             if shared.live_workers.load(Ordering::SeqCst) == 0 {
                 shared.fail_queued(|| ServeError::Degraded);
             }
             continue;
         }
-        shared.restarts.fetch_add(1, Ordering::Relaxed);
-        shared.live_workers.fetch_add(1, Ordering::SeqCst);
+        shared.restarts.fetch_add(1, Ordering::Relaxed); // ord: supervisor-private counter, see budget check above
+        shared.live_workers.fetch_add(1, Ordering::SeqCst); // ord: paired with drain()'s SeqCst zero-check
         let worker_shared = Arc::clone(&shared);
         let handle = std::thread::spawn(move || worker::worker_loop(worker_shared, dead_worker));
         lock_recover(&shared.respawned).push(handle);

@@ -46,8 +46,11 @@ pub(crate) fn worker_loop(shared: Arc<ServerShared>, worker_id: usize) {
     // bad enough to panic the build must not strand `live_workers`.
     let exit = catch_unwind(AssertUnwindSafe(|| serve_requests(&shared, worker_id)));
     if exit.is_err() {
+        // ord: fault stat counter, read only in report().
         shared.panics.fetch_add(1, Ordering::Relaxed);
     }
+    // ord: SeqCst so the decrement is in the same total order as the
+    // supervisor/drain zero-checks (serve/mod.rs drain()).
     shared.live_workers.fetch_sub(1, Ordering::SeqCst);
     if !matches!(exit, Ok(WorkerExit::QueueClosed)) {
         shared.notify_worker_death(worker_id);
@@ -70,12 +73,14 @@ fn serve_requests(shared: &Arc<ServerShared>, worker_id: usize) -> WorkerExit {
     );
     let feat_cols: Vec<u32> = (0..shared.ds.features.cols as u32).collect();
 
+    // lint: begin(request-path)
     while let Some(req) = shared.queue.pop() {
         let t0 = Instant::now();
         // Admission control, dequeue side: an already-expired request is
         // dropped before any extraction or SpMM — the latency budget its
         // client gave us is spent, so the work would be pure waste.
         if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            // ord: fault stat counter, read only in report().
             shared.expired.fetch_add(1, Ordering::Relaxed);
             shared.complete(InferenceResponse {
                 id: req.id,
@@ -105,6 +110,7 @@ fn serve_requests(shared: &Arc<ServerShared>, worker_id: usize) -> WorkerExit {
                 });
             }
             Err(payload) => {
+                // ord: fault stat counter, read only in report().
                 shared.panics.fetch_add(1, Ordering::Relaxed);
                 shared.complete(InferenceResponse {
                     id: req.id,
@@ -146,3 +152,4 @@ fn infer_one(
     let logits = model.forward(eng);
     Ok(Inference { logits, snapshot_version: snap.version })
 }
+// lint: end(request-path)

@@ -121,6 +121,7 @@ impl Bsr {
     /// For each stored block, accumulates a dense `block × d` panel:
     /// `Y[brow·b .. brow·b+b] += A_blk · X[bcol·b .. bcol·b+b]`. Runs under
     /// the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_into_sched(x, out, Schedule::effective());
     }
@@ -180,6 +181,7 @@ impl Bsr {
             },
         );
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -193,6 +195,7 @@ impl Bsr {
     /// block's transposed panel (`Y[c] += A[r][c] · X[r]`) into pool-owned
     /// scratch buffers, reduced at the end. No transposed block index is
     /// built. Runs under the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_t_into_sched(x, out, Schedule::effective());
     }
@@ -235,6 +238,7 @@ impl Bsr {
             }
         });
     }
+    // lint: end(hot-path)
 }
 
 impl SparseOps for Bsr {

@@ -121,6 +121,7 @@ impl Coo {
     /// Under the default nnz-balanced [`Schedule`], span boundaries are the
     /// rows holding the triple-count quantiles (`row[nnz·i/k]`), so a hub
     /// row never shares its worker with half the matrix.
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_into_sched(x, out, Schedule::effective());
     }
@@ -163,6 +164,7 @@ impl Coo {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -176,6 +178,7 @@ impl Coo {
     /// an even split is already nnz-balanced — both split rules coincide
     /// here) and scatter `val·x[row]` into output row `col` of pool-owned
     /// scratch buffers, which are then reduced.
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_t_into_sched(x, out, Schedule::effective());
     }
@@ -201,6 +204,7 @@ impl Coo {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Induced submatrix `self[rows, cols]` for sorted, duplicate-free id
     /// selections — native COO filter (this *is* the canonical form, so no

@@ -73,6 +73,7 @@ impl Csc {
     /// (`y[i] += v * x[c]` for entries `(i, v)` of column `c`), then the
     /// buffers are summed. The extra reduction is CSC's intrinsic cost for
     /// row-major output. Runs under the process-wide default schedule.
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_into_sched(x, out, Schedule::effective());
     }
@@ -101,6 +102,7 @@ impl Csc {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -117,6 +119,7 @@ impl Csc {
     /// This is the cheap direction: parallel over column spans, no
     /// reduction needed, and feature-tiled like the CSR forward kernel.
     /// Runs under the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_t_into_sched(x, out, Schedule::effective());
     }
@@ -161,6 +164,7 @@ impl Csc {
             },
         );
     }
+    // lint: end(hot-path)
 
     /// Induced submatrix `self[rows, cols]` for sorted, duplicate-free id
     /// selections, extracted **directly on the CSC arrays** (mirror of

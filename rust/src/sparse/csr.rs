@@ -108,6 +108,7 @@ impl Csr {
     /// register-resident accumulator block per column tile, streaming `x`
     /// rows — the canonical row-major-friendly kernel (and why CSR usually
     /// wins).
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_into_sched(x, out, Schedule::effective());
     }
@@ -152,6 +153,7 @@ impl Csr {
             },
         );
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -166,6 +168,7 @@ impl Csr {
     /// (`indptr` spans become column spans), so `Aᵀ·X` executes as a
     /// CSC-style scatter over the same three arrays with zero conversion.
     /// Runs under the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_t_into_sched(x, out, Schedule::effective());
     }
@@ -194,6 +197,7 @@ impl Csr {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Direct structural transpose: counting-sort the entries by column
     /// (exactly [`Csr::to_csc`]) and reinterpret the CSC arrays of `self` as

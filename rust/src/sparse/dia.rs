@@ -99,6 +99,7 @@ impl Dia {
     /// Scheduling note: every row touches every diagonal (±boundary
     /// clipping), so per-row work is uniform and the pool's even row split
     /// *is* the nnz-balanced split — DIA needs no weighted spans.
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         let d = x.cols;
@@ -124,6 +125,7 @@ impl Dia {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -137,6 +139,7 @@ impl Dia {
     /// from diagonal `off = c - r`, i.e. `r = c - off`, so each diagonal
     /// contributes `data[k][c - off] · x[c - off]` to row `c`. Row-parallel
     /// like the forward kernel; no transposed storage is built.
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         let d = x.cols;
@@ -162,6 +165,7 @@ impl Dia {
             }
         });
     }
+    // lint: end(hot-path)
 
     /// Direct structural transpose: diagonal `off` of `self` is diagonal
     /// `-off` of `selfᵀ`, so the offsets negate (and reverse, staying

@@ -61,6 +61,7 @@ impl Dok {
     /// Iterates the hash table in storage order — scattered output access is
     /// DOK's intrinsic SpMM penalty, kept deliberately (matching scipy,
     /// which converts or iterates the dict).
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.rows, self.cols, x, out);
         out.data.fill(0.0);
@@ -72,6 +73,7 @@ impl Dok {
             }
         }
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -83,6 +85,7 @@ impl Dok {
     /// Transpose-SpMM `selfᵀ (m×n) · x (n×d) → out (m×d)`: the same
     /// storage-order iteration with the roles of key row/col swapped — DOK
     /// pays the identical scatter penalty in both directions.
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         check_into_shapes(self.cols, self.rows, x, out);
         out.data.fill(0.0);
@@ -94,6 +97,7 @@ impl Dok {
             }
         }
     }
+    // lint: end(hot-path)
 }
 
 impl SparseOps for Dok {

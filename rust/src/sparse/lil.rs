@@ -123,6 +123,7 @@ impl Lil {
     /// row spans (binary-searched on the cached nnz prefix-sum — no range
     /// list is allocated per multiply), into a caller-provided buffer. Runs
     /// under the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_into_sched(x, out, Schedule::effective());
     }
@@ -163,6 +164,7 @@ impl Lil {
             },
         );
     }
+    // lint: end(hot-path)
 
     /// Allocating SpMM wrapper.
     pub fn spmm(&self, x: &Matrix) -> Matrix {
@@ -175,6 +177,7 @@ impl Lil {
     /// workers own nnz-balanced row spans and scatter each row list's
     /// `v·x[r]` into output row `c` of pool-owned scratch buffers, reduced
     /// at the end. Runs under the process-wide default [`Schedule`].
+    // lint: begin(hot-path)
     pub fn spmm_t_into(&self, x: &Matrix, out: &mut Matrix) {
         self.spmm_t_into_sched(x, out, Schedule::effective());
     }
@@ -202,6 +205,7 @@ impl Lil {
             }
         });
     }
+    // lint: end(hot-path)
 }
 
 impl SparseOps for Lil {

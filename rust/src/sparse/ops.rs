@@ -63,6 +63,8 @@ static POOL_COO_FALLBACK_EXTRACTIONS: AtomicU64 = AtomicU64::new(0);
 /// threads aggregate into the shared pool counter; see above).
 fn count_coo_fallback() {
     if crate::util::pool::in_pool_worker() {
+        // ord: monotone diagnostic counter; readers compare deltas around a
+        // region after the pool lease serializes the jobs, so Relaxed is enough.
         POOL_COO_FALLBACK_EXTRACTIONS.fetch_add(1, Ordering::Relaxed);
     } else {
         COO_FALLBACK_EXTRACTIONS.with(|c| c.set(c.get() + 1));
@@ -75,6 +77,7 @@ fn count_coo_fallback() {
 /// cannot escape the count by running on a pool worker.
 pub fn coo_fallback_extractions() -> u64 {
     COO_FALLBACK_EXTRACTIONS.with(|c| c.get())
+        // ord: delta-compared diagnostic read; see count_coo_fallback().
         + POOL_COO_FALLBACK_EXTRACTIONS.load(Ordering::Relaxed)
 }
 
@@ -240,6 +243,7 @@ pub(crate) fn check_into_shapes(
 /// is a separate monomorphization — callers dispatch on
 /// [`crate::sparse::schedule::Tile`] **once per kernel call**, outside the
 /// row loop, and the row loop itself carries no width branching.
+// lint: begin(hot-path)
 #[inline]
 pub(crate) fn gather_row_lanes<const L: usize>(
     out_row: &mut [f32],
@@ -344,6 +348,7 @@ where
     let (n, d) = (out.rows, out.cols);
     crate::util::pool::global().scatter_reduce(&mut out.data, n, d, n_tasks, span_of, scatter);
 }
+// lint: end(hot-path)
 
 #[cfg(test)]
 mod tests {

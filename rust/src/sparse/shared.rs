@@ -116,12 +116,15 @@ impl<T> EpochCell<T> {
             std::mem::replace(&mut *guard, value)
         };
         drop(old);
+        // ord: Release pairs with the Acquire in epoch(): a reader that
+        // observes the new epoch also observes the snapshot published
+        // before the bump (the lock orders the store itself).
         self.epoch.fetch_add(1, Ordering::Release) + 1
     }
 
     /// Number of publishes so far (0 for a freshly constructed cell).
     pub fn epoch(&self) -> u64 {
-        self.epoch.load(Ordering::Acquire)
+        self.epoch.load(Ordering::Acquire) // ord: pairs with publish_arc's Release
     }
 }
 

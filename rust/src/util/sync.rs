@@ -62,7 +62,7 @@ mod tests {
     fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
         let m = Arc::clone(m);
         let _ = std::thread::spawn(move || {
-            let _g = m.lock().unwrap();
+            let _g = m.lock().unwrap(); // lint: allow(lock-discipline) -- test helper must hold a raw guard to poison the mutex on purpose
             panic!("poison on purpose");
         })
         .join();
@@ -122,7 +122,7 @@ mod tests {
         {
             let l = Arc::clone(&l);
             let _ = std::thread::spawn(move || {
-                let _g = l.write().unwrap();
+                let _g = l.write().unwrap(); // lint: allow(lock-discipline) -- test must poison the rwlock through a raw writer guard
                 panic!("poison the rwlock");
             })
             .join();

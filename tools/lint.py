@@ -1,0 +1,666 @@
+#!/usr/bin/env python3
+"""In-tree invariant linter — Python mirror runner (DESIGN.md §Static-Analysis).
+
+Interprets the declarative rule spec in lint/rules.json against the repo
+tree. The same spec is interpreted by the Rust workspace bin
+(`cargo run -p lint`); this mirror is stdlib-only so the gate runs even in
+containers without a cargo/rustc toolchain. The two interpreters share the
+fixture corpus under lint/fixtures/ (`--self-test`) so they cannot diverge
+silently.
+
+Shared semantics (both runners):
+  * Lines of .rs files are split into a code part and a comment part by a
+    comment/string-aware lexer (line + nested block comments, string/char
+    literals, raw strings, lifetimes). Rule patterns run against the code
+    part only; annotations (`SAFETY:`, `ord:`) and lint directives are read
+    from the comment part. Non-.rs files are matched raw, with no comment
+    part and no directives.
+  * Directives (in .rs comments):
+      // lint: begin(<marker>) ... // lint: end(<marker>)   span markers
+      // lint: allow(<rule>[, <rule>]) -- <reason>          suppression
+    A trailing allow covers its own line; an allow on a comment-only line
+    covers the next line. Suppressions are counted; an allow that matches
+    nothing, names an unknown rule, or lacks a `-- reason` is itself a
+    violation, so stale or silent suppressions cannot accumulate.
+  * Regex patterns in the spec stay inside the subset the dependency-free
+    Rust engine implements: literals, escapes, \\b \\s \\S \\w \\W \\d \\D,
+    [...] classes, (?:...) and (...) groups, alternation, * + ?, ^ $.
+
+Exit status: 0 clean (or report-only mode), 2 on violations with --deny or
+on a --self-test mismatch.
+"""
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# Built-in rule ids for directive hygiene (reported like spec rules).
+RULE_MARKER_SYNTAX = "lint-marker-syntax"
+RULE_ALLOW_SYNTAX = "lint-allow-syntax"
+RULE_UNKNOWN_RULE = "lint-unknown-rule"
+RULE_UNUSED_ALLOW = "lint-unused-allow"
+
+ALLOW_RE = re.compile(r"lint:\s*allow\(([A-Za-z0-9_,\s-]+)\)\s*--\s*(\S.*)")
+ALLOW_ANY_RE = re.compile(r"lint:\s*allow")
+BEGIN_RE = re.compile(r"lint:\s*begin\(([A-Za-z0-9_-]+)\)")
+END_RE = re.compile(r"lint:\s*end\(([A-Za-z0-9_-]+)\)")
+
+SKIP_DIRS = {".git", "target", "__pycache__", ".claude"}
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+
+CHAR_LIT_RE = re.compile(r"'(\\[^\n']*|[^\\'\n])'")
+RAW_STR_RE = re.compile(r'b?r(#*)"')
+
+
+def lex_rust(text):
+    """Split Rust source into per-line (code, full, comment) strings.
+
+    All outputs preserve column positions: `code` is code with string/char
+    literal *contents* blanked (what pattern rules match against, so a
+    forbidden token inside an error-message string cannot fire), `full` is
+    code with literal contents intact (what exhaustive rules search, so
+    serialized field names like "tile" stay visible), `comment` is comment
+    text only (where annotations and lint directives live).
+    """
+    lines_code, lines_full, lines_comment = [], [], []
+    code, full, com = [], [], []
+    state = "code"  # code | line | block | str | rawstr
+    depth = 0
+    raw_hashes = 0
+    i, n = 0, len(text)
+
+    def flush():
+        lines_code.append("".join(code))
+        lines_full.append("".join(full))
+        lines_comment.append("".join(com))
+        code.clear()
+        full.clear()
+        com.clear()
+
+    def emit_code(s):
+        code.append(s)
+        full.append(s)
+        com.append(" " * len(s))
+
+    def emit_com(s):
+        com.append(s)
+        code.append(" " * len(s))
+        full.append(" " * len(s))
+
+    def emit_str(s):
+        # String-literal contents: visible to `full`, blank in `code`.
+        full.append(s)
+        code.append(" " * len(s))
+        com.append(" " * len(s))
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            flush()
+            if state == "line":
+                state = "code"
+            i += 1
+            continue
+        if state == "code":
+            nxt = text[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "/":
+                emit_com("//")
+                state = "line"
+                i += 2
+                continue
+            if c == "/" and nxt == "*":
+                emit_com("/*")
+                state = "block"
+                depth = 1
+                i += 2
+                continue
+            if c == '"':
+                emit_code('"')
+                state = "str"
+                i += 1
+                continue
+            if c in "br":
+                m = RAW_STR_RE.match(text, i)
+                if m:
+                    emit_code(text[i : m.end()])
+                    raw_hashes = len(m.group(1))
+                    state = "rawstr"
+                    i = m.end()
+                    continue
+                emit_code(c)
+                i += 1
+                continue
+            if c == "'":
+                m = CHAR_LIT_RE.match(text, i)
+                if m:
+                    emit_code("'")
+                    emit_str(text[i + 1 : m.end() - 1])
+                    emit_code("'")
+                    i = m.end()
+                else:  # lifetime
+                    emit_code("'")
+                    i += 1
+                continue
+            emit_code(c)
+            i += 1
+        elif state == "line":
+            emit_com(c)
+            i += 1
+        elif state == "block":
+            nxt = text[i + 1] if i + 1 < n else ""
+            if c == "*" and nxt == "/":
+                emit_com("*/")
+                depth -= 1
+                if depth == 0:
+                    state = "code"
+                i += 2
+            elif c == "/" and nxt == "*":
+                emit_com("/*")
+                depth += 1
+                i += 2
+            else:
+                emit_com(c)
+                i += 1
+        elif state == "str":
+            if c == "\\":
+                nxt = text[i + 1] if i + 1 < n else ""
+                if nxt == "\n" or nxt == "":
+                    emit_str("\\")
+                    i += 1
+                else:
+                    emit_str("\\" + nxt)
+                    i += 2
+            elif c == '"':
+                emit_code('"')
+                state = "code"
+                i += 1
+            else:
+                emit_str(c)
+                i += 1
+        elif state == "rawstr":
+            closer = '"' + "#" * raw_hashes
+            if text.startswith(closer, i):
+                emit_code(closer)
+                state = "code"
+                i += len(closer)
+            else:
+                emit_str(c)
+                i += 1
+    flush()
+    if text.endswith("\n"):
+        lines_code.pop()
+        lines_full.pop()
+        lines_comment.pop()
+    return lines_code, lines_full, lines_comment
+
+
+def lex_plain(text):
+    lines = text.split("\n")
+    if text.endswith("\n"):
+        lines.pop()
+    return lines, list(lines), ["" for _ in lines]
+
+
+# ---------------------------------------------------------------------------
+# Globs
+# ---------------------------------------------------------------------------
+
+
+def glob_to_regex(glob):
+    """Translate a path glob to a regex over '/'-separated relative paths.
+
+    `**/` crosses directories (including zero), `*` and `?` stay within one
+    path segment. Identical translation in the Rust runner.
+    """
+    out, i = [], 0
+    while i < len(glob):
+        c = glob[i]
+        if c == "*":
+            if glob.startswith("**/", i):
+                out.append("(?:.*/)?")
+                i += 3
+                continue
+            if glob.startswith("**", i):
+                out.append(".*")
+                i += 2
+                continue
+            out.append("[^/]*")
+            i += 1
+        elif c == "?":
+            out.append("[^/]")
+            i += 1
+        elif c in ".^$+(){}[]|\\":
+            out.append("\\" + c)
+            i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Per-file analysis state
+# ---------------------------------------------------------------------------
+
+
+class Allow:
+    def __init__(self, src_line, applies_line, rules, reason):
+        self.src_line = src_line
+        self.applies_line = applies_line
+        self.rules = rules
+        self.reason = reason
+        self.used = False
+
+
+class SourceFile:
+    def __init__(self, rel, code, full, comment, is_rust):
+        self.rel = rel
+        self.code = code
+        self.full = full
+        self.comment = comment
+        self.is_rust = is_rust
+        self.spans = {}  # marker name -> set of 1-based line numbers
+        self.allows = []
+        self.directive_violations = []
+        if is_rust:
+            self._scan_directives()
+
+    def _scan_directives(self):
+        open_spans = {}  # name -> start line
+        for ln, com in enumerate(self.comment, start=1):
+            if not com.strip():
+                continue
+            m = BEGIN_RE.search(com)
+            if m:
+                name = m.group(1)
+                if name in open_spans:
+                    self.directive_violations.append(
+                        (ln, RULE_MARKER_SYNTAX, f"begin({name}) while span already open")
+                    )
+                else:
+                    open_spans[name] = ln
+            m = END_RE.search(com)
+            if m:
+                name = m.group(1)
+                if name not in open_spans:
+                    self.directive_violations.append(
+                        (ln, RULE_MARKER_SYNTAX, f"end({name}) without begin")
+                    )
+                else:
+                    start = open_spans.pop(name)
+                    self.spans.setdefault(name, set()).update(range(start, ln + 1))
+            if ALLOW_ANY_RE.search(com):
+                m = ALLOW_RE.search(com)
+                if not m:
+                    self.directive_violations.append(
+                        (
+                            ln,
+                            RULE_ALLOW_SYNTAX,
+                            "malformed allow: expected `lint: allow(<rule>) -- <reason>`",
+                        )
+                    )
+                else:
+                    rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+                    comment_only = not self.code[ln - 1].strip()
+                    applies = ln + 1 if comment_only else ln
+                    self.allows.append(Allow(ln, applies, rules, m.group(2).strip()))
+        for name, start in sorted(open_spans.items()):
+            self.directive_violations.append(
+                (start, RULE_MARKER_SYNTAX, f"begin({name}) never closed")
+            )
+
+    def in_span(self, marker, line):
+        return line in self.spans.get(marker, ())
+
+    def try_allow(self, rule_id, line):
+        for a in self.allows:
+            if a.applies_line == line and rule_id in a.rules:
+                a.used = True
+                return a
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class Violation:
+    def __init__(self, rel, line, rule, msg):
+        self.rel = rel
+        self.line = line
+        self.rule = rule
+        self.msg = msg
+
+    def key(self):
+        return (self.rel, self.line, self.rule)
+
+    def __str__(self):
+        return f"{self.rel}:{self.line}: [{self.rule}] {self.msg}"
+
+
+class Engine:
+    def __init__(self, root, spec):
+        self.root = Path(root)
+        self.spec = spec
+        self.rules = spec["rules"]
+        self.known_ids = {r["id"] for r in self.rules} | {
+            RULE_MARKER_SYNTAX,
+            RULE_ALLOW_SYNTAX,
+            RULE_UNKNOWN_RULE,
+            RULE_UNUSED_ALLOW,
+        }
+        self.files = {}  # rel path -> SourceFile
+        self.violations = []
+        self.suppressed = {}  # rule id -> list of (rel, line, reason)
+        self.allowlisted = {}  # rule id -> site count
+
+    # -- file loading -------------------------------------------------------
+
+    def _walk(self):
+        all_files = []
+        stack = [self.root]
+        while stack:
+            d = stack.pop()
+            for p in sorted(d.iterdir()):
+                if p.is_dir():
+                    if p.name not in SKIP_DIRS:
+                        stack.append(p)
+                elif p.is_file():
+                    all_files.append(p.relative_to(self.root).as_posix())
+        return sorted(all_files)
+
+    def _load(self, rel):
+        if rel not in self.files:
+            text = (self.root / rel).read_text(encoding="utf-8", errors="replace")
+            is_rust = rel.endswith(".rs")
+            code, full, comment = lex_rust(text) if is_rust else lex_plain(text)
+            self.files[rel] = SourceFile(rel, code, full, comment, is_rust)
+        return self.files[rel]
+
+    def _select(self, globs, all_files):
+        regexes = [re.compile(glob_to_regex(g) + r"\Z") for g in globs]
+        return [f for f in all_files if any(rx.match(f) for rx in regexes)]
+
+    # -- main entry ---------------------------------------------------------
+
+    def run(self):
+        all_files = self._walk()
+        for rule in self.rules:
+            kind = rule["kind"]
+            if kind == "forbid-pattern":
+                self._run_forbid(rule, all_files)
+            elif kind == "require-annotation":
+                self._run_annotation(rule, all_files)
+            elif kind == "exhaustive":
+                self._run_exhaustive(rule)
+            else:
+                raise SystemExit(f"lint: unknown rule kind {kind!r} in spec")
+        self._finish_directives()
+        self.violations.sort(key=Violation.key)
+        return self
+
+    def _emit(self, sf, line, rule_id, msg):
+        a = sf.try_allow(rule_id, line)
+        if a:
+            self.suppressed.setdefault(rule_id, []).append((sf.rel, line, a.reason))
+        else:
+            self.violations.append(Violation(sf.rel, line, rule_id, msg))
+
+    def _run_forbid(self, rule, all_files):
+        pat = re.compile(rule["pattern"])
+        exc = re.compile(rule["except_pattern"]) if rule.get("except_pattern") else None
+        marker = rule.get("within_marker")
+        for rel in self._select(rule["paths"], all_files):
+            sf = self._load(rel)
+            for ln, codeline in enumerate(sf.code, start=1):
+                if marker and not sf.in_span(marker, ln):
+                    continue
+                exc_spans = (
+                    [m.span() for m in exc.finditer(codeline)] if exc else []
+                )
+                for m in pat.finditer(codeline):
+                    s, e = m.span()
+                    if any(s2 <= s and e <= e2 for s2, e2 in exc_spans):
+                        continue
+                    self._emit(
+                        sf, ln, rule["id"], f"forbidden pattern `{m.group(0).strip()}`"
+                    )
+                    break  # one violation per line
+
+    def _run_annotation(self, rule, all_files):
+        pat = re.compile(rule["pattern"])
+        ann = re.compile(rule["annotation"])
+        allow_paths = set(rule.get("allow_paths", []))
+        for rel in self._select(rule["paths"], all_files):
+            sf = self._load(rel)
+            if rel in allow_paths:
+                sites = sum(len(pat.findall(c)) for c in sf.code)
+                if sites:
+                    self.allowlisted[rule["id"]] = (
+                        self.allowlisted.get(rule["id"], 0) + sites
+                    )
+                continue
+            for ln, codeline in enumerate(sf.code, start=1):
+                m = pat.search(codeline)
+                if not m:
+                    continue
+                if ann.search(sf.comment[ln - 1]):
+                    continue
+                j = ln - 1  # walk the contiguous comment block above
+                justified = False
+                while j >= 1 and not sf.code[j - 1].strip() and sf.comment[j - 1].strip():
+                    if ann.search(sf.comment[j - 1]):
+                        justified = True
+                        break
+                    j -= 1
+                if not justified:
+                    self._emit(
+                        sf,
+                        ln,
+                        rule["id"],
+                        f"`{m.group(0)}` without `{rule['annotation']}` justification",
+                    )
+
+    # -- exhaustive ---------------------------------------------------------
+
+    def _region(self, sf, target):
+        """(start, end) 1-based inclusive line range for a target, or None.
+
+        Regions and exhaustive needles match against the `full` view (code
+        with string-literal contents intact) so serialized field names stay
+        visible; comments stay invisible either way.
+        """
+        start_re = target.get("region_start")
+        if not start_re:
+            return 1, len(sf.full)
+        rx = re.compile(start_re)
+        start = None
+        for ln, line in enumerate(sf.full, start=1):
+            if rx.search(line):
+                start = ln
+                break
+        if start is None:
+            return None
+        end = len(sf.full)
+        end_pat = target.get("region_end")
+        if end_pat:
+            rx_end = re.compile(end_pat)
+            for ln in range(start, len(sf.full) + 1):
+                if rx_end.search(sf.full[ln - 1]):
+                    end = ln
+                    break
+        return start, end
+
+    def _run_exhaustive(self, rule):
+        src = rule["source"]
+        if "tokens" in src:
+            tokens = list(src["tokens"])
+        else:
+            sf = self._load(src["path"])
+            region = self._region(sf, src)
+            if region is None:
+                self.violations.append(
+                    Violation(
+                        sf.rel, 1, rule["id"], f"source region `{src['region_start']}` not found"
+                    )
+                )
+                return
+            tok_re = re.compile(src["token_pattern"])
+            tokens = []
+            for ln in range(region[0], region[1] + 1):
+                m = tok_re.search(sf.full[ln - 1])
+                if m and m.group(1) not in tokens:
+                    tokens.append(m.group(1))
+            if not tokens:
+                self.violations.append(
+                    Violation(sf.rel, region[0], rule["id"], "no source tokens extracted")
+                )
+                return
+        for target in rule["targets"]:
+            sf = self._load(target["path"])
+            region = self._region(sf, target)
+            if region is None:
+                self.violations.append(
+                    Violation(
+                        sf.rel,
+                        1,
+                        rule["id"],
+                        f"target region `{target['region_start']}` not found",
+                    )
+                )
+                continue
+            start, end = region
+            for tok in tokens:
+                needle = target["template"].replace("{token}", tok).replace(
+                    "{TOKEN}", tok.upper()
+                )
+                if not any(
+                    needle in sf.full[ln - 1] for ln in range(start, end + 1)
+                ):
+                    self._emit(
+                        sf,
+                        start,
+                        rule["id"],
+                        f"`{needle}` missing from target region (drifted from source list)",
+                    )
+
+    # -- directive hygiene --------------------------------------------------
+
+    def _finish_directives(self):
+        for sf in self.files.values():
+            for ln, rule_id, msg in sf.directive_violations:
+                self.violations.append(Violation(sf.rel, ln, rule_id, msg))
+            for a in sf.allows:
+                unknown = [r for r in a.rules if r not in self.known_ids]
+                for r in unknown:
+                    self.violations.append(
+                        Violation(
+                            sf.rel, a.src_line, RULE_UNKNOWN_RULE, f"allow names unknown rule `{r}`"
+                        )
+                    )
+                if not a.used and not unknown:
+                    self.violations.append(
+                        Violation(
+                            sf.rel,
+                            a.src_line,
+                            RULE_UNUSED_ALLOW,
+                            f"allow({', '.join(a.rules)}) suppressed nothing — stale?",
+                        )
+                    )
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self, out=sys.stdout):
+        for v in self.violations:
+            print(v, file=out)
+        n_supp = sum(len(v) for v in self.suppressed.values())
+        n_allow = sum(self.allowlisted.values())
+        print(
+            f"lint: {len(self.files)} files, {len(self.rules)} rules, "
+            f"{len(self.violations)} violations, {n_supp} suppressed, "
+            f"{n_allow} allowlisted sites",
+            file=out,
+        )
+        for rule_id in sorted(self.suppressed):
+            for rel, line, reason in self.suppressed[rule_id]:
+                print(f"  suppressed {rule_id} at {rel}:{line}: {reason}", file=out)
+
+
+# ---------------------------------------------------------------------------
+# Self-test against the fixture corpus
+# ---------------------------------------------------------------------------
+
+
+def self_test(fixtures_dir):
+    fixtures_dir = Path(fixtures_dir)
+    spec = json.loads((fixtures_dir / "rules.json").read_text())
+    expected = json.loads((fixtures_dir / "expected.json").read_text())
+    eng = Engine(fixtures_dir, spec).run()
+    got = sorted(v.key() for v in eng.violations)
+    want = sorted(
+        (e["file"], e["line"], e["rule"]) for e in expected["violations"]
+    )
+    ok = True
+    for miss in [w for w in want if w not in got]:
+        print(f"self-test: expected violation did not fire: {miss}")
+        ok = False
+    for extra in [g for g in got if g not in want]:
+        print(f"self-test: unexpected violation: {extra}")
+        ok = False
+    got_supp = {k: len(v) for k, v in eng.suppressed.items()}
+    if got_supp != expected.get("suppressed", {}):
+        print(
+            f"self-test: suppression counts {got_supp} != expected "
+            f"{expected.get('suppressed', {})}"
+        )
+        ok = False
+    got_allow = dict(eng.allowlisted)
+    if got_allow != expected.get("allowlisted", {}):
+        print(
+            f"self-test: allowlisted counts {got_allow} != expected "
+            f"{expected.get('allowlisted', {})}"
+        )
+        ok = False
+    print(
+        f"self-test: {len(want)} expected violations, "
+        f"{sum(got_supp.values())} suppressions — {'OK' if ok else 'FAIL'}"
+    )
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(REPO_ROOT), help="repo root to lint")
+    ap.add_argument("--rules", default=None, help="rule spec (default <root>/lint/rules.json)")
+    ap.add_argument(
+        "--deny", action="store_true", help="exit non-zero on any violation"
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the lint/fixtures corpus instead of linting the repo",
+    )
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+    if args.self_test:
+        return 0 if self_test(root / "lint" / "fixtures") else 2
+    rules_path = Path(args.rules) if args.rules else root / "lint" / "rules.json"
+    spec = json.loads(rules_path.read_text())
+    eng = Engine(root, spec).run()
+    eng.report()
+    if eng.violations and args.deny:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
