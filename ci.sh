@@ -4,7 +4,7 @@
 #            stdlib-only Python mirror. Runs in EVERY container, toolchain
 #            or not, and gates everything else.
 #   tier-1 — formatting, clippy, build, the full test suite, the example
-#            smokes and the three bench baselines. Skipped (loudly) when
+#            smokes and the four bench baselines. Skipped (loudly) when
 #            no cargo toolchain is present.
 # Usage: ./ci.sh  (from the repo root)
 set -euo pipefail
@@ -127,14 +127,37 @@ for field in shed expired restarts panics degraded; do
     || { echo "fault smoke: $SERVE_OUT missing $field"; exit 1; }
 done
 
-# Bench baselines (EXPERIMENTS.md §Perf): the three perf trajectories —
-# kernel layer (BENCH_spmm.json), mini-batch training (BENCH_minibatch.json)
-# and serving (BENCH_serve.json). Each bench self-compares against the
+# Crash-recovery smoke (§Streaming-Durability): stream_ingest arms a
+# scripted CrashPoint mid-stream — the injected crash kills the store at a
+# durability seam, the example re-opens it (checkpoint + WAL-tail replay),
+# retries, and asserts every merged row read is bit-identical to an
+# in-memory reference. A second fault-free run covers the clean path. Both
+# must emit a record carrying the ingest/recovery fields.
+echo "== crash-recovery smoke: stream_ingest (scripted CrashPoint + fault-free) =="
+STREAM_OUT="$WARMSTART_DIR/BENCH_stream.json"
+for ordinal in 150 0; do
+  rm -f "$STREAM_OUT"
+  cargo run --release --example stream_ingest -- \
+    --ops 400 --crash-ordinal "$ordinal" --seed 48879 --out "$STREAM_OUT"
+  test -s "$STREAM_OUT" || { echo "stream smoke (ordinal $ordinal): $STREAM_OUT empty"; exit 1; }
+  for field in ingest_ops_per_sec recovery_ms acked replayed verified; do
+    grep -q "\"$field\"" "$STREAM_OUT" \
+      || { echo "stream smoke (ordinal $ordinal): $STREAM_OUT missing $field"; exit 1; }
+  done
+done
+grep -q '"crashes":0' "$STREAM_OUT" \
+  || { echo "stream smoke: fault-free run reported crashes"; exit 1; }
+
+# Bench baselines (EXPERIMENTS.md §Perf): the perf trajectories — kernel
+# layer (BENCH_spmm.json), mini-batch training (BENCH_minibatch.json),
+# serving (BENCH_serve.json) and streaming ingestion
+# (BENCH_stream.json). Each bench self-compares against the
 # previous JSON at its output path, so running them in CI keeps the
 # trajectory files current.
-echo "== bench baselines: perf_hotpath / bench_minibatch / bench_serve =="
+echo "== bench baselines: perf_hotpath / bench_minibatch / bench_serve / bench_stream =="
 cargo bench --bench perf_hotpath
 cargo bench --bench bench_minibatch
 cargo bench --bench bench_serve
+cargo bench --bench bench_stream
 
 echo "CI OK"

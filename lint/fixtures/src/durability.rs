@@ -1,0 +1,19 @@
+//! Fixture for durability-io: raw file mutation in a persistence path.
+
+use std::fs::File;
+use std::io::Write;
+
+pub fn bad_checkpoint(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+pub fn bad_save(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, b"state")
+}
+
+pub fn deliberate_corruption(path: &std::path::Path) -> std::io::Result<()> {
+    // lint: allow(durability-io) -- fixture: deliberate torn-file write in a test
+    std::fs::write(path, b"torn")
+}

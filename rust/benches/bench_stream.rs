@@ -1,0 +1,172 @@
+//! Streaming-ingestion bench: WAL append throughput vs fsync batching,
+//! compaction latency, and recovery replay rate (DESIGN.md
+//! §Streaming-Durability).
+//!
+//! Three measurements, one JSON-lines record each (`BENCH_stream.json`):
+//!
+//! * `stream/wal_append` — ingest a fixed op stream at each `sync_every`
+//!   in {1, 8, 64}: per-op fsync is the durability floor, batching is the
+//!   throughput knob (unsynced ops are unacknowledged by construction, so
+//!   batching trades ack latency, never safety).
+//! * `stream/compact` — time one full compaction cycle (freeze → merge →
+//!   validate → renormalize touched rows → checkpoint → publish) over the
+//!   accumulated delta.
+//! * `stream/recovery` — drop the store with a full WAL tail and time the
+//!   re-open (checkpoint load + tail replay into a fresh overlay).
+//!
+//! Gates: recovery must replay every op it acknowledged, compaction must
+//! drain the overlay to zero pending edits, and batched fsync must not
+//! fall below half the per-op-fsync throughput (batching can only help;
+//! the margin absorbs tmpfs noise where fsync is nearly free).
+
+use gnn_spmm::graph::stream::{EdgeOp, StreamConfig, StreamStore};
+use gnn_spmm::util::json::Json;
+use gnn_spmm::util::rng::Rng;
+use std::time::Instant;
+
+const N_NODES: usize = 256;
+const N_OPS: usize = 2000;
+
+/// Deterministic mixed op stream (same shape as `examples/stream_ingest`):
+/// ~20% deletes, ~20% reweights, the rest inserts.
+fn scripted_ops(n: usize, count: usize, seed: u64) -> Vec<EdgeOp> {
+    let mut rng = Rng::new(seed);
+    let mut present: Vec<(u32, u32)> = Vec::new();
+    let mut ops = Vec::with_capacity(count);
+    for _ in 0..count {
+        let roll = rng.next_f64();
+        let op = if roll < 0.2 && !present.is_empty() {
+            let i = rng.gen_range(present.len());
+            let (src, dst) = present.swap_remove(i);
+            EdgeOp::Delete { src, dst }
+        } else if roll < 0.4 && !present.is_empty() {
+            let i = rng.gen_range(present.len());
+            let (src, dst) = present[i];
+            EdgeOp::Reweight { src, dst, w: rng.uniform(0.1, 4.0) as f32 }
+        } else {
+            let src = rng.gen_range(n) as u32;
+            let dst = rng.gen_range(n) as u32;
+            if !present.contains(&(src, dst)) {
+                present.push((src, dst));
+            }
+            EdgeOp::Insert { src, dst, w: rng.uniform(0.1, 4.0) as f32 }
+        };
+        ops.push(op);
+    }
+    ops
+}
+
+fn main() {
+    let out_path = std::env::var("GNN_SPMM_BENCH_STREAM_OUT")
+        .unwrap_or_else(|_| "BENCH_stream.json".to_string());
+    let base = std::env::temp_dir().join(format!("bench_stream_{}", std::process::id()));
+    let ops = scripted_ops(N_NODES, N_OPS, 0xBEEF);
+    let mut lines: Vec<String> = Vec::new();
+
+    // ── WAL append throughput vs fsync batching ─────────────────────────
+    let mut ops_per_sec_by_sync: Vec<(usize, f64)> = Vec::new();
+    for &sync_every in &[1usize, 8, 64] {
+        let dir = base.join(format!("wal_{sync_every}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = StreamConfig::new(&dir, N_NODES);
+        cfg.sync_every = sync_every;
+        cfg.compact_every = usize::MAX; // isolate the WAL path
+        let store = StreamStore::open(cfg).expect("open");
+        let t0 = Instant::now();
+        for op in &ops {
+            store.ingest(*op).expect("ingest");
+        }
+        store.flush().expect("flush");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let ops_per_sec = N_OPS as f64 / secs;
+        assert_eq!(store.acked(), N_OPS as u64, "every op must be acknowledged after flush");
+        println!(
+            "wal append sync_every={sync_every}: {ops_per_sec:.0} ops/s ({:.2} ms total)",
+            secs * 1e3
+        );
+        ops_per_sec_by_sync.push((sync_every, ops_per_sec));
+        lines.push(
+            Json::obj(vec![
+                ("name", Json::Str("stream/wal_append".to_string())),
+                ("nodes", Json::Num(N_NODES as f64)),
+                ("ops", Json::Num(N_OPS as f64)),
+                ("sync_every", Json::Num(sync_every as f64)),
+                ("ops_per_sec", Json::Num(ops_per_sec)),
+            ])
+            .to_string(),
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let per_op = ops_per_sec_by_sync[0].1;
+    let batched = ops_per_sec_by_sync.last().unwrap().1;
+    assert!(
+        batched >= 0.5 * per_op,
+        "fsync batching regressed throughput (sync_every=1: {per_op:.0} ops/s, \
+         sync_every=64: {batched:.0} ops/s)"
+    );
+    println!("  fsync batching 1→64: ×{:.2}", batched / per_op);
+
+    // ── Compaction latency + recovery replay rate ───────────────────────
+    let dir = base.join("compact");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = StreamConfig::new(&dir, N_NODES);
+    cfg.sync_every = 64;
+    cfg.compact_every = usize::MAX; // compaction driven explicitly below
+    let store = StreamStore::open(cfg.clone()).expect("open");
+    for op in &ops {
+        store.ingest(*op).expect("ingest");
+    }
+    store.flush().expect("flush");
+
+    // Recovery first, while the WAL tail still holds the full stream.
+    drop(store);
+    let t0 = Instant::now();
+    let store = StreamStore::open(cfg.clone()).expect("recovery open");
+    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let st = store.stats();
+    let replayed = st.applied - st.published_seq;
+    assert_eq!(replayed, N_OPS as u64, "recovery must replay the full WAL tail");
+    assert_eq!(st.acked, N_OPS as u64, "recovery must keep every acknowledged op");
+    let replay_per_sec = replayed as f64 / (recovery_ms / 1e3).max(1e-9);
+    println!("recovery: {replayed} ops replayed in {recovery_ms:.2} ms ({replay_per_sec:.0} ops/s)");
+    lines.push(
+        Json::obj(vec![
+            ("name", Json::Str("stream/recovery".to_string())),
+            ("nodes", Json::Num(N_NODES as f64)),
+            ("replayed", Json::Num(replayed as f64)),
+            ("recovery_ms", Json::Num(recovery_ms)),
+            ("replay_ops_per_sec", Json::Num(replay_per_sec)),
+        ])
+        .to_string(),
+    );
+
+    let t0 = Instant::now();
+    let stats = store.compact_once().expect("compact");
+    let compact_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let after = store.stats();
+    assert_eq!(after.pending_edits, 0, "compaction must drain the overlay");
+    assert_eq!(after.published_seq, N_OPS as u64, "published snapshot must cover the stream");
+    println!(
+        "compact: {} edits over {} rows in {compact_ms:.2} ms (epoch v{})",
+        stats.merged_edits, stats.touched_rows, stats.version
+    );
+    lines.push(
+        Json::obj(vec![
+            ("name", Json::Str("stream/compact".to_string())),
+            ("nodes", Json::Num(N_NODES as f64)),
+            ("merged_edits", Json::Num(stats.merged_edits as f64)),
+            ("touched_rows", Json::Num(stats.touched_rows as f64)),
+            ("compact_ms", Json::Num(compact_ms)),
+        ])
+        .to_string(),
+    );
+    drop(store);
+    let _ = std::fs::remove_dir_all(&base);
+
+    let body = lines.join("\n") + "\n";
+    match std::fs::write(&out_path, &body) {
+        Ok(()) => println!("\nwrote {out_path} ({} records)", lines.len()),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

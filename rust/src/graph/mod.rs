@@ -7,6 +7,7 @@ pub mod generators;
 pub mod datasets;
 pub mod partition;
 pub mod sampler;
+pub mod stream;
 
 pub use datasets::{DatasetSpec, GraphDataset, RelationalDataset, LARGE_DATASETS, PAPER_DATASETS};
 pub use generators::{gen_matrix, MatrixPattern};

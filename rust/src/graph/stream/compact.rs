@@ -1,0 +1,361 @@
+//! Background compaction: delta → fresh CSR master, under supervision
+//! (DESIGN.md §Streaming-Durability).
+//!
+//! One cycle ([`compact_once`], also driven synchronously by tests):
+//!
+//! 1. **freeze** — swap the live overlay into the frozen slot under the
+//!    state lock (or adopt a frozen overlay a crashed attempt left
+//!    behind), then fsync the WAL so every frozen op is acknowledged;
+//! 2. **merge** — outside any lock, patch each touched master row and
+//!    build the new raw CSR via `Csr::replace_rows`; run the full
+//!    `SparseMatrix::validate()` sweep (the compaction trust boundary);
+//! 3. **renormalize** — recompute `D⁻¹A` rows for exactly the touched
+//!    rows (row normalization is row-local, so untouched rows keep their
+//!    bit-identical values);
+//! 4. **checkpoint** — `util::fsio::PreparedWrite`: temp file + fsync +
+//!    atomic rename (`CrashPoint` seam `checkpoint-rename` fires between
+//!    the two halves);
+//! 5. **publish** — swap masters under the state lock and
+//!    `EpochCell::publish_arc` the new [`StreamSnapshot`] (seam
+//!    `compact-publish` fires just before);
+//! 6. **drop** — atomically rewrite the WAL keeping only records past
+//!    the checkpointed seq.
+//!
+//! A crash or panic anywhere leaves the frozen overlay in place (step 1
+//! clones it out rather than taking it), so reads keep merging it and
+//! the next attempt resumes at step 2 — and every on-disk transition is
+//! atomic, so recovery always sees a consistent checkpoint ∪ WAL.
+//!
+//! Supervision mirrors serve's workers: the background thread wraps each
+//! cycle in `catch_unwind`; panics (and injected crash/I-O errors, which
+//! a background thread cannot "die" from) are charged against
+//! `restart_budget`, and past it the store **degrades** — ingest refuses
+//! with [`StreamError::Backpressure`], reads keep serving the last
+//! published snapshot. Every published epoch carries a fresh
+//! `SharedMatrix` identity, which is exactly what forces `AdjEngine`'s
+//! `ensure` to re-decide the format/schedule plan on the next bind (the
+//! shape/drift anchors in `predictor::cache`).
+
+use super::delta::csr_row;
+use super::recovery::{checkpoint_path, encode_checkpoint};
+use super::{master_csr, StoreInner, StreamError, StreamSnapshot};
+use crate::sparse::{Csr, SharedMatrix, SparseMatrix};
+use crate::util::fsio::PreparedWrite;
+use crate::util::sync::{lock_recover, wait_timeout_recover};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What one compaction cycle did.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Column-level overlay edits folded in (0 for a no-op cycle).
+    pub merged_edits: usize,
+    /// Master rows rebuilt (and renormalized).
+    pub touched_rows: usize,
+    /// WAL seq the new checkpoint covers.
+    pub seq: u64,
+    /// Published epoch version (unchanged for a no-op cycle).
+    pub version: u64,
+}
+
+/// Row-normalize every row of `raw` (`D⁻¹A`): recovery's full rebuild.
+/// Incremental compaction must agree bit-for-bit, so both paths share
+/// [`normalize_row`] on identical raw inputs.
+pub(crate) fn row_normalize_full(raw: &Csr) -> Csr {
+    let mut out = raw.clone();
+    for r in 0..out.rows {
+        let span = out.indptr[r]..out.indptr[r + 1];
+        let sum: f64 = out.vals[span.clone()].iter().map(|&w| w as f64).sum();
+        if sum > 0.0 {
+            for v in &mut out.vals[span] {
+                *v = (*v as f64 / sum) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Normalize one raw row to sum 1 (empty/degenerate rows normalize to
+/// themselves — no entries).
+fn normalize_row(entries: &[(u32, f32)]) -> Vec<(u32, f32)> {
+    let sum: f64 = entries.iter().map(|&(_, w)| w as f64).sum();
+    if sum <= 0.0 {
+        return Vec::new();
+    }
+    entries.iter().map(|&(c, w)| (c, (w as f64 / sum) as f32)).collect()
+}
+
+/// One full compaction cycle (see module docs). Returns the stats of the
+/// published epoch, or a no-op stats record when there was nothing to do.
+pub(crate) fn compact_once(inner: &StoreInner) -> Result<CompactStats, StreamError> {
+    // Panic seam for supervision tests (inert plans never fire).
+    inner.cfg.faults.maybe_panic();
+
+    // ── 1. freeze ────────────────────────────────────────────────────
+    let (master, norm, frozen, frozen_seq) = {
+        let mut st = lock_recover(&inner.state);
+        if st.frozen.is_none() {
+            if st.live.is_empty() {
+                return Ok(CompactStats {
+                    merged_edits: 0,
+                    touched_rows: 0,
+                    seq: st.master_seq,
+                    version: st.version,
+                });
+            }
+            let live = std::mem::take(&mut st.live);
+            st.frozen = Some((live, st.applied_seq));
+        }
+        let (f, seq) = st.frozen.as_ref().expect("frozen set above");
+        // Clone the overlay out (bounded by compact_every edits): the
+        // original stays visible to readers — and survives — until the
+        // cycle commits.
+        (st.master.clone(), st.norm.clone(), f.clone(), *seq)
+    };
+    // Acknowledge everything we are about to fold in (checkpointing an
+    // un-fsynced op would let ack regress across a crash).
+    {
+        let mut wal = lock_recover(&inner.wal);
+        wal.sync()?;
+    }
+
+    // ── 2. merge + validate ──────────────────────────────────────────
+    let raw = master_csr(&master);
+    let mut new_rows: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+    for r in frozen.touched_rows() {
+        let mut row = csr_row(raw, r);
+        frozen.patch_row(r, &mut row);
+        new_rows.insert(r, row);
+    }
+    let touched = new_rows.len();
+    let new_raw = SharedMatrix::new(SparseMatrix::Csr(raw.replace_rows(&new_rows)));
+    new_raw.validate().map_err(|e| StreamError::Corrupt {
+        what: format!("compacted master failed validation: {e}"),
+    })?;
+
+    // ── 3. incremental renormalization ───────────────────────────────
+    let norm_rows: BTreeMap<u32, Vec<(u32, f32)>> =
+        new_rows.iter().map(|(&r, row)| (r, normalize_row(row))).collect();
+    let new_norm = SharedMatrix::new(SparseMatrix::Csr(master_csr(&norm).replace_rows(&norm_rows)));
+
+    // ── 4. checkpoint (temp file + atomic rename) ────────────────────
+    inner
+        .cfg
+        .faults
+        .maybe_io_error("checkpoint-write")
+        .map_err(|e| StreamError::io("checkpoint write", e))?;
+    let bytes = encode_checkpoint(master_csr(&new_raw), frozen_seq);
+    let staged = PreparedWrite::prepare(&checkpoint_path(&inner.cfg.dir), &bytes)
+        .map_err(|e| StreamError::io("checkpoint write", e))?;
+    if inner.cfg.faults.maybe_crash("checkpoint-rename") {
+        // Dropping `staged` discards the temp file; the old checkpoint
+        // (or none) stays current and the WAL still holds everything.
+        return Err(StreamError::Crashed { seam: "checkpoint-rename" });
+    }
+    staged.commit().map_err(|e| StreamError::io("checkpoint rename", e))?;
+
+    // ── 5. publish ───────────────────────────────────────────────────
+    if inner.cfg.faults.maybe_crash("compact-publish") {
+        // The checkpoint is durable but unpublished: recovery rebuilds
+        // from it and replays the (still intact) WAL tail past its seq.
+        return Err(StreamError::Crashed { seam: "compact-publish" });
+    }
+    let snapshot = {
+        let mut st = lock_recover(&inner.state);
+        st.master = new_raw.clone();
+        st.norm = new_norm.clone();
+        st.master_seq = frozen_seq;
+        st.frozen = None;
+        st.version += 1;
+        StreamSnapshot {
+            raw: new_raw,
+            norm: new_norm,
+            seq: frozen_seq,
+            version: st.version,
+        }
+    };
+    let version = snapshot.version;
+    inner.published.publish_arc(Arc::new(snapshot));
+
+    // ── 6. drop compacted WAL records ────────────────────────────────
+    {
+        let mut wal = lock_recover(&inner.wal);
+        wal.drop_through(frozen_seq)?;
+    }
+    // ord: monotone stats counter; readers only report it.
+    inner.compactions.fetch_add(1, Ordering::Relaxed);
+    Ok(CompactStats { merged_edits: frozen.edits(), touched_rows: touched, seq: frozen_seq, version })
+}
+
+/// Spawn the supervised compactor thread (threshold-driven; ends on
+/// store drop or after degrading).
+pub(crate) fn spawn(inner: Arc<StoreInner>) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("stream-compactor".into())
+        .spawn(move || supervise(&inner))
+        .expect("spawning the compactor thread")
+}
+
+fn should_compact(inner: &StoreInner) -> bool {
+    let st = lock_recover(&inner.state);
+    st.frozen.is_some() || st.live.edits() >= inner.cfg.compact_every
+}
+
+fn supervise(inner: &StoreInner) {
+    let mut failures: u32 = 0;
+    loop {
+        // Park until signalled (threshold crossing / shutdown), with a
+        // periodic poll so a quiet trickle still compacts eventually.
+        {
+            let mut closed = lock_recover(&inner.signal.state);
+            loop {
+                if *closed {
+                    return;
+                }
+                if should_compact(inner) {
+                    break;
+                }
+                let (g, _) =
+                    wait_timeout_recover(&inner.signal.cv, closed, Duration::from_millis(25));
+                closed = g;
+            }
+        }
+        let attempt =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compact_once(inner)));
+        match attempt {
+            Ok(Ok(_)) => {
+                failures = 0; // a clean cycle refills the budget
+                continue;
+            }
+            Ok(Err(e)) => {
+                // In background mode an injected crash/I-O error cannot
+                // actually kill the process; it is charged like a panic.
+                eprintln!("stream-compactor: cycle failed ({e}); respawning");
+            }
+            Err(_) => {
+                eprintln!("stream-compactor: cycle panicked; respawning");
+            }
+        }
+        failures += 1;
+        // ord: monotone stats counter; readers only report it.
+        inner.compactor_restarts.fetch_add(1, Ordering::Relaxed);
+        if failures > inner.cfg.restart_budget {
+            // ord: SeqCst pairs with ingest's read — after this store,
+            // no new ingest is admitted, while reads (EpochCell loads)
+            // never consult the flag and stay live.
+            inner.degraded.store(true, Ordering::SeqCst);
+            eprintln!(
+                "stream-compactor: restart budget ({}) exhausted; store degraded — \
+                 ingest backpressures, reads stay live",
+                inner.cfg.restart_budget
+            );
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{StreamConfig, StreamStore};
+    use super::*;
+    use crate::graph::stream::wal::EdgeOp;
+    use std::path::PathBuf;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("gnn_spmm_compact").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn incremental_and_full_normalization_agree_bitwise() {
+        // The same raw row through normalize_row (compaction's path) and
+        // row_normalize_full (recovery's path) must match bit-for-bit —
+        // that is the whole recovery-equivalence argument for norms.
+        let entries = vec![(0u32, 0.3f32), (4, 1.7), (9, 0.125)];
+        let raw = Csr {
+            rows: 1,
+            cols: 10,
+            indptr: vec![0, 3],
+            indices: entries.iter().map(|&(c, _)| c).collect(),
+            vals: entries.iter().map(|&(_, w)| w).collect(),
+        };
+        let full = row_normalize_full(&raw);
+        let inc = normalize_row(&entries);
+        for (i, &(c, w)) in inc.iter().enumerate() {
+            assert_eq!(full.indices[i], c);
+            assert_eq!(full.vals[i].to_bits(), w.to_bits(), "col {c} diverged");
+        }
+    }
+
+    #[test]
+    fn normalize_row_handles_degenerate_rows() {
+        assert!(normalize_row(&[]).is_empty());
+        let one = normalize_row(&[(3, 2.5)]);
+        assert_eq!(one, vec![(3, 1.0)]);
+    }
+
+    #[test]
+    fn a_full_cycle_checkpoints_publishes_and_drops_the_wal() {
+        let mut cfg = StreamConfig::new(dir("cycle"), 6);
+        cfg.sync_every = 1;
+        let store = StreamStore::open(cfg.clone()).unwrap();
+        store.ingest(EdgeOp::Insert { src: 0, dst: 1, w: 2.0 }).unwrap();
+        store.ingest(EdgeOp::Insert { src: 0, dst: 2, w: 2.0 }).unwrap();
+        store.ingest(EdgeOp::Insert { src: 5, dst: 0, w: 1.0 }).unwrap();
+        store.ingest(EdgeOp::Delete { src: 0, dst: 2 }).unwrap();
+
+        let stats = store.compact_once().unwrap();
+        assert_eq!(stats.touched_rows, 2, "rows 0 and 5");
+        assert_eq!(stats.merged_edits, 3, "(0,1), (0,2), (5,0)");
+        assert_eq!(stats.seq, 4);
+        assert_eq!(stats.version, 1);
+
+        let snap = store.published();
+        assert_eq!(snap.version, 1);
+        assert_eq!(snap.seq, 4);
+        let raw = master_csr(&snap.raw);
+        assert_eq!(raw.row_entries(0).collect::<Vec<_>>(), vec![(1, 2.0)]);
+        assert_eq!(raw.row_entries(5).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        let norm = master_csr(&snap.norm);
+        assert_eq!(norm.row_entries(0).collect::<Vec<_>>(), vec![(1, 1.0)]);
+
+        // A second cycle with nothing pending is a published no-op.
+        let stats2 = store.compact_once().unwrap();
+        assert_eq!(stats2.merged_edits, 0);
+        assert_eq!(stats2.version, 1, "no-op cycles do not publish");
+
+        // The WAL is fully compacted: reopening replays nothing but the
+        // checkpoint still carries every acknowledged op.
+        drop(store);
+        let store = StreamStore::open(cfg).unwrap();
+        assert_eq!(store.acked(), 4);
+        assert_eq!(store.read_row(0), vec![(1, 2.0)]);
+        assert_eq!(store.read_row(5), vec![(0, 1.0)]);
+    }
+
+    #[test]
+    fn a_crashed_checkpoint_rename_keeps_the_frozen_overlay_for_retry() {
+        let mut cfg = StreamConfig::new(dir("retry"), 4);
+        cfg.sync_every = 1;
+        // The CrashPoint lane counts every seam reached: the ingest below
+        // passes `wal-append` (ordinal 1), so ordinal 2 is the compaction's
+        // `checkpoint-rename` seam.
+        cfg.faults = Arc::new(
+            crate::testing::FaultPlan::inert().script(crate::testing::FaultKind::CrashPoint, &[2]),
+        );
+        let store = StreamStore::open(cfg).unwrap();
+        store.ingest(EdgeOp::Insert { src: 1, dst: 2, w: 3.0 }).unwrap();
+        let err = store.compact_once().unwrap_err();
+        assert_eq!(err.kind(), "crash_point");
+        // Reads still see the op (frozen overlay stayed in place) …
+        assert_eq!(store.read_row(1), vec![(2, 3.0)]);
+        // … and the retry folds it in (the crash ordinal is consumed).
+        let stats = store.compact_once().unwrap();
+        assert_eq!(stats.merged_edits, 1);
+        assert_eq!(store.published().version, 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Write-optimized delta overlay (DESIGN.md §Streaming-Durability).
+//!
+//! The LSM memtable analogue: edge ops land here (after the WAL append
+//! that makes them durable) as per-row patch maps over the immutable CSR
+//! master. A patch entry is `col → Some(w)` (upsert) or `col → None`
+//! (delete); applying an op is an `O(log)` map insert, and the read path
+//! merges a master row with one or two overlays (frozen + live) in one
+//! ordered sweep. DOK/LIL live in `sparse/` as full matrix formats; this
+//! structure is deliberately *sparser than that* — it only materializes
+//! touched rows, so a stream touching 1% of a million-node graph costs
+//! memory proportional to the touch set, not the graph.
+
+use super::wal::EdgeOp;
+use crate::sparse::Csr;
+use std::collections::BTreeMap;
+
+/// Per-row patches over a CSR master. `Clone` is deliberate: compaction
+/// clones the frozen overlay to merge outside the state lock, keeping the
+/// original in place until the merge succeeds (panic-safety).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaOverlay {
+    rows: BTreeMap<u32, BTreeMap<u32, Option<f32>>>,
+    edits: usize,
+}
+
+impl DeltaOverlay {
+    pub fn new() -> DeltaOverlay {
+        DeltaOverlay::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total column-level patch entries (distinct `(row, col)` pairs).
+    pub fn edits(&self) -> usize {
+        self.edits
+    }
+
+    /// Rows with at least one patch entry, ascending.
+    pub fn touched_rows(&self) -> impl Iterator<Item = u32> + '_ {
+        self.rows.keys().copied()
+    }
+
+    /// Fold one absolute op in. Insert/Reweight upsert the weight;
+    /// Delete records a tombstone (the master may still hold the edge —
+    /// only compaction erases it for real).
+    pub fn apply(&mut self, op: &EdgeOp) {
+        let (r, c, patch) = match *op {
+            EdgeOp::Insert { src, dst, w } | EdgeOp::Reweight { src, dst, w } => {
+                (src, dst, Some(w))
+            }
+            EdgeOp::Delete { src, dst } => (src, dst, None),
+        };
+        if self.rows.entry(r).or_default().insert(c, patch).is_none() {
+            self.edits += 1;
+        }
+    }
+
+    /// The patch recorded for `(r, c)`, if any: `Some(Some(w))` upsert,
+    /// `Some(None)` tombstone, `None` untouched.
+    pub fn get(&self, r: u32, c: u32) -> Option<Option<f32>> {
+        self.rows.get(&r).and_then(|row| row.get(&c).copied())
+    }
+
+    /// Patch a sorted `(col, weight)` row in place: upserts overwrite or
+    /// splice in, tombstones remove. One ordered merge — `entries` stays
+    /// sorted by column.
+    pub fn patch_row(&self, r: u32, entries: &mut Vec<(u32, f32)>) {
+        let Some(patches) = self.rows.get(&r) else {
+            return;
+        };
+        let base = std::mem::take(entries);
+        entries.reserve(base.len() + patches.len());
+        let mut patch_it = patches.iter().peekable();
+        for (c, w) in base {
+            // Emit patches for columns strictly before the base entry.
+            while let Some(&(&pc, &pw)) = patch_it.peek() {
+                if pc >= c {
+                    break;
+                }
+                patch_it.next();
+                if let Some(pw) = pw {
+                    entries.push((pc, pw));
+                }
+            }
+            // A patch on exactly this column replaces (or deletes) it.
+            if let Some(&(&pc, &pw)) = patch_it.peek() {
+                if pc == c {
+                    patch_it.next();
+                    if let Some(pw) = pw {
+                        entries.push((pc, pw));
+                    }
+                    continue;
+                }
+            }
+            entries.push((c, w));
+        }
+        for (&pc, &pw) in patch_it {
+            if let Some(pw) = pw {
+                entries.push((pc, pw));
+            }
+        }
+    }
+
+    /// Backfill from an overlay that is **older** than `self`: entries
+    /// from `older` land only where `self` has no patch (newer wins).
+    /// Used when a crashed compaction hands its frozen overlay back to
+    /// the live one.
+    pub fn absorb_older(&mut self, older: DeltaOverlay) {
+        for (r, row) in older.rows {
+            let dst = self.rows.entry(r).or_default();
+            for (c, patch) in row {
+                if let std::collections::btree_map::Entry::Vacant(slot) = dst.entry(c) {
+                    slot.insert(patch);
+                    self.edits += 1;
+                }
+            }
+        }
+    }
+}
+
+/// A CSR row as an owned sorted `(col, weight)` vec — the merge substrate
+/// `patch_row` edits.
+pub(crate) fn csr_row(m: &Csr, r: u32) -> Vec<(u32, f32)> {
+    m.row_entries(r as usize).map(|(c, w)| (c as u32, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn master() -> Csr {
+        // Row 1: cols {1: 1.0, 3: 3.0, 5: 5.0}
+        Csr::from_coo(&Coo::from_triples(
+            4,
+            8,
+            vec![(1, 1, 1.0), (1, 3, 3.0), (1, 5, 5.0), (2, 0, 2.0)],
+        ))
+    }
+
+    #[test]
+    fn apply_tracks_distinct_edits() {
+        let mut d = DeltaOverlay::new();
+        d.apply(&EdgeOp::Insert { src: 1, dst: 2, w: 2.0 });
+        d.apply(&EdgeOp::Reweight { src: 1, dst: 2, w: 4.0 });
+        d.apply(&EdgeOp::Delete { src: 1, dst: 3 });
+        assert_eq!(d.edits(), 2, "re-patching the same cell is not a new edit");
+        assert_eq!(d.get(1, 2), Some(Some(4.0)));
+        assert_eq!(d.get(1, 3), Some(None));
+        assert_eq!(d.get(0, 0), None);
+        assert_eq!(d.touched_rows().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn patch_row_merges_in_order() {
+        let m = master();
+        let mut d = DeltaOverlay::new();
+        d.apply(&EdgeOp::Insert { src: 1, dst: 0, w: 0.5 }); // prepend
+        d.apply(&EdgeOp::Reweight { src: 1, dst: 3, w: 30.0 }); // overwrite
+        d.apply(&EdgeOp::Delete { src: 1, dst: 5 }); // tombstone
+        d.apply(&EdgeOp::Insert { src: 1, dst: 7, w: 7.0 }); // append
+        let mut row = csr_row(&m, 1);
+        d.patch_row(1, &mut row);
+        assert_eq!(row, vec![(0, 0.5), (1, 1.0), (3, 30.0), (7, 7.0)]);
+        // Untouched row is left alone.
+        let mut row2 = csr_row(&m, 2);
+        d.patch_row(2, &mut row2);
+        assert_eq!(row2, vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn tombstone_on_absent_edge_is_a_noop_read() {
+        let m = master();
+        let mut d = DeltaOverlay::new();
+        d.apply(&EdgeOp::Delete { src: 1, dst: 6 });
+        let mut row = csr_row(&m, 1);
+        d.patch_row(1, &mut row);
+        assert_eq!(row, vec![(1, 1.0), (3, 3.0), (5, 5.0)]);
+    }
+
+    #[test]
+    fn absorb_older_lets_the_newer_overlay_win() {
+        let mut newer = DeltaOverlay::new();
+        newer.apply(&EdgeOp::Insert { src: 0, dst: 0, w: 9.0 });
+        let mut older = DeltaOverlay::new();
+        older.apply(&EdgeOp::Insert { src: 0, dst: 0, w: 1.0 }); // loses
+        older.apply(&EdgeOp::Insert { src: 0, dst: 1, w: 2.0 }); // fills
+        older.apply(&EdgeOp::Delete { src: 3, dst: 3 }); // fills
+        newer.absorb_older(older);
+        assert_eq!(newer.get(0, 0), Some(Some(9.0)));
+        assert_eq!(newer.get(0, 1), Some(Some(2.0)));
+        assert_eq!(newer.get(3, 3), Some(None));
+        assert_eq!(newer.edits(), 3);
+    }
+}

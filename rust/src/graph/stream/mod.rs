@@ -1,0 +1,390 @@
+//! Crash-safe streaming graph ingestion (DESIGN.md §Streaming-Durability).
+//!
+//! ROADMAP Direction 2: real services don't retrain on frozen graphs —
+//! edges arrive continuously, and an ingestion path is only real if it
+//! survives being killed mid-write and mid-compaction. This module is an
+//! LSM-style mutable adjacency with a durability spine:
+//!
+//! * [`wal`] — a checksummed append-only write-ahead log. Every edge
+//!   insert/delete/reweight is a length-prefixed, CRC-guarded record;
+//!   fsync is batched (`sync_every`), and an operation counts as
+//!   **acknowledged** only once its record is fsynced. Torn tails are
+//!   truncated on open.
+//! * [`delta`] — the in-memory write-optimized overlay (per-row patch
+//!   maps over the immutable CSR master); the read path merges
+//!   master + frozen delta + live delta per row.
+//! * [`compact`] — the background compaction: freeze the live delta,
+//!   merge into a fresh validated CSR master, renormalize only touched
+//!   rows, checkpoint (temp-file + atomic rename via `util::fsio`),
+//!   publish through [`EpochCell::publish_arc`], and drop compacted WAL
+//!   records — supervised like serve's workers (panic → respawn under a
+//!   restart budget → degraded mode where **ingest backpressures but
+//!   reads stay live** on the last published snapshot).
+//! * [`recovery`] — startup replay: load the checkpoint, scan the WAL
+//!   tail, rebuild the overlay. Invariant: **every acknowledged write
+//!   survives any single crash point** (the `testing::fault` CrashPoint
+//!   seams script exactly those crashes; `tests/integration_stream.rs`
+//!   sweeps every ordinal).
+//!
+//! All three edge operations are *absolute* (upserts/removals, never
+//! increments), so replaying any suffix of the op stream after recovery
+//! converges to a state bit-identical to the fault-free run — the
+//! property the recovery-equivalence test pins.
+//!
+//! Normalization here is **row-stochastic** (`D⁻¹A`), not GCN's
+//! symmetric `D^{-1/2}(A+I)D^{-1/2}`: row normalization is local to a
+//! row, so compaction renormalizes exactly the touched rows (DESIGN.md
+//! §Substitutions records the deviation).
+
+pub mod compact;
+pub mod delta;
+pub mod recovery;
+pub mod wal;
+
+pub use delta::DeltaOverlay;
+pub use wal::{EdgeOp, Wal};
+
+use crate::sparse::shared::EpochCell;
+use crate::sparse::{Csr, SharedMatrix, SparseMatrix};
+use crate::testing::FaultPlan;
+use crate::util::sync::lock_recover;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Why a streaming operation failed. Mirrors `serve::ServeError`'s
+/// taxonomy: one typed variant per failure site, stable `kind()` tags.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamError {
+    /// A durable-write seam failed (real I/O error or an injected
+    /// `FaultKind::IoError`). The op is not acknowledged; the caller may
+    /// retry — ops are absolute, so a retry can never double-apply.
+    Io { what: String },
+    /// On-disk or in-flight state failed validation (bad checkpoint
+    /// magic/CRC, out-of-bounds endpoint, non-finite weight, compacted
+    /// master rejected by `SparseMatrix::validate`).
+    Corrupt { what: String },
+    /// An injected `FaultKind::CrashPoint` fired at this seam: the store
+    /// must be treated as dead — drop it and re-open (recovery).
+    Crashed { seam: &'static str },
+    /// Ingest backpressure: the compactor exhausted its restart budget
+    /// and the store is degraded — writes are refused so the un-compacted
+    /// delta cannot grow without bound, while reads stay live.
+    Backpressure { pending: usize },
+}
+
+impl StreamError {
+    /// Stable short tag for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StreamError::Io { .. } => "io",
+            StreamError::Corrupt { .. } => "corrupt",
+            StreamError::Crashed { .. } => "crash_point",
+            StreamError::Backpressure { .. } => "backpressure",
+        }
+    }
+
+    pub(crate) fn io(what: &str, e: std::io::Error) -> StreamError {
+        StreamError::Io { what: format!("{what}: {e}") }
+    }
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Io { what } => write!(f, "stream I/O failure: {what}"),
+            StreamError::Corrupt { what } => write!(f, "stream state corrupt: {what}"),
+            StreamError::Crashed { seam } => write!(f, "injected crash at seam {seam}"),
+            StreamError::Backpressure { pending } => {
+                write!(f, "ingest backpressure: store degraded with {pending} pending edits")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Configuration for [`StreamStore::open`].
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Durability directory: holds `wal.bin` and `checkpoint.bin`.
+    pub dir: PathBuf,
+    /// Fixed node count (adjacency is `n_nodes × n_nodes`).
+    pub n_nodes: usize,
+    /// Fsync batching: acknowledge (sync) after this many appends. `1`
+    /// means sync-per-op; larger values trade ack latency for throughput
+    /// (unsynced ops are the only writes a crash may lose — and they
+    /// were never acknowledged).
+    pub sync_every: usize,
+    /// Background compaction threshold (live-delta edits).
+    pub compact_every: usize,
+    /// Compactor supervision: panics tolerated before the store degrades.
+    pub restart_budget: u32,
+    /// Fault-injection schedule (inert by default).
+    pub faults: Arc<FaultPlan>,
+}
+
+impl StreamConfig {
+    pub fn new(dir: impl Into<PathBuf>, n_nodes: usize) -> StreamConfig {
+        StreamConfig {
+            dir: dir.into(),
+            n_nodes,
+            sync_every: 64,
+            compact_every: 1024,
+            restart_budget: 3,
+            faults: Arc::new(FaultPlan::inert()),
+        }
+    }
+}
+
+/// The published unit: one compacted adjacency epoch. Raw and normalized
+/// masters are `SharedMatrix` handles co-owned with the store's in-memory
+/// state — publication is an `Arc` swap, never a matrix copy.
+#[derive(Clone, Debug)]
+pub struct StreamSnapshot {
+    /// Raw-weight adjacency (CSR).
+    pub raw: SharedMatrix,
+    /// Row-normalized adjacency `D⁻¹A` (CSR) — what serving binds.
+    pub norm: SharedMatrix,
+    /// WAL sequence this snapshot covers: every op with `seq <= seq` is
+    /// folded in; later ops live in the overlay until the next epoch.
+    pub seq: u64,
+    /// Monotone epoch counter (0 = the recovery-time snapshot).
+    pub version: u64,
+}
+
+/// Mutable in-memory state: masters + overlays (one mutex; every section
+/// is short and allocation-light).
+pub(crate) struct MemState {
+    /// Immutable raw-weight CSR master (covered through `master_seq`).
+    pub(crate) master: SharedMatrix,
+    /// Row-normalized master, kept in lockstep with `master`.
+    pub(crate) norm: SharedMatrix,
+    pub(crate) master_seq: u64,
+    /// Write-optimized overlay receiving live ingest.
+    pub(crate) live: DeltaOverlay,
+    /// Overlay frozen by an in-flight (or crashed-and-retried) compaction,
+    /// with the WAL seq it covers. Readers still merge it.
+    pub(crate) frozen: Option<(DeltaOverlay, u64)>,
+    /// Seq of the last op applied to `live`.
+    pub(crate) applied_seq: u64,
+    /// Published epoch counter.
+    pub(crate) version: u64,
+}
+
+/// Compactor mailbox: `work` is notified on threshold crossings and
+/// shutdown; `closed` ends the thread.
+pub(crate) struct CompactSignal {
+    pub(crate) state: Mutex<bool>, // closed?
+    pub(crate) cv: Condvar,
+}
+
+pub(crate) struct StoreInner {
+    pub(crate) cfg: StreamConfig,
+    pub(crate) wal: Mutex<Wal>,
+    pub(crate) state: Mutex<MemState>,
+    pub(crate) published: EpochCell<StreamSnapshot>,
+    /// Set (and never cleared) once the compactor exhausts its restart
+    /// budget: ingest refuses with `Backpressure`, reads stay live.
+    pub(crate) degraded: AtomicBool,
+    pub(crate) compactions: AtomicU64,
+    pub(crate) compactor_restarts: AtomicU64,
+    pub(crate) signal: CompactSignal,
+}
+
+/// Point-in-time counters for reports/benches.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    /// Highest acknowledged (fsynced) WAL seq.
+    pub acked: u64,
+    /// Highest seq applied to the in-memory overlay.
+    pub applied: u64,
+    /// Live + frozen overlay edits not yet compacted.
+    pub pending_edits: usize,
+    pub compactions: u64,
+    pub compactor_restarts: u64,
+    pub degraded: bool,
+    /// Version of the currently published snapshot.
+    pub published_version: u64,
+    /// Seq covered by the currently published snapshot.
+    pub published_seq: u64,
+}
+
+/// The durable streaming-graph store (see the module docs for the full
+/// protocol). Reads are wait-free against ingest on the published
+/// snapshot, or one short lock on the merged row path; writes are
+/// WAL-first and acknowledged only after fsync.
+pub struct StreamStore {
+    inner: Arc<StoreInner>,
+    compactor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StreamStore {
+    /// Open (or recover) the store at `cfg.dir`: load the checkpoint,
+    /// truncate any torn WAL tail, replay the surviving records into a
+    /// fresh overlay, and publish the recovered master as epoch 0. No
+    /// background thread is started — call [`StreamStore::spawn_compactor`]
+    /// for threshold-driven compaction, or drive [`StreamStore::compact_once`]
+    /// explicitly (what the deterministic tests do).
+    pub fn open(cfg: StreamConfig) -> Result<StreamStore, StreamError> {
+        let rec = recovery::recover(&cfg)?;
+        let master = SharedMatrix::from(rec.master);
+        let norm = SharedMatrix::new(SparseMatrix::Csr(compact::row_normalize_full(
+            master_csr(&master),
+        )));
+        let snapshot = StreamSnapshot {
+            raw: master.clone(),
+            norm: norm.clone(),
+            seq: rec.master_seq,
+            version: 0,
+        };
+        let inner = Arc::new(StoreInner {
+            wal: Mutex::new(rec.wal),
+            state: Mutex::new(MemState {
+                master,
+                norm,
+                master_seq: rec.master_seq,
+                live: rec.live,
+                frozen: None,
+                applied_seq: rec.applied_seq,
+                version: 0,
+            }),
+            published: EpochCell::new(snapshot),
+            degraded: AtomicBool::new(false),
+            compactions: AtomicU64::new(0),
+            compactor_restarts: AtomicU64::new(0),
+            signal: CompactSignal { state: Mutex::new(false), cv: Condvar::new() },
+            cfg,
+        });
+        Ok(StreamStore { inner, compactor: None })
+    }
+
+    /// Start the supervised background compactor (idempotent).
+    pub fn spawn_compactor(&mut self) {
+        if self.compactor.is_none() {
+            self.compactor = Some(compact::spawn(Arc::clone(&self.inner)));
+        }
+    }
+
+    /// Ingest one edge operation: WAL append (the durability point),
+    /// fsync per `sync_every`, then apply to the live overlay. Returns
+    /// the op's WAL seq; it is **acknowledged** once
+    /// [`StreamStore::acked`] reaches that seq (immediately so when
+    /// `sync_every == 1`). On `Err` nothing was applied and the caller
+    /// may retry the same op safely (absolute semantics).
+    pub fn ingest(&self, op: EdgeOp) -> Result<u64, StreamError> {
+        // ord: single flag, no ordering dependency with other writes — a
+        // stale read only delays the backpressure rejection by one op.
+        if self.inner.degraded.load(Ordering::Relaxed) {
+            let st = lock_recover(&self.inner.state);
+            let pending = st.live.edits() + st.frozen.as_ref().map_or(0, |(d, _)| d.edits());
+            return Err(StreamError::Backpressure { pending });
+        }
+        op.check(self.inner.cfg.n_nodes)?;
+        let seq = {
+            let mut wal = lock_recover(&self.inner.wal);
+            wal.append(&op)?
+        };
+        let edits = {
+            let mut st = lock_recover(&self.inner.state);
+            st.live.apply(&op);
+            st.applied_seq = seq;
+            st.live.edits()
+        };
+        if edits >= self.inner.cfg.compact_every {
+            self.inner.signal.cv.notify_all();
+        }
+        Ok(seq)
+    }
+
+    /// Force an fsync and return the acknowledged watermark.
+    pub fn flush(&self) -> Result<u64, StreamError> {
+        let mut wal = lock_recover(&self.inner.wal);
+        wal.sync()
+    }
+
+    /// Highest acknowledged (durable) WAL seq.
+    pub fn acked(&self) -> u64 {
+        lock_recover(&self.inner.wal).acked()
+    }
+
+    /// Merged read of row `r`: master row patched by the frozen overlay,
+    /// then the live overlay — the freshest consistent view, including
+    /// ops not yet compacted (raw weights, sorted by column).
+    pub fn read_row(&self, r: u32) -> Vec<(u32, f32)> {
+        let st = lock_recover(&self.inner.state);
+        let mut entries = delta::csr_row(master_csr(&st.master), r);
+        if let Some((frozen, _)) = &st.frozen {
+            frozen.patch_row(r, &mut entries);
+        }
+        st.live.patch_row(r, &mut entries);
+        entries
+    }
+
+    /// The last published compacted snapshot (a co-owning handle; never
+    /// blocks on ingest or compaction).
+    pub fn published(&self) -> Arc<StreamSnapshot> {
+        self.inner.published.load()
+    }
+
+    /// Run one full compaction cycle synchronously (freeze → merge →
+    /// validate → checkpoint → publish → WAL drop). No-op when there is
+    /// nothing to compact. The background compactor calls exactly this.
+    pub fn compact_once(&self) -> Result<compact::CompactStats, StreamError> {
+        compact::compact_once(&self.inner)
+    }
+
+    /// Has the compactor exhausted its restart budget? (Ingest refuses
+    /// with [`StreamError::Backpressure`]; reads stay live.)
+    pub fn degraded(&self) -> bool {
+        // ord: monotone flag read for reporting; staleness is benign.
+        self.inner.degraded.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        let published = self.inner.published.load();
+        let (applied, pending) = {
+            let st = lock_recover(&self.inner.state);
+            (
+                st.applied_seq,
+                st.live.edits() + st.frozen.as_ref().map_or(0, |(d, _)| d.edits()),
+            )
+        };
+        StreamStats {
+            acked: self.acked(),
+            applied,
+            pending_edits: pending,
+            // ord: monotone counters read for reporting only.
+            compactions: self.inner.compactions.load(Ordering::Relaxed),
+            // ord: monotone counters read for reporting only.
+            compactor_restarts: self.inner.compactor_restarts.load(Ordering::Relaxed),
+            degraded: self.degraded(),
+            published_version: published.version,
+            published_seq: published.seq,
+        }
+    }
+
+    /// Node count this store serves.
+    pub fn n_nodes(&self) -> usize {
+        self.inner.cfg.n_nodes
+    }
+}
+
+impl Drop for StreamStore {
+    fn drop(&mut self) {
+        if let Some(h) = self.compactor.take() {
+            *lock_recover(&self.inner.signal.state) = true;
+            self.inner.signal.cv.notify_all();
+            let _ = h.join();
+        }
+    }
+}
+
+/// The store's masters are CSR by construction (recovery and compaction
+/// only ever build `Csr`); this is the one place that assumption is spelled.
+pub(crate) fn master_csr(m: &SharedMatrix) -> &Csr {
+    match &**m {
+        SparseMatrix::Csr(c) => c,
+        other => unreachable!("stream master must be CSR, found {:?}", other.format()),
+    }
+}

@@ -1,0 +1,236 @@
+//! Startup recovery: checkpoint load + WAL-tail replay (DESIGN.md
+//! §Streaming-Durability).
+//!
+//! The recovery invariant this module owns: **every acknowledged write
+//! survives any single crash point**. It holds by construction —
+//!
+//! * an op is acknowledged only after its WAL record is fsynced;
+//! * the checkpoint is written temp-file + atomic rename, so it is
+//!   always a complete file covering some seq `S`;
+//! * WAL records with `seq <= S` are dropped only *after* the rename
+//!   lands (and the drop itself is an atomic rewrite);
+//!
+//! so at every crash point, `checkpoint ∪ WAL` contains every
+//! acknowledged op exactly once-or-more, and replay (absolute ops,
+//! idempotent) reconstructs the acknowledged state bit-identically.
+//!
+//! Checkpoint file layout (little-endian):
+//!
+//! ```text
+//! [ magic: b"GNNSTRM1" ][ seq: u64 ][ rows: u64 ][ cols: u64 ][ nnz: u64 ]
+//! [ indptr: (rows+1) × u64 ][ indices: nnz × u32 ][ vals: nnz × f32-bits ]
+//! [ crc: u32 over everything above ]
+//! ```
+//!
+//! Binary, not JSON: values round-trip by bit pattern (the equivalence
+//! tests compare reads bit-identically) and the CRC makes a flipped byte
+//! a typed `Corrupt` error instead of a silently wrong graph. A corrupt
+//! checkpoint is a **hard error**, not a cold start: unlike the decision
+//! cache (a performance hint), the checkpoint holds acknowledged data —
+//! quietly discarding it would break the invariant above.
+
+use super::delta::DeltaOverlay;
+use super::wal::Wal;
+use super::{StreamConfig, StreamError};
+use crate::sparse::Csr;
+use crate::util::fsio::crc32;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: &[u8; 8] = b"GNNSTRM1";
+
+pub(crate) fn wal_path(dir: &Path) -> PathBuf {
+    dir.join("wal.bin")
+}
+
+pub(crate) fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join("checkpoint.bin")
+}
+
+/// Serialize a raw CSR master covered through `seq`.
+pub(crate) fn encode_checkpoint(master: &Csr, seq: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        MAGIC.len() + 32 + (master.rows + 1) * 8 + master.nnz() * 8 + 4,
+    );
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(master.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(master.cols as u64).to_le_bytes());
+    out.extend_from_slice(&(master.nnz() as u64).to_le_bytes());
+    for &p in &master.indptr {
+        out.extend_from_slice(&(p as u64).to_le_bytes());
+    }
+    for &i in &master.indices {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in &master.vals {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn read_u64(bytes: &[u8], off: &mut usize) -> Option<u64> {
+    let v = bytes.get(*off..*off + 8)?;
+    *off += 8;
+    Some(u64::from_le_bytes(v.try_into().ok()?))
+}
+
+fn read_u32(bytes: &[u8], off: &mut usize) -> Option<u32> {
+    let v = bytes.get(*off..*off + 4)?;
+    *off += 4;
+    Some(u32::from_le_bytes(v.try_into().ok()?))
+}
+
+/// Parse and verify a checkpoint. Structural errors (bad magic, bad CRC,
+/// truncated, inconsistent counts) are `Corrupt`.
+pub(crate) fn decode_checkpoint(bytes: &[u8]) -> Result<(Csr, u64), StreamError> {
+    let corrupt = |what: &str| StreamError::Corrupt { what: format!("checkpoint: {what}") };
+    if bytes.len() < MAGIC.len() + 32 + 8 + 4 || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(corrupt("missing or short magic header"));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored_crc = u32::from_le_bytes(tail.try_into().expect("4-byte tail"));
+    if crc32(body) != stored_crc {
+        return Err(corrupt("CRC mismatch"));
+    }
+    let mut off = MAGIC.len();
+    let seq = read_u64(body, &mut off).ok_or_else(|| corrupt("truncated header"))?;
+    let rows = read_u64(body, &mut off).ok_or_else(|| corrupt("truncated header"))? as usize;
+    let cols = read_u64(body, &mut off).ok_or_else(|| corrupt("truncated header"))? as usize;
+    let nnz = read_u64(body, &mut off).ok_or_else(|| corrupt("truncated header"))? as usize;
+    let expected = MAGIC.len() + 32 + (rows + 1) * 8 + nnz * 8;
+    if body.len() != expected {
+        return Err(corrupt("body length disagrees with header counts"));
+    }
+    let mut indptr = Vec::with_capacity(rows + 1);
+    for _ in 0..rows + 1 {
+        indptr.push(read_u64(body, &mut off).ok_or_else(|| corrupt("truncated indptr"))? as usize);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(read_u32(body, &mut off).ok_or_else(|| corrupt("truncated indices"))?);
+    }
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        vals.push(f32::from_bits(
+            read_u32(body, &mut off).ok_or_else(|| corrupt("truncated values"))?,
+        ));
+    }
+    if indptr.first() != Some(&0) || indptr.last() != Some(&nnz) {
+        return Err(corrupt("indptr endpoints disagree with nnz"));
+    }
+    Ok((Csr { rows, cols, indptr, indices, vals }, seq))
+}
+
+/// Everything [`super::StreamStore::open`] needs to resume.
+pub(crate) struct Recovered {
+    pub(crate) master: Csr,
+    /// Seq the checkpoint covers (0 when starting fresh).
+    pub(crate) master_seq: u64,
+    pub(crate) wal: Wal,
+    /// Replayed overlay of every surviving op past the checkpoint.
+    pub(crate) live: DeltaOverlay,
+    /// Highest recovered seq (`>= master_seq`).
+    pub(crate) applied_seq: u64,
+}
+
+/// Load checkpoint + WAL tail. Torn WAL tails are truncated (expected
+/// crash artifact); a corrupt checkpoint is a hard `Corrupt` error (see
+/// module docs). The full structural `validate()` sweep over the
+/// recovered master runs in `StreamStore::open`, at the same trust
+/// boundary compaction uses.
+pub(crate) fn recover(cfg: &StreamConfig) -> Result<Recovered, StreamError> {
+    let ck_path = checkpoint_path(&cfg.dir);
+    let (master, master_seq) = match std::fs::read(&ck_path) {
+        Ok(bytes) => decode_checkpoint(&bytes)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => (
+            Csr {
+                rows: cfg.n_nodes,
+                cols: cfg.n_nodes,
+                indptr: vec![0; cfg.n_nodes + 1],
+                indices: Vec::new(),
+                vals: Vec::new(),
+            },
+            0,
+        ),
+        Err(e) => return Err(StreamError::io("checkpoint read", e)),
+    };
+    if master.rows != cfg.n_nodes || master.cols != cfg.n_nodes {
+        return Err(StreamError::Corrupt {
+            what: format!(
+                "checkpoint is {}×{} but the store serves {} nodes",
+                master.rows, master.cols, cfg.n_nodes
+            ),
+        });
+    }
+    let (wal, records) =
+        Wal::open(&wal_path(&cfg.dir), cfg.sync_every, master_seq, Arc::clone(&cfg.faults))?;
+    let mut live = DeltaOverlay::new();
+    let mut applied_seq = master_seq;
+    for (seq, op) in records {
+        if seq <= master_seq {
+            // Already folded into the checkpoint (a crash between the
+            // checkpoint rename and the WAL drop leaves such records);
+            // skipping is exact because the checkpoint covers them.
+            continue;
+        }
+        op.check(cfg.n_nodes)?;
+        live.apply(&op);
+        applied_seq = applied_seq.max(seq);
+    }
+    Ok(Recovered { master, master_seq, wal, live, applied_seq })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        Csr::from_coo(&Coo::from_triples(
+            5,
+            5,
+            vec![(0, 1, 1.5), (2, 0, -0.25), (2, 4, 3.0), (4, 4, 1.0)],
+        ))
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_identically() {
+        let m = sample();
+        let bytes = encode_checkpoint(&m, 42);
+        let (back, seq) = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(seq, 42);
+        assert_eq!(back, m);
+        // f32 payloads survive by bit pattern, not by decimal text.
+        assert_eq!(back.vals[1].to_bits(), (-0.25f32).to_bits());
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_typed_errors() {
+        let m = sample();
+        let good = encode_checkpoint(&m, 7);
+        // Truncated.
+        assert_eq!(decode_checkpoint(&good[..good.len() - 9]).unwrap_err().kind(), "corrupt");
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_checkpoint(&bad).unwrap_err().kind(), "corrupt");
+        // Flipped value byte defeats the CRC.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 10] ^= 0x01;
+        assert_eq!(decode_checkpoint(&bad).unwrap_err().kind(), "corrupt");
+        // Empty file.
+        assert_eq!(decode_checkpoint(&[]).unwrap_err().kind(), "corrupt");
+    }
+
+    #[test]
+    fn empty_matrix_checkpoints_round_trip() {
+        let m = Csr { rows: 3, cols: 3, indptr: vec![0, 0, 0, 0], indices: vec![], vals: vec![] };
+        let (back, seq) = decode_checkpoint(&encode_checkpoint(&m, 0)).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(seq, 0);
+    }
+}

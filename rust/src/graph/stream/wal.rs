@@ -1,0 +1,468 @@
+//! Checksummed append-only write-ahead log (DESIGN.md
+//! §Streaming-Durability).
+//!
+//! Record framing, all little-endian:
+//!
+//! ```text
+//! [ len: u32 ][ crc: u32 ][ seq: u64 ][ payload: len-8 bytes ]
+//! ```
+//!
+//! `len` counts the seq + payload bytes; `crc` is CRC-32 (IEEE) over
+//! exactly those bytes. The payload is one [`EdgeOp`]:
+//! `[tag: u8][src: u32][dst: u32][w: f32-bits]` — 13 bytes, `w = 0` for
+//! deletes. Sequence numbers are assigned densely at append time and are
+//! authoritative on disk: after a checkpoint drops the compacted prefix,
+//! the surviving records still carry their original seqs.
+//!
+//! Durability contract: an op is **acknowledged** only once [`Wal::sync`]
+//! has covered its record (appends batch `sync_every` records per fsync).
+//! A crash can therefore lose only unacknowledged tail records — and can
+//! tear the last record mid-write. [`Wal::open`] scans the file and
+//! truncates at the first frame whose length or CRC fails; the
+//! single-crash model means a bad frame is always the torn tail, never a
+//! mid-file flip (which would indicate real media corruption — also
+//! caught, also truncated, and the checkpoint still bounds the loss to
+//! unacknowledged ops).
+
+use super::StreamError;
+use crate::testing::FaultPlan;
+use crate::util::fsio::{crc32, AppendFile, PreparedWrite};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One streamed edge operation. All three are **absolute**: `Insert` and
+/// `Reweight` both upsert the edge's weight (inserting an existing edge
+/// reweights it; reweighting an absent edge inserts it — the two tags
+/// exist so intent survives in the log), `Delete` removes it outright.
+/// Absolute semantics are what make recovery replay idempotent: applying
+/// any suffix of the stream twice converges to the same adjacency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeOp {
+    Insert { src: u32, dst: u32, w: f32 },
+    Delete { src: u32, dst: u32 },
+    Reweight { src: u32, dst: u32, w: f32 },
+}
+
+impl EdgeOp {
+    pub fn src(&self) -> u32 {
+        match *self {
+            EdgeOp::Insert { src, .. } | EdgeOp::Delete { src, .. } | EdgeOp::Reweight { src, .. } => src,
+        }
+    }
+
+    pub fn dst(&self) -> u32 {
+        match *self {
+            EdgeOp::Insert { dst, .. } | EdgeOp::Delete { dst, .. } | EdgeOp::Reweight { dst, .. } => dst,
+        }
+    }
+
+    /// Validate against the store's node bounds and weight domain
+    /// (finite, strictly positive — `D⁻¹A` normalization needs
+    /// nonnegative row sums, and a zero weight is a delete in disguise).
+    pub fn check(&self, n: usize) -> Result<(), StreamError> {
+        let (s, d) = (self.src() as usize, self.dst() as usize);
+        if s >= n || d >= n {
+            return Err(StreamError::Corrupt {
+                what: format!("edge ({s}, {d}) out of bounds for {n} nodes"),
+            });
+        }
+        if let EdgeOp::Insert { w, .. } | EdgeOp::Reweight { w, .. } = *self {
+            if !w.is_finite() || w <= 0.0 {
+                return Err(StreamError::Corrupt {
+                    what: format!("edge weight {w} is not finite-positive"),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            EdgeOp::Insert { .. } => 0,
+            EdgeOp::Delete { .. } => 1,
+            EdgeOp::Reweight { .. } => 2,
+        }
+    }
+
+    fn weight_bits(&self) -> u32 {
+        match *self {
+            EdgeOp::Insert { w, .. } | EdgeOp::Reweight { w, .. } => w.to_bits(),
+            EdgeOp::Delete { .. } => 0,
+        }
+    }
+
+    fn encode_payload(&self, buf: &mut Vec<u8>) {
+        buf.push(self.tag());
+        buf.extend_from_slice(&self.src().to_le_bytes());
+        buf.extend_from_slice(&self.dst().to_le_bytes());
+        buf.extend_from_slice(&self.weight_bits().to_le_bytes());
+    }
+
+    fn decode_payload(bytes: &[u8]) -> Option<EdgeOp> {
+        if bytes.len() != PAYLOAD_LEN {
+            return None;
+        }
+        let src = u32::from_le_bytes(bytes[1..5].try_into().ok()?);
+        let dst = u32::from_le_bytes(bytes[5..9].try_into().ok()?);
+        let w = f32::from_bits(u32::from_le_bytes(bytes[9..13].try_into().ok()?));
+        match bytes[0] {
+            0 => Some(EdgeOp::Insert { src, dst, w }),
+            1 => Some(EdgeOp::Delete { src, dst }),
+            2 => Some(EdgeOp::Reweight { src, dst, w }),
+            _ => None,
+        }
+    }
+}
+
+const PAYLOAD_LEN: usize = 13;
+const HEADER_LEN: usize = 8; // len + crc
+#[cfg(test)]
+const RECORD_LEN: usize = HEADER_LEN + 8 + PAYLOAD_LEN; // + seq
+
+fn encode_record(seq: u64, op: &EdgeOp) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8 + PAYLOAD_LEN);
+    body.extend_from_slice(&seq.to_le_bytes());
+    op.encode_payload(&mut body);
+    let mut rec = Vec::with_capacity(HEADER_LEN + body.len());
+    rec.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    rec.extend_from_slice(&crc32(&body).to_le_bytes());
+    rec.extend_from_slice(&body);
+    rec
+}
+
+/// Scan `bytes` into `(seq, op, frame_end_offset)` triples, stopping at
+/// the first torn/corrupt frame. Returns the records plus the byte
+/// offset of the last good frame's end (the truncation point).
+fn scan(bytes: &[u8]) -> (Vec<(u64, EdgeOp)>, u64) {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while off + HEADER_LEN <= bytes.len() {
+        let len = u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+            as usize;
+        let crc = u32::from_le_bytes([
+            bytes[off + 4],
+            bytes[off + 5],
+            bytes[off + 6],
+            bytes[off + 7],
+        ]);
+        let body_start = off + HEADER_LEN;
+        if len < 8 || len > 1 << 20 || body_start + len > bytes.len() {
+            break; // torn tail (or nonsense length)
+        }
+        let body = &bytes[body_start..body_start + len];
+        if crc32(body) != crc {
+            break; // torn or corrupt frame
+        }
+        let seq = u64::from_le_bytes(body[..8].try_into().expect("8-byte slice"));
+        let Some(op) = EdgeOp::decode_payload(&body[8..]) else {
+            break; // valid CRC but unknown encoding: stop conservatively
+        };
+        records.push((seq, op));
+        off = body_start + len;
+    }
+    (records, off as u64)
+}
+
+/// The write-ahead log handle (one per store; callers serialize through
+/// the store's mutex).
+#[derive(Debug)]
+pub struct Wal {
+    file: AppendFile,
+    path: PathBuf,
+    /// Seq the next append will carry.
+    next_seq: u64,
+    /// Highest seq appended (not necessarily durable).
+    appended_seq: u64,
+    /// Highest seq covered by an fsync — the acknowledged watermark.
+    synced_seq: u64,
+    /// Appends since the last fsync.
+    unsynced: usize,
+    sync_every: usize,
+    /// Byte length of the last known-good frame end; a failed append is
+    /// healed back to this before the next write.
+    good_len: u64,
+    /// Torn bytes past `good_len` awaiting heal (after an injected short
+    /// write whose truncation must wait so a crash-now leaves the tear
+    /// for recovery to find).
+    torn: bool,
+    faults: Arc<FaultPlan>,
+}
+
+impl Wal {
+    /// Open the log, truncating any torn tail, and return the surviving
+    /// records for replay. `base_seq` seeds numbering when the log is
+    /// empty (the checkpoint's covered seq).
+    pub fn open(
+        path: &Path,
+        sync_every: usize,
+        base_seq: u64,
+        faults: Arc<FaultPlan>,
+    ) -> Result<(Wal, Vec<(u64, EdgeOp)>), StreamError> {
+        let mut file =
+            AppendFile::open_append(path).map_err(|e| StreamError::io("wal open", e))?;
+        let bytes = file.read_all().map_err(|e| StreamError::io("wal scan", e))?;
+        let (records, good_len) = scan(&bytes);
+        if good_len < file.len() {
+            file.truncate_to(good_len).map_err(|e| StreamError::io("wal tail truncation", e))?;
+            file.sync().map_err(|e| StreamError::io("wal tail truncation sync", e))?;
+        }
+        let last_seq = records.last().map(|&(s, _)| s).unwrap_or(0).max(base_seq);
+        let wal = Wal {
+            file,
+            path: path.to_path_buf(),
+            next_seq: last_seq + 1,
+            appended_seq: last_seq,
+            // Everything that survived the scan is on disk by definition.
+            synced_seq: last_seq,
+            unsynced: 0,
+            sync_every: sync_every.max(1),
+            good_len,
+            torn: false,
+            faults,
+        };
+        Ok((wal, records))
+    }
+
+    /// Append one op, batching fsyncs per `sync_every`. Returns the
+    /// record's seq. Fault seams (DESIGN.md §Streaming-Durability):
+    /// `IoError` fails before any byte lands; `ShortWrite` lands a torn
+    /// prefix and reports failure (healed lazily, found by recovery if
+    /// the process dies first); `CrashPoint` tears the record and
+    /// declares the store dead.
+    pub fn append(&mut self, op: &EdgeOp) -> Result<u64, StreamError> {
+        if self.torn {
+            // Heal the previous failed append before writing anything new.
+            self.file
+                .truncate_to(self.good_len)
+                .map_err(|e| StreamError::io("wal heal", e))?;
+            self.torn = false;
+        }
+        self.faults.maybe_io_error("wal-append").map_err(|e| StreamError::io("wal append", e))?;
+        let seq = self.next_seq;
+        let rec = encode_record(seq, op);
+        if self.faults.maybe_crash("wal-append") {
+            // Simulated death mid-write: half the record reaches the file
+            // and nobody heals it — recovery's torn-tail scan must.
+            let _ = self.file.append(&rec[..rec.len() / 2]);
+            return Err(StreamError::Crashed { seam: "wal-append" });
+        }
+        if let Some(k) = self.faults.maybe_short_write(rec.len()) {
+            let _ = self.file.append(&rec[..k]);
+            self.torn = true;
+            return Err(StreamError::Io {
+                what: format!("wal append: short write ({k}/{} bytes)", rec.len()),
+            });
+        }
+        if let Err(e) = self.file.append(&rec) {
+            // Real partial write: heal eagerly; if that fails too, the
+            // torn flag defers it to the next append / recovery.
+            self.torn = self.file.truncate_to(self.good_len).is_err();
+            return Err(StreamError::io("wal append", e));
+        }
+        self.good_len = self.file.len();
+        self.next_seq += 1;
+        self.appended_seq = seq;
+        self.unsynced += 1;
+        if self.unsynced >= self.sync_every {
+            self.sync()?;
+        }
+        Ok(seq)
+    }
+
+    /// Fsync everything appended so far; advances and returns the
+    /// acknowledged watermark.
+    pub fn sync(&mut self) -> Result<u64, StreamError> {
+        if self.unsynced > 0 {
+            self.file.sync().map_err(|e| StreamError::io("wal sync", e))?;
+            self.synced_seq = self.appended_seq;
+            self.unsynced = 0;
+        }
+        Ok(self.synced_seq)
+    }
+
+    /// Highest acknowledged seq.
+    pub fn acked(&self) -> u64 {
+        self.synced_seq
+    }
+
+    /// Seqs are dense; number of live records is derivable for tests.
+    pub fn appended(&self) -> u64 {
+        self.appended_seq
+    }
+
+    /// Drop records covered by a checkpoint (`seq <= through`), keeping
+    /// the tail. Crash-safe rewrite: surviving frames are written to a
+    /// temp file and atomically renamed over the log (`util::fsio`), so a
+    /// crash leaves either the old complete log or the new complete log.
+    /// Callers must have synced through `through` first (the compaction
+    /// protocol does: freeze syncs before checkpointing).
+    pub fn drop_through(&mut self, through: u64) -> Result<(), StreamError> {
+        debug_assert!(self.synced_seq >= through, "checkpointed ops must be acknowledged");
+        let bytes = self.file.read_all().map_err(|e| StreamError::io("wal rewrite scan", e))?;
+        let (records, _) = scan(&bytes);
+        let mut kept = Vec::new();
+        for &(seq, ref op) in &records {
+            if seq > through {
+                kept.extend_from_slice(&encode_record(seq, op));
+            }
+        }
+        let staged = PreparedWrite::prepare(&self.path, &kept)
+            .map_err(|e| StreamError::io("wal rewrite", e))?;
+        staged.commit().map_err(|e| StreamError::io("wal rewrite rename", e))?;
+        // The old handle points at the unlinked inode; reopen the new log.
+        self.file = AppendFile::open_append(&self.path)
+            .map_err(|e| StreamError::io("wal reopen", e))?;
+        self.good_len = self.file.len();
+        self.torn = false;
+        self.unsynced = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::FaultKind;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("gnn_spmm_wal").join(name);
+        // A fresh directory per test: stale logs would change replay.
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn inert() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::inert())
+    }
+
+    #[test]
+    fn append_sync_reopen_replays_everything() {
+        let path = dir("roundtrip").join("wal.bin");
+        let ops = vec![
+            EdgeOp::Insert { src: 0, dst: 1, w: 1.5 },
+            EdgeOp::Delete { src: 0, dst: 1 },
+            EdgeOp::Reweight { src: 3, dst: 2, w: 0.25 },
+        ];
+        {
+            let (mut wal, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+            assert!(replay.is_empty());
+            for (i, op) in ops.iter().enumerate() {
+                assert_eq!(wal.append(op).unwrap(), i as u64 + 1);
+            }
+            assert_eq!(wal.acked(), 3, "sync_every=1 acknowledges per-op");
+        }
+        let (wal, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+        assert_eq!(replay.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(replay.iter().map(|&(_, op)| op).collect::<Vec<_>>(), ops);
+        assert_eq!(wal.acked(), 3);
+    }
+
+    #[test]
+    fn sync_batching_delays_the_ack_watermark() {
+        let path = dir("batch").join("wal.bin");
+        let (mut wal, _) = Wal::open(&path, 3, 0, inert()).unwrap();
+        wal.append(&EdgeOp::Insert { src: 0, dst: 1, w: 1.0 }).unwrap();
+        wal.append(&EdgeOp::Insert { src: 1, dst: 2, w: 1.0 }).unwrap();
+        assert_eq!(wal.acked(), 0, "below the batch: nothing acknowledged");
+        wal.append(&EdgeOp::Insert { src: 2, dst: 3, w: 1.0 }).unwrap();
+        assert_eq!(wal.acked(), 3, "batch boundary fsyncs");
+        wal.append(&EdgeOp::Insert { src: 3, dst: 4, w: 1.0 }).unwrap();
+        assert_eq!(wal.sync().unwrap(), 4, "explicit flush advances the watermark");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open() {
+        let path = dir("torn").join("wal.bin");
+        {
+            let (mut wal, _) = Wal::open(&path, 1, 0, inert()).unwrap();
+            for i in 0..5u32 {
+                wal.append(&EdgeOp::Insert { src: i, dst: i + 1, w: 1.0 }).unwrap();
+            }
+        }
+        // Tear the last record in half (as a mid-append crash would).
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 5 * RECORD_LEN);
+        // lint: allow(durability-io) -- test simulates the torn tail a crash leaves
+        std::fs::write(&path, &bytes[..bytes.len() - RECORD_LEN / 2]).unwrap();
+        let (wal, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+        assert_eq!(replay.len(), 4, "the four intact records survive");
+        assert_eq!(wal.acked(), 4);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 4 * RECORD_LEN as u64);
+    }
+
+    #[test]
+    fn corrupt_mid_file_stops_the_scan_conservatively() {
+        let path = dir("flip").join("wal.bin");
+        {
+            let (mut wal, _) = Wal::open(&path, 1, 0, inert()).unwrap();
+            for i in 0..4u32 {
+                wal.append(&EdgeOp::Insert { src: i, dst: i + 1, w: 1.0 }).unwrap();
+            }
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[RECORD_LEN + HEADER_LEN + 9] ^= 0xFF; // flip a payload byte of record 2
+        // lint: allow(durability-io) -- test plants mid-file corruption for the scan
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+        assert_eq!(replay.len(), 1, "scan stops at the first bad CRC");
+    }
+
+    #[test]
+    fn short_write_fails_the_op_and_heals_on_the_next_append() {
+        let path = dir("short").join("wal.bin");
+        let plan = Arc::new(FaultPlan::inert().script(FaultKind::ShortWrite, &[1]));
+        let (mut wal, _) = Wal::open(&path, 1, 0, plan).unwrap();
+        wal.append(&EdgeOp::Insert { src: 0, dst: 1, w: 1.0 }).unwrap();
+        let err = wal.append(&EdgeOp::Insert { src: 1, dst: 2, w: 1.0 }).unwrap_err();
+        assert_eq!(err.kind(), "io");
+        // The torn bytes are really on disk until the next append heals.
+        assert!(std::fs::metadata(&path).unwrap().len() > RECORD_LEN as u64);
+        let seq = wal.append(&EdgeOp::Insert { src: 1, dst: 2, w: 1.0 }).unwrap();
+        assert_eq!(seq, 2, "a failed append never consumed its seq — numbering stays dense");
+        drop(wal);
+        let (_, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+        assert_eq!(replay.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn crash_point_tears_the_record_for_recovery_to_truncate() {
+        let path = dir("crash").join("wal.bin");
+        let plan = Arc::new(FaultPlan::inert().script(FaultKind::CrashPoint, &[1]));
+        let (mut wal, _) = Wal::open(&path, 1, 0, plan).unwrap();
+        wal.append(&EdgeOp::Insert { src: 0, dst: 1, w: 1.0 }).unwrap();
+        let err = wal.append(&EdgeOp::Insert { src: 1, dst: 2, w: 1.0 }).unwrap_err();
+        assert_eq!(err.kind(), "crash_point");
+        drop(wal); // the simulated process death
+        let (wal, replay) = Wal::open(&path, 1, 0, inert()).unwrap();
+        assert_eq!(replay.len(), 1, "acknowledged record survives, torn one is gone");
+        assert_eq!(wal.acked(), 1);
+    }
+
+    #[test]
+    fn drop_through_keeps_only_the_tail_and_preserves_seqs() {
+        let path = dir("dropthru").join("wal.bin");
+        let (mut wal, _) = Wal::open(&path, 1, 0, inert()).unwrap();
+        for i in 0..6u32 {
+            wal.append(&EdgeOp::Insert { src: i, dst: i + 1, w: 1.0 }).unwrap();
+        }
+        wal.drop_through(4).unwrap();
+        // Appends continue with the global numbering.
+        assert_eq!(wal.append(&EdgeOp::Delete { src: 0, dst: 1 }).unwrap(), 7);
+        drop(wal);
+        let (_, replay) = Wal::open(&path, 1, 4, inert()).unwrap();
+        assert_eq!(replay.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn op_check_rejects_bad_endpoints_and_weights() {
+        assert!(EdgeOp::Insert { src: 0, dst: 9, w: 1.0 }.check(10).is_ok());
+        assert_eq!(EdgeOp::Insert { src: 0, dst: 10, w: 1.0 }.check(10).unwrap_err().kind(), "corrupt");
+        assert_eq!(EdgeOp::Insert { src: 0, dst: 1, w: 0.0 }.check(10).unwrap_err().kind(), "corrupt");
+        assert_eq!(
+            EdgeOp::Reweight { src: 0, dst: 1, w: f32::NAN }.check(10).unwrap_err().kind(),
+            "corrupt"
+        );
+        assert!(EdgeOp::Delete { src: 9, dst: 9 }.check(10).is_ok());
+    }
+}

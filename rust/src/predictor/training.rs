@@ -211,11 +211,13 @@ impl TrainedPredictor {
         })
     }
 
+    /// Crash-safe save: temp-file + atomic rename, so a kill mid-write
+    /// can never leave a truncated model behind.
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, self.to_json().to_string())?;
+        crate::util::fsio::atomic_write(path, self.to_json().to_string().as_bytes())?;
         Ok(())
     }
 

@@ -504,6 +504,23 @@ impl InferenceServer {
         Ok(self.shared.snapshot.publish_arc(snap))
     }
 
+    /// Publish the streaming store's latest compacted epoch as this
+    /// server's serving snapshot: the store's row-normalized adjacency
+    /// (`D⁻¹A`, already validated by compaction) joins the caller's
+    /// feature matrix under the stream's epoch version. The handles are
+    /// `Arc` clones — no matrix copies — and the usual snapshot-publish
+    /// trust boundary still applies. A degraded store (compactor past its
+    /// restart budget) keeps serving its last published epoch, so this
+    /// remains safe to call while ingest is backpressuring.
+    pub fn publish_from_stream(
+        &self,
+        store: &crate::graph::stream::StreamStore,
+        feats: SharedMatrix,
+    ) -> Result<u64, ServeError> {
+        let snap = store.published();
+        self.publish(EngineSnapshot::new(feats, snap.norm.clone(), snap.version))
+    }
+
     /// The currently served snapshot (a co-owning handle).
     pub fn current_snapshot(&self) -> Arc<EngineSnapshot> {
         self.shared.snapshot.load()

@@ -99,6 +99,44 @@ impl Csr {
         self.nnz() * 8 + (self.rows + 1) * 8
     }
 
+    /// A new CSR with the listed rows replaced wholesale (each replacement
+    /// a column-sorted `(col, val)` list; an empty list empties the row).
+    /// Untouched rows are copied verbatim — `graph::stream` compaction
+    /// leans on this to rebuild only the rows its delta overlay touched.
+    pub fn replace_rows(
+        &self,
+        rows: &std::collections::BTreeMap<u32, Vec<(u32, f32)>>,
+    ) -> Csr {
+        let replaced: usize = rows.values().map(Vec::len).sum();
+        let kept: usize = rows.keys().map(|&r| {
+            let r = r as usize;
+            self.indptr[r + 1] - self.indptr[r]
+        }).sum();
+        let new_nnz = self.nnz() - kept + replaced;
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(new_nnz);
+        let mut vals = Vec::with_capacity(new_nnz);
+        for r in 0..self.rows {
+            if let Some(entries) = rows.get(&(r as u32)) {
+                debug_assert!(
+                    entries.windows(2).all(|w| w[0].0 < w[1].0),
+                    "replacement row {r} must be strictly column-sorted"
+                );
+                for &(c, v) in entries {
+                    indices.push(c);
+                    vals.push(v);
+                }
+            } else {
+                let span = self.indptr[r]..self.indptr[r + 1];
+                indices.extend_from_slice(&self.indices[span.clone()]);
+                vals.extend_from_slice(&self.vals[span]);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, vals }
+    }
+
     /// SpMM `self (n×m) · x (m×d) → out (n×d)`, parallel over row spans,
     /// into a caller-provided buffer (the zero-allocation hot path: pool
     /// dispatch + per-task span boundaries allocate nothing). Runs under the
@@ -327,6 +365,30 @@ mod tests {
             }
         }
         Coo::from_triples(rows, cols, triples)
+    }
+
+    #[test]
+    fn replace_rows_splices_and_copies_verbatim() {
+        let base = Csr::from_coo(&Coo::from_triples(
+            4,
+            6,
+            vec![(0, 0, 1.0), (0, 5, 5.0), (1, 2, 2.0), (3, 3, 3.0)],
+        ));
+        let mut patch = std::collections::BTreeMap::new();
+        patch.insert(0u32, vec![(1u32, 10.0f32), (4, 40.0)]); // rewritten
+        patch.insert(1, Vec::new()); // emptied
+        patch.insert(2, vec![(0, 7.0)]); // was empty, now populated
+        let out = base.replace_rows(&patch);
+        assert_eq!(out.rows, 4);
+        assert_eq!(out.cols, 6);
+        assert_eq!(out.nnz(), 4);
+        assert_eq!(out.row_entries(0).collect::<Vec<_>>(), vec![(1, 10.0), (4, 40.0)]);
+        assert_eq!(out.row_entries(1).count(), 0);
+        assert_eq!(out.row_entries(2).collect::<Vec<_>>(), vec![(0, 7.0)]);
+        // Untouched row 3 is bit-identical.
+        assert_eq!(out.row_entries(3).collect::<Vec<_>>(), vec![(3, 3.0)]);
+        // No-patch call clones the structure outright.
+        assert_eq!(base.replace_rows(&std::collections::BTreeMap::new()), base);
     }
 
     #[test]

@@ -33,9 +33,19 @@ pub enum FaultKind {
     CorruptOperand,
     /// Truncate a file (cache persistence hardening).
     TruncateFile,
+    /// A write that lands only a prefix of its bytes (torn WAL record /
+    /// torn checkpoint temp file). Consulted at durable-write seams.
+    ShortWrite,
+    /// An I/O operation that fails outright (full disk, yanked volume).
+    IoError,
+    /// Simulated process death at a named durability seam (WAL append,
+    /// checkpoint rename, compaction publish): the seam returns a typed
+    /// crash error, the harness drops every in-memory structure and
+    /// re-opens from disk — the single-crash recovery model.
+    CrashPoint,
 }
 
-const N_KINDS: usize = 4;
+const N_KINDS: usize = 7;
 
 impl FaultKind {
     fn lane(self) -> usize {
@@ -44,13 +54,23 @@ impl FaultKind {
             FaultKind::Delay => 1,
             FaultKind::CorruptOperand => 2,
             FaultKind::TruncateFile => 3,
+            FaultKind::ShortWrite => 4,
+            FaultKind::IoError => 5,
+            FaultKind::CrashPoint => 6,
         }
     }
 
     fn salt(self) -> u64 {
         // Distinct odd salts decorrelate the per-kind draw streams.
-        [0x9E37_79B9_7F4A_7C15, 0xBF58_476D_1CE4_E5B9, 0x94D0_49BB_1331_11EB, 0xD6E8_FEB8_6659_FD93]
-            [self.lane()]
+        [
+            0x9E37_79B9_7F4A_7C15,
+            0xBF58_476D_1CE4_E5B9,
+            0x94D0_49BB_1331_11EB,
+            0xD6E8_FEB8_6659_FD93,
+            0xA5A3_1CC1_2F6A_B0D5,
+            0xC2B2_AE3D_27D4_EB4F,
+            0x1656_67B1_9E37_79F9,
+        ][self.lane()]
     }
 }
 
@@ -93,12 +113,17 @@ impl FaultPlan {
     /// A seeded plan with modest default rates on every kind — the CI
     /// smoke's "a few of everything" schedule. Tune with
     /// [`FaultPlan::with_rate`] / [`FaultPlan::script`].
+    /// `CrashPoint` stays **script-only** here: a rate-driven crash would
+    /// make any env-armed run die at a nondeterministic seam mid-stream;
+    /// crash schedules are always explicit ordinals.
     pub fn seeded(seed: u64) -> FaultPlan {
         FaultPlan { seed, ..FaultPlan::inert() }
             .with_rate(FaultKind::Panic, 0.03)
             .with_rate(FaultKind::Delay, 0.05)
             .with_rate(FaultKind::CorruptOperand, 0.02)
             .with_rate(FaultKind::TruncateFile, 1.0)
+            .with_rate(FaultKind::ShortWrite, 0.02)
+            .with_rate(FaultKind::IoError, 0.02)
     }
 
     /// Arm from `GNN_FAULT_SEED` (the ci.sh hook): `None` when the
@@ -190,6 +215,46 @@ impl FaultPlan {
         let bytes = std::fs::read(path)?;
         std::fs::write(path, &bytes[..bytes.len() / 2])?;
         Ok(true)
+    }
+
+    /// Injection point: torn durable write. Returns `Some(prefix_len)` —
+    /// how many of `len` bytes actually land — when it fires; the caller
+    /// writes only that prefix and reports the write failed (the bytes
+    /// are on disk as a torn tail for recovery to find and truncate).
+    pub fn maybe_short_write(&self, len: usize) -> Option<usize> {
+        if self.decide(FaultKind::ShortWrite) {
+            Some(len / 2)
+        } else {
+            None
+        }
+    }
+
+    /// Injection point: outright I/O failure at a durable-write seam.
+    /// `what` names the seam for the error text.
+    pub fn maybe_io_error(&self, what: &str) -> std::io::Result<()> {
+        if self.decide(FaultKind::IoError) {
+            Err(std::io::Error::other(format!(
+                "fault injection: scheduled I/O error at {what} (seed {:#x})",
+                self.seed
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Injection point: simulated process death at durability seam
+    /// `seam`. Returns whether the caller must now act crashed: stop
+    /// touching its files, surface a typed crash error, and let the
+    /// harness drop everything and re-open from disk. One lane counts all
+    /// seams, so a scripted ordinal `k` kills the `k`-th seam the run
+    /// reaches — the property test sweeps `k` across the whole schedule.
+    #[must_use = "a fired crash point must abort the caller's durability protocol"]
+    pub fn maybe_crash(&self, seam: &str) -> bool {
+        let fired = self.decide(FaultKind::CrashPoint);
+        if fired {
+            eprintln!("fault injection: crash point at {seam} (seed {:#x})", self.seed);
+        }
+        fired
     }
 }
 
@@ -326,6 +391,46 @@ mod tests {
         assert!(!inert.maybe_truncate_file(&path).unwrap(), "inert plan leaves files alone");
         assert_eq!(std::fs::read(&path).unwrap().len(), 5);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn short_write_yields_half_the_bytes() {
+        let p = FaultPlan::inert().with_rate(FaultKind::ShortWrite, 1.0);
+        assert_eq!(p.maybe_short_write(10), Some(5));
+        assert_eq!(p.maybe_short_write(1), Some(0));
+        let inert = FaultPlan::inert();
+        assert_eq!(inert.maybe_short_write(10), None);
+    }
+
+    #[test]
+    fn io_error_fires_on_schedule_and_names_the_seam() {
+        let p = FaultPlan::inert().script(FaultKind::IoError, &[1]);
+        assert!(p.maybe_io_error("wal-append").is_ok());
+        let err = p.maybe_io_error("wal-append").unwrap_err();
+        assert!(err.to_string().contains("wal-append"), "{err}");
+        assert!(p.maybe_io_error("wal-append").is_ok());
+        assert_eq!(p.fired(FaultKind::IoError), 1);
+    }
+
+    #[test]
+    fn crash_points_count_one_lane_across_seams() {
+        // Ordinal 2 on a shared lane kills the third seam the run reaches,
+        // whichever seam that is — the sweep the property test relies on.
+        let p = FaultPlan::inert().script(FaultKind::CrashPoint, &[2]);
+        assert!(!p.maybe_crash("wal-append"));
+        assert!(!p.maybe_crash("checkpoint-rename"));
+        assert!(p.maybe_crash("compact-publish"));
+        assert!(!p.maybe_crash("wal-append"));
+        assert_eq!(p.observed(FaultKind::CrashPoint), 4);
+        assert_eq!(p.fired(FaultKind::CrashPoint), 1);
+    }
+
+    #[test]
+    fn seeded_plans_keep_crash_points_script_only() {
+        let p = FaultPlan::seeded(7);
+        for _ in 0..500 {
+            assert!(!p.maybe_crash("seam"));
+        }
     }
 
     #[test]

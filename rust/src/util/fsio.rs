@@ -1,0 +1,242 @@
+//! Crash-safe file I/O primitives (DESIGN.md §Streaming-Durability).
+//!
+//! Every persistence path in this crate — WAL segments, compaction
+//! checkpoints, the decision-cache warm-start file, the trained-predictor
+//! dump — routes its writes through this module; the `durability-io` lint
+//! rule forbids raw `File::create`/`write_all` in those files so a new
+//! call site cannot silently reintroduce torn-on-crash writes.
+//!
+//! Two idioms cover all of them:
+//!
+//! * **Replace-whole-file** ([`atomic_write`] / [`PreparedWrite`]): write
+//!   a temp file *in the destination directory* (rename across
+//!   filesystems is not atomic), `fsync` it, then `rename` over the
+//!   destination and `fsync` the directory. A crash at any point leaves
+//!   either the complete old file or the complete new file — never a
+//!   prefix. `PreparedWrite` splits the two halves so fault injection can
+//!   crash exactly between data-durable and name-durable.
+//! * **Append-only** ([`AppendFile`]): length-tracked appends with
+//!   explicit `sync` batching and `truncate_to` healing — the WAL's
+//!   substrate. Torn tails are the *expected* crash artifact here; the
+//!   WAL's per-record CRC (via [`crc32`]) finds the last good byte on
+//!   replay.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Atomically replace the file at `path` with `bytes`: temp file in the
+/// same directory + fsync + rename + directory fsync. Creates parent
+/// directories as needed.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    PreparedWrite::prepare(path, bytes)?.commit()
+}
+
+/// The two-phase half of [`atomic_write`]: after [`PreparedWrite::prepare`]
+/// the data is durable under a temp name; [`PreparedWrite::commit`] makes
+/// it *the* file. Dropping without committing removes the temp file — the
+/// crash-abandonment path fault tests exercise on purpose.
+#[derive(Debug)]
+pub struct PreparedWrite {
+    tmp: PathBuf,
+    dst: PathBuf,
+    committed: bool,
+}
+
+impl PreparedWrite {
+    /// Write `bytes` to a temp file next to `dst` and fsync it. The
+    /// destination is untouched until [`PreparedWrite::commit`].
+    pub fn prepare(dst: &Path, bytes: &[u8]) -> io::Result<PreparedWrite> {
+        if let Some(parent) = dst.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut name = dst.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = dst.with_file_name(name);
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        Ok(PreparedWrite { tmp, dst: dst.to_path_buf(), committed: false })
+    }
+
+    /// Publish the prepared bytes under the destination name (atomic
+    /// rename) and fsync the directory so the rename itself is durable.
+    pub fn commit(mut self) -> io::Result<()> {
+        std::fs::rename(&self.tmp, &self.dst)?;
+        self.committed = true;
+        sync_parent_dir(&self.dst)
+    }
+
+    /// Discard without publishing (explicit spelling of the `Drop` path).
+    pub fn abandon(self) {}
+}
+
+impl Drop for PreparedWrite {
+    fn drop(&mut self) {
+        if !self.committed {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Fsync the directory containing `path` so a just-committed rename (or a
+/// just-created file) survives power loss. Directory handles are openable
+/// read-only on every unix; elsewhere this degrades to a no-op.
+fn sync_parent_dir(path: &Path) -> io::Result<()> {
+    if !cfg!(unix) {
+        return Ok(());
+    }
+    match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => File::open(dir)?.sync_all(),
+        _ => Ok(()),
+    }
+}
+
+/// Length-tracked append-only file: the WAL substrate. All writes go
+/// through [`AppendFile::append`], durability through
+/// [`AppendFile::sync`], and failed/torn appends are healed by
+/// [`AppendFile::truncate_to`] back to the last known-good length.
+#[derive(Debug)]
+pub struct AppendFile {
+    file: File,
+    path: PathBuf,
+    len: u64,
+}
+
+impl AppendFile {
+    /// Open (creating if absent) for appending. The cursor starts at the
+    /// current end; `len()` reports it.
+    pub fn open_append(path: &Path) -> io::Result<AppendFile> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new().read(true).create(true).append(true).open(path)?;
+        let len = file.seek(SeekFrom::End(0))?;
+        Ok(AppendFile { file, path: path.to_path_buf(), len })
+    }
+
+    /// Current byte length (as tracked through this handle).
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append `bytes` at the end. Buffered in the OS page cache until
+    /// [`AppendFile::sync`]; on error the on-disk tail is unspecified and
+    /// the caller must heal with [`AppendFile::truncate_to`].
+    pub fn append(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.file.write_all(bytes)?;
+        self.len += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Make everything appended so far durable.
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_all()
+    }
+
+    /// Heal the tail back to `len` bytes (after a failed append, or on
+    /// open after a torn-tail scan).
+    pub fn truncate_to(&mut self, len: u64) -> io::Result<()> {
+        self.file.set_len(len)?;
+        self.file.seek(SeekFrom::End(0))?;
+        self.len = len;
+        Ok(())
+    }
+
+    /// Read the whole file (for replay scans).
+    pub fn read_all(&mut self) -> io::Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(self.len as usize);
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.read_to_end(&mut buf)?;
+        self.file.seek(SeekFrom::End(0))?;
+        Ok(buf)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), bitwise — no table, and the
+/// WAL/checkpoint records it guards are small enough that the ~8
+/// shifts/byte never show up in a profile.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("gnn_spmm_fsio").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let path = tmp_dir("aw").join("out.bin");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer");
+        // No temp droppings.
+        let siblings: Vec<_> = std::fs::read_dir(path.parent().unwrap()).unwrap().collect();
+        assert_eq!(siblings.len(), 1);
+    }
+
+    #[test]
+    fn abandoned_prepare_leaves_destination_intact() {
+        let path = tmp_dir("abandon").join("out.bin");
+        atomic_write(&path, b"stable").unwrap();
+        let staged = PreparedWrite::prepare(&path, b"never lands").unwrap();
+        staged.abandon();
+        assert_eq!(std::fs::read(&path).unwrap(), b"stable");
+        let siblings: Vec<_> = std::fs::read_dir(path.parent().unwrap()).unwrap().collect();
+        assert_eq!(siblings.len(), 1, "temp file must be cleaned up");
+    }
+
+    #[test]
+    fn append_file_tracks_length_and_heals() {
+        let path = tmp_dir("append").join("log.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut f = AppendFile::open_append(&path).unwrap();
+        assert!(f.is_empty());
+        f.append(b"abcd").unwrap();
+        f.append(b"efgh").unwrap();
+        f.sync().unwrap();
+        assert_eq!(f.len(), 8);
+        // Torn append healed back to the good prefix.
+        f.append(b"torn").unwrap();
+        f.truncate_to(8).unwrap();
+        f.append(b"ijkl").unwrap();
+        assert_eq!(f.read_all().unwrap(), b"abcdefghijkl");
+        // Reopen sees the same length.
+        drop(f);
+        let f2 = AppendFile::open_append(&path).unwrap();
+        assert_eq!(f2.len(), 12);
+    }
+}

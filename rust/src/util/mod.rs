@@ -8,6 +8,7 @@ pub mod parallel;
 pub mod pool;
 pub mod stats;
 pub mod csv;
+pub mod fsio;
 pub mod sync;
 pub mod timer;
 

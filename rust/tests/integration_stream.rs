@@ -1,0 +1,327 @@
+//! Streaming-durability integration (DESIGN.md §Streaming-Durability).
+//!
+//! The load-bearing test is the **crash-ordinal sweep**: one scripted
+//! `CrashPoint` per run, swept across every durability seam a randomized
+//! insert/delete/reweight stream (with interleaved compactions) reaches —
+//! WAL appends, checkpoint renames, compaction publishes. After each
+//! simulated death the store is dropped and re-opened (the recovery
+//! path), the acknowledged watermark must never regress, and once the
+//! remaining ops are driven in, every merged row read must be
+//! **bit-identical** to the fault-free run. Around it: fault-free
+//! equivalence against an in-memory reference, short-write/I-O-error
+//! retry equivalence, compactor crash-loop → degraded-mode backpressure
+//! with live reads, the serve hand-off, and the predictor re-decide on a
+//! compaction publish.
+
+use gnn_spmm::gnn::engine::StaticPolicy;
+use gnn_spmm::gnn::{AdjEngine, ModelKind};
+use gnn_spmm::graph::stream::{EdgeOp, StreamConfig, StreamError, StreamStore};
+use gnn_spmm::graph::{DatasetSpec, GraphDataset};
+use gnn_spmm::serve::{train_template, EngineSnapshot, InferenceServer, ServeConfig};
+use gnn_spmm::sparse::Format;
+use gnn_spmm::testing::{FaultKind, FaultPlan};
+use gnn_spmm::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N: usize = 12;
+
+fn dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("gnn_spmm_stream_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic mixed op stream: inserts dominate early so deletes and
+/// reweights have edges to hit.
+fn scripted_ops(count: usize, seed: u64) -> Vec<EdgeOp> {
+    let mut rng = Rng::new(seed);
+    let mut present: Vec<(u32, u32)> = Vec::new();
+    let mut ops = Vec::with_capacity(count);
+    while ops.len() < count {
+        let roll = rng.next_f64();
+        if !present.is_empty() && roll < 0.2 {
+            let (src, dst) = present.swap_remove(rng.gen_range(present.len()));
+            ops.push(EdgeOp::Delete { src, dst });
+        } else if !present.is_empty() && roll < 0.4 {
+            let &(src, dst) = &present[rng.gen_range(present.len())];
+            ops.push(EdgeOp::Reweight { src, dst, w: rng.uniform(0.1, 4.0) as f32 });
+        } else {
+            let src = rng.gen_range(N) as u32;
+            let dst = rng.gen_range(N) as u32;
+            if !present.contains(&(src, dst)) {
+                present.push((src, dst));
+            }
+            ops.push(EdgeOp::Insert { src, dst, w: rng.uniform(0.1, 4.0) as f32 });
+        }
+    }
+    ops
+}
+
+fn apply_reference(m: &mut BTreeMap<(u32, u32), f32>, op: &EdgeOp) {
+    match *op {
+        EdgeOp::Insert { src, dst, w } | EdgeOp::Reweight { src, dst, w } => {
+            m.insert((src, dst), w);
+        }
+        EdgeOp::Delete { src, dst } => {
+            m.remove(&(src, dst));
+        }
+    }
+}
+
+fn reference_rows(m: &BTreeMap<(u32, u32), f32>) -> Vec<Vec<(u32, f32)>> {
+    let mut rows = vec![Vec::new(); N];
+    for (&(r, c), &w) in m {
+        rows[r as usize].push((c, w));
+    }
+    rows
+}
+
+fn all_rows(store: &StreamStore) -> Vec<Vec<(u32, f32)>> {
+    (0..N as u32).map(|r| store.read_row(r)).collect()
+}
+
+fn assert_rows_bit_identical(got: &[Vec<(u32, f32)>], want: &[Vec<(u32, f32)>], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row count");
+    for (r, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{ctx}: row {r} length {g:?} vs {w:?}");
+        for (&(gc, gw), &(wc, ww)) in g.iter().zip(w) {
+            assert_eq!(gc, wc, "{ctx}: row {r} column drift");
+            assert_eq!(gw.to_bits(), ww.to_bits(), "{ctx}: row {r} col {gc} weight bits");
+        }
+    }
+}
+
+/// Drive `ops` through a store at `dir`, compacting every `compact_each`
+/// successful ingests. Injected crashes simulate process death: the store
+/// is dropped and re-opened (recovery), the ack watermark is asserted
+/// monotone, and the crashed op is retried (it was never acknowledged).
+/// Injected I/O errors and short writes retry the same op in place.
+/// Returns the final merged rows (also verified to survive one last
+/// clean reopen).
+fn drive(dir: PathBuf, cfg_plan: Arc<FaultPlan>, ops: &[EdgeOp], compact_each: usize) -> Vec<Vec<(u32, f32)>> {
+    let mut cfg = StreamConfig::new(dir, N);
+    cfg.sync_every = 1; // every Ok(ingest) is acknowledged
+    cfg.faults = cfg_plan;
+    let mut store = StreamStore::open(cfg.clone()).unwrap();
+    let mut done = 0usize;
+    while done < ops.len() {
+        match store.ingest(ops[done]) {
+            Ok(_) => {
+                done += 1;
+                if done % compact_each == 0 {
+                    match store.compact_once() {
+                        Ok(_) => {}
+                        Err(StreamError::Crashed { .. }) => {
+                            let acked = store.acked();
+                            drop(store);
+                            store = StreamStore::open(cfg.clone()).unwrap();
+                            assert!(
+                                store.acked() >= acked,
+                                "ack watermark regressed across compaction-crash recovery"
+                            );
+                        }
+                        // Injected checkpoint-write I/O error: the frozen
+                        // overlay stays merged for readers and the next
+                        // boundary retries the cycle.
+                        Err(StreamError::Io { .. }) => {}
+                        Err(e) => panic!("unexpected compaction failure: {e}"),
+                    }
+                }
+            }
+            Err(StreamError::Crashed { .. }) => {
+                let acked = store.acked();
+                drop(store);
+                store = StreamStore::open(cfg.clone()).unwrap();
+                assert!(store.acked() >= acked, "ack watermark regressed across recovery");
+                // `done` not advanced: the torn op was never acknowledged.
+            }
+            Err(StreamError::Io { .. }) => {
+                // Short write / injected I/O error: absolute ops retry safely.
+            }
+            Err(e) => panic!("unexpected ingest failure: {e}"),
+        }
+    }
+    store.flush().unwrap();
+    let rows = all_rows(&store);
+    // One last clean restart: the merged view must be rebuilt exactly.
+    drop(store);
+    let store = StreamStore::open(cfg).unwrap();
+    assert_rows_bit_identical(&all_rows(&store), &rows, "post-run reopen");
+    rows
+}
+
+#[test]
+fn fault_free_stream_matches_the_reference_map() {
+    let ops = scripted_ops(120, 0x51B);
+    let mut reference = BTreeMap::new();
+    for op in &ops {
+        apply_reference(&mut reference, op);
+    }
+    let rows = drive(dir("fault_free"), Arc::new(FaultPlan::inert()), &ops, 25);
+    assert_rows_bit_identical(&rows, &reference_rows(&reference), "fault-free vs reference");
+}
+
+/// The acceptance gate: every scripted crash ordinal across every
+/// durability seam recovers to reads bit-identical to the fault-free run.
+#[test]
+fn every_crash_ordinal_recovers_bit_identically() {
+    let ops = scripted_ops(40, 0xC4A5);
+    let baseline = drive(dir("sweep_base"), Arc::new(FaultPlan::inert()), &ops, 10);
+    // Seam decisions per fault-free run: 40 wal-appends + 4 compactions
+    // × 2 seams = 48. Sweep past the end to prove over-long scripts are
+    // inert (those runs must equal the baseline trivially).
+    for ordinal in 1..=50u64 {
+        let plan = Arc::new(FaultPlan::inert().script(FaultKind::CrashPoint, &[ordinal]));
+        let rows = drive(dir(&format!("sweep_{ordinal}")), plan, &ops, 10);
+        assert_rows_bit_identical(&rows, &baseline, &format!("crash ordinal {ordinal}"));
+    }
+}
+
+#[test]
+fn short_writes_and_io_errors_retry_to_the_same_state() {
+    let ops = scripted_ops(60, 0x10E);
+    let baseline = drive(dir("retry_base"), Arc::new(FaultPlan::inert()), &ops, 20);
+    // Scripted failures across both lanes: short writes tear the WAL tail
+    // (healed on the next append), I/O errors fail cleanly — both leave
+    // the op unacknowledged and retryable.
+    let plan = Arc::new(
+        FaultPlan::inert()
+            .script(FaultKind::ShortWrite, &[3, 17, 18, 41])
+            .script(FaultKind::IoError, &[5, 17, 30]),
+    );
+    let rows = drive(dir("retry_faulty"), plan, &ops, 20);
+    assert_rows_bit_identical(&rows, &baseline, "short-write/io-error retries");
+}
+
+#[test]
+fn compaction_normalizes_rows_and_bumps_the_published_epoch() {
+    let mut cfg = StreamConfig::new(dir("norm"), N);
+    cfg.sync_every = 1;
+    let store = StreamStore::open(cfg).unwrap();
+    assert_eq!(store.published().version, 0);
+    store.ingest(EdgeOp::Insert { src: 2, dst: 0, w: 1.0 }).unwrap();
+    store.ingest(EdgeOp::Insert { src: 2, dst: 7, w: 3.0 }).unwrap();
+    store.compact_once().unwrap();
+    let snap = store.published();
+    assert_eq!(snap.version, 1);
+    assert_eq!(snap.seq, 2);
+    // Row-stochastic: published norm rows sum to 1.
+    let norm_row: Vec<(usize, f32)> = match &*snap.norm {
+        gnn_spmm::sparse::SparseMatrix::Csr(c) => c.row_entries(2).collect(),
+        other => panic!("stream masters are CSR, found {:?}", other.format()),
+    };
+    let sum: f32 = norm_row.iter().map(|&(_, w)| w).sum();
+    assert!((sum - 1.0).abs() < 1e-6, "row 2 norm sums to {sum}");
+    assert_eq!(norm_row[0].0, 0);
+    assert_eq!(norm_row[1].0, 7);
+    assert!(norm_row[1].1 > norm_row[0].1, "weights keep their ratio");
+}
+
+#[test]
+fn compactor_crash_loop_degrades_ingest_but_reads_stay_live() {
+    let mut cfg = StreamConfig::new(dir("degraded"), N);
+    cfg.sync_every = 1;
+    cfg.compact_every = 4;
+    cfg.restart_budget = 1;
+    // Every supervised cycle panics at the maybe_panic seam: attempt 1
+    // spends the budget, attempt 2 exceeds it → degraded.
+    cfg.faults = Arc::new(FaultPlan::inert().script(FaultKind::Panic, &[1, 2]));
+    let mut store = StreamStore::open(cfg).unwrap();
+    store.spawn_compactor();
+    for i in 0..4u32 {
+        store.ingest(EdgeOp::Insert { src: i, dst: i + 1, w: 1.0 }).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !store.degraded() {
+        assert!(Instant::now() < deadline, "compactor never degraded");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let err = store.ingest(EdgeOp::Insert { src: 9, dst: 9, w: 1.0 }).unwrap_err();
+    assert_eq!(err.kind(), "backpressure");
+    assert!(matches!(err, StreamError::Backpressure { pending } if pending >= 4));
+    // Reads keep serving: the merged row path and the published snapshot
+    // both stay live on the pre-degradation state.
+    assert_eq!(store.read_row(0), vec![(1, 1.0)]);
+    assert_eq!(store.published().version, 0);
+    let stats = store.stats();
+    assert!(stats.degraded);
+    assert_eq!(stats.compactor_restarts, 2);
+    assert_eq!(stats.acked, 4, "acknowledged writes are untouched by degradation");
+}
+
+#[test]
+fn serve_publishes_the_streamed_epoch() {
+    let spec = DatasetSpec {
+        name: "StreamServe",
+        n: N,
+        feat_dim: 8,
+        adj_density: 0.2,
+        feat_density: 0.4,
+        n_classes: 3,
+    };
+    let ds = Arc::new(GraphDataset::generate(&spec, &mut Rng::new(7)));
+    let template = Arc::new(train_template(ModelKind::Gcn, &ds, 8, 0.02, 2, 1));
+    let cfg = ServeConfig { workers: 1, queue_capacity: 8, hidden: 8, ..Default::default() };
+    let srv = InferenceServer::start(
+        cfg,
+        Arc::clone(&ds),
+        template,
+        EngineSnapshot::from_dataset(&ds, 0),
+        None,
+    );
+
+    let mut scfg = StreamConfig::new(dir("serve"), N);
+    scfg.sync_every = 1;
+    let store = StreamStore::open(scfg).unwrap();
+    for i in 0..N as u32 {
+        store.ingest(EdgeOp::Insert { src: i, dst: (i + 1) % N as u32, w: 1.0 }).unwrap();
+    }
+    store.compact_once().unwrap();
+
+    let feats = srv.current_snapshot().feats.clone();
+    srv.publish_from_stream(&store, feats).unwrap();
+    let snap = srv.current_snapshot();
+    assert_eq!(snap.version, store.published().version);
+    assert_eq!(snap.n_nodes(), N);
+    // Requests run against the streamed adjacency.
+    srv.submit(vec![0, 1, 2]).unwrap();
+    let responses = srv.drain();
+    assert_eq!(responses.len(), 1);
+    assert!(responses[0].result.is_ok(), "{:?}", responses[0].result.as_ref().err());
+    srv.shutdown();
+}
+
+#[test]
+fn compaction_publish_forces_the_engine_to_redecide() {
+    let mut cfg = StreamConfig::new(dir("redecide"), N);
+    cfg.sync_every = 1;
+    let store = StreamStore::open(cfg).unwrap();
+    for i in 0..N as u32 {
+        store.ingest(EdgeOp::Insert { src: i, dst: (i + 1) % N as u32, w: 1.0 }).unwrap();
+    }
+    store.compact_once().unwrap();
+
+    let mut policy = StaticPolicy(Format::Csr);
+    let mut engine = AdjEngine::new(&mut policy);
+    let slot = engine.add_slot_shared("stream-adj", store.published().norm.clone());
+    let x = gnn_spmm::tensor::Matrix::rand(N, 4, &mut Rng::new(3));
+    let _ = engine.spmm(slot, &x);
+    assert_eq!(engine.decisions.len(), 1, "first bind decides");
+
+    // Rebinding the *same* published epoch is an identity no-op…
+    engine.set_slot_matrix(slot, store.published().norm.clone());
+    let _ = engine.spmm(slot, &x);
+    assert_eq!(engine.decisions.len(), 1, "same-epoch rebind must not re-decide");
+
+    // …but a compaction publishes a fresh master identity, so the rebind
+    // re-decides (the predictor's drift anchors see a new matrix).
+    store.ingest(EdgeOp::Insert { src: 0, dst: N as u32 - 1, w: 2.0 }).unwrap();
+    store.compact_once().unwrap();
+    engine.set_slot_matrix(slot, store.published().norm.clone());
+    let _ = engine.spmm(slot, &x);
+    assert_eq!(engine.decisions.len(), 2, "new epoch identity forces a re-decision");
+}
