@@ -77,12 +77,14 @@ pub(crate) fn row_normalize_full(raw: &Csr) -> Csr {
     out
 }
 
-/// Normalize one raw row to sum 1 (empty/degenerate rows normalize to
-/// themselves — no entries).
+/// Normalize one raw row to sum 1. Rows with a non-positive sum pass
+/// through unchanged — exactly what [`row_normalize_full`] does — so the
+/// bit-identity argument between the incremental and full paths holds on
+/// every input, not just the ingest-validated (strictly positive) domain.
 fn normalize_row(entries: &[(u32, f32)]) -> Vec<(u32, f32)> {
     let sum: f64 = entries.iter().map(|&(_, w)| w as f64).sum();
     if sum <= 0.0 {
-        return Vec::new();
+        return entries.to_vec();
     }
     entries.iter().map(|&(c, w)| (c, (w as f64 / sum) as f32)).collect()
 }
@@ -296,6 +298,28 @@ mod tests {
         assert!(normalize_row(&[]).is_empty());
         let one = normalize_row(&[(3, 2.5)]);
         assert_eq!(one, vec![(3, 1.0)]);
+    }
+
+    #[test]
+    fn non_positive_sum_rows_pass_through_on_both_paths() {
+        // Unreachable via ingest (weights are validated strictly positive)
+        // but reachable from a recovered checkpoint; the incremental and
+        // full paths must still agree bit-for-bit.
+        let entries = vec![(1u32, 1.0f32), (2, -1.0)];
+        let raw = Csr {
+            rows: 1,
+            cols: 4,
+            indptr: vec![0, 2],
+            indices: vec![1, 2],
+            vals: vec![1.0, -1.0],
+        };
+        let full = row_normalize_full(&raw);
+        let inc = normalize_row(&entries);
+        assert_eq!(inc, entries, "non-positive sum leaves the row unchanged");
+        assert_eq!(full.vals.len(), inc.len());
+        for (i, &(_, w)) in inc.iter().enumerate() {
+            assert_eq!(full.vals[i].to_bits(), w.to_bits());
+        }
     }
 
     #[test]

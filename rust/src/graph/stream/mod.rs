@@ -229,6 +229,14 @@ impl StreamStore {
     pub fn open(cfg: StreamConfig) -> Result<StreamStore, StreamError> {
         let rec = recovery::recover(&cfg)?;
         let master = SharedMatrix::from(rec.master);
+        // The checkpoint decoder only checks framing (magic, CRC, indptr
+        // endpoints); the full structural sweep — the same trust boundary
+        // compaction applies to a freshly merged master — runs here, so a
+        // decodable-but-inconsistent checkpoint is a typed error instead
+        // of a panic later inside SpMM.
+        master.validate().map_err(|e| StreamError::Corrupt {
+            what: format!("recovered master failed validation: {e}"),
+        })?;
         let norm = SharedMatrix::new(SparseMatrix::Csr(compact::row_normalize_full(
             master_csr(&master),
         )));
@@ -266,12 +274,15 @@ impl StreamStore {
         }
     }
 
-    /// Ingest one edge operation: WAL append (the durability point),
-    /// fsync per `sync_every`, then apply to the live overlay. Returns
-    /// the op's WAL seq; it is **acknowledged** once
-    /// [`StreamStore::acked`] reaches that seq (immediately so when
-    /// `sync_every == 1`). On `Err` nothing was applied and the caller
-    /// may retry the same op safely (absolute semantics).
+    /// Ingest one edge operation: WAL append (the durability point) and
+    /// live-overlay apply run atomically under the state lock, then the
+    /// batched fsync (per `sync_every`) runs outside it. Returns the op's
+    /// WAL seq; it is **acknowledged** once [`StreamStore::acked`]
+    /// reaches that seq (immediately so when `sync_every == 1`). If the
+    /// append fails nothing was applied; if only the fsync fails the op
+    /// is applied but unacknowledged — either way the caller may retry
+    /// the same op safely (absolute semantics, so a retry can never
+    /// double-apply).
     pub fn ingest(&self, op: EdgeOp) -> Result<u64, StreamError> {
         // ord: single flag, no ordering dependency with other writes — a
         // stale read only delays the backpressure rejection by one op.
@@ -281,16 +292,30 @@ impl StreamStore {
             return Err(StreamError::Backpressure { pending });
         }
         op.check(self.inner.cfg.n_nodes)?;
-        let seq = {
-            let mut wal = lock_recover(&self.inner.wal);
-            wal.append(&op)?
-        };
-        let edits = {
+        // Seq assignment and overlay apply must be one atomic step with
+        // respect to compaction's freeze (which reads `applied_seq` under
+        // this same lock): if op k could be appended but not yet applied
+        // while op k+1 advanced `applied_seq`, a freeze at k+1 would
+        // checkpoint a master missing op k and then drop its WAL record —
+        // losing an acknowledged write across the next crash. Lock order
+        // here is state → wal, the module's only nesting; no other path
+        // acquires them nested, so no cycle.
+        let (seq, edits) = {
             let mut st = lock_recover(&self.inner.state);
+            let seq = {
+                let mut wal = lock_recover(&self.inner.wal);
+                wal.append_record(&op)?
+            };
             st.live.apply(&op);
-            st.applied_seq = seq;
-            st.live.edits()
+            st.applied_seq = st.applied_seq.max(seq);
+            (seq, st.live.edits())
         };
+        // The batched fsync stays off the state lock so merged-row reads
+        // never wait on the disk.
+        {
+            let mut wal = lock_recover(&self.inner.wal);
+            wal.sync_batch()?;
+        }
         if edits >= self.inner.cfg.compact_every {
             self.inner.signal.cv.notify_all();
         }
@@ -310,8 +335,13 @@ impl StreamStore {
 
     /// Merged read of row `r`: master row patched by the frozen overlay,
     /// then the live overlay — the freshest consistent view, including
-    /// ops not yet compacted (raw weights, sorted by column).
+    /// ops not yet compacted (raw weights, sorted by column). Rows at or
+    /// past `n_nodes` read as empty — the adjacency has no such row
+    /// (ingest rejects out-of-bounds endpoints, so nothing can live there).
     pub fn read_row(&self, r: u32) -> Vec<(u32, f32)> {
+        if r as usize >= self.inner.cfg.n_nodes {
+            return Vec::new();
+        }
         let st = lock_recover(&self.inner.state);
         let mut entries = delta::csr_row(master_csr(&st.master), r);
         if let Some((frozen, _)) = &st.frozen {

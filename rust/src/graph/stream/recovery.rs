@@ -227,6 +227,27 @@ mod tests {
     }
 
     #[test]
+    fn structurally_bad_checkpoints_fail_open_not_spmm() {
+        use super::super::{StreamConfig, StreamStore};
+        let dir = std::env::temp_dir().join("gnn_spmm_recovery").join("badck");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Decodes fine (magic, CRC, indptr endpoints all pass) but the
+        // column index is out of bounds — only the full validate() sweep
+        // in StreamStore::open catches it, as a typed Corrupt error.
+        let bad =
+            Csr { rows: 3, cols: 3, indptr: vec![0, 1, 1, 1], indices: vec![7], vals: vec![1.0] };
+        crate::util::fsio::atomic_write(&checkpoint_path(&dir), &encode_checkpoint(&bad, 5))
+            .unwrap();
+        // (match, not unwrap_err: StreamStore has no Debug impl)
+        let err = match StreamStore::open(StreamConfig::new(dir, 3)) {
+            Ok(_) => panic!("structurally bad checkpoint must not open"),
+            Err(e) => e,
+        };
+        assert_eq!(err.kind(), "corrupt");
+    }
+
+    #[test]
     fn empty_matrix_checkpoints_round_trip() {
         let m = Csr { rows: 3, cols: 3, indptr: vec![0, 0, 0, 0], indices: vec![], vals: vec![] };
         let (back, seq) = decode_checkpoint(&encode_checkpoint(&m, 0)).unwrap();

@@ -224,12 +224,23 @@ impl Wal {
     }
 
     /// Append one op, batching fsyncs per `sync_every`. Returns the
-    /// record's seq. Fault seams (DESIGN.md §Streaming-Durability):
-    /// `IoError` fails before any byte lands; `ShortWrite` lands a torn
-    /// prefix and reports failure (healed lazily, found by recovery if
-    /// the process dies first); `CrashPoint` tears the record and
-    /// declares the store dead.
+    /// record's seq. Exactly [`Wal::append_record`] followed by
+    /// [`Wal::sync_batch`] — callers that must not sit on other locks
+    /// across a disk sync (ingest holds the store's state lock around
+    /// the append) drive the two halves separately.
     pub fn append(&mut self, op: &EdgeOp) -> Result<u64, StreamError> {
+        let seq = self.append_record(op)?;
+        self.sync_batch()?;
+        Ok(seq)
+    }
+
+    /// Append one op **without** the batched-fsync step (buffered in the
+    /// OS page cache until a sync). Returns the record's seq. Fault seams
+    /// (DESIGN.md §Streaming-Durability): `IoError` fails before any byte
+    /// lands; `ShortWrite` lands a torn prefix and reports failure
+    /// (healed lazily, found by recovery if the process dies first);
+    /// `CrashPoint` tears the record and declares the store dead.
+    pub fn append_record(&mut self, op: &EdgeOp) -> Result<u64, StreamError> {
         if self.torn {
             // Heal the previous failed append before writing anything new.
             self.file
@@ -263,10 +274,17 @@ impl Wal {
         self.next_seq += 1;
         self.appended_seq = seq;
         self.unsynced += 1;
-        if self.unsynced >= self.sync_every {
-            self.sync()?;
-        }
         Ok(seq)
+    }
+
+    /// Fsync iff the `sync_every` batching threshold has been reached;
+    /// returns the acknowledged watermark either way.
+    pub fn sync_batch(&mut self) -> Result<u64, StreamError> {
+        if self.unsynced >= self.sync_every {
+            self.sync()
+        } else {
+            Ok(self.synced_seq)
+        }
     }
 
     /// Fsync everything appended so far; advances and returns the
@@ -314,6 +332,10 @@ impl Wal {
             .map_err(|e| StreamError::io("wal reopen", e))?;
         self.good_len = self.file.len();
         self.torn = false;
+        // Everything appended so far is durable now: ops <= `through`
+        // live in the just-committed checkpoint, and the kept tail was
+        // fsynced by PreparedWrite — advance the ack watermark to match.
+        self.synced_seq = self.appended_seq;
         self.unsynced = 0;
         Ok(())
     }

@@ -107,14 +107,21 @@ pub struct AppendFile {
 
 impl AppendFile {
     /// Open (creating if absent) for appending. The cursor starts at the
-    /// current end; `len()` reports it.
+    /// current end; `len()` reports it. On first creation the parent
+    /// directory is fsynced: without it the file's directory entry is not
+    /// durable, and a crash could drop the whole log even after its
+    /// records were individually fsynced.
     pub fn open_append(path: &Path) -> io::Result<AppendFile> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
             }
         }
+        let existed = path.exists();
         let mut file = OpenOptions::new().read(true).create(true).append(true).open(path)?;
+        if !existed {
+            sync_parent_dir(path)?;
+        }
         let len = file.seek(SeekFrom::End(0))?;
         Ok(AppendFile { file, path: path.to_path_buf(), len })
     }
